@@ -1,0 +1,77 @@
+//! Image-classification scenario: the ViT analog on synthetic pattern
+//! images (frequency templates + noise), comparing all four Shampoo
+//! variants side-by-side — a compact version of the paper's Tab. 3 row.
+//!
+//! ```bash
+//! cargo run --release --example image_classify
+//! ```
+
+use quartz::data::images::{ImageDataset, ImageSpec};
+use quartz::optim::{BaseOptimizer, LrSchedule};
+use quartz::report::table::{mb, pct, Table};
+use quartz::runtime::Runtime;
+use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+use quartz::train::{train_classifier, ClassifierData, OptimizerStack, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    // vit_lite_c32 consumes flattened 8×8 images (dim 64).
+    let model = rt.manifest.models["vit_lite_c32"].clone();
+
+    let (tr, te) = ImageDataset::generate(&ImageSpec {
+        side: 8,
+        classes: 32,
+        train: 4096,
+        test: 1024,
+        noise: 0.5,
+        seed: 21,
+    });
+    let data = ClassifierData::from((&tr, &te));
+    println!("ViT analog on {}×{} synthetic pattern images, {} classes", 8, 8, 32);
+
+    let steps = 400;
+    let cfg = TrainConfig {
+        steps,
+        schedule: LrSchedule::CosineWarmup { warmup: 20, total: steps, min_frac: 0.05 },
+        eval_every: 0,
+        log_every: 50,
+        seed: 21,
+    };
+
+    let adamw = || BaseOptimizer::adamw(1e-3, 0.9, 0.999, 1e-8, 5e-2);
+    let mut table = Table::new(
+        "ViT analog — optimizer comparison (synthetic images)",
+        &["Optimizer", "Accuracy (%)", "Opt-State (MB)", "Wall (s)"],
+    );
+
+    // Base optimizer alone.
+    let run = train_classifier(&rt, &model, &data, OptimizerStack::Base(adamw()), &cfg)?;
+    table.row(vec![
+        run.optimizer.clone(),
+        pct(run.final_metric),
+        mb(run.state_bytes),
+        format!("{:.1}", run.wall_secs),
+    ]);
+
+    // All Shampoo variants.
+    for variant in [
+        ShampooVariant::Full32,
+        ShampooVariant::Vq4,
+        ShampooVariant::Cq4 { error_feedback: false },
+        ShampooVariant::Cq4 { error_feedback: true },
+    ] {
+        let scfg = ShampooConfig { variant, t1: 10, t2: 50, max_order: 96, ..Default::default() };
+        let sh = Shampoo::new(adamw(), scfg, &model.shapes());
+        let run =
+            train_classifier(&rt, &model, &data, OptimizerStack::Shampoo(Box::new(sh)), &cfg)?;
+        table.row(vec![
+            run.optimizer.clone(),
+            pct(run.final_metric),
+            mb(run.state_bytes),
+            format!("{:.1}", run.wall_secs),
+        ]);
+    }
+
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT driver: lower every L2 graph (and standalone L1 kernel graphs) to
+HLO **text** + write ``artifacts/manifest.json``.
+
+HLO text (not serialized protos) is the interchange format: jax ≥ 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md and aot_recipe).
+
+Run once via ``make artifacts``; python is never on the request path.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only name,…]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import precond, quant
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_model_artifacts(m: model_mod.ModelDef, out_dir: str, manifest: dict) -> None:
+    pspecs = m.param_specs()
+    in_specs = m.input_specs()
+
+    # fwd_bwd: (*params, x, y) -> (loss, *grads)
+    fb = model_mod.fwd_bwd_fn(m)
+    lowered = jax.jit(fb).lower(*pspecs, *in_specs)
+    fb_file = f"{m.name}.fwd_bwd.hlo.txt"
+    with open(os.path.join(out_dir, fb_file), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"][f"{m.name}.fwd_bwd"] = {
+        "file": fb_file,
+        "inputs": [_spec_json(s) for s in (*pspecs, *in_specs)],
+        "outputs": 1 + len(m.params),
+    }
+
+    # eval: classifier (*params, x) -> (logits,) ; lm (*params, x, y) -> (nll,)
+    ev = model_mod.eval_fn(m)
+    ev_inputs = (*pspecs, in_specs[0]) if m.kind == "classifier" else (*pspecs, *in_specs)
+    lowered = jax.jit(ev).lower(*ev_inputs)
+    ev_file = f"{m.name}.eval.hlo.txt"
+    with open(os.path.join(out_dir, ev_file), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"][f"{m.name}.eval"] = {
+        "file": ev_file,
+        "inputs": [_spec_json(s) for s in ev_inputs],
+        "outputs": 1,
+    }
+
+    manifest["models"][m.name] = {
+        "kind": m.kind,
+        "batch": m.batch,
+        "meta": m.meta,
+        "params": [
+            {"name": p.name, "rows": p.shape[0], "cols": p.shape[1], "std": p.std}
+            for p in m.params
+        ],
+    }
+
+
+def lower_kernel_artifacts(out_dir: str, manifest: dict) -> None:
+    """Standalone L1 kernel graphs — exercised directly by the rust runtime
+    tests/benches to prove Pallas → HLO → PJRT composition."""
+    f32 = jnp.float32
+
+    entries = {
+        "kernel.quant_roundtrip": (
+            lambda x: (quant.quantize_roundtrip(x, block=64),),
+            (jax.ShapeDtypeStruct((128, 128), f32),),
+        ),
+        "kernel.precond_apply": (
+            lambda l, g, r: (precond.precond_apply(l, g, r),),
+            (
+                jax.ShapeDtypeStruct((64, 64), f32),
+                jax.ShapeDtypeStruct((64, 48), f32),
+                jax.ShapeDtypeStruct((48, 48), f32),
+            ),
+        ),
+        "kernel.gram_ema_left": (
+            lambda prev, g, beta: (precond.gram_ema(prev, g, beta, left=True),),
+            (
+                jax.ShapeDtypeStruct((64, 64), f32),
+                jax.ShapeDtypeStruct((64, 48), f32),
+                jax.ShapeDtypeStruct((), f32),
+            ),
+        ),
+    }
+    for name, (fn, specs) in entries.items():
+        lowered = jax.jit(fn).lower(*specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [_spec_json(s) for s in specs],
+            "outputs": 1,
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated model names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest: dict = {"artifacts": {}, "models": {}}
+
+    reg = model_mod.registry()
+    only = {s for s in args.only.split(",") if s}
+    names = [n for n in reg if not only or n in only]
+
+    lower_kernel_artifacts(args.out_dir, manifest)
+    print(f"[aot] kernel artifacts done", flush=True)
+    for i, name in enumerate(names):
+        lower_model_artifacts(reg[name], args.out_dir, manifest)
+        print(f"[aot] {i + 1}/{len(names)} {name}", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+"""L1 Pallas kernels: tiled matmul + the preconditioner application
+`Ĝ = L̂·G·R̂` (Algorithm 1 line 15).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): MXU-friendly (tile_m×K)·(K×
+tile_n) tiles; the (L̂·G) intermediate stays in VMEM between the two
+chained products. A custom VJP routes the backward pass through the same
+kernel (three matmuls), so the L1 kernel lowers into both the fwd and bwd
+HLO of every L2 model graph.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def _tile(n: int, cap: int = 128) -> int:
+    """Largest tile ≤ cap dividing n (falls back to n itself)."""
+    for t in (cap, 64, 32, 16, 8, 4, 2):
+        if n % t == 0 and t <= n:
+            return t
+    return n
+
+
+def pallas_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """`a @ b` via a Pallas grid of (tile_m, K)×(K, tile_n) programs."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dim mismatch {a.shape} @ {b.shape}"
+    tm, tn = _tile(m), _tile(n)
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def pmatmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Pallas matmul: models use this for dense layers so the
+    L1 kernel is embedded in the lowered fwd+bwd HLO."""
+    return pallas_matmul(a, b)
+
+
+def _pmatmul_fwd(a, b):
+    return pallas_matmul(a, b), (a, b)
+
+
+def _pmatmul_bwd(res, ct):
+    a, b = res
+    # dA = ct @ Bᵀ, dB = Aᵀ @ ct — same kernel, transposed operands.
+    return pallas_matmul(ct, b.T), pallas_matmul(a.T, ct)
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+@jax.jit
+def precond_apply(lhat: jnp.ndarray, g: jnp.ndarray, rhat: jnp.ndarray) -> jnp.ndarray:
+    """Ĝ = L̂·G·R̂ as two chained Pallas matmuls."""
+    return pallas_matmul(pallas_matmul(lhat, g), rhat)
+
+
+@partial(jax.jit, static_argnames=("left",))
+def gram_ema(prev: jnp.ndarray, g: jnp.ndarray, beta: jnp.ndarray, left: bool = True):
+    """Eq. (2)/(7) EMA Gram update with the product on the Pallas kernel.
+
+    `beta` is a traced scalar so one artifact serves every β.
+    """
+    gram = pallas_matmul(g, g.T) if left else pallas_matmul(g.T, g)
+    return beta * prev + (1.0 - beta) * gram

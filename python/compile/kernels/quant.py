@@ -1,0 +1,108 @@
+"""L1 Pallas kernels: block-wise 4-bit quantize / dequantize.
+
+TPU-shaped thinking (DESIGN.md §Hardware-Adaptation): each grid program
+owns one B×B tile resident in VMEM; the absmax reduction is a VPU
+tree-reduce; the per-tile scale lives beside the codes. ``interpret=True``
+everywhere — the CPU PJRT client cannot execute Mosaic custom-calls, and
+correctness (vs ``ref.py``) is the contract at this layer.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import linear2_levels
+
+
+def _quantize_kernel(x_ref, levels_ref, codes_ref, scale_ref):
+    """One B×B tile: absmax → normalize → nearest-level encode (Eq. 3)."""
+    x = x_ref[...]
+    levels = levels_ref[...]
+    amax = jnp.max(jnp.abs(x))
+    inv = jnp.where(amax > 0, 1.0 / amax, 0.0)
+    xn = x * inv
+    d = jnp.abs(xn[..., None] - levels)
+    codes_ref[...] = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    scale_ref[...] = jnp.full((1, 1), amax, dtype=jnp.float32)
+
+
+def _dequantize_kernel(codes_ref, scale_ref, levels_ref, x_ref):
+    """One B×B tile: codebook lookup × tile scale."""
+    codes = codes_ref[...]
+    levels = levels_ref[...]
+    scale = scale_ref[0, 0]
+    x_ref[...] = levels[codes] * scale
+
+
+def _padded(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    m, n = x.shape
+    pm, pn = (-m) % block, (-n) % block
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@partial(jax.jit, static_argnames=("block", "bits"))
+def blockwise_quantize(x: jnp.ndarray, block: int = 64, bits: int = 4):
+    """Block-wise quantization via a Pallas grid over tiles.
+
+    Returns ``(codes[int32, padded m×n], scales[f32, bm×bn])``.
+    """
+    levels = jnp.asarray(linear2_levels(bits))
+    xp = _padded(x, block)
+    mp, np_ = xp.shape
+    grid = (mp // block, np_ // block)
+    nlev = levels.shape[0]
+    codes, scales = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((nlev,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+        ],
+        interpret=True,
+    )(xp, levels)
+    return codes, scales
+
+
+@partial(jax.jit, static_argnames=("block", "bits"))
+def blockwise_dequantize(codes: jnp.ndarray, scales: jnp.ndarray, block: int = 64,
+                         bits: int = 4) -> jnp.ndarray:
+    """Dequantize (padded shape; caller crops)."""
+    levels = jnp.asarray(linear2_levels(bits))
+    mp, np_ = codes.shape
+    grid = (mp // block, np_ // block)
+    nlev = levels.shape[0]
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((nlev,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(codes, scales, levels)
+
+
+@partial(jax.jit, static_argnames=("block", "bits"))
+def quantize_roundtrip(x: jnp.ndarray, block: int = 64, bits: int = 4) -> jnp.ndarray:
+    """D(Q(x)), cropped to x's shape — the op the rust runtime AOT-loads to
+    validate kernel numerics end-to-end through PJRT."""
+    codes, scales = blockwise_quantize(x, block=block, bits=bits)
+    back = blockwise_dequantize(codes, scales, block=block, bits=bits)
+    return back[: x.shape[0], : x.shape[1]]

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+Each function here is the mathematical definition the kernels in
+``quant.py`` / ``precond.py`` / ``gram.py`` must reproduce bit-for-bit
+(modulo f32 accumulation order). pytest + hypothesis sweep shapes, block
+sizes and value distributions against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def linear2_levels(bits: int = 4) -> np.ndarray:
+    """The paper's Eq. (4) linear-square codebook, strictly increasing."""
+    n = 1 << bits
+    half = n // 2 - 1
+    js = np.arange(n, dtype=np.float32)
+    u = -1.0 + 2.0 * js / (n - 1)
+    vals = np.where(js < half, -(u * u), np.where(js == half, 0.0, u * u))
+    return vals.astype(np.float32)
+
+
+def encode_nearest(xn: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """argmin_j |xn - M(j)| (paper Eq. (3)), ties toward the lower index."""
+    d = jnp.abs(xn[..., None] - levels)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def _pad_to_blocks(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    m, n = x.shape
+    pm = (-m) % block
+    pn = (-n) % block
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def blockwise_quantize_ref(x: jnp.ndarray, block: int, levels: jnp.ndarray):
+    """Block-wise absmax quantization (paper Sec. 3.2).
+
+    Returns ``(codes, scales)`` where ``codes`` has x's (padded) shape and
+    ``scales`` is ``[ceil(m/B), ceil(n/B)]``.
+    """
+    xp = _pad_to_blocks(x, block)
+    mp, np_ = xp.shape
+    bm, bn = mp // block, np_ // block
+    tiles = xp.reshape(bm, block, bn, block).transpose(0, 2, 1, 3)
+    scales = jnp.max(jnp.abs(tiles), axis=(2, 3))
+    inv = jnp.where(scales > 0, 1.0 / scales, 0.0)
+    xn = tiles * inv[:, :, None, None]
+    codes = encode_nearest(xn, levels)
+    codes = codes.transpose(0, 2, 1, 3).reshape(mp, np_)
+    return codes, scales
+
+
+def blockwise_dequantize_ref(codes: jnp.ndarray, scales: jnp.ndarray, block: int,
+                             levels: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`blockwise_quantize_ref` (padded shape)."""
+    mp, np_ = codes.shape
+    bm, bn = mp // block, np_ // block
+    vals = levels[codes]
+    tiles = vals.reshape(bm, block, bn, block).transpose(0, 2, 1, 3)
+    tiles = tiles * scales[:, :, None, None]
+    return tiles.transpose(0, 2, 1, 3).reshape(mp, np_)
+
+
+def roundtrip_ref(x: jnp.ndarray, block: int, levels: jnp.ndarray) -> jnp.ndarray:
+    """D(Q(x)) cropped back to x's shape."""
+    codes, scales = blockwise_quantize_ref(x, block, levels)
+    back = blockwise_dequantize_ref(codes, scales, block, levels)
+    return back[: x.shape[0], : x.shape[1]]
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a @ b
+
+
+def precond_apply_ref(lhat: jnp.ndarray, g: jnp.ndarray, rhat: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 1 line 15: Ĝ = L̂ · G · R̂."""
+    return lhat @ g @ rhat
+
+
+def gram_ema_ref(prev: jnp.ndarray, g: jnp.ndarray, beta: float, left: bool) -> jnp.ndarray:
+    """Eq. (2)/(7): β·prev + (1−β)·(G·Gᵀ or Gᵀ·G)."""
+    gram = g @ g.T if left else g.T @ g
+    return beta * prev + (1.0 - beta) * gram

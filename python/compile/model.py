@@ -1,0 +1,365 @@
+"""L2 — JAX model graphs (build-time only; never imported at runtime).
+
+Scaled analogs of the paper's workloads (DESIGN.md §4), all dense algebra
+routed through the L1 Pallas kernel (``pmatmul``) so the kernel lowers into
+the fwd **and** bwd HLO of every artifact:
+
+* ``mlp_*``    — deep MLP classifier (VGG-19 analog)
+* ``res_*``    — residual MLP (ResNet-34/50 analog)
+* ``vit_*``    — single/dual-block self-attention classifier (ViT/Swin analog)
+* ``lm_*``     — decoder-only transformer LM (LLaMA analog, Tab. 6)
+
+Every model exposes flat parameter lists (name, shape, init std) so the rust
+coordinator can initialize identical buffers and drive training through the
+AOT-compiled ``fwd_bwd`` graph: inputs ``(*params, x, y)``, outputs
+``(loss, *grads)``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.precond import pmatmul
+
+
+# --------------------------------------------------------------------------
+# Parameter plumbing
+# --------------------------------------------------------------------------
+
+@dataclass
+class ParamSpec:
+    name: str
+    shape: tuple[int, int]
+    std: float
+
+
+@dataclass
+class ModelDef:
+    """A lowered-artifact definition the AOT driver iterates over."""
+
+    name: str
+    kind: str  # "classifier" | "lm"
+    params: list[ParamSpec]
+    # fwd_bwd(params_list, x, y) -> (loss, grads_list)
+    loss_fn: Callable
+    # eval_fn(params_list, x) -> logits  (classifier)
+    # eval_fn(params_list, x, y) -> nll  (lm)
+    eval_fn: Callable
+    batch: int
+    meta: dict = field(default_factory=dict)
+
+    def input_specs(self):
+        if self.kind == "classifier":
+            dim = self.meta["dim"]
+            return (
+                jax.ShapeDtypeStruct((self.batch, dim), jnp.float32),
+                jax.ShapeDtypeStruct((self.batch,), jnp.int32),
+            )
+        seq = self.meta["seq"]
+        return (
+            jax.ShapeDtypeStruct((self.batch, seq), jnp.int32),
+            jax.ShapeDtypeStruct((self.batch, seq), jnp.int32),
+        )
+
+    def param_specs(self):
+        return [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in self.params]
+
+
+def _ce_loss(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy, numerically stable (y integer labels)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def _dense(h, w, b):
+    """Dense layer on the Pallas matmul kernel; bias is a (1, n) matrix."""
+    return pmatmul(h, w) + b
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (VGG analog)
+# --------------------------------------------------------------------------
+
+def make_mlp(name: str, dim: int, hidden: list[int], classes: int, batch: int) -> ModelDef:
+    params: list[ParamSpec] = []
+    dims = [dim] + hidden + [classes]
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params.append(ParamSpec(f"w{i}", (a, b), (2.0 / a) ** 0.5))
+        params.append(ParamSpec(f"b{i}", (1, b), 0.0))
+
+    n_layers = len(dims) - 1
+
+    def forward(plist, x):
+        h = x
+        for i in range(n_layers):
+            w, b = plist[2 * i], plist[2 * i + 1]
+            h = _dense(h, w, b)
+            if i + 1 < n_layers:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss_fn(plist, x, y):
+        return _ce_loss(forward(plist, x), y)
+
+    return ModelDef(
+        name=name,
+        kind="classifier",
+        params=params,
+        loss_fn=loss_fn,
+        eval_fn=forward,
+        batch=batch,
+        meta={"dim": dim, "classes": classes},
+    )
+
+
+# --------------------------------------------------------------------------
+# Residual MLP (ResNet analog)
+# --------------------------------------------------------------------------
+
+def make_resmlp(name: str, dim: int, width: int, blocks: int, classes: int,
+                batch: int) -> ModelDef:
+    params: list[ParamSpec] = [
+        ParamSpec("stem_w", (dim, width), (2.0 / dim) ** 0.5),
+        ParamSpec("stem_b", (1, width), 0.0),
+    ]
+    for i in range(blocks):
+        params.append(ParamSpec(f"blk{i}_w1", (width, width), (2.0 / width) ** 0.5))
+        params.append(ParamSpec(f"blk{i}_b1", (1, width), 0.0))
+        params.append(ParamSpec(f"blk{i}_w2", (width, width), (2.0 / width) ** 0.5))
+        params.append(ParamSpec(f"blk{i}_b2", (1, width), 0.0))
+    params.append(ParamSpec("head_w", (width, classes), (1.0 / width) ** 0.5))
+    params.append(ParamSpec("head_b", (1, classes), 0.0))
+
+    def forward(plist, x):
+        h = jax.nn.relu(_dense(x, plist[0], plist[1]))
+        idx = 2
+        for _ in range(blocks):
+            w1, b1, w2, b2 = plist[idx], plist[idx + 1], plist[idx + 2], plist[idx + 3]
+            idx += 4
+            inner = jax.nn.relu(_dense(h, w1, b1))
+            h = h + _dense(inner, w2, b2)
+            h = jax.nn.relu(h)
+        return _dense(h, plist[idx], plist[idx + 1])
+
+    def loss_fn(plist, x, y):
+        return _ce_loss(forward(plist, x), y)
+
+    return ModelDef(
+        name=name,
+        kind="classifier",
+        params=params,
+        loss_fn=loss_fn,
+        eval_fn=forward,
+        batch=batch,
+        meta={"dim": dim, "classes": classes},
+    )
+
+
+# --------------------------------------------------------------------------
+# Attention building block (shared by ViT analog and the LM)
+# --------------------------------------------------------------------------
+
+def _attention(h, wq, wk, wv, wo, heads: int, causal: bool):
+    """Multi-head self-attention over `h` [tokens, d] (single sequence) or
+    [B*T, d] reshaped by the caller; operates on 3-D [B, T, d]."""
+    bsz, t, d = h.shape
+    dh = d // heads
+    flat = h.reshape(bsz * t, d)
+    q = pmatmul(flat, wq).reshape(bsz, t, heads, dh).transpose(0, 2, 1, 3)
+    k = pmatmul(flat, wk).reshape(bsz, t, heads, dh).transpose(0, 2, 1, 3)
+    v = pmatmul(flat, wv).reshape(bsz, t, heads, dh).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (dh ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(bsz * t, d)
+    return pmatmul(out, wo).reshape(bsz, t, d)
+
+
+def _layernorm(h, eps=1e-5):
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    return (h - mu) / jnp.sqrt(var + eps)
+
+
+def _block_params(prefix: str, d: int, ff: int) -> list[ParamSpec]:
+    s = 0.02
+    return [
+        ParamSpec(f"{prefix}_wq", (d, d), s),
+        ParamSpec(f"{prefix}_wk", (d, d), s),
+        ParamSpec(f"{prefix}_wv", (d, d), s),
+        ParamSpec(f"{prefix}_wo", (d, d), s),
+        ParamSpec(f"{prefix}_w1", (d, ff), s),
+        ParamSpec(f"{prefix}_b1", (1, ff), 0.0),
+        ParamSpec(f"{prefix}_w2", (ff, d), s),
+        ParamSpec(f"{prefix}_b2", (1, d), 0.0),
+    ]
+
+
+def _apply_block(h, p, heads: int, causal: bool):
+    """Pre-LN transformer block; p is the 8-tuple from `_block_params`."""
+    wq, wk, wv, wo, w1, b1, w2, b2 = p
+    h = h + _attention(_layernorm(h), wq, wk, wv, wo, heads, causal)
+    bsz, t, d = h.shape
+    flat = _layernorm(h).reshape(bsz * t, d)
+    ff = jax.nn.relu(pmatmul(flat, w1) + b1)
+    h = h + (pmatmul(ff, w2) + b2).reshape(bsz, t, d)
+    return h
+
+
+# --------------------------------------------------------------------------
+# ViT analog (patch attention classifier)
+# --------------------------------------------------------------------------
+
+def make_vit(name: str, side: int, patch: int, d: int, heads: int, blocks: int,
+             classes: int, batch: int, ff_mult: int = 2) -> ModelDef:
+    assert side % patch == 0
+    n_patches = (side // patch) ** 2
+    patch_dim = patch * patch
+    ff = ff_mult * d
+
+    params: list[ParamSpec] = [
+        ParamSpec("embed_w", (patch_dim, d), (1.0 / patch_dim) ** 0.5),
+        ParamSpec("pos", (n_patches, d), 0.02),
+    ]
+    for i in range(blocks):
+        params.extend(_block_params(f"blk{i}", d, ff))
+    params.append(ParamSpec("head_w", (d, classes), (1.0 / d) ** 0.5))
+    params.append(ParamSpec("head_b", (1, classes), 0.0))
+
+    def forward(plist, x):
+        bsz = x.shape[0]
+        # [B, side²] → [B, np, patch_dim]  (patch grid row-major)
+        img = x.reshape(bsz, side, side)
+        g = side // patch
+        patches = (
+            img.reshape(bsz, g, patch, g, patch)
+            .transpose(0, 1, 3, 2, 4)
+            .reshape(bsz * n_patches, patch_dim)
+        )
+        h = pmatmul(patches, plist[0]).reshape(bsz, n_patches, d) + plist[1]
+        idx = 2
+        for _ in range(blocks):
+            h = _apply_block(h, plist[idx:idx + 8], heads, causal=False)
+            idx += 8
+        pooled = jnp.mean(_layernorm(h), axis=1)
+        return pmatmul(pooled, plist[idx]) + plist[idx + 1]
+
+    def loss_fn(plist, x, y):
+        return _ce_loss(forward(plist, x), y)
+
+    return ModelDef(
+        name=name,
+        kind="classifier",
+        params=params,
+        loss_fn=loss_fn,
+        eval_fn=forward,
+        batch=batch,
+        meta={"dim": side * side, "classes": classes},
+    )
+
+
+# --------------------------------------------------------------------------
+# Decoder-only LM (LLaMA analog)
+# --------------------------------------------------------------------------
+
+def make_lm(name: str, vocab: int, d: int, heads: int, blocks: int, seq: int,
+            batch: int, ff_mult: int = 2) -> ModelDef:
+    ff = ff_mult * d
+    params: list[ParamSpec] = [
+        ParamSpec("embed", (vocab, d), 0.02),
+        ParamSpec("pos", (seq, d), 0.02),
+    ]
+    for i in range(blocks):
+        params.extend(_block_params(f"blk{i}", d, ff))
+    params.append(ParamSpec("head", (d, vocab), (1.0 / d) ** 0.5))
+
+    def nll(plist, x, y):
+        bsz = x.shape[0]
+        h = plist[0][x] + plist[1][None, :, :]
+        idx = 2
+        for _ in range(blocks):
+            h = _apply_block(h, plist[idx:idx + 8], heads, causal=True)
+            idx += 8
+        flat = _layernorm(h).reshape(bsz * seq, d)
+        logits = pmatmul(flat, plist[idx])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, y.reshape(-1)[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - picked)
+
+    return ModelDef(
+        name=name,
+        kind="lm",
+        params=params,
+        loss_fn=nll,
+        eval_fn=nll,
+        batch=batch,
+        meta={"vocab": vocab, "seq": seq, "d": d},
+    )
+
+
+# --------------------------------------------------------------------------
+# Registry — the analog suite behind every table (DESIGN.md §3)
+# --------------------------------------------------------------------------
+
+def registry() -> dict[str, ModelDef]:
+    models = [
+        # Tab. 2/3 (CIFAR-100 analog, 32 classes)
+        make_mlp("mlp_vgg_c32", dim=64, hidden=[128, 128, 96], classes=32, batch=64),
+        make_resmlp("res_mlp_c32", dim=64, width=96, blocks=3, classes=32, batch=64),
+        make_vit("swin_lite_c32", side=8, patch=2, d=48, heads=4, blocks=1,
+                 classes=32, batch=64),
+        make_vit("vit_lite_c32", side=8, patch=2, d=48, heads=4, blocks=2,
+                 classes=32, batch=64),
+        # Tab. 4 (Tiny-ImageNet analog, 64 classes)
+        make_mlp("mlp_vgg_c64", dim=64, hidden=[128, 128, 96], classes=64, batch=64),
+        make_resmlp("res_mlp_c64", dim=64, width=96, blocks=3, classes=64, batch=64),
+        make_vit("swin_lite_c64", side=8, patch=2, d=48, heads=4, blocks=1,
+                 classes=64, batch=64),
+        make_vit("vit_lite_c64", side=8, patch=2, d=48, heads=4, blocks=2,
+                 classes=64, batch=64),
+        # Tab. 5 (ImageNet analog: bigger bodies, 64 classes)
+        make_resmlp("res_big_c64", dim=64, width=192, blocks=4, classes=64, batch=64),
+        make_vit("vit_big_c64", side=8, patch=2, d=96, heads=4, blocks=2,
+                 classes=64, batch=64),
+        # Tab. 6 (LLaMA/C4 analog, three sizes)
+        make_lm("lm_s", vocab=64, d=32, heads=4, blocks=2, seq=32, batch=16),
+        make_lm("lm_m", vocab=64, d=64, heads=4, blocks=3, seq=32, batch=16),
+        make_lm("lm_l", vocab=64, d=128, heads=8, blocks=4, seq=32, batch=16),
+    ]
+    return {m.name: m for m in models}
+
+
+def fwd_bwd_fn(model: ModelDef):
+    """(params…, x, y) ↦ (loss, grads…) — the artifact the trainer runs."""
+    n = len(model.params)
+
+    def f(*args):
+        plist = list(args[:n])
+        x, y = args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(model.loss_fn)(plist, x, y)
+        return (loss, *grads)
+
+    return f
+
+
+def eval_fn(model: ModelDef):
+    """Classifier: (params…, x) ↦ logits. LM: (params…, x, y) ↦ nll."""
+    n = len(model.params)
+
+    if model.kind == "classifier":
+        def f(*args):
+            return (model.eval_fn(list(args[:n]), args[n]),)
+        return f
+
+    def f(*args):
+        return (model.eval_fn(list(args[:n]), args[n], args[n + 1]),)
+
+    return f

@@ -1,0 +1,163 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes, block sizes, and value distributions; every
+property asserts allclose (or exact equality for code paths that must be
+bit-identical, like the nearest-level encode).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import precond, quant, ref
+
+LEVELS4 = jnp.asarray(ref.linear2_levels(4))
+
+
+def rand_matrix(draw, max_side=96, scale_pow=2):
+    rows = draw(st.integers(1, max_side))
+    cols = draw(st.integers(1, max_side))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = 10.0 ** draw(st.integers(-scale_pow, scale_pow))
+    rng = np.random.RandomState(seed)
+    return (rng.randn(rows, cols) * scale).astype(np.float32)
+
+
+matrices = st.builds(lambda: None)  # placeholder; use @st.composite below
+
+
+@st.composite
+def matrix_strategy(draw, max_side=96):
+    return rand_matrix(draw, max_side=max_side)
+
+
+@st.composite
+def matrix_and_block(draw):
+    x = rand_matrix(draw, max_side=96)
+    block = draw(st.sampled_from([4, 8, 16, 32, 64]))
+    return x, block
+
+
+class TestQuantKernel:
+    @settings(max_examples=30, deadline=None)
+    @given(matrix_and_block())
+    def test_roundtrip_matches_ref(self, xb):
+        x, block = xb
+        got = quant.quantize_roundtrip(jnp.asarray(x), block=block)
+        want = ref.roundtrip_ref(jnp.asarray(x), block, LEVELS4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(matrix_and_block())
+    def test_codes_and_scales_match_ref(self, xb):
+        x, block = xb
+        codes, scales = quant.blockwise_quantize(jnp.asarray(x), block=block)
+        rcodes, rscales = ref.blockwise_quantize_ref(jnp.asarray(x), block, LEVELS4)
+        np.testing.assert_array_equal(np.asarray(codes), np.asarray(rcodes))
+        np.testing.assert_allclose(np.asarray(scales), np.asarray(rscales))
+
+    @settings(max_examples=20, deadline=None)
+    @given(matrix_and_block())
+    def test_error_bound_prop_b1(self, xb):
+        """Proposition B.1: per-block error ≤ scale · max half-gap."""
+        x, block = xb
+        back = np.asarray(quant.quantize_roundtrip(jnp.asarray(x), block=block))
+        lv = np.asarray(LEVELS4)
+        half_gap = np.max(lv[1:] - lv[:-1]) / 2
+        m, n = x.shape
+        for i in range(m):
+            for j in range(n):
+                bi, bj = i // block, j // block
+                blk = x[bi * block:(bi + 1) * block, bj * block:(bj + 1) * block]
+                scale = np.max(np.abs(blk))
+                assert abs(back[i, j] - x[i, j]) <= scale * half_gap + 1e-6
+
+    def test_zero_matrix(self):
+        x = jnp.zeros((32, 32))
+        got = quant.quantize_roundtrip(x, block=16)
+        np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+    def test_exact_levels_roundtrip(self):
+        lv = np.asarray(LEVELS4)
+        x = (3.7 * lv[np.arange(64) % 16]).reshape(8, 8).astype(np.float32)
+        got = quant.quantize_roundtrip(jnp.asarray(x), block=8)
+        np.testing.assert_allclose(np.asarray(got), x, atol=1e-6)
+
+    def test_outlier_isolation(self):
+        """Block-wise normalization confines outliers to their block."""
+        rng = np.random.RandomState(0)
+        x = rng.randn(32, 32).astype(np.float32)
+        x[0, 0] = 1e6
+        back = np.asarray(quant.quantize_roundtrip(jnp.asarray(x), block=16))
+        err_far = np.max(np.abs(back[16:, 16:] - x[16:, 16:]))
+        assert err_far < 0.5
+
+
+class TestPrecondKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 80), st.integers(1, 80), st.integers(1, 80),
+           st.integers(0, 2**31 - 1))
+    def test_matmul_matches_ref(self, m, k, n, seed):
+        rng = np.random.RandomState(seed)
+        a = rng.randn(m, k).astype(np.float32)
+        b = rng.randn(k, n).astype(np.float32)
+        got = precond.pallas_matmul(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(2, 48), st.integers(2, 48), st.integers(0, 2**31 - 1))
+    def test_precond_apply_matches_ref(self, m, n, seed):
+        rng = np.random.RandomState(seed)
+        l = rng.randn(m, m).astype(np.float32)
+        g = rng.randn(m, n).astype(np.float32)
+        r = rng.randn(n, n).astype(np.float32)
+        got = precond.precond_apply(jnp.asarray(l), jnp.asarray(g), jnp.asarray(r))
+        want = ref.precond_apply_ref(l, g, r)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-2)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(2, 48), st.integers(2, 48), st.booleans(),
+           st.floats(0.5, 0.99), st.integers(0, 2**31 - 1))
+    def test_gram_ema_matches_ref(self, m, n, left, beta, seed):
+        rng = np.random.RandomState(seed)
+        g = rng.randn(m, n).astype(np.float32)
+        dim = m if left else n
+        prev = np.eye(dim, dtype=np.float32) * 0.3
+        got = precond.gram_ema(jnp.asarray(prev), jnp.asarray(g),
+                               jnp.float32(beta), left=left)
+        want = ref.gram_ema_ref(prev, g, beta, left)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+    def test_pmatmul_vjp(self):
+        """Custom VJP = three matmuls through the same kernel."""
+        rng = np.random.RandomState(1)
+        a = rng.randn(24, 16).astype(np.float32)
+        b = rng.randn(16, 8).astype(np.float32)
+
+        def f(a, b):
+            return jnp.sum(precond.pmatmul(a, b) ** 2)
+
+        ga, gb = jax.grad(f, argnums=(0, 1))(jnp.asarray(a), jnp.asarray(b))
+        c = a @ b
+        np.testing.assert_allclose(np.asarray(ga), 2 * c @ b.T, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(gb), a.T @ (2 * c), rtol=1e-3, atol=1e-3)
+
+
+class TestLevels:
+    def test_linear2_matches_eq4(self):
+        lv = ref.linear2_levels(4)
+        assert lv.shape == (16,)
+        assert lv[7] == 0.0
+        assert lv[0] == -1.0
+        assert lv[15] == 1.0
+        assert np.all(np.diff(lv) > 0), "strictly increasing"
+        # Eq. (4) spot value: j=11 → (−1+22/15)²
+        np.testing.assert_allclose(lv[11], (7.0 / 15.0) ** 2, rtol=1e-6)
+
+    @pytest.mark.parametrize("bits", [2, 3, 4])
+    def test_other_bit_widths(self, bits):
+        lv = ref.linear2_levels(bits)
+        assert lv.shape == (1 << bits,)
+        assert np.all(np.diff(lv) > 0)

@@ -1,0 +1,61 @@
+//! Linear-algebra substrate benchmarks: the O(n³) kernels behind every
+//! Shampoo preconditioner update (L3 §Perf roofline targets).
+
+use quartz::linalg::schur_newton::SchurNewtonConfig;
+use quartz::linalg::{
+    cholesky, eig_sym, inverse_pth_root, lambda_max, matmul, matmul_into_planned, syrk, Matrix,
+    MatmulPlan,
+};
+use quartz::util::bench::{black_box, Bencher};
+use quartz::util::rng::Rng;
+
+fn spd(n: usize, rng: &mut Rng) -> Matrix {
+    let g = Matrix::randn(n, n + 8, 1.0, rng);
+    let mut a = syrk(&g);
+    a.add_diag(0.5);
+    a
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(2);
+
+    for n in [64usize, 128, 256] {
+        let x = Matrix::randn(n, n, 1.0, &mut rng);
+        let y = Matrix::randn(n, n, 1.0, &mut rng);
+        let flops = (2 * n * n * n) as f64;
+        b.bench_with_units(&format!("matmul/{n}x{n}"), Some((flops, "FLOP")), || {
+            black_box(matmul(&x, &y));
+        });
+        let mut out = Matrix::zeros(n, n);
+        let mut plan = MatmulPlan::new();
+        b.bench_with_units(&format!("matmul_planned/{n}x{n}"), Some((flops, "FLOP")), || {
+            matmul_into_planned(&x, &y, &mut out, &mut plan);
+            black_box(&out);
+        });
+        let g = Matrix::randn(n, 64, 1.0, &mut rng);
+        b.bench_with_units(&format!("syrk/{n}x64"), Some(((n * n * 64) as f64, "FLOP")), || {
+            black_box(syrk(&g));
+        });
+    }
+
+    for n in [64usize, 128] {
+        let a = spd(n, &mut rng);
+        b.bench(&format!("cholesky/{n}"), || {
+            black_box(cholesky(&a).unwrap());
+        });
+        b.bench(&format!("lambda_max/{n}"), || {
+            black_box(lambda_max(&a, 50));
+        });
+        let cfg = SchurNewtonConfig::default();
+        b.bench(&format!("schur_newton_p4/{n}"), || {
+            black_box(inverse_pth_root(&a, &cfg));
+        });
+    }
+
+    // Jacobi eigensolver (oracle path — used by analysis, not the hot loop).
+    let a = spd(64, &mut rng);
+    b.bench("eig_sym/64", || {
+        black_box(eig_sym(&a, 1e-10, 100));
+    });
+}

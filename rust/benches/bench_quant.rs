@@ -1,0 +1,64 @@
+//! Quantization hot-path benchmarks (L3 §Perf): block-wise quantize /
+//! dequantize, off-diagonal variants, and the Fig. 2 joint triangular store.
+//!
+//! Run: `cargo bench --bench bench_quant` (QUARTZ_BENCH_QUICK=1 for smoke).
+
+use quartz::linalg::Matrix;
+use quartz::quant::{
+    dequantize_offdiag, quantize_offdiag, BlockQuantizer, QuantConfig, TriJointStore,
+};
+use quartz::util::bench::{black_box, Bencher};
+use quartz::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(1);
+    let quantizer = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
+
+    for n in [64usize, 128, 256, 512] {
+        let x = Matrix::randn(n, n, 1.0, &mut rng);
+        let bytes = (n * n * 4) as f64;
+        b.bench_with_units(&format!("quantize/{n}x{n}"), Some((bytes, "B")), || {
+            black_box(quantizer.quantize(&x));
+        });
+        let q = quantizer.quantize(&x);
+        let mut out = Matrix::zeros(n, n);
+        b.bench_with_units(&format!("dequantize/{n}x{n}"), Some((bytes, "B")), || {
+            quantizer.dequantize_into(&q, &mut out);
+            black_box(&out);
+        });
+    }
+
+    // Off-diagonal quantization (the Shampoo store path).
+    let n = 256;
+    let x = Matrix::randn(n, n, 1.0, &mut rng);
+    b.bench(&format!("quantize_offdiag/{n}x{n}"), || {
+        black_box(quantize_offdiag(&x, &quantizer));
+    });
+    let s = quantize_offdiag(&x, &quantizer);
+    b.bench(&format!("dequantize_offdiag/{n}x{n}"), || {
+        black_box(dequantize_offdiag(&s, &quantizer));
+    });
+
+    // Fig. 2 joint triangular store (CQ+EF persistence).
+    let c = Matrix::from_fn(n, n, |i, j| if i >= j { 1.0 + (i * j % 7) as f32 * 0.1 } else { 0.0 });
+    let e = Matrix::from_fn(n, n, |i, j| if i > j { 0.01 } else { 0.0 });
+    b.bench(&format!("tri_store_pack/{n}x{n}"), || {
+        black_box(TriJointStore::store(&c, &e, &quantizer));
+    });
+    let store = TriJointStore::store(&c, &e, &quantizer);
+    b.bench(&format!("tri_store_load/{n}x{n}"), || {
+        black_box(store.load(&quantizer));
+    });
+
+    // Codebook encode alone (the inner loop).
+    let cb = quantizer.codebook().clone();
+    let vals: Vec<f32> = (0..4096).map(|i| -1.0 + 2.0 * (i as f32) / 4095.0).collect();
+    b.bench_with_units("codebook_encode/4096", Some((4096.0, "elem")), || {
+        let mut acc = 0u32;
+        for &v in &vals {
+            acc = acc.wrapping_add(cb.encode(v) as u32);
+        }
+        black_box(acc);
+    });
+}

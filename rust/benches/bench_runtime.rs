@@ -1,0 +1,72 @@
+//! PJRT request-path benchmarks: end-to-end train-step latency through the
+//! AOT artifacts (fwd/bwd execution + literal marshalling) — the L3 hot
+//! loop the paper's wall-clock columns measure.
+//!
+//! Requires `make artifacts`; prints SKIP rows otherwise.
+
+use quartz::linalg::Matrix;
+use quartz::models::init_params;
+use quartz::runtime::literal::{matrix_to_literal, vec_f32_to_literal, vec_i32_to_literal};
+use quartz::runtime::Runtime;
+use quartz::util::bench::{black_box, Bencher};
+use quartz::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_runtime: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::open(&dir).expect("runtime");
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(4);
+
+    // Literal marshalling (per-step overhead).
+    let m = Matrix::randn(128, 128, 1.0, &mut rng);
+    b.bench_with_units("literal_from_matrix/128x128", Some(((128 * 128 * 4) as f64, "B")), || {
+        black_box(matrix_to_literal(&m).unwrap());
+    });
+
+    // Kernel artifact latency (Pallas quant roundtrip through PJRT).
+    let lit = matrix_to_literal(&m).unwrap();
+    b.bench("pjrt_exec/kernel.quant_roundtrip", || {
+        black_box(rt.execute("kernel.quant_roundtrip", std::slice::from_ref(&lit)).unwrap());
+    });
+
+    // Classifier fwd_bwd step latency.
+    for model_name in ["mlp_vgg_c32", "res_mlp_c32", "vit_lite_c32"] {
+        let model = rt.manifest.models[model_name].clone();
+        let params = init_params(&model, 0);
+        let batch = model.batch;
+        let dim = model.meta_usize("dim").unwrap();
+        let x: Vec<f32> = (0..batch * dim).map(|_| rng.normal_f32(1.0)).collect();
+        let y: Vec<i32> = (0..batch).map(|_| rng.below(8) as i32).collect();
+        let mut inputs = Vec::new();
+        for p in &params {
+            inputs.push(matrix_to_literal(p).unwrap());
+        }
+        inputs.push(vec_f32_to_literal(&x, &[batch, dim]).unwrap());
+        inputs.push(vec_i32_to_literal(&y, &[batch]).unwrap());
+        let name = format!("{model_name}.fwd_bwd");
+        rt.execute(&name, &inputs).unwrap(); // warm compile
+        b.bench(&format!("pjrt_fwd_bwd/{model_name}"), || {
+            black_box(rt.execute(&name, &inputs).unwrap());
+        });
+    }
+
+    // LM fwd_bwd step latency.
+    let model = rt.manifest.models["lm_m"].clone();
+    let params = init_params(&model, 0);
+    let (batch, seq) = (model.batch, model.meta_usize("seq").unwrap());
+    let x: Vec<i32> = (0..batch * seq).map(|_| rng.below(64) as i32).collect();
+    let mut inputs = Vec::new();
+    for p in &params {
+        inputs.push(matrix_to_literal(p).unwrap());
+    }
+    inputs.push(vec_i32_to_literal(&x, &[batch, seq]).unwrap());
+    inputs.push(vec_i32_to_literal(&x, &[batch, seq]).unwrap());
+    rt.execute("lm_m.fwd_bwd", &inputs).unwrap();
+    b.bench("pjrt_fwd_bwd/lm_m", || {
+        black_box(rt.execute("lm_m.fwd_bwd", &inputs).unwrap());
+    });
+}

@@ -1,0 +1,82 @@
+//! Optimizer-level benchmarks: full Shampoo steps per variant, and the
+//! per-phase costs (gram EMA, root refresh, precondition apply).
+//!
+//! These quantify the paper's Tab. 5/6 claim that compensated Cholesky
+//! quantization adds only marginal compute over vanilla quantization.
+
+use quartz::linalg::Matrix;
+use quartz::optim::BaseOptimizer;
+use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+use quartz::util::bench::{black_box, Bencher};
+use quartz::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(3);
+    // A realistic analog layer set (mirrors res_mlp_c32).
+    let shapes: Vec<(usize, usize)> = vec![(64, 96), (96, 96), (96, 96), (96, 32)];
+    let params: Vec<Matrix> =
+        shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+    let grads: Vec<Matrix> =
+        shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.1, &mut rng)).collect();
+
+    for (label, variant) in [
+        ("32bit", ShampooVariant::Full32),
+        ("vq4", ShampooVariant::Vq4),
+        ("cq4", ShampooVariant::Cq4 { error_feedback: false }),
+        ("cq4_ef", ShampooVariant::Cq4 { error_feedback: true }),
+    ] {
+        let mk = |t1: u64, t2: u64| {
+            let cfg = ShampooConfig {
+                variant,
+                t1,
+                t2,
+                max_order: 96,
+                quant: quartz::quant::QuantConfig { min_quant_elems: 0, ..Default::default() },
+                ..Default::default()
+            };
+            Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 5e-4), cfg, &shapes)
+        };
+
+        // Cheap step (between interval boundaries): precondition + base only.
+        let mut sh = mk(1_000_000, 1_000_000);
+        let mut p = params.clone();
+        let mut k = 1u64;
+        b.bench(&format!("step_precondition_only/{label}"), || {
+            sh.step(&mut p, &grads, k, 1.0);
+            k += 1;
+            black_box(&p);
+        });
+
+        // Gram-update step (k % T1 == 0 every step).
+        let mut sh = mk(1, 1_000_000);
+        let mut p = params.clone();
+        let mut k = 1u64;
+        b.bench(&format!("step_with_gram_update/{label}"), || {
+            sh.step(&mut p, &grads, k, 1.0);
+            k += 1;
+            black_box(&p);
+        });
+
+        // Root-refresh step (both updates every step — worst case).
+        let mut sh = mk(1, 1);
+        let mut p = params.clone();
+        let mut k = 1u64;
+        b.bench(&format!("step_full_refresh/{label}"), || {
+            sh.step(&mut p, &grads, k, 1.0);
+            k += 1;
+            black_box(&p);
+        });
+    }
+
+    // Base optimizer reference (what Shampoo's overhead is measured against).
+    let mut base = BaseOptimizer::sgdm(0.05, 0.9, 5e-4);
+    base.init(shapes.len());
+    let mut p = params.clone();
+    b.bench("sgdm_step_reference", || {
+        for (i, (w, g)) in p.iter_mut().zip(grads.iter()).enumerate() {
+            base.step_param(i, w, g, 1.0);
+        }
+        black_box(&p);
+    });
+}

@@ -1,0 +1,146 @@
+//! End-to-end per-table unit benchmarks: the cost of ONE complete training
+//! step (PJRT fwd/bwd + optimizer) for each paper-table configuration.
+//! `quartz table --id tabN` regenerates the tables themselves; this bench
+//! tracks the per-step cost those tables are built from, per variant —
+//! including the interval-amortized cost at the paper's T1/T2 ratios.
+//!
+//! Requires `make artifacts`; prints SKIP otherwise.
+
+use quartz::data::synthetic::{ClusterDataset, ClusterSpec};
+use quartz::linalg::Matrix;
+use quartz::models::init_params;
+use quartz::optim::BaseOptimizer;
+use quartz::runtime::literal::{
+    literal_to_matrix, matrix_to_literal, vec_f32_to_literal, vec_i32_to_literal,
+};
+use quartz::runtime::Runtime;
+use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+use quartz::train::OptimizerStack;
+use quartz::util::bench::{black_box, Bencher};
+use quartz::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_tables: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::open(&dir).expect("runtime");
+    let mut b = Bencher::new();
+
+    // Tab 3/4/5 unit: one amortized train step of the ResNet analog.
+    let model = rt.manifest.models["res_mlp_c32"].clone();
+    let spec = ClusterSpec { classes: 32, dim: 64, train: 512, test: 64, seed: 1, ..Default::default() };
+    let (tr, _) = ClusterDataset::generate(&spec);
+    let mut rng = Rng::new(5);
+
+    for (label, variant) in [
+        ("base", None),
+        ("32bit", Some(ShampooVariant::Full32)),
+        ("vq4", Some(ShampooVariant::Vq4)),
+        ("cq4_ef", Some(ShampooVariant::Cq4 { error_feedback: true })),
+    ] {
+        let mut params = init_params(&model, 0);
+        let mut opt = match variant {
+            None => {
+                let mut o = BaseOptimizer::sgdm(0.05, 0.9, 5e-4);
+                o.init(params.len());
+                OptimizerStack::Base(o)
+            }
+            Some(v) => {
+                // Paper-ratio intervals (T1=10, T2=50) so the bench includes
+                // the amortized gram/root refresh cost.
+                let cfg = ShampooConfig { variant: v, t1: 10, t2: 50, max_order: 96, ..Default::default() };
+                OptimizerStack::Shampoo(Box::new(Shampoo::new(
+                    BaseOptimizer::sgdm(0.05, 0.9, 5e-4),
+                    cfg,
+                    &model.shapes(),
+                )))
+            }
+        };
+
+        let fwd = format!("{}.fwd_bwd", model.name);
+        let batch = model.batch;
+        let mut k = 1u64;
+        b.bench(&format!("tab3_step/res_mlp_c32/{label}"), || {
+            let idx: Vec<usize> = (0..batch).map(|_| rng.below(tr.len())).collect();
+            let (x, y) = tr.gather(&idx);
+            let yi: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+            let mut inputs = Vec::with_capacity(params.len() + 2);
+            for p in &params {
+                inputs.push(matrix_to_literal(p).unwrap());
+            }
+            inputs.push(vec_f32_to_literal(&x, &[batch, 64]).unwrap());
+            inputs.push(vec_i32_to_literal(&yi, &[batch]).unwrap());
+            let out = rt.execute(&fwd, &inputs).unwrap();
+            let grads: Vec<Matrix> = out[1..]
+                .iter()
+                .zip(params.iter())
+                .map(|(l, p)| literal_to_matrix(l, p.rows(), p.cols()).unwrap())
+                .collect();
+            opt.step(&mut params, &grads, k, 1.0);
+            k += 1;
+            black_box(&params);
+        });
+    }
+
+    // Tab 6 unit: one LM train step (base vs CQ+EF).
+    let model = rt.manifest.models["lm_s"].clone();
+    let (batch, seq) = (model.batch, model.meta_usize("seq").unwrap());
+    for (label, shampoo) in [("base", false), ("cq4_ef", true)] {
+        let mut params = init_params(&model, 0);
+        let mut opt = if shampoo {
+            let cfg = ShampooConfig {
+                variant: ShampooVariant::Cq4 { error_feedback: true },
+                t1: 10,
+                t2: 50,
+                max_order: 96,
+                ..Default::default()
+            };
+            OptimizerStack::Shampoo(Box::new(Shampoo::new(
+                BaseOptimizer::adamw(3e-3, 0.9, 0.999, 1e-8, 0.0),
+                cfg,
+                &model.shapes(),
+            )))
+        } else {
+            let mut o = BaseOptimizer::adamw(3e-3, 0.9, 0.999, 1e-8, 0.0);
+            o.init(params.len());
+            OptimizerStack::Base(o)
+        };
+        let mut k = 1u64;
+        b.bench(&format!("tab6_step/lm_s/{label}"), || {
+            let x: Vec<i32> = (0..batch * seq).map(|_| rng.below(64) as i32).collect();
+            let mut inputs = Vec::with_capacity(params.len() + 2);
+            for p in &params {
+                inputs.push(matrix_to_literal(p).unwrap());
+            }
+            inputs.push(vec_i32_to_literal(&x, &[batch, seq]).unwrap());
+            inputs.push(vec_i32_to_literal(&x, &[batch, seq]).unwrap());
+            let out = rt.execute("lm_s.fwd_bwd", &inputs).unwrap();
+            let grads: Vec<Matrix> = out[1..]
+                .iter()
+                .zip(params.iter())
+                .map(|(l, p)| literal_to_matrix(l, p.rows(), p.cols()).unwrap())
+                .collect();
+            opt.step(&mut params, &grads, k, 1.0);
+            k += 1;
+            black_box(&params);
+        });
+    }
+
+    // Tab 1/9 unit: one NRE/AE evaluation (spectral analysis cost).
+    let mut rng2 = Rng::new(6);
+    let a = quartz::analysis::synthetic_pd(64, 1e-3, 1e3, &mut rng2);
+    let q = quartz::quant::BlockQuantizer::new(quartz::quant::QuantConfig {
+        min_quant_elems: 0,
+        ..Default::default()
+    });
+    b.bench("tab1_unit/nre_ae_vq/64", || {
+        let ga = quartz::analysis::vq_roundtrip(&a, &q);
+        black_box(quartz::analysis::nre_ae(&a, &ga));
+    });
+    b.bench("tab1_unit/nre_ae_cq/64", || {
+        let ga = quartz::analysis::cq_roundtrip(&a, 1e-6, &q);
+        black_box(quartz::analysis::nre_ae(&a, &ga));
+    });
+}

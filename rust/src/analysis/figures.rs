@@ -1,0 +1,201 @@
+//! Figure harnesses: CSV series + summary tables for the paper's plots.
+
+use super::harvest::train_with_snapshots;
+use super::spectral::eigenvalues;
+use super::tables::scaled_shampoo;
+use crate::coordinator::runner::run_all;
+use crate::coordinator::spec::{OptimizerSpec, RunSpec, Workload};
+use crate::data::images::ImageSpec;
+use crate::data::synthetic::ClusterSpec;
+use crate::optim::{BaseOptimizer, OptimizerKind};
+use crate::report::table::{mb, pct, Table};
+use crate::runtime::Runtime;
+use crate::shampoo::{ShampooConfig, ShampooVariant};
+use crate::train::ClassifierData;
+use crate::util::csv::CsvWriter;
+use crate::util::stats::Histogram;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+fn steps(full: u64, quick: bool) -> u64 {
+    if quick {
+        (full / 5).max(20)
+    } else {
+        full
+    }
+}
+
+fn cluster(classes: usize, seed: u64) -> Workload {
+    Workload::Cluster(ClusterSpec { classes, dim: 64, seed, ..Default::default() })
+}
+
+fn workload_for(model: &str, classes: usize, seed: u64) -> Workload {
+    if model.starts_with("vit") || model.starts_with("swin") {
+        Workload::Image(ImageSpec { side: 8, classes, seed, noise: 0.5, ..Default::default() })
+    } else {
+        cluster(classes, seed)
+    }
+}
+
+/// Fig. 1 — accuracy vs optimizer-state memory scatter (ResNet analog).
+pub fn fig1(quick: bool, out_dir: &Path) -> Result<Table> {
+    let (_, outcomes) = super::tables::tab3(quick)?;
+    let mut w = CsvWriter::create(&out_dir.join("fig1.csv"), &["optimizer", "accuracy", "mem_mb"])?;
+    let mut t = Table::new(
+        "Fig 1 — accuracy vs optimizer-state memory (ResNet analog)",
+        &["Optimizer", "Accuracy (%)", "Opt-State (MB)"],
+    );
+    for o in outcomes.iter().filter(|o| o.model == "res_mlp_c32") {
+        if let Some(m) = &o.metrics {
+            w.row(&[
+                o.optimizer.clone(),
+                format!("{:.4}", m.final_metric),
+                mb(m.state_bytes),
+            ])?;
+            t.row(vec![o.optimizer.clone(), pct(m.final_metric), mb(m.state_bytes)]);
+        }
+    }
+    w.flush()?;
+    Ok(t)
+}
+
+/// Fig. 3 — eigenvalue histograms of dequantized `D(L̂)`, `D(R̂)` across
+/// training checkpoints; asserts positivity (Assumption 5.1c evidence).
+pub fn fig3(rt: &Runtime, quick: bool, out_dir: &Path) -> Result<Table> {
+    let total = steps(200, quick);
+    let spec = ClusterSpec { classes: 32, dim: 64, seed: 31, ..Default::default() };
+    let (tr, te) = crate::data::synthetic::ClusterDataset::generate(&spec);
+    let data = ClassifierData::from((&tr, &te));
+    let snaps = train_with_snapshots(
+        rt,
+        "mlp_vgg_c32",
+        &data,
+        BaseOptimizer::sgdm(0.05, 0.9, 5e-4),
+        ShampooConfig {
+            variant: ShampooVariant::Cq4 { error_feedback: true },
+            t1: 5,
+            t2: 20,
+            max_order: 96,
+            ..Default::default()
+        },
+        total,
+        4,
+        31,
+    )?;
+
+    let mut w = CsvWriter::create(
+        &out_dir.join("fig3.csv"),
+        &["checkpoint_step", "bin_center", "count"],
+    )?;
+    let mut t = Table::new(
+        "Fig 3 — eigenvalues of dequantized preconditioner roots D(L̂), D(R̂)",
+        &["Checkpoint", "# eigenvalues", "min λ", "max λ", "all > 0"],
+    );
+    for snap in &snaps {
+        let mut all = Vec::new();
+        for (l, r) in &snap.inv_roots {
+            all.extend(eigenvalues(l));
+            all.extend(eigenvalues(r));
+        }
+        let min = all.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = all.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut hist = Histogram::new(0.0, max as f64 * 1.01, 40);
+        for &v in &all {
+            hist.add(v as f64);
+        }
+        for (center, count) in hist.rows() {
+            w.row(&[format!("{}", snap.step), format!("{center:.5}"), format!("{count}")])?;
+        }
+        t.row(vec![
+            format!("step {}", snap.step),
+            format!("{}", all.len()),
+            format!("{min:.5}"),
+            format!("{max:.4}"),
+            format!("{}", min > 0.0),
+        ]);
+    }
+    w.flush()?;
+    Ok(t)
+}
+
+/// Fig. 4 — training-loss and eval-accuracy curves across optimizers for
+/// two workloads (ResNet analog + ViT analog).
+pub fn fig4(quick: bool, out_dir: &Path) -> Result<Table> {
+    let total = steps(400, quick);
+    let jobs = [
+        ("res_mlp_c32", OptimizerKind::Sgdm, 32usize),
+        ("vit_lite_c64", OptimizerKind::AdamW, 64usize),
+    ];
+    let mut specs = Vec::new();
+    for (model, base, classes) in jobs {
+        let hyper = OptimizerSpec::paper_hyper(base);
+        specs.push(RunSpec::new(
+            model,
+            workload_for(model, classes, 41),
+            OptimizerSpec::base_only(base, hyper),
+            total,
+        ));
+        for variant in
+            [ShampooVariant::Full32, ShampooVariant::Vq4, ShampooVariant::Cq4 { error_feedback: true }]
+        {
+            specs.push(RunSpec::new(
+                model,
+                workload_for(model, classes, 41),
+                OptimizerSpec::with_shampoo(base, hyper, scaled_shampoo(variant)),
+                total,
+            ));
+        }
+    }
+    for s in specs.iter_mut() {
+        s.eval_every = (total / 8).max(1);
+        s.log_every = (total / 40).max(1);
+    }
+    let outcomes = run_all(&specs, crate::util::pool::default_threads().min(8));
+
+    let mut w = CsvWriter::create(
+        &out_dir.join("fig4.csv"),
+        &["model", "optimizer", "series", "step", "value"],
+    )?;
+    let mut t = Table::new(
+        "Fig 4 — loss / accuracy curves (series dumped to fig4.csv)",
+        &["Model", "Optimizer", "final loss", "final acc (%)"],
+    );
+    for o in &outcomes {
+        let Some(m) = &o.metrics else { continue };
+        for (step, loss) in &m.loss_curve {
+            w.row(&[o.model.clone(), o.optimizer.clone(), "loss".into(), format!("{step}"), format!("{loss}")])?;
+        }
+        for (step, acc) in &m.eval_curve {
+            w.row(&[o.model.clone(), o.optimizer.clone(), "acc".into(), format!("{step}"), format!("{acc}")])?;
+        }
+        t.row(vec![
+            o.model.clone(),
+            o.optimizer.clone(),
+            format!("{:.3}", m.loss_curve.last().map(|x| x.1).unwrap_or(f32::NAN)),
+            pct(m.final_metric),
+        ]);
+    }
+    w.flush()?;
+    Ok(t)
+}
+
+/// Dispatch by figure id.
+pub fn run_figure(id: &str, quick: bool, out_dir: &Path) -> Result<()> {
+    let table = match id {
+        "fig1" => fig1(quick, out_dir)?,
+        "fig3" => {
+            let rt = Runtime::open_default()?;
+            fig3(&rt, quick, out_dir)?
+        }
+        "fig4" => fig4(quick, out_dir)?,
+        "all" => {
+            for id in ["fig1", "fig3", "fig4"] {
+                run_figure(id, quick, out_dir)?;
+            }
+            return Ok(());
+        }
+        _ => bail!("unknown figure id '{id}' (fig1, fig3, fig4, all; fig2 is demonstrated by `quartz quant-demo` and the tri_store tests)"),
+    };
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Checkpointed Shampoo training: trains a classifier with full access to
+//! optimizer internals, snapshotting reconstructed preconditioners and
+//! dequantized inverse roots at fixed fractions of training — the data
+//! source behind Tab. 1/10 ("Epoch N" rows) and Fig. 3's histograms.
+
+use crate::linalg::Matrix;
+use crate::models::init_params;
+use crate::optim::BaseOptimizer;
+use crate::runtime::literal::{literal_to_matrix, literal_to_scalar_f32, matrix_to_literal, vec_f32_to_literal, vec_i32_to_literal};
+use crate::runtime::Runtime;
+use crate::shampoo::{Shampoo, ShampooConfig};
+use crate::train::ClassifierData;
+use anyhow::{Context, Result};
+
+/// One training checkpoint's optimizer internals.
+pub struct Snapshot {
+    pub step: u64,
+    /// Reconstructed `(L, R)` per layer-block (quantization round-tripped).
+    pub preconds: Vec<(Matrix, Matrix)>,
+    /// Dequantized `(D(L̂), D(R̂))` per layer-block.
+    pub inv_roots: Vec<(Matrix, Matrix)>,
+    pub loss: f32,
+}
+
+/// Train `model` with Shampoo and snapshot at `n_snapshots` evenly spaced
+/// steps (the paper's "Epoch 50/100/150/200" checkpoints).
+pub fn train_with_snapshots(
+    rt: &Runtime,
+    model_name: &str,
+    data: &ClassifierData,
+    base: BaseOptimizer,
+    cfg: ShampooConfig,
+    steps: u64,
+    n_snapshots: usize,
+    seed: u64,
+) -> Result<Vec<Snapshot>> {
+    let model = rt
+        .manifest
+        .models
+        .get(model_name)
+        .with_context(|| format!("unknown model {model_name}"))?
+        .clone();
+    let fwd_bwd = format!("{}.fwd_bwd", model.name);
+    let batch = model.batch;
+    let mut params = init_params(&model, seed);
+    let mut sh = Shampoo::new(base, cfg, &model.shapes());
+
+    let snap_steps: Vec<u64> = (1..=n_snapshots)
+        .map(|i| (steps * i as u64) / n_snapshots as u64)
+        .collect();
+    let mut snapshots = Vec::new();
+
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x5A4);
+    let n = data.n_train();
+    for k in 1..=steps {
+        let idx: Vec<usize> = (0..batch).map(|_| rng.below(n)).collect();
+        let mut x = Vec::with_capacity(batch * data.dim);
+        let mut y = Vec::with_capacity(batch);
+        for &i in &idx {
+            x.extend_from_slice(&data.train_x[i * data.dim..(i + 1) * data.dim]);
+            y.push(data.train_y[i] as i32);
+        }
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for p in &params {
+            inputs.push(matrix_to_literal(p)?);
+        }
+        inputs.push(vec_f32_to_literal(&x, &[batch, data.dim])?);
+        inputs.push(vec_i32_to_literal(&y, &[batch])?);
+        let outputs = rt.execute(&fwd_bwd, &inputs)?;
+        let loss = literal_to_scalar_f32(&outputs[0])?;
+        let grads: Vec<Matrix> = outputs[1..]
+            .iter()
+            .zip(params.iter())
+            .map(|(l, p)| literal_to_matrix(l, p.rows(), p.cols()))
+            .collect::<Result<_>>()?;
+        sh.step(&mut params, &grads, k, 1.0);
+
+        if snap_steps.contains(&k) {
+            let mut preconds = Vec::new();
+            let mut inv_roots = Vec::new();
+            for li in 0..sh.layers.len() {
+                preconds.extend(sh.reconstructed_preconditioners(li));
+                inv_roots.extend(sh.dequant_inv_roots(li));
+            }
+            snapshots.push(Snapshot { step: k, preconds, inv_roots, loss });
+        }
+    }
+    Ok(snapshots)
+}

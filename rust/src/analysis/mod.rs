@@ -1,0 +1,9 @@
+//! Paper-experiment harnesses: one entry point per table and figure
+//! (DESIGN.md §3 maps each to the paper).
+
+pub mod harvest;
+pub mod spectral;
+pub mod tables;
+pub mod figures;
+
+pub use spectral::{cq_roundtrip, nre_ae, synthetic_pd, vq_roundtrip};

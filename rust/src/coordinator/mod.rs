@@ -1,0 +1,14 @@
+//! L3 coordinator: experiment specification, scheduling, and execution.
+//!
+//! The paper's contribution lives in the optimizer (L2/L1-adjacent math),
+//! so the coordinator is the framework glue a real training system needs:
+//! a declarative run grid (every paper table is one), a panic-isolated
+//! worker pool where each worker owns its own PJRT client, a memory-budget
+//! gate (reproducing Tab. 6's "Out of GPU Memory" row), and result
+//! aggregation for the report layer.
+
+pub mod spec;
+pub mod runner;
+
+pub use runner::{run_all, RunOutcome};
+pub use spec::{ExperimentSpec, OptimizerSpec, RunSpec, Workload};

@@ -1,0 +1,196 @@
+//! Experiment execution: a panic-isolated worker pool where each worker
+//! owns its own PJRT client (the client is `Rc`-backed and must not cross
+//! threads).
+
+use super::spec::{RunSpec, Workload};
+use crate::data::images::ImageDataset;
+use crate::data::synthetic::ClusterDataset;
+use crate::data::tokens::TokenCorpus;
+use crate::metrics::MemoryModel;
+use crate::runtime::Runtime;
+use crate::train::{train_classifier, train_lm, ClassifierData, RunMetrics, TrainConfig};
+use crate::util::pool::{JobResult, Pool};
+use std::path::PathBuf;
+
+/// Result of one scheduled run.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub id: String,
+    pub model: String,
+    pub optimizer: String,
+    /// Modeled optimizer-state bytes (always available, even for OOM rows).
+    pub modeled_bytes: usize,
+    /// `None` when the memory gate rejected the run (Tab. 6 OOM row).
+    pub metrics: Option<RunMetrics>,
+    /// Populated when the run failed (panic or error).
+    pub error: Option<String>,
+}
+
+impl RunOutcome {
+    pub fn is_oom(&self) -> bool {
+        self.metrics.is_none() && self.error.is_none()
+    }
+}
+
+thread_local! {
+    /// One Runtime (PJRT client + executable cache) per worker thread:
+    /// the client is `Rc`-backed, and reusing it across runs on the same
+    /// thread amortizes artifact compilation across a whole table grid.
+    static TL_RUNTIME: std::cell::RefCell<Option<(PathBuf, std::rc::Rc<Runtime>)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn thread_runtime(dir: &PathBuf) -> anyhow::Result<std::rc::Rc<Runtime>> {
+    TL_RUNTIME.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some((cached_dir, rt)) = slot.as_ref() {
+            if cached_dir == dir {
+                return Ok(std::rc::Rc::clone(rt));
+            }
+        }
+        let rt = std::rc::Rc::new(Runtime::open(dir)?);
+        *slot = Some((dir.clone(), std::rc::Rc::clone(&rt)));
+        Ok(rt)
+    })
+}
+
+/// Execute one run in the current thread (reuses the thread's Runtime).
+pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> anyhow::Result<RunOutcome> {
+    let rt = thread_runtime(artifact_dir)?;
+    let model = rt
+        .manifest
+        .models
+        .get(&spec.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", spec.model))?
+        .clone();
+
+    // Memory gate: the modeled footprint stands in for the paper's 80 GB
+    // A100 ceiling (DESIGN.md §4).
+    let mm = MemoryModel::new(&model.shapes());
+    let modeled = mm.total_bytes(
+        spec.optimizer.base,
+        spec.optimizer.shampoo.as_ref(),
+    );
+    if let Some(budget) = spec.memory_budget {
+        if modeled > budget {
+            return Ok(RunOutcome {
+                id: spec.id.clone(),
+                model: spec.model.clone(),
+                optimizer: spec.optimizer.label(),
+                modeled_bytes: modeled,
+                metrics: None,
+                error: None,
+            });
+        }
+    }
+
+    let opt = spec.optimizer.build(&model.shapes());
+    let cfg = TrainConfig {
+        steps: spec.steps,
+        schedule: spec.schedule,
+        eval_every: spec.eval_every,
+        log_every: spec.log_every,
+        seed: spec.seed,
+    };
+
+    let metrics = match &spec.workload {
+        Workload::Cluster(cs) => {
+            let (tr, te) = ClusterDataset::generate(cs);
+            let data = ClassifierData::from((&tr, &te));
+            train_classifier(&rt, &model, &data, opt, &cfg)?
+        }
+        Workload::Image(is) => {
+            let (tr, te) = ImageDataset::generate(is);
+            let data = ClassifierData::from((&tr, &te));
+            train_classifier(&rt, &model, &data, opt, &cfg)?
+        }
+        Workload::Tokens(ts) => {
+            let corpus = TokenCorpus::generate(ts);
+            train_lm(&rt, &model, &corpus, opt, &cfg)?
+        }
+    };
+
+    Ok(RunOutcome {
+        id: spec.id.clone(),
+        model: spec.model.clone(),
+        optimizer: spec.optimizer.label(),
+        modeled_bytes: modeled,
+        metrics: Some(metrics),
+        error: None,
+    })
+}
+
+/// Execute all runs over `workers` threads; failures are isolated per run.
+pub fn run_all(specs: &[RunSpec], workers: usize) -> Vec<RunOutcome> {
+    let dir = Runtime::artifact_dir();
+    let pool = Pool::new(workers.max(1));
+    let jobs: Vec<_> = specs
+        .iter()
+        .cloned()
+        .map(|spec| {
+            let dir = dir.clone();
+            move || match run_one(&dir, &spec) {
+                Ok(outcome) => outcome,
+                Err(e) => RunOutcome {
+                    id: spec.id.clone(),
+                    model: spec.model.clone(),
+                    optimizer: spec.optimizer.label(),
+                    modeled_bytes: 0,
+                    metrics: None,
+                    error: Some(format!("{e:#}")),
+                },
+            }
+        })
+        .collect();
+    pool.run(jobs)
+        .into_iter()
+        .zip(specs.iter())
+        .map(|(res, spec)| match res {
+            JobResult::Ok(outcome) => outcome,
+            JobResult::Panicked(msg) => RunOutcome {
+                id: spec.id.clone(),
+                model: spec.model.clone(),
+                optimizer: spec.optimizer.label(),
+                modeled_bytes: 0,
+                metrics: None,
+                error: Some(format!("worker panicked: {msg}")),
+            },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spec::OptimizerSpec;
+    use crate::data::synthetic::ClusterSpec;
+    use crate::optim::OptimizerKind;
+    use crate::shampoo::{ShampooConfig, ShampooVariant};
+
+    #[test]
+    fn memory_gate_rejects_over_budget() {
+        // Use a tiny budget; no artifacts needed because the gate fires
+        // before Runtime would execute anything — but Runtime::open is
+        // called first, so skip when artifacts are absent.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let opt = OptimizerSpec::with_shampoo(
+            OptimizerKind::Sgdm,
+            OptimizerSpec::paper_hyper(OptimizerKind::Sgdm),
+            ShampooConfig { variant: ShampooVariant::Full32, ..Default::default() },
+        );
+        let mut spec = RunSpec::new(
+            "res_mlp_c32",
+            Workload::Cluster(ClusterSpec::default()),
+            opt,
+            10,
+        );
+        spec.memory_budget = Some(1); // 1 byte: everything OOMs
+        let outcome = run_one(&dir, &spec).unwrap();
+        assert!(outcome.is_oom());
+        assert!(outcome.modeled_bytes > 0);
+    }
+}

@@ -1,0 +1,326 @@
+//! Declarative experiment specifications (+ TOML loading for user-defined
+//! grids; the built-in paper tables construct these programmatically).
+
+use crate::data::images::ImageSpec;
+use crate::data::synthetic::ClusterSpec;
+use crate::data::tokens::CorpusSpec;
+use crate::optim::optimizer::Hyper;
+use crate::optim::{BaseOptimizer, LrSchedule, OptimizerKind};
+use crate::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+use crate::train::OptimizerStack;
+use crate::util::toml::{TomlDoc, TomlTable};
+use anyhow::{bail, Context, Result};
+
+/// What data the run trains on.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    Cluster(ClusterSpec),
+    Image(ImageSpec),
+    Tokens(CorpusSpec),
+}
+
+/// Base optimizer + optional Shampoo wrapper.
+#[derive(Clone, Debug)]
+pub struct OptimizerSpec {
+    pub base: OptimizerKind,
+    pub hyper: Hyper,
+    pub shampoo: Option<ShampooConfig>,
+}
+
+impl OptimizerSpec {
+    pub fn base_only(base: OptimizerKind, hyper: Hyper) -> OptimizerSpec {
+        OptimizerSpec { base, hyper, shampoo: None }
+    }
+
+    pub fn with_shampoo(
+        base: OptimizerKind,
+        hyper: Hyper,
+        shampoo: ShampooConfig,
+    ) -> OptimizerSpec {
+        OptimizerSpec { base, hyper, shampoo: Some(shampoo) }
+    }
+
+    /// The paper's default base hypers (App. C.3), scaled for the analogs.
+    pub fn paper_hyper(base: OptimizerKind) -> Hyper {
+        match base {
+            OptimizerKind::Sgd | OptimizerKind::Sgdm => Hyper {
+                lr: 0.05,
+                momentum: 0.9,
+                weight_decay: 5e-4,
+                ..Default::default()
+            },
+            OptimizerKind::Adam | OptimizerKind::AdamW => Hyper {
+                lr: 1e-3,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                weight_decay: 5e-2,
+                ..Default::default()
+            },
+            OptimizerKind::RmsProp => Hyper {
+                lr: 5e-4,
+                beta2: 0.99,
+                eps: 1e-8,
+                weight_decay: 0.0,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Materialize the optimizer stack for a model's shapes.
+    pub fn build(&self, shapes: &[(usize, usize)]) -> OptimizerStack {
+        let base = BaseOptimizer::new(self.base, self.hyper);
+        match &self.shampoo {
+            None => OptimizerStack::Base(base),
+            Some(cfg) => OptimizerStack::Shampoo(Box::new(Shampoo::new(base, *cfg, shapes))),
+        }
+    }
+
+    /// Row label matching the paper's tables.
+    pub fn label(&self) -> String {
+        match &self.shampoo {
+            None => self.base.name().to_uppercase(),
+            Some(cfg) => format!(
+                "{} + {} Shampoo",
+                self.base.name().to_uppercase(),
+                cfg.variant.name()
+            ),
+        }
+    }
+}
+
+/// One training run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub id: String,
+    pub model: String,
+    pub workload: Workload,
+    pub optimizer: OptimizerSpec,
+    pub steps: u64,
+    pub seed: u64,
+    pub schedule: LrSchedule,
+    pub eval_every: u64,
+    pub log_every: u64,
+    /// Optional memory ceiling in bytes: if the *modeled* optimizer state
+    /// exceeds it the run is reported as OOM without executing (Tab. 6).
+    pub memory_budget: Option<usize>,
+}
+
+impl RunSpec {
+    pub fn new(model: &str, workload: Workload, optimizer: OptimizerSpec, steps: u64) -> RunSpec {
+        RunSpec {
+            id: format!("{}/{}", model, optimizer.label()),
+            model: model.to_string(),
+            workload,
+            optimizer,
+            steps,
+            seed: 0,
+            schedule: LrSchedule::CosineWarmup { warmup: 20, total: steps, min_frac: 0.05 },
+            eval_every: 0,
+            log_every: 10,
+            memory_budget: None,
+        }
+    }
+}
+
+/// A named collection of runs.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub runs: Vec<RunSpec>,
+    pub workers: usize,
+}
+
+impl ExperimentSpec {
+    /// Parse a user-authored TOML spec, e.g.:
+    ///
+    /// ```toml
+    /// name = "my-sweep"
+    /// steps = 300
+    /// workers = 4
+    ///
+    /// [workload]
+    /// kind = "cluster"       # or "tokens"
+    /// classes = 32
+    /// dim = 64
+    ///
+    /// [[runs]]
+    /// model = "res_mlp_c32"
+    /// base = "sgdm"
+    /// shampoo = "cq-ef"      # 32bit | vq | cq | cq-ef | none
+    /// ```
+    pub fn from_toml(text: &str) -> Result<ExperimentSpec> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let name = doc
+            .root
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("experiment")
+            .to_string();
+        let steps = doc.root.get("steps").and_then(|v| v.as_i64()).unwrap_or(300) as u64;
+        let seed = doc.root.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+        let workers = doc.root.get("workers").and_then(|v| v.as_i64()).unwrap_or(4) as usize;
+
+        let wl_table = doc.tables.get("workload");
+        let workload = parse_workload(wl_table, seed)?;
+
+        let run_tables = doc
+            .table_arrays
+            .get("runs")
+            .context("spec needs at least one [[runs]] entry")?;
+        let mut runs = Vec::new();
+        for (i, t) in run_tables.iter().enumerate() {
+            let model = t
+                .get("model")
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("runs[{i}]: missing model"))?
+                .to_string();
+            let base_name = t.get("base").and_then(|v| v.as_str()).unwrap_or("sgdm");
+            let base = parse_base(base_name)?;
+            let mut hyper = OptimizerSpec::paper_hyper(base);
+            if let Some(lr) = t.get("lr").and_then(|v| v.as_f64()) {
+                hyper.lr = lr as f32;
+            }
+            let shampoo = match t.get("shampoo").and_then(|v| v.as_str()) {
+                None | Some("none") => None,
+                Some(s) => {
+                    let variant = ShampooVariant::parse(s)
+                        .with_context(|| format!("runs[{i}]: unknown shampoo variant '{s}'"))?;
+                    let mut cfg = ShampooConfig { variant, ..Default::default() };
+                    if let Some(t1) = t.get("t1").and_then(|v| v.as_i64()) {
+                        cfg.t1 = t1 as u64;
+                    }
+                    if let Some(t2) = t.get("t2").and_then(|v| v.as_i64()) {
+                        cfg.t2 = t2 as u64;
+                    }
+                    if let Some(b) = t.get("beta").and_then(|v| v.as_f64()) {
+                        cfg.beta = b as f32;
+                    }
+                    if let Some(mo) = t.get("max_order").and_then(|v| v.as_i64()) {
+                        cfg.max_order = mo as usize;
+                    }
+                    Some(cfg)
+                }
+            };
+            let opt = OptimizerSpec { base, hyper, shampoo };
+            let mut run = RunSpec::new(&model, workload.clone(), opt, steps);
+            run.seed = seed;
+            runs.push(run);
+        }
+        Ok(ExperimentSpec { name, runs, workers })
+    }
+}
+
+fn parse_base(s: &str) -> Result<OptimizerKind> {
+    Ok(match s {
+        "sgd" => OptimizerKind::Sgd,
+        "sgdm" => OptimizerKind::Sgdm,
+        "adam" => OptimizerKind::Adam,
+        "adamw" => OptimizerKind::AdamW,
+        "rmsprop" => OptimizerKind::RmsProp,
+        _ => bail!("unknown base optimizer '{s}'"),
+    })
+}
+
+fn parse_workload(t: Option<&TomlTable>, seed: u64) -> Result<Workload> {
+    let Some(t) = t else {
+        return Ok(Workload::Cluster(ClusterSpec { seed, ..Default::default() }));
+    };
+    match t.get("kind").and_then(|v| v.as_str()).unwrap_or("cluster") {
+        "cluster" => {
+            let mut spec = ClusterSpec { seed, ..Default::default() };
+            if let Some(v) = t.get("classes").and_then(|v| v.as_i64()) {
+                spec.classes = v as usize;
+            }
+            if let Some(v) = t.get("dim").and_then(|v| v.as_i64()) {
+                spec.dim = v as usize;
+            }
+            if let Some(v) = t.get("train").and_then(|v| v.as_i64()) {
+                spec.train = v as usize;
+            }
+            if let Some(v) = t.get("test").and_then(|v| v.as_i64()) {
+                spec.test = v as usize;
+            }
+            Ok(Workload::Cluster(spec))
+        }
+        "image" => {
+            let mut spec = ImageSpec { seed, ..Default::default() };
+            if let Some(v) = t.get("classes").and_then(|v| v.as_i64()) {
+                spec.classes = v as usize;
+            }
+            if let Some(v) = t.get("side").and_then(|v| v.as_i64()) {
+                spec.side = v as usize;
+            }
+            Ok(Workload::Image(spec))
+        }
+        "tokens" => {
+            let mut spec = CorpusSpec { seed, ..Default::default() };
+            if let Some(v) = t.get("vocab").and_then(|v| v.as_i64()) {
+                spec.vocab = v as usize;
+            }
+            if let Some(v) = t.get("length").and_then(|v| v.as_i64()) {
+                spec.length = v as usize;
+            }
+            Ok(Workload::Tokens(spec))
+        }
+        other => bail!("unknown workload kind '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let text = r#"
+name = "sweep"
+steps = 100
+workers = 2
+
+[workload]
+kind = "cluster"
+classes = 16
+dim = 64
+
+[[runs]]
+model = "res_mlp_c32"
+base = "sgdm"
+shampoo = "cq-ef"
+t1 = 5
+
+[[runs]]
+model = "res_mlp_c32"
+base = "adamw"
+"#;
+        let spec = ExperimentSpec::from_toml(text).unwrap();
+        assert_eq!(spec.name, "sweep");
+        assert_eq!(spec.runs.len(), 2);
+        let r0 = &spec.runs[0];
+        assert_eq!(r0.steps, 100);
+        let sh = r0.optimizer.shampoo.as_ref().unwrap();
+        assert_eq!(sh.t1, 5);
+        assert_eq!(sh.variant, ShampooVariant::Cq4 { error_feedback: true });
+        assert!(spec.runs[1].optimizer.shampoo.is_none());
+        match &r0.workload {
+            Workload::Cluster(c) => assert_eq!(c.classes, 16),
+            _ => panic!("wrong workload"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_variant() {
+        let text = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"5bit\"\n";
+        assert!(ExperimentSpec::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn labels_match_paper_style() {
+        let o = OptimizerSpec::with_shampoo(
+            OptimizerKind::Sgdm,
+            OptimizerSpec::paper_hyper(OptimizerKind::Sgdm),
+            ShampooConfig { variant: ShampooVariant::Vq4, ..Default::default() },
+        );
+        assert_eq!(o.label(), "SGDM + 4-bit (VQ) Shampoo");
+    }
+}

@@ -1,0 +1,130 @@
+//! Synthetic patch-image data (the ViT/CNN-analog input): `side×side`
+//! single-channel images composed of class-specific frequency patterns
+//! plus structured noise. Flattened for MLP heads or consumed patch-wise
+//! by the ViT-analog graph.
+
+use crate::util::rng::Rng;
+
+/// Labelled image dataset (row-major `[n, side*side]`).
+#[derive(Clone, Debug)]
+pub struct ImageDataset {
+    pub side: usize,
+    pub classes: usize,
+    pub pixels: Vec<f32>,
+    pub labels: Vec<u32>,
+}
+
+/// Generation settings.
+#[derive(Clone, Copy, Debug)]
+pub struct ImageSpec {
+    pub side: usize,
+    pub classes: usize,
+    pub train: usize,
+    pub test: usize,
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for ImageSpec {
+    fn default() -> Self {
+        ImageSpec { side: 8, classes: 16, train: 4096, test: 1024, noise: 0.6, seed: 0 }
+    }
+}
+
+impl ImageDataset {
+    pub fn generate(spec: &ImageSpec) -> (ImageDataset, ImageDataset) {
+        let mut rng = Rng::new(spec.seed ^ 0x1111_AAAA);
+        let s = spec.side;
+        // Each class: a 2-D sinusoidal template with random frequency/phase.
+        let templates: Vec<Vec<f32>> = (0..spec.classes)
+            .map(|_| {
+                let fx = 1.0 + rng.uniform() as f32 * 3.0;
+                let fy = 1.0 + rng.uniform() as f32 * 3.0;
+                let px = rng.uniform() as f32 * std::f32::consts::TAU;
+                let py = rng.uniform() as f32 * std::f32::consts::TAU;
+                (0..s * s)
+                    .map(|i| {
+                        let (x, y) = ((i % s) as f32 / s as f32, (i / s) as f32 / s as f32);
+                        ((fx * std::f32::consts::TAU * x + px).sin()
+                            + (fy * std::f32::consts::TAU * y + py).sin())
+                            * 0.5
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let make = |n: usize, rng: &mut Rng| {
+            let mut pixels = Vec::with_capacity(n * s * s);
+            let mut labels = Vec::with_capacity(n);
+            for _ in 0..n {
+                let y = rng.below(spec.classes);
+                let amp = 0.7 + 0.6 * rng.uniform() as f32;
+                for &t in &templates[y] {
+                    pixels.push(amp * t + rng.normal_f32(spec.noise));
+                }
+                labels.push(y as u32);
+            }
+            ImageDataset { side: s, classes: spec.classes, pixels, labels }
+        };
+        let mut tr_rng = rng.fork(1);
+        let mut te_rng = rng.fork(2);
+        (make(spec.train, &mut tr_rng), make(spec.test, &mut te_rng))
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.side * self.side
+    }
+
+    pub fn gather(&self, indices: &[usize]) -> (Vec<f32>, Vec<u32>) {
+        let d = self.dim();
+        let mut x = Vec::with_capacity(indices.len() * d);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(&self.pixels[i * d..(i + 1) * d]);
+            y.push(self.labels[i]);
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let (tr, te) = ImageDataset::generate(&ImageSpec {
+            train: 32,
+            test: 16,
+            ..Default::default()
+        });
+        assert_eq!(tr.pixels.len(), 32 * 64);
+        assert_eq!(te.len(), 16);
+        assert_eq!(tr.dim(), 64);
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = ImageSpec { train: 10, test: 5, ..Default::default() };
+        let (a, _) = ImageDataset::generate(&spec);
+        let (b, _) = ImageDataset::generate(&spec);
+        assert_eq!(a.pixels, b.pixels);
+    }
+
+    #[test]
+    fn gather_extracts_rows() {
+        let (tr, _) = ImageDataset::generate(&ImageSpec { train: 10, test: 1, ..Default::default() });
+        let (x, y) = tr.gather(&[3, 7]);
+        assert_eq!(x.len(), 2 * 64);
+        assert_eq!(x[..64], tr.pixels[3 * 64..4 * 64]);
+        assert_eq!(y[1], tr.labels[7]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Seeded synthetic datasets — the scaled analogs of the paper's workloads
+//! (DESIGN.md §4). All generation is deterministic in the seed so every
+//! table row is exactly reproducible.
+
+pub mod synthetic;
+pub mod tokens;
+pub mod images;
+
+pub use images::ImageDataset;
+pub use synthetic::ClusterDataset;
+pub use tokens::TokenCorpus;

@@ -1,0 +1,179 @@
+//! Synthetic token corpus (the C4 analog for LLM pre-training, Tab. 6):
+//! a seeded order-2 Markov chain over `vocab` symbols with a skewed
+//! (Zipf-ish) stationary distribution. Next-token prediction on it has
+//! learnable structure (bigram/trigram statistics) and a nontrivial
+//! entropy floor, so perplexity curves behave qualitatively like language.
+
+use crate::util::rng::Rng;
+
+/// A generated corpus plus sampling utilities.
+#[derive(Clone, Debug)]
+pub struct TokenCorpus {
+    pub vocab: usize,
+    pub tokens: Vec<u32>,
+}
+
+/// Corpus generation settings.
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusSpec {
+    pub vocab: usize,
+    pub length: usize,
+    /// Number of preferred successors per (prev, cur) context.
+    pub branching: usize,
+    /// Probability mass on preferred successors (higher = lower entropy).
+    pub peak: f32,
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec { vocab: 64, length: 200_000, branching: 4, peak: 0.85, seed: 0 }
+    }
+}
+
+impl TokenCorpus {
+    pub fn generate(spec: &CorpusSpec) -> TokenCorpus {
+        let mut rng = Rng::new(spec.seed ^ 0x70C0_1215);
+        let v = spec.vocab;
+        // For each context hash, a preferred successor set.
+        // Kept implicit via hashing to avoid a v² table at larger vocabs.
+        let ctx_salt = rng.next_u64();
+        let mut tokens = Vec::with_capacity(spec.length);
+        let (mut prev, mut cur) = (0u32, 1u32 % v as u32);
+        for _ in 0..spec.length {
+            let next = if rng.uniform() < spec.peak as f64 {
+                // Deterministic preferred successor from the context.
+                let k = rng.below(spec.branching) as u64;
+                let h = (prev as u64)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(cur as u64)
+                    .wrapping_mul(0xA24B_AED4_963E_E407)
+                    .wrapping_add(ctx_salt)
+                    .wrapping_add(k.wrapping_mul(0x165_667B1));
+                ((h >> 17) % v as u64) as u32
+            } else {
+                // Zipf-ish background: prefer low token ids.
+                let u = rng.uniform();
+                ((u * u * v as f64) as usize % v) as u32
+            };
+            tokens.push(next);
+            prev = cur;
+            cur = next;
+        }
+        TokenCorpus { vocab: v, tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Sample a batch of `(input, target)` windows of length `seq`:
+    /// inputs `t[i..i+seq]`, targets `t[i+1..i+seq+1]`.
+    pub fn sample_batch(
+        &self,
+        batch: usize,
+        seq: usize,
+        rng: &mut Rng,
+    ) -> (Vec<u32>, Vec<u32>) {
+        assert!(self.tokens.len() > seq + 1, "corpus shorter than sequence");
+        let mut x = Vec::with_capacity(batch * seq);
+        let mut y = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let start = rng.below(self.tokens.len() - seq - 1);
+            x.extend_from_slice(&self.tokens[start..start + seq]);
+            y.extend_from_slice(&self.tokens[start + 1..start + seq + 1]);
+        }
+        (x, y)
+    }
+
+    /// Empirical unigram entropy (nats) — a perplexity sanity anchor.
+    pub fn unigram_entropy(&self) -> f64 {
+        let mut counts = vec![0usize; self.vocab];
+        for &t in &self.tokens {
+            counts[t as usize] += 1;
+        }
+        let n = self.tokens.len() as f64;
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = CorpusSpec { length: 1000, ..Default::default() };
+        assert_eq!(TokenCorpus::generate(&spec).tokens, TokenCorpus::generate(&spec).tokens);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let spec = CorpusSpec { vocab: 17, length: 5000, ..Default::default() };
+        let c = TokenCorpus::generate(&spec);
+        assert!(c.tokens.iter().all(|&t| t < 17));
+    }
+
+    #[test]
+    fn batch_shapes_and_shift() {
+        let c = TokenCorpus::generate(&CorpusSpec { length: 1000, ..Default::default() });
+        let mut rng = Rng::new(1);
+        let (x, y) = c.sample_batch(4, 16, &mut rng);
+        assert_eq!(x.len(), 64);
+        assert_eq!(y.len(), 64);
+        // y is x shifted by one within each window — check via re-lookup.
+        // (Windows overlap the corpus so verify first window only.)
+        let first_x = &x[0..16];
+        let first_y = &y[0..16];
+        assert_eq!(&first_x[1..], &first_y[..15]);
+    }
+
+    #[test]
+    fn structure_is_learnable() {
+        // The Markov structure must make bigram prediction beat unigram:
+        // estimated conditional entropy < unigram entropy.
+        let c = TokenCorpus::generate(&CorpusSpec {
+            vocab: 32,
+            length: 100_000,
+            ..Default::default()
+        });
+        let h1 = c.unigram_entropy();
+        // The chain is order-2: estimate H(next | prev, cur) over trigrams.
+        let v = 32usize;
+        let mut joint = vec![0f64; v * v * v];
+        for w in c.tokens.windows(3) {
+            joint[(w[0] as usize * v + w[1] as usize) * v + w[2] as usize] += 1.0;
+        }
+        let total: f64 = joint.iter().sum();
+        let mut h3 = 0.0;
+        for ctx in 0..v * v {
+            let row = &joint[ctx * v..(ctx + 1) * v];
+            let rn: f64 = row.iter().sum();
+            if rn == 0.0 {
+                continue;
+            }
+            for &cnt in row {
+                if cnt > 0.0 {
+                    let p_joint = cnt / total;
+                    let p_cond = cnt / rn;
+                    h3 -= p_joint * p_cond.ln();
+                }
+            }
+        }
+        assert!(
+            h3 < h1 * 0.8,
+            "order-2 conditional entropy {h3:.3} should be well below unigram {h1:.3}"
+        );
+    }
+}

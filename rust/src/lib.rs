@@ -1,0 +1,69 @@
+//! # quartz — Memory-Efficient 4-bit Preconditioned Stochastic Optimization
+//!
+//! A production-grade reproduction of *"Memory-Efficient 4-bit Preconditioned
+//! Stochastic Optimization"* (Li, Ding, Toh, Zhou; 2024): **4-bit Shampoo via
+//! compensated Cholesky quantization (CQ + EF)**, built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (block-wise 4-bit quantization, preconditioner
+//!   apply, Gram EMA) authored in `python/compile/kernels/`, validated
+//!   against pure-jnp oracles, lowered with the rest of the model.
+//! * **L2** — JAX model graphs (MLP / CNN / ViT-analog / decoder LM
+//!   forward+backward) AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **L3** — this crate: the coordinator, trainer, PJRT runtime, and the
+//!   complete native optimizer substrate (linear algebra, quantization,
+//!   Shampoo family, base optimizers).
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` once; the `quartz` binary is self-contained after.
+//!
+//! ## Crate map
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`util`] | RNG, stats, JSON/TOML parsers, thread pool, bench + property-test harnesses |
+//! | [`linalg`] | dense f32 matrices, blocked matmul, Cholesky, Schur–Newton inverse p-th root, Jacobi eigensolver, power iteration |
+//! | [`quant`] | linear-2 / linear / dynamic mappings, block-wise 4-bit quantizers, off-diagonal quantization, packed triangular joint storage (paper Fig. 2), error feedback |
+//! | [`optim`] | SGD(M), Adam(W), RMSProp, grafting, LR schedules |
+//! | [`shampoo`] | practical 32-bit Shampoo (Alg. 2) and 4-bit Shampoo VQ / CQ / CQ+EF (Alg. 1), max-order blocking |
+//! | [`data`] | seeded synthetic datasets: gaussian-cluster classification, patch images, Markov token corpus |
+//! | [`models`] | model/artifact specs and deterministic parameter initialization mirroring `model.py` |
+//! | [`runtime`] | PJRT CPU client, HLO-text loading, executable cache, literal helpers |
+//! | [`train`] | training loop over AOT artifacts, eval (accuracy / perplexity), curve logging |
+//! | [`metrics`] | exact optimizer-state memory accountant, timers |
+//! | [`coordinator`] | experiment specs, multi-worker scheduler, result registry |
+//! | [`report`] | paper-style table renderer, figure series dumps |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use quartz::prelude::*;
+//! let cfg = ShampooConfig { variant: ShampooVariant::Cq4 { error_feedback: true }, ..Default::default() };
+//! let mut opt = Shampoo::new(BaseOptimizer::sgdm(0.1, 0.9, 5e-4), cfg, &[(64, 32)]);
+//! // feed per-layer gradients each step:
+//! // opt.step(&mut params, &grads, step_idx);
+//! ```
+
+pub mod util;
+pub mod linalg;
+pub mod quant;
+pub mod optim;
+pub mod shampoo;
+pub mod data;
+pub mod models;
+pub mod runtime;
+pub mod train;
+pub mod metrics;
+pub mod coordinator;
+pub mod report;
+pub mod analysis;
+
+/// Convenience re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::linalg::{Matrix, MatmulPlan};
+    pub use crate::metrics::memory::MemoryModel;
+    pub use crate::optim::{BaseOptimizer, LrSchedule};
+    pub use crate::quant::{BlockQuantizer, Mapping, QuantConfig};
+    pub use crate::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,137 @@
+//! Cholesky factorization (the heart of the paper's CQ scheme, Eq. (7)).
+
+use super::matrix::Matrix;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CholeskyError {
+    #[error("matrix is not square ({0}x{1})")]
+    NotSquare(usize, usize),
+    #[error("matrix is not positive definite (pivot {pivot} at index {index})")]
+    NotPd { index: usize, pivot: f32 },
+    #[error("non-finite entry encountered during factorization")]
+    NonFinite,
+}
+
+/// Lower-triangular Cholesky factor `C` with `C·Cᵀ = A`.
+///
+/// Standard `LLᵀ` (Cholesky–Banachiewicz) with f64 accumulation of the
+/// pivot sums for stability at f32 storage precision. The strict upper
+/// triangle of the result is zero.
+pub fn cholesky(a: &Matrix) -> Result<Matrix, CholeskyError> {
+    if !a.is_square() {
+        return Err(CholeskyError::NotSquare(a.rows(), a.cols()));
+    }
+    let n = a.rows();
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // dot of rows i and j of L over [0, j)
+            let mut s = 0.0f64;
+            {
+                let li = l.row(i);
+                let lj = l.row(j);
+                for k in 0..j {
+                    s += li[k] as f64 * lj[k] as f64;
+                }
+            }
+            if i == j {
+                let pivot = a[(i, i)] as f64 - s;
+                if !pivot.is_finite() {
+                    return Err(CholeskyError::NonFinite);
+                }
+                if pivot <= 0.0 {
+                    return Err(CholeskyError::NotPd { index: i, pivot: pivot as f32 });
+                }
+                l[(i, j)] = pivot.sqrt() as f32;
+            } else {
+                let denom = l[(j, j)] as f64;
+                let v = ((a[(i, j)] as f64 - s) / denom) as f32;
+                if !v.is_finite() {
+                    return Err(CholeskyError::NonFinite);
+                }
+                l[(i, j)] = v;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Cholesky with escalating diagonal jitter, mirroring the paper's `+εI`
+/// regularization (Eq. (7)): retries with ε · 10^t for t = 0.. until the
+/// factorization succeeds. Returns the factor and the jitter actually used.
+pub fn cholesky_jittered(a: &Matrix, eps: f32, max_tries: u32) -> Result<(Matrix, f32), CholeskyError> {
+    let mut jitter = eps;
+    let mut last_err = None;
+    for _ in 0..max_tries {
+        let mut reg = a.clone();
+        reg.add_diag(jitter);
+        match cholesky(&reg) {
+            Ok(l) => return Ok((l, jitter)),
+            Err(e) => {
+                last_err = Some(e);
+                jitter *= 10.0;
+            }
+        }
+    }
+    Err(last_err.unwrap_or(CholeskyError::NonFinite))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul_nt, syrk};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factor_known_matrix() {
+        // Paper's Appendix C.1 toy matrix [[10,3],[3,1]] + tiny eps is PD.
+        let a = Matrix::from_rows(&[&[10.0, 3.0], &[3.0, 1.0 + 1e-3]]);
+        let l = cholesky(&a).unwrap();
+        let recon = matmul_nt(&l, &l);
+        assert!(recon.max_abs_diff(&a) < 1e-5);
+        assert_eq!(l[(0, 1)], 0.0, "upper triangle zero");
+    }
+
+    #[test]
+    fn factor_random_spd() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 16, 48] {
+            let g = Matrix::randn(n, n + 4, 1.0, &mut rng);
+            let mut a = syrk(&g);
+            a.add_diag(0.1);
+            let l = cholesky(&a).unwrap();
+            let recon = matmul_nt(&l, &l);
+            assert!(recon.max_abs_diff(&a) < 1e-3 * n as f32, "n={n}");
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(matches!(cholesky(&a), Err(CholeskyError::NotPd { .. })));
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let a = Matrix::zeros(2, 3);
+        assert!(matches!(cholesky(&a), Err(CholeskyError::NotSquare(2, 3))));
+    }
+
+    #[test]
+    fn jitter_rescues_psd() {
+        // Singular PSD matrix: rank-1.
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        assert!(cholesky(&a).is_err());
+        let (l, jitter) = cholesky_jittered(&a, 1e-6, 12).unwrap();
+        assert!(jitter >= 1e-6);
+        assert!(!l.has_non_finite());
+    }
+
+    #[test]
+    fn rejects_nan() {
+        let mut a = Matrix::eye(3);
+        a[(2, 2)] = f32::NAN;
+        assert!(cholesky(&a).is_err());
+    }
+}

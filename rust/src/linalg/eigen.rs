@@ -1,0 +1,169 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! Serves as the *exact oracle*: Schur–Newton results are validated against
+//! it, the paper's NRE/AE metrics (Tab. 1/10) need exact `A^{-1/4}`, and
+//! Fig. 3's eigenvalue histograms and the Tab. 9 toy example use it
+//! directly. Accuracy over speed by design.
+
+use super::matmul::matmul;
+use super::matrix::Matrix;
+
+/// Eigen-decomposition of symmetric `a`: returns `(eigenvalues, V)` where
+/// columns of `V` are the corresponding orthonormal eigenvectors
+/// (`A = V·diag(λ)·Vᵀ`). Eigenvalues are sorted ascending.
+pub fn eig_sym(a: &Matrix, tol: f64, max_sweeps: usize) -> (Vec<f32>, Matrix) {
+    assert!(a.is_square());
+    let n = a.rows();
+    // Work in f64 for orthogonality quality.
+    let mut m: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut v: Vec<f64> = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let off = |m: &Vec<f64>| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s += m[i * n + j] * m[i * n + j];
+            }
+        }
+        s.sqrt()
+    };
+
+    let scale = m.iter().map(|x| x.abs()).fold(0.0f64, f64::max).max(1e-300);
+    for _sweep in 0..max_sweeps {
+        if off(&m) <= tol * scale * n as f64 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of M, and columns of V.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract + sort ascending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let vals: Vec<f32> = pairs.iter().map(|&(l, _)| l as f32).collect();
+    let mut vecs = Matrix::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vecs[(r, new_col)] = v[r * n + old_col] as f32;
+        }
+    }
+    (vals, vecs)
+}
+
+/// Exact `A^{-1/p}` via eigendecomposition: `V·diag(λ^{-1/p})·Vᵀ`.
+/// Eigenvalues are clamped below at `clamp` to keep the result finite on
+/// near-singular inputs (matching the regularized definition in Eq. (6)).
+pub fn inverse_pth_root_eig(a: &Matrix, p: f64, clamp: f32) -> Matrix {
+    let n = a.rows();
+    let (vals, v) = eig_sym(a, 1e-12, 100);
+    let mut scaled = v.clone();
+    for j in 0..n {
+        let lam = vals[j].max(clamp);
+        let w = (lam as f64).powf(-1.0 / p) as f32;
+        for i in 0..n {
+            scaled[(i, j)] *= w;
+        }
+    }
+    matmul(&scaled, &v.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::syrk;
+    use crate::linalg::norms::fro_norm;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_rows(&[&[2.0, 0.0], &[0.0, 5.0]]);
+        let (vals, _) = eig_sym(&a, 1e-12, 50);
+        assert!((vals[0] - 2.0).abs() < 1e-5);
+        assert!((vals[1] - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn paper_toy_matrix_eigenvalues() {
+        // Appendix C.1: [[10,3],[3,1]] has eigenvalues (10.908, 0.092).
+        let a = Matrix::from_rows(&[&[10.0, 3.0], &[3.0, 1.0]]);
+        let (vals, _) = eig_sym(&a, 1e-12, 50);
+        assert!((vals[1] - 10.908).abs() < 1e-3, "λmax={}", vals[1]);
+        assert!((vals[0] - 0.092).abs() < 1e-3, "λmin={}", vals[0]);
+    }
+
+    #[test]
+    fn reconstruction() {
+        let mut rng = Rng::new(1);
+        let g = Matrix::randn(10, 15, 1.0, &mut rng);
+        let a = syrk(&g);
+        let (vals, v) = eig_sym(&a, 1e-12, 100);
+        // A ≈ V diag(vals) Vᵀ
+        let mut lam_vt = v.transpose();
+        for i in 0..10 {
+            let row = lam_vt.row_mut(i);
+            for x in row.iter_mut() {
+                *x *= vals[i];
+            }
+        }
+        let recon = matmul(&v, &lam_vt);
+        assert!((recon.max_abs_diff(&a) as f64 / fro_norm(&a)) < 1e-4);
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Rng::new(2);
+        let g = Matrix::randn(8, 10, 1.0, &mut rng);
+        let a = syrk(&g);
+        let (_, v) = eig_sym(&a, 1e-12, 100);
+        let vtv = matmul(&v.transpose(), &v);
+        assert!(vtv.max_abs_diff(&Matrix::eye(8)) < 1e-4);
+    }
+
+    #[test]
+    fn inverse_fourth_root_inverts() {
+        let mut rng = Rng::new(3);
+        let g = Matrix::randn(6, 9, 1.0, &mut rng);
+        let mut a = syrk(&g);
+        a.add_diag(0.5);
+        let r = inverse_pth_root_eig(&a, 4.0, 1e-12);
+        // (A^{-1/4})^4 · A ≈ I
+        let r2 = matmul(&r, &r);
+        let r4 = matmul(&r2, &r2);
+        let prod = matmul(&r4, &a);
+        assert!(prod.max_abs_diff(&Matrix::eye(6)) < 5e-3);
+    }
+}

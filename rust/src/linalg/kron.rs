@@ -1,0 +1,78 @@
+//! Kronecker product (validation oracle for the vectorized Shampoo update,
+//! Eq. (14)–(15): `H_k = D(R̂) ⊗ D(L̂)`).
+
+use super::matrix::Matrix;
+
+/// `A ⊗ B`.
+pub fn kron(a: &Matrix, b: &Matrix) -> Matrix {
+    let (ar, ac) = (a.rows(), a.cols());
+    let (br, bc) = (b.rows(), b.cols());
+    let mut out = Matrix::zeros(ar * br, ac * bc);
+    for i in 0..ar {
+        for j in 0..ac {
+            let s = a[(i, j)];
+            if s == 0.0 {
+                continue;
+            }
+            for bi in 0..br {
+                for bj in 0..bc {
+                    out[(i * br + bi, j * bc + bj)] = s * b[(bi, bj)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Column-stacking vectorization `Vec(W)` (paper Eq. (14): columns
+/// concatenated).
+pub fn vec_cols(w: &Matrix) -> Vec<f32> {
+    let mut out = Vec::with_capacity(w.rows() * w.cols());
+    for j in 0..w.cols() {
+        for i in 0..w.rows() {
+            out.push(w[(i, j)]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kron_small() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let b = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let k = kron(&a, &b);
+        assert_eq!(k.rows(), 2);
+        assert_eq!(k.cols(), 4);
+        assert_eq!(k[(0, 1)], 1.0);
+        assert_eq!(k[(0, 3)], 2.0);
+    }
+
+    /// The identity the paper's Appendix B vectorization rests on:
+    /// Vec(L·G·R) = (Rᵀ ⊗ L)·Vec(G).
+    #[test]
+    fn kron_vec_identity() {
+        let mut rng = Rng::new(1);
+        let l = Matrix::randn(3, 3, 1.0, &mut rng);
+        let g = Matrix::randn(3, 4, 1.0, &mut rng);
+        let r = Matrix::randn(4, 4, 1.0, &mut rng);
+
+        let lgr = matmul(&matmul(&l, &g), &r);
+        let lhs = vec_cols(&lgr);
+
+        let k = kron(&r.transpose(), &l);
+        let vg = vec_cols(&g);
+        let mut rhs = vec![0.0f32; lhs.len()];
+        for i in 0..k.rows() {
+            rhs[i] = crate::linalg::matmul::dot(k.row(i), &vg);
+        }
+        for (x, y) in lhs.iter().zip(rhs.iter()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Cache-blocked, threaded matrix multiplication.
+//!
+//! The hot path of both Shampoo's preconditioner math (Gram updates,
+//! Schur–Newton iterations, `L̂·G·R̂`) and the profiled L3 benchmarks.
+//! Strategy: pack the B operand so the innermost loop is a contiguous
+//! dot-product (auto-vectorizes), block over rows, and parallelize row
+//! blocks with the in-tree pool.
+
+use super::matrix::Matrix;
+use crate::util::pool::parallel_for;
+/// Row-block size for the parallel outer loop.
+const ROW_BLOCK: usize = 32;
+/// Threshold (total FLOPs) below which we stay single-threaded.
+const PAR_FLOP_THRESHOLD: usize = 1 << 20;
+
+/// Reusable scratch for repeated products of the same shape (avoids
+/// reallocating the packed-B buffer inside optimizer loops).
+#[derive(Default)]
+pub struct MatmulPlan {
+    packed_b: Vec<f32>,
+}
+
+impl MatmulPlan {
+    pub fn new() -> Self {
+        MatmulPlan { packed_b: Vec::new() }
+    }
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Accessing through a method keeps closure captures on the whole
+    /// wrapper (edition-2021 disjoint capture would otherwise grab the raw
+    /// field and lose the `Sync` impl).
+    #[inline]
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// `C = A · B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B` into an existing output (no allocation beyond pack scratch).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let mut plan = MatmulPlan::new();
+    matmul_into_planned(a, b, c, &mut plan);
+}
+
+/// `C = A · B` with a caller-owned scratch plan.
+pub fn matmul_into_planned(a: &Matrix, b: &Matrix, c: &mut Matrix, plan: &mut MatmulPlan) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k, "inner dimension mismatch: {}x{} · {}x{}", m, k, b.rows(), n);
+    assert_eq!((c.rows(), c.cols()), (m, n), "output shape mismatch");
+
+    // Pack B column-major (so each output column is a contiguous dot).
+    plan.packed_b.resize(k * n, 0.0);
+    for kk in 0..k {
+        let brow = b.row(kk);
+        for (j, &v) in brow.iter().enumerate() {
+            plan.packed_b[j * k + kk] = v;
+        }
+    }
+    let packed = &plan.packed_b;
+
+    let flops = 2 * m * n * k;
+    let blocks = m.div_ceil(ROW_BLOCK);
+    let threads = if flops < PAR_FLOP_THRESHOLD {
+        1
+    } else {
+        crate::util::pool::default_threads()
+    };
+
+    let c_ptr = SendPtr(c.data_mut().as_mut_ptr());
+    let a_ref = a;
+    parallel_for(blocks, threads, |blk| {
+        let r0 = blk * ROW_BLOCK;
+        let r1 = (r0 + ROW_BLOCK).min(m);
+        // Safety: each block writes a disjoint row range of C.
+        let base = c_ptr.get();
+        for i in r0..r1 {
+            let arow = a_ref.row(i);
+            let crow = unsafe { std::slice::from_raw_parts_mut(base.add(i * n), n) };
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let bcol = &packed[j * k..(j + 1) * k];
+                *cv = dot(arow, bcol);
+            }
+        }
+    });
+}
+
+/// Contiguous dot product; unrolled by 8 for reliable auto-vectorization.
+/// (A 4×8 multi-accumulator variant was tried in the perf pass and measured
+/// *slower* on the shared single-vCPU testbed — see EXPERIMENTS.md §Perf.)
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `C = Aᵀ · B` (A is k×m): used for `GᵀG` shapes without materializing Aᵀ.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (k, m) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k);
+    let mut c = Matrix::zeros(m, n);
+    // C[i][j] = sum_kk A[kk][i] * B[kk][j]  — accumulate row-by-row (streams
+    // both operands contiguously).
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` (B is n×k): the `G·Gᵀ` shape with contiguous dots.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.rows();
+    assert_eq!(b.cols(), k);
+    let mut c = Matrix::zeros(m, n);
+    let threads = if 2 * m * n * k < PAR_FLOP_THRESHOLD {
+        1
+    } else {
+        crate::util::pool::default_threads()
+    };
+    let c_ptr = SendPtr(c.data_mut().as_mut_ptr());
+    parallel_for(m, threads, |i| {
+        let arow = a.row(i);
+        let base = c_ptr.get();
+        let crow = unsafe { std::slice::from_raw_parts_mut(base.add(i * n), n) };
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv = dot(arow, b.row(j));
+        }
+    });
+    c
+}
+
+/// Symmetric rank-k update `C = A · Aᵀ` exploiting symmetry (half the dots).
+pub fn syrk(a: &Matrix) -> Matrix {
+    let m = a.rows();
+    let mut c = Matrix::zeros(m, m);
+    let threads = if m * m * a.cols() < PAR_FLOP_THRESHOLD {
+        1
+    } else {
+        crate::util::pool::default_threads()
+    };
+    let c_ptr = SendPtr(c.data_mut().as_mut_ptr());
+    parallel_for(m, threads, |i| {
+        let arow = a.row(i);
+        let base = c_ptr.get();
+        for j in 0..=i {
+            let v = dot(arow, a.row(j));
+            unsafe {
+                *base.add(i * m + j) = v;
+                *base.add(j * m + i) = v;
+            }
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] as f64 * b[(k, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 64, 64), (65, 63, 66)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let want = naive(&a, &b);
+            assert!(c.max_abs_diff(&want) < 1e-3 * k as f32, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_large_parallel_path() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(130, 120, 1.0, &mut rng);
+        let b = Matrix::randn(120, 140, 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        let want = naive(&a, &b);
+        assert!(c.max_abs_diff(&want) < 1e-2);
+    }
+
+    #[test]
+    fn tn_and_nt_variants() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(20, 12, 1.0, &mut rng);
+        let b = Matrix::randn(20, 15, 1.0, &mut rng);
+        let want_tn = naive(&a.transpose(), &b);
+        assert!(matmul_tn(&a, &b).max_abs_diff(&want_tn) < 1e-3);
+
+        let c = Matrix::randn(9, 12, 1.0, &mut rng);
+        let want_nt = naive(&a, &c.transpose());
+        assert!(matmul_nt(&a, &c).max_abs_diff(&want_nt) < 1e-3);
+    }
+
+    #[test]
+    fn syrk_matches_naive() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(25, 40, 1.0, &mut rng);
+        let want = naive(&a, &a.transpose());
+        assert!(syrk(&a).max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(12, 12, 1.0, &mut rng);
+        assert!(matmul(&a, &Matrix::eye(12)).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&Matrix::eye(12), &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn plan_reuse_gives_same_answer() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(30, 20, 1.0, &mut rng);
+        let b = Matrix::randn(20, 10, 1.0, &mut rng);
+        let mut plan = MatmulPlan::new();
+        let mut c1 = Matrix::zeros(30, 10);
+        matmul_into_planned(&a, &b, &mut c1, &mut plan);
+        let mut c2 = Matrix::zeros(30, 10);
+        matmul_into_planned(&a, &b, &mut c2, &mut plan);
+        assert_eq!(c1, c2);
+    }
+}

@@ -1,0 +1,29 @@
+//! Dense f32 linear algebra substrate.
+//!
+//! Everything the Shampoo family needs, built from scratch for the offline
+//! environment: a row-major [`Matrix`] type, cache-blocked threaded matmul,
+//! Cholesky factorization, triangular solves, power iteration for λ_max,
+//! the Schur–Newton coupled iteration for inverse p-th roots (Guo & Higham
+//! 2006, the method the paper's Eq. (6)/(12) relies on), and a Jacobi
+//! symmetric eigensolver used as the exact oracle for tests and for the
+//! paper's spectral-error metrics (Tab. 1/10, Fig. 3).
+
+pub mod matrix;
+pub mod matmul;
+pub mod cholesky;
+pub mod triangular;
+pub mod power_iter;
+pub mod schur_newton;
+pub mod eigen;
+pub mod norms;
+pub mod kron;
+
+pub use cholesky::{cholesky, cholesky_jittered};
+pub use eigen::{eig_sym, inverse_pth_root_eig};
+pub use kron::kron;
+pub use matmul::{matmul, matmul_into, matmul_into_planned, matmul_tn, matmul_nt, syrk, MatmulPlan};
+pub use matrix::Matrix;
+pub use norms::{angle_between, diag_dominance_margin, fro_norm, inner, max_abs, off_diag_max_abs, relative_error};
+pub use power_iter::lambda_max;
+pub use schur_newton::inverse_pth_root;
+pub use triangular::{solve_lower, solve_lower_transpose};

@@ -1,0 +1,120 @@
+//! Norms, inner products, and the paper's spectral error metrics (Eq. (9)).
+
+use super::matrix::Matrix;
+
+/// Frobenius norm ‖A‖_F (f64 accumulation).
+pub fn fro_norm(a: &Matrix) -> f64 {
+    a.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Frobenius inner product ⟨A, B⟩.
+pub fn inner(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    a.data()
+        .iter()
+        .zip(b.data().iter())
+        .map(|(&x, &y)| x as f64 * y as f64)
+        .sum()
+}
+
+/// Largest |entry|.
+pub fn max_abs(a: &Matrix) -> f32 {
+    a.data().iter().map(|x| x.abs()).fold(0.0, f32::max)
+}
+
+/// Largest |off-diagonal entry| (‖·‖_off,max in Proposition 5.1).
+pub fn off_diag_max_abs(a: &Matrix) -> f32 {
+    let mut m = 0.0f32;
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            if i != j {
+                m = m.max(a[(i, j)].abs());
+            }
+        }
+    }
+    m
+}
+
+/// Frobenius-norm relative error ‖A − B‖_F / ‖A‖_F (NRE numerator of Eq. 9
+/// is applied to inverse-4th-roots by the caller).
+pub fn relative_error(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    let mut num = 0.0f64;
+    for (x, y) in a.data().iter().zip(b.data().iter()) {
+        let d = *x as f64 - *y as f64;
+        num += d * d;
+    }
+    num.sqrt() / fro_norm(a).max(f64::MIN_POSITIVE)
+}
+
+/// Angle (degrees) between A and B under the Frobenius inner product —
+/// the paper's AE metric (Eq. 9).
+pub fn angle_between(a: &Matrix, b: &Matrix) -> f64 {
+    let cos = inner(a, b) / (fro_norm(a) * fro_norm(b)).max(f64::MIN_POSITIVE);
+    cos.clamp(-1.0, 1.0).acos().to_degrees()
+}
+
+/// Row-wise diagonal-dominance margin used by Proposition 5.1's PD
+/// condition: returns `min_i (|a_ii| − t · Σ_{j≠i} |a_ij|)`. Positive with
+/// `t = 1 + 2/(2^b − 1)` certifies `D(Q(A)) ≻ 0` after off-diagonal b-bit
+/// quantization.
+pub fn diag_dominance_margin(a: &Matrix, t: f64) -> f64 {
+    assert!(a.is_square());
+    let mut margin = f64::INFINITY;
+    for i in 0..a.rows() {
+        let mut off = 0.0f64;
+        for j in 0..a.cols() {
+            if i != j {
+                off += a[(i, j)].abs() as f64;
+            }
+        }
+        margin = margin.min(a[(i, i)].abs() as f64 - t * off);
+    }
+    margin
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fro_and_inner() {
+        let a = Matrix::from_rows(&[&[3.0, 4.0]]);
+        assert!((fro_norm(&a) - 5.0).abs() < 1e-12);
+        let b = Matrix::from_rows(&[&[1.0, 2.0]]);
+        assert!((inner(&a, &b) - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn angle_identity_is_zero() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert!(angle_between(&a, &a) < 1e-6);
+    }
+
+    #[test]
+    fn angle_orthogonal_is_ninety() {
+        let a = Matrix::from_rows(&[&[1.0, 0.0]]);
+        let b = Matrix::from_rows(&[&[0.0, 1.0]]);
+        assert!((angle_between(&a, &b) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn off_diag_max_ignores_diagonal() {
+        let a = Matrix::from_rows(&[&[100.0, 2.0], &[-3.0, 100.0]]);
+        assert_eq!(off_diag_max_abs(&a), 3.0);
+    }
+
+    #[test]
+    fn dominance_margin() {
+        let a = Matrix::from_rows(&[&[10.0, 1.0], &[1.0, 10.0]]);
+        assert!(diag_dominance_margin(&a, 1.0) > 0.0);
+        let b = Matrix::from_rows(&[&[1.0, 10.0], &[10.0, 1.0]]);
+        assert!(diag_dominance_margin(&b, 1.0) < 0.0);
+    }
+
+    #[test]
+    fn relative_error_zero_for_equal() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0]]);
+        assert_eq!(relative_error(&a, &a), 0.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Power iteration for the dominant eigenvalue of a symmetric PSD matrix.
+//!
+//! Algorithm 2 step 10: Shampoo regularizes with `λ_max·ε·I` before the
+//! inverse-root, and Schur–Newton needs `λ_max` for its initial scaling.
+
+use super::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Estimate λ_max of symmetric PSD `a` via power iteration with a fixed,
+/// seeded start vector. Returns 0 for the zero matrix.
+pub fn lambda_max(a: &Matrix, iters: usize) -> f32 {
+    assert!(a.is_square());
+    let n = a.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut rng = Rng::new(0x9E1B);
+    let mut v: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+    normalize(&mut v);
+    let mut lam = 0.0f32;
+    let mut w = vec![0.0f32; n];
+    for _ in 0..iters.max(1) {
+        // w = A v
+        for i in 0..n {
+            w[i] = crate::linalg::matmul::dot(a.row(i), &v);
+        }
+        let norm = w.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32;
+        if norm <= f32::MIN_POSITIVE {
+            return 0.0;
+        }
+        lam = norm;
+        for (vi, wi) in v.iter_mut().zip(w.iter()) {
+            *vi = wi / norm;
+        }
+    }
+    // Rayleigh quotient refinement.
+    for i in 0..n {
+        w[i] = crate::linalg::matmul::dot(a.row(i), &v);
+    }
+    let rq: f64 = v.iter().zip(w.iter()).map(|(&x, &y)| x as f64 * y as f64).sum();
+    if rq.is_finite() && rq as f32 > 0.0 {
+        rq as f32
+    } else {
+        lam
+    }
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = v.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32;
+    if n > f32::MIN_POSITIVE {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    } else if !v.is_empty() {
+        v[0] = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::syrk;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_case() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 7.0]]);
+        let lam = lambda_max(&a, 100);
+        assert!((lam - 7.0).abs() < 1e-3, "lam={lam}");
+    }
+
+    #[test]
+    fn matches_eigensolver_on_random_spd() {
+        let mut rng = Rng::new(1);
+        let g = Matrix::randn(12, 20, 1.0, &mut rng);
+        let a = syrk(&g);
+        let lam = lambda_max(&a, 200);
+        let (vals, _) = crate::linalg::eigen::eig_sym(&a, 1e-10, 200);
+        let lam_exact = vals.iter().cloned().fold(f32::MIN, f32::max);
+        assert!((lam - lam_exact).abs() / lam_exact < 1e-3);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Matrix::zeros(4, 4);
+        assert_eq!(lambda_max(&a, 50), 0.0);
+    }
+}

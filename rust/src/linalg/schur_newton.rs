@@ -1,0 +1,221 @@
+//! Schur–Newton coupled iteration for the matrix inverse p-th root
+//! `A^{-1/p}` (Guo & Higham, SIAM J. Matrix Anal. 2006 — reference [21] of
+//! the paper; the same scheme used by production Shampoo implementations).
+//!
+//! Coupled iteration, for SPD `A` with λ_max scaling:
+//! ```text
+//!   M₀ = A / λ_max            (spectrum ⊆ (0, 1])
+//!   X₀ = λ_max^{-1/p} · I
+//!   T_k = ((p+1)·I − M_k) / p
+//!   X_{k+1} = X_k · T_k
+//!   M_{k+1} = T_k^p · M_k
+//! ```
+//! `M_k → I` and `X_k → A^{-1/p}`. For Shampoo `p = 4`, so `T^4 = (T²)²`
+//! costs two squarings.
+
+use super::matmul::{matmul_into_planned, MatmulPlan};
+use super::matrix::Matrix;
+use super::power_iter::lambda_max;
+
+/// Configuration for the iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct SchurNewtonConfig {
+    /// Root order p (Shampoo uses 4).
+    pub p: u32,
+    /// Ridge term added as `λ_max·ε·I` before the root (paper Eq. (6)/(12)).
+    pub eps: f32,
+    /// Convergence tolerance on ‖M − I‖_max.
+    pub tol: f32,
+    /// Iteration cap (paper notes Schur–Newton runs a limited number of steps).
+    pub max_iters: usize,
+    /// Power-iteration steps for the λ_max estimate.
+    pub power_iters: usize,
+}
+
+impl Default for SchurNewtonConfig {
+    fn default() -> Self {
+        // tol 3e-5 is the practical f32 floor (1e-6 is unreachable and
+        // just burns iterations — see EXPERIMENTS.md §Perf).
+        SchurNewtonConfig { p: 4, eps: 1e-6, tol: 3e-5, max_iters: 40, power_iters: 16 }
+    }
+}
+
+/// Result diagnostics.
+#[derive(Clone, Copy, Debug)]
+pub struct SchurNewtonStats {
+    pub iters: usize,
+    pub residual: f32,
+    pub lambda_max: f32,
+}
+
+/// Compute `(A + λ_max·ε·I)^{-1/p}` for symmetric PSD `A`.
+///
+/// Matches Algorithm 2 step 10–11: λ_max via power iteration, εI ridge,
+/// then the coupled Newton iteration. Returns the root and diagnostics.
+pub fn inverse_pth_root(a: &Matrix, cfg: &SchurNewtonConfig) -> (Matrix, SchurNewtonStats) {
+    assert!(a.is_square());
+    let n = a.rows();
+    let p = cfg.p.max(1);
+
+    let lam = lambda_max(a, cfg.power_iters).max(f32::MIN_POSITIVE);
+    let ridge = lam * cfg.eps;
+    let mut m = a.clone();
+    m.add_diag(ridge);
+
+    // Scale: M0 = (A + ridge) / s with s = λ_max(A + ridge) ≈ lam + ridge.
+    let s = lam + ridge;
+    m.scale(1.0 / s);
+    let x0_scale = (s as f64).powf(-1.0 / p as f64) as f32;
+    let mut x = Matrix::eye_scaled(n, x0_scale);
+
+    let mut plan = MatmulPlan::new();
+    let mut t = Matrix::zeros(n, n);
+    let mut tmp = Matrix::zeros(n, n);
+    let mut iters = 0;
+    let mut residual = residual_to_identity(&m);
+
+    while iters < cfg.max_iters && residual > cfg.tol {
+        // T = ((p+1) I − M) / p
+        for i in 0..n {
+            for j in 0..n {
+                let v = -m[(i, j)] / p as f32;
+                t[(i, j)] = if i == j { v + (p as f32 + 1.0) / p as f32 } else { v };
+            }
+        }
+        // X ← X·T
+        matmul_into_planned(&x, &t, &mut tmp, &mut plan);
+        std::mem::swap(&mut x, &mut tmp);
+        // M ← T^p · M  (p = 2^k fast path via repeated squaring)
+        let tp = matrix_power(&t, p, &mut plan);
+        matmul_into_planned(&tp, &m, &mut tmp, &mut plan);
+        std::mem::swap(&mut m, &mut tmp);
+        // Guard drift: M must stay symmetric-ish; re-symmetrize cheaply.
+        m.symmetrize();
+
+        residual = residual_to_identity(&m);
+        iters += 1;
+        if !residual.is_finite() {
+            break;
+        }
+    }
+
+    // Final symmetrization of the root (X inherits asymmetry from rounding).
+    x.symmetrize();
+    (x, SchurNewtonStats { iters, residual, lambda_max: lam })
+}
+
+fn residual_to_identity(m: &Matrix) -> f32 {
+    let n = m.rows();
+    let mut r = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let target = if i == j { 1.0 } else { 0.0 };
+            r = r.max((m[(i, j)] - target).abs());
+        }
+    }
+    r
+}
+
+/// `T^p` via binary exponentiation.
+fn matrix_power(t: &Matrix, p: u32, plan: &mut MatmulPlan) -> Matrix {
+    debug_assert!(p >= 1);
+    let mut result: Option<Matrix> = None;
+    let mut base = t.clone();
+    let mut e = p;
+    let mut tmp = Matrix::zeros(t.rows(), t.cols());
+    while e > 0 {
+        if e & 1 == 1 {
+            result = Some(match result {
+                None => base.clone(),
+                Some(r) => {
+                    matmul_into_planned(&r, &base, &mut tmp, plan);
+                    tmp.clone()
+                }
+            });
+        }
+        e >>= 1;
+        if e > 0 {
+            matmul_into_planned(&base, &base, &mut tmp, plan);
+            std::mem::swap(&mut base, &mut tmp);
+        }
+    }
+    result.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigen::inverse_pth_root_eig;
+    use crate::linalg::matmul::syrk;
+    use crate::linalg::norms::relative_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_eigensolver_p4() {
+        let mut rng = Rng::new(1);
+        for n in [2, 5, 12, 32] {
+            let g = Matrix::randn(n, n + 6, 1.0, &mut rng);
+            let mut a = syrk(&g);
+            a.add_diag(0.2);
+            let cfg = SchurNewtonConfig::default();
+            let (x, stats) = inverse_pth_root(&a, &cfg);
+            // Oracle on the same ridged matrix.
+            let mut ridged = a.clone();
+            ridged.add_diag(stats.lambda_max * cfg.eps);
+            let want = inverse_pth_root_eig(&ridged, 4.0, 1e-12);
+            let err = relative_error(&want, &x);
+            assert!(err < 5e-3, "n={n} err={err} iters={}", stats.iters);
+        }
+    }
+
+    #[test]
+    fn p2_inverse_sqrt() {
+        let a = Matrix::from_rows(&[&[4.0, 0.0], &[0.0, 16.0]]);
+        let cfg = SchurNewtonConfig { p: 2, eps: 0.0, ..Default::default() };
+        let (x, _) = inverse_pth_root(&a, &cfg);
+        assert!((x[(0, 0)] - 0.5).abs() < 1e-4);
+        assert!((x[(1, 1)] - 0.25).abs() < 1e-4);
+        assert!(x[(0, 1)].abs() < 1e-5);
+    }
+
+    #[test]
+    fn handles_ill_conditioned() {
+        // Geometric spectrum 1e-3..1e3 (the paper's synthetic setting).
+        let n = 16;
+        let mut rng = Rng::new(7);
+        let g = Matrix::randn(n, n, 1.0, &mut rng);
+        // Orthogonalize-ish via QR-free trick: use eigenvectors of g·gᵀ.
+        let (_, v) = crate::linalg::eigen::eig_sym(&syrk(&g), 1e-10, 100);
+        let mut a = Matrix::zeros(n, n);
+        for k in 0..n {
+            let lam = 1e-3 * (1e6f64.powf(k as f64 / (n - 1) as f64)) as f32;
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] += lam * v[(i, k)] * v[(j, k)];
+                }
+            }
+        }
+        let cfg = SchurNewtonConfig::default();
+        let (x, stats) = inverse_pth_root(&a, &cfg);
+        assert!(!x.has_non_finite());
+        assert!(stats.residual < 1e-2, "residual={}", stats.residual);
+    }
+
+    #[test]
+    fn identity_root_is_identity() {
+        let a = Matrix::eye(8);
+        let cfg = SchurNewtonConfig { eps: 0.0, ..Default::default() };
+        let (x, _) = inverse_pth_root(&a, &cfg);
+        assert!(x.max_abs_diff(&Matrix::eye(8)) < 1e-4);
+    }
+
+    #[test]
+    fn matrix_power_binary_exp() {
+        let t = Matrix::from_rows(&[&[1.0, 1.0], &[0.0, 1.0]]);
+        let mut plan = MatmulPlan::new();
+        let t4 = matrix_power(&t, 4, &mut plan);
+        assert_eq!(t4[(0, 1)], 4.0);
+        let t1 = matrix_power(&t, 1, &mut plan);
+        assert_eq!(t1, t);
+    }
+}

@@ -1,0 +1,91 @@
+//! Triangular solves (forward/back substitution).
+
+use super::matrix::Matrix;
+
+/// Solve `L · X = B` for lower-triangular `L` (forward substitution),
+/// column-by-column over B.
+pub fn solve_lower(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert!(l.is_square() && b.rows() == n);
+    let m = b.cols();
+    let mut x = b.clone();
+    for j in 0..m {
+        for i in 0..n {
+            let mut s = x[(i, j)] as f64;
+            for k in 0..i {
+                s -= l[(i, k)] as f64 * x[(k, j)] as f64;
+            }
+            x[(i, j)] = (s / l[(i, i)] as f64) as f32;
+        }
+    }
+    x
+}
+
+/// Solve `Lᵀ · X = B` for lower-triangular `L` (back substitution).
+pub fn solve_lower_transpose(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert!(l.is_square() && b.rows() == n);
+    let m = b.cols();
+    let mut x = b.clone();
+    for j in 0..m {
+        for i in (0..n).rev() {
+            let mut s = x[(i, j)] as f64;
+            for k in (i + 1)..n {
+                s -= l[(k, i)] as f64 * x[(k, j)] as f64;
+            }
+            x[(i, j)] = (s / l[(i, i)] as f64) as f32;
+        }
+    }
+    x
+}
+
+/// Inverse of an SPD matrix given its Cholesky factor: `A⁻¹ = L⁻ᵀ·L⁻¹`
+/// computed as two triangular solves against the identity.
+pub fn spd_inverse_from_cholesky(l: &Matrix) -> Matrix {
+    let n = l.rows();
+    let y = solve_lower(l, &Matrix::eye(n));
+    solve_lower_transpose(l, &y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::cholesky;
+    use crate::linalg::matmul::{matmul, syrk};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_solve() {
+        let l = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        let b = Matrix::from_rows(&[&[4.0], &[11.0]]);
+        let x = solve_lower(&l, &b);
+        assert!((x[(0, 0)] - 2.0).abs() < 1e-6);
+        assert!((x[(1, 0)] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_solve_consistency() {
+        let mut rng = Rng::new(1);
+        let g = Matrix::randn(10, 14, 1.0, &mut rng);
+        let mut a = syrk(&g);
+        a.add_diag(0.5);
+        let l = cholesky(&a).unwrap();
+        let b = Matrix::randn(10, 3, 1.0, &mut rng);
+        let x = solve_lower_transpose(&l, &solve_lower(&l, &b));
+        // A·x should equal b
+        let back = matmul(&a, &x);
+        assert!(back.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn spd_inverse() {
+        let mut rng = Rng::new(2);
+        let g = Matrix::randn(8, 12, 1.0, &mut rng);
+        let mut a = syrk(&g);
+        a.add_diag(1.0);
+        let l = cholesky(&a).unwrap();
+        let inv = spd_inverse_from_cholesky(&l);
+        let prod = matmul(&a, &inv);
+        assert!(prod.max_abs_diff(&Matrix::eye(8)) < 1e-3);
+    }
+}

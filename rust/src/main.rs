@@ -1,0 +1,269 @@
+//! `quartz` — the L3 coordinator CLI.
+//!
+//! Subcommands map onto the paper's experiments (DESIGN.md §3):
+//!
+//! ```text
+//! quartz table  --id tab3 [--quick] [--out runs]     # reproduce a table
+//! quartz figure --id fig3 [--quick] [--out runs]     # reproduce a figure
+//! quartz train  --model res_mlp_c32 --base sgdm --shampoo cq-ef --steps 400
+//! quartz run    --config examples/experiment.toml    # user-defined grid
+//! quartz quant-demo                                  # Fig. 2 joint store demo
+//! quartz list                                        # artifacts + models
+//! ```
+
+use anyhow::{bail, Context, Result};
+use quartz::analysis::{figures, tables};
+use quartz::coordinator::spec::{ExperimentSpec, OptimizerSpec, RunSpec, Workload};
+use quartz::coordinator::runner::run_all;
+use quartz::data::synthetic::ClusterSpec;
+use quartz::data::tokens::CorpusSpec;
+use quartz::linalg::Matrix;
+use quartz::optim::OptimizerKind;
+use quartz::quant::{BlockQuantizer, QuantConfig, TriJointStore};
+use quartz::report::table::Table;
+use quartz::runtime::Runtime;
+use quartz::shampoo::ShampooVariant;
+use quartz::util::fmt_bytes;
+use quartz::util::rng::Rng;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Minimal `--flag value` argument parser (offline build set has no clap).
+struct Args {
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    bools.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags, bools }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    fn out_dir(&self) -> PathBuf {
+        PathBuf::from(self.get("out").unwrap_or("runs"))
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let result = match cmd {
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "train" => cmd_train(&args),
+        "run" => cmd_run(&args),
+        "quant-demo" => cmd_quant_demo(),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "quartz — memory-efficient 4-bit preconditioned stochastic optimization\n\n\
+         commands:\n\
+         \x20 table  --id <tab1..tab10|mem-breakdown|all> [--quick] [--out DIR]\n\
+         \x20 figure --id <fig1|fig3|fig4|all> [--quick] [--out DIR]\n\
+         \x20 train  --model NAME [--base sgdm] [--shampoo cq-ef|cq|vq|32bit|none]\n\
+         \x20        [--steps N] [--lm] [--seed N]\n\
+         \x20 run    --config FILE.toml [--out DIR]\n\
+         \x20 quant-demo\n\
+         \x20 list"
+    );
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = args.get("id").context("--id required")?;
+    std::fs::create_dir_all(args.out_dir())?;
+    tables::run_table(id, args.has("quick"), &args.out_dir())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args.get("id").context("--id required")?;
+    std::fs::create_dir_all(args.out_dir())?;
+    figures::run_figure(id, args.has("quick"), &args.out_dir())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let steps: u64 = args.get("steps").unwrap_or("300").parse()?;
+    let seed: u64 = args.get("seed").unwrap_or("0").parse()?;
+    let base = match args.get("base").unwrap_or("sgdm") {
+        "sgd" => OptimizerKind::Sgd,
+        "sgdm" => OptimizerKind::Sgdm,
+        "adam" => OptimizerKind::Adam,
+        "adamw" => OptimizerKind::AdamW,
+        "rmsprop" => OptimizerKind::RmsProp,
+        other => bail!("unknown base '{other}'"),
+    };
+    let hyper = OptimizerSpec::paper_hyper(base);
+    let opt = match args.get("shampoo").unwrap_or("cq-ef") {
+        "none" => OptimizerSpec::base_only(base, hyper),
+        s => {
+            let variant = ShampooVariant::parse(s).context("bad --shampoo")?;
+            OptimizerSpec::with_shampoo(base, hyper, tables::scaled_shampoo(variant))
+        }
+    };
+    let workload = if args.has("lm") || model.starts_with("lm_") {
+        Workload::Tokens(CorpusSpec { seed, ..Default::default() })
+    } else {
+        let classes = if model.ends_with("c64") { 64 } else { 32 };
+        if model.starts_with("vit") || model.starts_with("swin") {
+            Workload::Image(quartz::data::images::ImageSpec {
+                side: 8,
+                classes,
+                seed,
+                noise: 0.5,
+                ..Default::default()
+            })
+        } else {
+            Workload::Cluster(ClusterSpec { classes, dim: 64, seed, ..Default::default() })
+        }
+    };
+    let mut spec = RunSpec::new(model, workload, opt, steps);
+    spec.seed = seed;
+    spec.eval_every = (steps / 5).max(1);
+
+    println!("training {model} with {} for {steps} steps…", spec.optimizer.label());
+    let outcomes = run_all(std::slice::from_ref(&spec), 1);
+    let o = &outcomes[0];
+    if let Some(e) = &o.error {
+        bail!("run failed: {e}");
+    }
+    let m = o.metrics.as_ref().unwrap();
+    let mut t = Table::new("run summary", &["metric", "value"]);
+    t.row(vec!["model".into(), o.model.clone()]);
+    t.row(vec!["optimizer".into(), o.optimizer.clone()]);
+    t.row(vec!["final metric".into(), format!("{:.4}", m.final_metric)]);
+    t.row(vec!["opt-state bytes".into(), fmt_bytes(m.state_bytes as u64)]);
+    t.row(vec!["wall time (s)".into(), format!("{:.1}", m.wall_secs)]);
+    t.row(vec!["optimizer time (s)".into(), format!("{:.2}", m.opt_secs)]);
+    t.print();
+    println!("loss curve: {:?}", m.loss_curve);
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args.get("config").context("--config required")?;
+    let text = std::fs::read_to_string(path)?;
+    let spec = ExperimentSpec::from_toml(&text)?;
+    println!("experiment '{}': {} runs on {} workers", spec.name, spec.runs.len(), spec.workers);
+    let outcomes = run_all(&spec.runs, spec.workers);
+    let mut t = Table::new(
+        &format!("experiment '{}'", spec.name),
+        &["Run", "Metric", "Opt-State", "Wall (s)"],
+    );
+    for o in &outcomes {
+        let (metric, bytes, wall) = match (&o.metrics, &o.error) {
+            (Some(m), _) => (
+                format!("{:.4}", m.final_metric),
+                fmt_bytes(m.state_bytes as u64),
+                format!("{:.1}", m.wall_secs),
+            ),
+            (None, Some(e)) => {
+                (format!("ERR {}", e.lines().next().unwrap_or("")), "-".to_string(), "-".to_string())
+            }
+            (None, None) => ("OOM".to_string(), fmt_bytes(o.modeled_bytes as u64), "-".to_string()),
+        };
+        t.row(vec![o.id.clone(), metric, bytes, wall]);
+    }
+    t.print();
+    std::fs::create_dir_all(args.out_dir())?;
+    t.save_csv(&args.out_dir().join(format!("{}.csv", spec.name)))?;
+    Ok(())
+}
+
+/// Fig. 2 demonstration: pack a Cholesky factor and its error state into one
+/// buffer and show the byte accounting.
+fn cmd_quant_demo() -> Result<()> {
+    let n = 8;
+    let mut rng = Rng::new(42);
+    let q = BlockQuantizer::new(QuantConfig { block: 4, min_quant_elems: 0, ..Default::default() });
+    let c = Matrix::from_fn(n, n, |i, j| {
+        if i > j {
+            rng.normal_f32(1.0)
+        } else if i == j {
+            2.0
+        } else {
+            0.0
+        }
+    });
+    let e = Matrix::from_fn(n, n, |i, j| if i > j { rng.normal_f32(0.05) } else { 0.0 });
+    let store = TriJointStore::store(&c, &e, &q);
+    let (c2, e2) = store.load(&q);
+    println!("Fig. 2 joint triangular storage demo (n = {n})");
+    println!("  Cholesky factor C (lower, f32 diag):\n{c:?}");
+    println!("  error state E (strictly lower):\n{e:?}");
+    println!("  joint store bytes: {}", store.size_bytes());
+    println!("  = one n²/2-byte nibble grid ({}) + f32 diag ({}) + scales", n * n / 2, n * 4);
+    println!("  recovered C matches: {}", c2.max_abs_diff(&c) < 0.5);
+    println!("  recovered E matches: {}", e2.max_abs_diff(&e) < 0.05);
+    let full32 = 2 * n * n * 4;
+    println!("  vs two f32 matrices: {} bytes → {:.1}% of f32", full32,
+        100.0 * store.size_bytes() as f64 / full32 as f64);
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    let mut t = Table::new("models", &["name", "kind", "batch", "params", "weights"]);
+    for (name, m) in &rt.manifest.models {
+        t.row(vec![
+            name.clone(),
+            m.kind.clone(),
+            format!("{}", m.batch),
+            format!("{}", m.params.len()),
+            format!("{}", m.n_weights()),
+        ]);
+    }
+    t.print();
+    let mut t = Table::new("artifacts", &["name", "file", "inputs", "outputs"]);
+    for (name, a) in &rt.manifest.artifacts {
+        t.row(vec![
+            name.clone(),
+            a.file.clone(),
+            format!("{}", a.inputs.len()),
+            format!("{}", a.outputs),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Measurement: the optimizer-state memory accountant behind the paper's
+//! peak-memory columns, plus wall-clock timers and task metrics.
+
+pub mod memory;
+pub mod timer;
+pub mod scoring;
+
+pub use memory::MemoryModel;
+pub use scoring::{accuracy, cross_entropy, perplexity_from_nll};
+pub use timer::Stopwatch;

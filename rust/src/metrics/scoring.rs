@@ -1,0 +1,71 @@
+//! Task metrics: classification accuracy, cross-entropy, perplexity.
+
+/// Top-1 accuracy from per-example logits and integer labels.
+/// `logits` is row-major `[batch, classes]`.
+pub fn accuracy(logits: &[f32], classes: usize, labels: &[u32]) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    let mut correct = 0usize;
+    for (b, &y) in labels.iter().enumerate() {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best as u32 == y {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Mean cross-entropy (nats) from logits and labels, numerically stable.
+pub fn cross_entropy(logits: &[f32], classes: usize, labels: &[u32]) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    let mut total = 0.0f64;
+    for (b, &y) in labels.iter().enumerate() {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse: f64 = row.iter().map(|&v| ((v as f64) - maxv).exp()).sum::<f64>().ln() + maxv;
+        total += lse - row[y as usize] as f64;
+    }
+    total / labels.len().max(1) as f64
+}
+
+/// Perplexity from a mean negative log-likelihood in nats (Tab. 6's PPL).
+pub fn perplexity_from_nll(nll_nats: f64) -> f64 {
+    nll_nats.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = [1.0, 2.0, 0.0, /* row2 */ 3.0, 0.0, 0.0];
+        assert_eq!(accuracy(&logits, 3, &[1, 0]), 1.0);
+        assert_eq!(accuracy(&logits, 3, &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn cross_entropy_uniform() {
+        // Uniform logits over 4 classes → CE = ln 4.
+        let logits = [0.0f32; 4];
+        let ce = cross_entropy(&logits, 4, &[2]);
+        assert!((ce - 4f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_entropy_confident() {
+        let logits = [100.0, 0.0];
+        assert!(cross_entropy(&logits, 2, &[0]) < 1e-6);
+        assert!(cross_entropy(&logits, 2, &[1]) > 50.0);
+    }
+
+    #[test]
+    fn ppl_of_ln2_is_2() {
+        assert!((perplexity_from_nll(2f64.ln()) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,69 @@
+//! Wall-clock timing helpers for the Tab. 5/6 time columns.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: start/stop around code regions, read the total.
+#[derive(Clone, Debug, Default)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        Stopwatch::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    /// Time one closure and accumulate.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.total = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_regions() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.total() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| ());
+        sw.reset();
+        assert_eq!(sw.total(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,77 @@
+//! Rust-side model handling: deterministic parameter initialization from
+//! the manifest's parameter inventory (shapes + init std come from
+//! `model.py` via `manifest.json` — a single source of truth).
+
+use crate::linalg::Matrix;
+use crate::runtime::manifest::ModelInfo;
+use crate::util::rng::Rng;
+
+/// Initialize all parameters of a model, seeded and order-stable.
+pub fn init_params(model: &ModelInfo, seed: u64) -> Vec<Matrix> {
+    let mut root = Rng::new(seed ^ 0x1B17_AC25);
+    model
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut rng = root.fork(i as u64);
+            if p.std > 0.0 {
+                Matrix::randn(p.rows, p.cols, p.std, &mut rng)
+            } else {
+                Matrix::zeros(p.rows, p.cols)
+            }
+        })
+        .collect()
+}
+
+/// Total trainable weights.
+pub fn param_count(model: &ModelInfo) -> usize {
+    model.n_weights()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamInfo;
+    use std::collections::BTreeMap;
+
+    fn toy_model() -> ModelInfo {
+        ModelInfo {
+            name: "toy".into(),
+            kind: "classifier".into(),
+            batch: 8,
+            meta: BTreeMap::new(),
+            params: vec![
+                ParamInfo { name: "w".into(), rows: 4, cols: 3, std: 0.5 },
+                ParamInfo { name: "b".into(), rows: 1, cols: 3, std: 0.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let m = toy_model();
+        let a = init_params(&m, 7);
+        let b = init_params(&m, 7);
+        assert_eq!(a, b);
+        assert_eq!(a[0].rows(), 4);
+        assert_eq!(a[1], Matrix::zeros(1, 3), "zero-std params start at zero");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let m = toy_model();
+        assert_ne!(init_params(&m, 1)[0], init_params(&m, 2)[0]);
+    }
+
+    #[test]
+    fn std_is_respected() {
+        let mut m = toy_model();
+        m.params[0].rows = 64;
+        m.params[0].cols = 64;
+        let p = init_params(&m, 3);
+        let var: f64 = p[0].data().iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            / (64.0 * 64.0);
+        assert!((var.sqrt() - 0.5).abs() < 0.05, "std={}", var.sqrt());
+    }
+}

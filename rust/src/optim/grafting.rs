@@ -1,0 +1,49 @@
+//! Learning-rate grafting (paper Eq. (13) and Algorithm 2 step 15, from
+//! Agarwal et al. [1]): rescale the preconditioned gradient so its
+//! Frobenius norm matches the raw gradient's, decoupling Shampoo's
+//! direction from the base optimizer's step-size calibration.
+
+use crate::linalg::{fro_norm, Matrix};
+
+/// `G̃ = (‖G‖_F / ‖Ĝ‖_F) · Ĝ`, in place on `precond`.
+/// If `‖Ĝ‖_F = 0` the preconditioned gradient is left as-is (zero).
+pub fn graft(raw: &Matrix, precond: &mut Matrix) {
+    let ng = fro_norm(raw);
+    let np = fro_norm(precond);
+    if np > 0.0 && ng.is_finite() && np.is_finite() {
+        let s = (ng / np) as f32;
+        precond.scale(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn preserves_raw_norm() {
+        let mut rng = Rng::new(1);
+        let raw = Matrix::randn(6, 8, 2.0, &mut rng);
+        let mut pre = Matrix::randn(6, 8, 0.001, &mut rng);
+        graft(&raw, &mut pre);
+        assert!((fro_norm(&pre) - fro_norm(&raw)).abs() / fro_norm(&raw) < 1e-5);
+    }
+
+    #[test]
+    fn preserves_direction() {
+        let raw = Matrix::from_rows(&[&[10.0, 0.0]]);
+        let mut pre = Matrix::from_rows(&[&[0.0, 0.5]]);
+        graft(&raw, &mut pre);
+        assert_eq!(pre[(0, 0)], 0.0, "direction unchanged");
+        assert!((pre[(0, 1)] - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_precond_is_noop() {
+        let raw = Matrix::from_rows(&[&[1.0]]);
+        let mut pre = Matrix::from_rows(&[&[0.0]]);
+        graft(&raw, &mut pre);
+        assert_eq!(pre[(0, 0)], 0.0);
+    }
+}

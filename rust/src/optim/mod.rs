@@ -1,0 +1,18 @@
+//! First-order base optimizers `F` (paper Algorithm 1, step 16).
+//!
+//! Shampoo wraps a base optimizer: the preconditioned (and grafted)
+//! gradient replaces the raw gradient fed to `F`. We implement the bases the
+//! paper evaluates — SGDM (Tab. 3/4), AdamW (Tab. 3–6), RMSProp (Tab. 8) —
+//! plus plain SGD and Adam, cosine/warmup LR schedules, and the grafting
+//! trick of Eq. (13) [1].
+
+pub mod optimizer;
+pub mod sgd;
+pub mod adam;
+pub mod rmsprop;
+pub mod grafting;
+pub mod schedule;
+
+pub use grafting::graft;
+pub use optimizer::{BaseOptimizer, OptimizerKind, ParamState};
+pub use schedule::LrSchedule;

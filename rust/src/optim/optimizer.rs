@@ -1,0 +1,173 @@
+//! The base-optimizer abstraction `F(W, s, Ĝ)` of Algorithm 1/2.
+
+use crate::linalg::Matrix;
+
+/// Which first-order rule is in use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Sgdm,
+    Adam,
+    AdamW,
+    RmsProp,
+}
+
+impl OptimizerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Sgdm => "sgdm",
+            OptimizerKind::Adam => "adam",
+            OptimizerKind::AdamW => "adamw",
+            OptimizerKind::RmsProp => "rmsprop",
+        }
+    }
+
+    /// f32 state matrices kept per parameter (the memory model uses this:
+    /// SGDM keeps 1 momentum buffer, Adam/AdamW keep 2, RMSProp keeps 1).
+    pub fn state_slots(&self) -> usize {
+        match self {
+            OptimizerKind::Sgd => 0,
+            OptimizerKind::Sgdm | OptimizerKind::RmsProp => 1,
+            OptimizerKind::Adam | OptimizerKind::AdamW => 2,
+        }
+    }
+}
+
+/// Hyperparameters shared across the rules (unused fields ignored).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub lr: f32,
+    pub momentum: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { lr: 1e-3, momentum: 0.9, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+/// Per-parameter optimizer state.
+#[derive(Clone, Debug, Default)]
+pub struct ParamState {
+    /// First moment / momentum buffer.
+    pub m: Option<Matrix>,
+    /// Second moment buffer.
+    pub v: Option<Matrix>,
+    /// Per-rule step counter (for bias correction).
+    pub t: u64,
+}
+
+impl ParamState {
+    pub fn size_bytes(&self) -> usize {
+        self.m.as_ref().map(|x| x.size_bytes()).unwrap_or(0)
+            + self.v.as_ref().map(|x| x.size_bytes()).unwrap_or(0)
+    }
+}
+
+/// A concrete base optimizer instance over a fixed set of parameters.
+#[derive(Clone, Debug)]
+pub struct BaseOptimizer {
+    pub kind: OptimizerKind,
+    pub hyper: Hyper,
+    pub states: Vec<ParamState>,
+}
+
+impl BaseOptimizer {
+    pub fn new(kind: OptimizerKind, hyper: Hyper) -> BaseOptimizer {
+        BaseOptimizer { kind, hyper, states: Vec::new() }
+    }
+
+    /// SGD with momentum + coupled L2 weight decay (paper's CNN setting).
+    pub fn sgdm(lr: f32, momentum: f32, weight_decay: f32) -> BaseOptimizer {
+        BaseOptimizer::new(
+            OptimizerKind::Sgdm,
+            Hyper { lr, momentum, weight_decay, ..Default::default() },
+        )
+    }
+
+    /// Plain SGD.
+    pub fn sgd(lr: f32, weight_decay: f32) -> BaseOptimizer {
+        BaseOptimizer::new(OptimizerKind::Sgd, Hyper { lr, weight_decay, ..Default::default() })
+    }
+
+    /// AdamW (decoupled weight decay) — the paper's ViT/Swin/LLM setting.
+    pub fn adamw(lr: f32, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> BaseOptimizer {
+        BaseOptimizer::new(
+            OptimizerKind::AdamW,
+            Hyper { lr, beta1, beta2, eps, weight_decay, ..Default::default() },
+        )
+    }
+
+    /// Adam (coupled L2).
+    pub fn adam(lr: f32, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> BaseOptimizer {
+        BaseOptimizer::new(
+            OptimizerKind::Adam,
+            Hyper { lr, beta1, beta2, eps, weight_decay, ..Default::default() },
+        )
+    }
+
+    /// RMSProp (Tab. 8 ablation).
+    pub fn rmsprop(lr: f32, alpha: f32, eps: f32, weight_decay: f32) -> BaseOptimizer {
+        BaseOptimizer::new(
+            OptimizerKind::RmsProp,
+            Hyper { lr, beta2: alpha, eps, weight_decay, ..Default::default() },
+        )
+    }
+
+    /// Allocate state for `n` parameters (lazily sized on first step).
+    pub fn init(&mut self, n_params: usize) {
+        self.states = vec![ParamState::default(); n_params];
+    }
+
+    /// Apply one update to parameter `idx`: `W ← F(W, s, g)` with the
+    /// effective learning rate `lr = hyper.lr · lr_scale` (the schedule
+    /// multiplier).
+    pub fn step_param(&mut self, idx: usize, w: &mut Matrix, g: &Matrix, lr_scale: f32) {
+        assert!(idx < self.states.len(), "optimizer not initialized for param {idx}");
+        let lr = self.hyper.lr * lr_scale;
+        match self.kind {
+            OptimizerKind::Sgd | OptimizerKind::Sgdm => {
+                super::sgd::step(&self.hyper, self.kind, &mut self.states[idx], w, g, lr)
+            }
+            OptimizerKind::Adam | OptimizerKind::AdamW => {
+                super::adam::step(&self.hyper, self.kind, &mut self.states[idx], w, g, lr)
+            }
+            OptimizerKind::RmsProp => {
+                super::rmsprop::step(&self.hyper, &mut self.states[idx], w, g, lr)
+            }
+        }
+    }
+
+    /// Total optimizer-state bytes currently held.
+    pub fn state_bytes(&self) -> usize {
+        self.states.iter().map(|s| s.size_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_state_slots() {
+        assert_eq!(OptimizerKind::Sgd.state_slots(), 0);
+        assert_eq!(OptimizerKind::Sgdm.state_slots(), 1);
+        assert_eq!(OptimizerKind::AdamW.state_slots(), 2);
+    }
+
+    #[test]
+    fn state_bytes_counts_buffers() {
+        let mut opt = BaseOptimizer::adamw(1e-3, 0.9, 0.999, 1e-8, 0.01);
+        opt.init(1);
+        let mut w = Matrix::zeros(10, 10);
+        let g = Matrix::eye(10);
+        assert_eq!(opt.state_bytes(), 0);
+        opt.step_param(0, &mut w, &g, 1.0);
+        assert_eq!(opt.state_bytes(), 2 * 10 * 10 * 4);
+    }
+}

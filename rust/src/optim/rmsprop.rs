@@ -1,0 +1,64 @@
+//! RMSProp update rule (paper Tab. 8 ablation base).
+
+use super::optimizer::{Hyper, ParamState};
+use crate::linalg::Matrix;
+
+/// One RMSProp step: `v ← α·v + (1−α)·g²`; `w ← w − lr·g/(√v + ε)`.
+/// `α` is carried in `Hyper::beta2`; weight decay is coupled L2.
+pub fn step(h: &Hyper, s: &mut ParamState, w: &mut Matrix, g: &Matrix, lr: f32) {
+    s.t += 1;
+    if s.v.is_none() {
+        s.v = Some(Matrix::zeros(g.rows(), g.cols()));
+    }
+    let v = s.v.as_mut().unwrap();
+    let vdat = v.data_mut();
+    let wdat = w.data_mut();
+    let gdat = g.data();
+    for i in 0..gdat.len() {
+        let gi = gdat[i] + h.weight_decay * wdat[i];
+        vdat[i] = h.beta2 * vdat[i] + (1.0 - h.beta2) * gi * gi;
+        wdat[i] -= lr * gi / (vdat[i].sqrt() + h.eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hyper() -> Hyper {
+        Hyper { lr: 1e-2, beta2: 0.99, eps: 1e-8, ..Default::default() }
+    }
+
+    #[test]
+    fn normalizes_gradient_scale() {
+        // Large and small gradients produce comparable first-step sizes.
+        let mut w1 = Matrix::from_rows(&[&[0.0]]);
+        let mut w2 = Matrix::from_rows(&[&[0.0]]);
+        let mut s1 = ParamState::default();
+        let mut s2 = ParamState::default();
+        step(&hyper(), &mut s1, &mut w1, &Matrix::from_rows(&[&[100.0]]), 1e-2);
+        step(&hyper(), &mut s2, &mut w2, &Matrix::from_rows(&[&[0.001]]), 1e-2);
+        let r = (w1[(0, 0)] / w2[(0, 0)]).abs();
+        assert!((0.5..2.0).contains(&r), "ratio={r}");
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut w = Matrix::from_rows(&[&[5.0]]);
+        let mut s = ParamState::default();
+        for _ in 0..2000 {
+            let g = Matrix::from_rows(&[&[w[(0, 0)] + 1.0]]);
+            step(&hyper(), &mut s, &mut w, &g, 5e-3);
+        }
+        assert!((w[(0, 0)] + 1.0).abs() < 1e-2, "w={}", w[(0, 0)]);
+    }
+
+    #[test]
+    fn single_state_buffer() {
+        let mut w = Matrix::zeros(2, 2);
+        let mut s = ParamState::default();
+        step(&hyper(), &mut s, &mut w, &Matrix::eye(2), 1e-2);
+        assert!(s.m.is_none());
+        assert_eq!(s.size_bytes(), 4 * 4);
+    }
+}

@@ -1,0 +1,79 @@
+//! Learning-rate schedules (App. C.3: cosine annealing with linear warmup).
+
+/// Schedule returning a multiplier on the base learning rate.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    /// Constant 1.0.
+    Constant,
+    /// Linear warmup over `warmup` steps, then cosine decay to `min_frac`
+    /// of the base LR at `total` steps (the paper's image/LLM schedule).
+    CosineWarmup { warmup: u64, total: u64, min_frac: f32 },
+    /// Step decay: multiply by `gamma` every `every` steps.
+    StepDecay { every: u64, gamma: f32 },
+}
+
+impl LrSchedule {
+    /// Multiplier at `step` (0-based).
+    pub fn scale(&self, step: u64) -> f32 {
+        match *self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::CosineWarmup { warmup, total, min_frac } => {
+                if warmup > 0 && step < warmup {
+                    (step + 1) as f32 / warmup as f32
+                } else {
+                    let total = total.max(warmup + 1);
+                    let t = (step - warmup) as f32 / (total - warmup) as f32;
+                    let t = t.clamp(0.0, 1.0);
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+                    min_frac + (1.0 - min_frac) * cos
+                }
+            }
+            LrSchedule::StepDecay { every, gamma } => gamma.powi((step / every.max(1)) as i32),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::CosineWarmup { warmup: 10, total: 100, min_frac: 0.0 };
+        assert!((s.scale(0) - 0.1).abs() < 1e-6);
+        assert!((s.scale(4) - 0.5).abs() < 1e-6);
+        assert!((s.scale(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = LrSchedule::CosineWarmup { warmup: 0, total: 100, min_frac: 0.1 };
+        assert!((s.scale(0) - 1.0).abs() < 1e-4);
+        assert!((s.scale(100) - 0.1).abs() < 1e-4);
+        assert!(s.scale(50) < s.scale(25));
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = LrSchedule::CosineWarmup { warmup: 5, total: 50, min_frac: 0.0 };
+        let mut prev = f32::INFINITY;
+        for step in 5..=50 {
+            let v = s.scale(step);
+            assert!(v <= prev + 1e-6);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::StepDecay { every: 10, gamma: 0.5 };
+        assert_eq!(s.scale(0), 1.0);
+        assert_eq!(s.scale(10), 0.5);
+        assert_eq!(s.scale(25), 0.25);
+    }
+
+    #[test]
+    fn constant_is_one() {
+        assert_eq!(LrSchedule::Constant.scale(12345), 1.0);
+    }
+}

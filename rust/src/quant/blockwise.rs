@@ -1,0 +1,250 @@
+//! Block-wise b-bit quantization (paper Sec. 3.2).
+//!
+//! A matrix is tiled into `B×B` blocks; each block is normalized by its
+//! absmax `N_p` and every element is mapped to the nearest codebook level
+//! (Eq. 3). Dequantization is `N_p · M(q)`. Block-wise normalization
+//! contains outliers to their own block, which is the reason the paper can
+//! push preconditioners to 4 bits at all.
+
+use super::mapping::{Codebook, Mapping};
+use super::packed::PackedNibbles;
+use crate::linalg::Matrix;
+
+/// Quantizer configuration (paper defaults: b=4, B=64, linear-2).
+#[derive(Clone, Copy, Debug)]
+pub struct QuantConfig {
+    pub bits: u32,
+    pub block: usize,
+    pub mapping: Mapping,
+    /// Tensors with fewer elements than this stay in f32 (App. C.3 uses 4096).
+    pub min_quant_elems: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig { bits: 4, block: 64, mapping: Mapping::Linear2, min_quant_elems: 4096 }
+    }
+}
+
+/// A block-quantized matrix: packed codes + per-block scales.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    pub bits: u32,
+    pub mapping: Mapping,
+    /// Row-major packed codes (same element order as the source matrix).
+    pub codes: PackedNibbles,
+    /// Per-block normalization factors `N_p`, blocks in row-major block order.
+    pub scales: Vec<f32>,
+}
+
+/// Stateless quantize/dequantize engine with a precomputed codebook.
+#[derive(Clone, Debug)]
+pub struct BlockQuantizer {
+    pub cfg: QuantConfig,
+    codebook: Codebook,
+}
+
+impl BlockQuantizer {
+    pub fn new(cfg: QuantConfig) -> BlockQuantizer {
+        BlockQuantizer { cfg, codebook: Codebook::new(cfg.mapping, cfg.bits) }
+    }
+
+    pub fn codebook(&self) -> &Codebook {
+        &self.codebook
+    }
+
+    /// Quantize `x` block-wise (Eq. 3). All-zero blocks get scale 0.
+    pub fn quantize(&self, x: &Matrix) -> QuantizedMatrix {
+        let (m, n) = (x.rows(), x.cols());
+        let b = self.cfg.block.max(1);
+        let bm = m.div_ceil(b);
+        let bn = n.div_ceil(b);
+        let mut scales = vec![0.0f32; bm * bn];
+        let mut codes = PackedNibbles::zeros(m * n);
+
+        let zero_code = self.codebook.encode(0.0);
+        for bi in 0..bm {
+            for bj in 0..bn {
+                let r0 = bi * b;
+                let c0 = bj * b;
+                let r1 = (r0 + b).min(m);
+                let c1 = (c0 + b).min(n);
+                // absmax of the block
+                let mut amax = 0.0f32;
+                for i in r0..r1 {
+                    for &v in &x.row(i)[c0..c1] {
+                        amax = amax.max(v.abs());
+                    }
+                }
+                scales[bi * bn + bj] = amax;
+                if amax == 0.0 {
+                    for i in r0..r1 {
+                        for j in c0..c1 {
+                            codes.set(i * n + j, zero_code);
+                        }
+                    }
+                    continue;
+                }
+                let inv = 1.0 / amax;
+                for i in r0..r1 {
+                    let row = x.row(i);
+                    for j in c0..c1 {
+                        codes.set(i * n + j, self.codebook.encode(row[j] * inv));
+                    }
+                }
+            }
+        }
+
+        QuantizedMatrix {
+            rows: m,
+            cols: n,
+            block: b,
+            bits: self.cfg.bits,
+            mapping: self.cfg.mapping,
+            codes,
+            scales,
+        }
+    }
+
+    /// Dequantize back to f32 (`D` of Sec. 3.2).
+    pub fn dequantize(&self, q: &QuantizedMatrix) -> Matrix {
+        let mut out = Matrix::zeros(q.rows, q.cols);
+        self.dequantize_into(q, &mut out);
+        out
+    }
+
+    /// Dequantize into an existing buffer (hot-path variant, no allocation).
+    pub fn dequantize_into(&self, q: &QuantizedMatrix, out: &mut Matrix) {
+        assert_eq!((out.rows(), out.cols()), (q.rows, q.cols));
+        debug_assert_eq!(q.mapping, self.cfg.mapping);
+        debug_assert_eq!(q.bits, self.cfg.bits);
+        let (m, n, b) = (q.rows, q.cols, q.block);
+        let bn = n.div_ceil(b);
+        for i in 0..m {
+            let bi = i / b;
+            let row = out.row_mut(i);
+            for (j, slot) in row.iter_mut().enumerate() {
+                let scale = q.scales[bi * bn + j / b];
+                *slot = scale * self.codebook.decode(q.codes.get(i * n + j));
+            }
+        }
+    }
+
+    /// Round-trip `D(Q(x))` in one call.
+    pub fn roundtrip(&self, x: &Matrix) -> Matrix {
+        self.dequantize(&self.quantize(x))
+    }
+}
+
+impl QuantizedMatrix {
+    /// Physical bytes: packed codes + f32 scales (what the paper's memory
+    /// tables count for VQ preconditioners).
+    pub fn size_bytes(&self) -> usize {
+        self.codes.size_bytes() + self.scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn quantizer(block: usize) -> BlockQuantizer {
+        BlockQuantizer::new(QuantConfig { block, ..Default::default() })
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_block_absmax() {
+        // Proposition B.1: ‖D(Q(x)) − x‖∞ ≤ ‖x‖∞ · max_gap/2 per block.
+        let mut rng = Rng::new(1);
+        let q = quantizer(8);
+        let bound_factor = q.codebook().max_abs_error();
+        for _ in 0..20 {
+            let x = Matrix::randn(19, 23, 2.0, &mut rng);
+            let qx = q.quantize(&x);
+            let back = q.dequantize(&qx);
+            // Check per-element error against the block scale.
+            let bn = 23usize.div_ceil(8);
+            for i in 0..19 {
+                for j in 0..23 {
+                    let scale = qx.scales[(i / 8) * bn + j / 8];
+                    let err = (back[(i, j)] - x[(i, j)]).abs();
+                    assert!(err <= scale * bound_factor + 1e-6, "err={err} scale={scale}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_matrix_roundtrips_exactly() {
+        let q = quantizer(4);
+        let x = Matrix::zeros(10, 10);
+        assert_eq!(q.roundtrip(&x).max_abs_diff(&x), 0.0);
+    }
+
+    #[test]
+    fn blockwise_isolates_outliers() {
+        // One huge outlier in block (0,0) must not destroy accuracy in the
+        // other blocks — the point of block-wise normalization.
+        let mut rng = Rng::new(2);
+        let mut x = Matrix::randn(16, 16, 1.0, &mut rng);
+        x[(0, 0)] = 1e6;
+        let q = quantizer(8);
+        let back = q.roundtrip(&x);
+        // Far block (8.., 8..) should be accurate relative to its own scale.
+        for i in 8..16 {
+            for j in 8..16 {
+                let err = (back[(i, j)] - x[(i, j)]).abs();
+                assert!(err < 0.5, "block leakage: err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_levels_roundtrip_exactly() {
+        let q = quantizer(64);
+        // A matrix whose entries are exact codebook levels times a scale.
+        let levels = q.codebook().levels.clone();
+        let x = Matrix::from_fn(4, 4, |i, j| 3.5 * levels[(i * 4 + j) % 16]);
+        let back = q.roundtrip(&x);
+        assert!(back.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn size_is_roughly_half_byte_per_elem() {
+        let q = quantizer(64);
+        let x = Matrix::zeros(128, 128);
+        let qx = q.quantize(&x);
+        let payload = 128 * 128 / 2;
+        let scales = 4 * 4; // 2x2 blocks of 64 → 4 scales × 4 bytes
+        assert_eq!(qx.size_bytes(), payload + scales);
+    }
+
+    #[test]
+    fn non_divisible_shapes() {
+        let mut rng = Rng::new(3);
+        let q = quantizer(16);
+        let x = Matrix::randn(33, 17, 1.0, &mut rng);
+        let back = q.roundtrip(&x);
+        assert_eq!(back.rows(), 33);
+        assert_eq!(back.cols(), 17);
+        // sanity: correlation stays high
+        let num = crate::linalg::inner(&x, &back);
+        let den = crate::linalg::fro_norm(&x) * crate::linalg::fro_norm(&back);
+        assert!(num / den > 0.95);
+    }
+
+    #[test]
+    fn block_one_is_per_element_scale() {
+        let mut rng = Rng::new(4);
+        let q = quantizer(1);
+        let x = Matrix::randn(5, 5, 1.0, &mut rng);
+        // With B=1 every element is its own block: |x| is the scale so the
+        // roundtrip recovers |x| exactly at the ±1 levels.
+        let back = q.roundtrip(&x);
+        assert!(back.max_abs_diff(&x) < 1e-6);
+    }
+}

@@ -1,0 +1,154 @@
+//! Error feedback for Cholesky quantization (paper Sec. 4.3, Eq. (10)–(11)).
+//!
+//! Before quantizing the fresh Cholesky factor we *compensate* it with the
+//! dequantized error state (Eq. 10); afterwards the error state is updated
+//! by an exponential moving average of the new quantization residual
+//! (Eq. 11). Both states are strictly lower triangular.
+
+use crate::linalg::Matrix;
+
+/// The EF update rule with momentum `βₑ`.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorFeedback {
+    pub beta_e: f32,
+}
+
+impl ErrorFeedback {
+    pub fn new(beta_e: f32) -> ErrorFeedback {
+        assert!((0.0..1.0).contains(&beta_e), "βₑ must be in [0,1)");
+        ErrorFeedback { beta_e }
+    }
+
+    /// Eq. (10): the matrix that actually gets quantized, `C_k + E_{k−1}`.
+    /// Only the strictly-lower triangle is compensated (the diagonal stays
+    /// the exact `C_k` diagonal — it is never quantized).
+    pub fn compensate(&self, c: &Matrix, e_prev: &Matrix) -> Matrix {
+        assert_eq!((c.rows(), c.cols()), (e_prev.rows(), e_prev.cols()));
+        let n = c.rows();
+        Matrix::from_fn(n, n, |i, j| {
+            if i > j {
+                c[(i, j)] + e_prev[(i, j)]
+            } else {
+                c[(i, j)]
+            }
+        })
+    }
+
+    /// Eq. (11): `E_k = βₑ·E_{k−1} + (1−βₑ)·(C_k + E_{k−1} − D(C̄_k))`,
+    /// restricted to the strictly-lower triangle (diagonal error is zero by
+    /// construction).
+    pub fn update(
+        &self,
+        c: &Matrix,
+        e_prev: &Matrix,
+        c_dequantized: &Matrix,
+    ) -> Matrix {
+        let n = c.rows();
+        Matrix::from_fn(n, n, |i, j| {
+            if i > j {
+                let residual = c[(i, j)] + e_prev[(i, j)] - c_dequantized[(i, j)];
+                self.beta_e * e_prev[(i, j)] + (1.0 - self.beta_e) * residual
+            } else {
+                0.0
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::blockwise::{BlockQuantizer, QuantConfig};
+    use crate::util::rng::Rng;
+
+    fn lower_tri(n: usize, rng: &mut Rng) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| {
+            if i > j {
+                rng.normal_f32(1.0)
+            } else if i == j {
+                3.0
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn error_state_stays_strictly_lower() {
+        let mut rng = Rng::new(1);
+        let ef = ErrorFeedback::new(0.95);
+        let q = BlockQuantizer::new(QuantConfig { block: 8, ..Default::default() });
+        let c = lower_tri(12, &mut rng);
+        let mut e = Matrix::zeros(12, 12);
+        for _ in 0..5 {
+            let comp = ef.compensate(&c, &e);
+            let back = q.roundtrip(&comp);
+            e = ef.update(&c, &e, &back);
+            for i in 0..12 {
+                for j in i..12 {
+                    assert_eq!(e[(i, j)], 0.0, "upper/diag must stay zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn perfect_quantizer_drives_error_to_zero() {
+        // If D(Q(·)) is exact, residual = E_{k−1}, so
+        // E_k = βₑE + (1−βₑ)E = E … wait: residual = C + E − C − E = 0 only
+        // when dequantization returns the compensated matrix exactly; then
+        // E_k = βₑ·E_{k−1}, decaying geometrically.
+        let ef = ErrorFeedback::new(0.5);
+        let mut rng = Rng::new(2);
+        let c = lower_tri(6, &mut rng);
+        let mut e = Matrix::from_fn(6, 6, |i, j| if i > j { 1.0 } else { 0.0 });
+        for _ in 0..20 {
+            let comp = ef.compensate(&c, &e);
+            e = ef.update(&c, &e, &comp); // exact dequantization
+        }
+        assert!(crate::linalg::max_abs(&e) < 1e-5);
+    }
+
+    #[test]
+    fn compensation_reduces_accumulated_bias() {
+        // Repeatedly quantizing the SAME factor: with EF the time-average of
+        // dequantized factors converges toward the true factor; without EF it
+        // stays at the one-shot quantization error.
+        let mut rng = Rng::new(3);
+        let n = 16;
+        let c = lower_tri(n, &mut rng);
+        let q = BlockQuantizer::new(QuantConfig { block: 8, ..Default::default() });
+        let ef = ErrorFeedback::new(0.9);
+
+        let steps = 200;
+        let mut e = Matrix::zeros(n, n);
+        let mut avg_ef = Matrix::zeros(n, n);
+        for _ in 0..steps {
+            let comp = ef.compensate(&c, &e);
+            let back = q.roundtrip(&comp);
+            e = ef.update(&c, &e, &back);
+            avg_ef.axpy(1.0 / steps as f32, &back);
+        }
+        let one_shot = q.roundtrip(&c);
+
+        // Compare strictly-lower error only (diagonals identical).
+        let mut err_ef = 0.0f64;
+        let mut err_vq = 0.0f64;
+        for i in 0..n {
+            for j in 0..i {
+                err_ef += ((avg_ef[(i, j)] - c[(i, j)]) as f64).powi(2);
+                err_vq += ((one_shot[(i, j)] - c[(i, j)]) as f64).powi(2);
+            }
+        }
+        assert!(
+            err_ef < err_vq * 0.5,
+            "EF time-average should beat one-shot: ef={err_ef:.3e} vq={err_vq:.3e}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "βₑ must be in [0,1)")]
+    fn rejects_bad_beta() {
+        ErrorFeedback::new(1.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! Quantization mappings `M : [0, 2^b−1] → [−1, 1]` (paper Eq. (3)–(4)).
+//!
+//! The paper uses **linear-2** ("linear square") for b = 4: a signed-square
+//! codebook that concentrates levels near zero where preconditioner entries
+//! cluster. Plain linear and a geometric "dynamic" codebook are provided
+//! for ablations.
+
+/// Available codebooks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mapping {
+    /// Uniform levels on [−1, 1].
+    Linear,
+    /// Signed square of uniform levels — Eq. (4), the paper's default.
+    Linear2,
+    /// Signed geometric (power-of-two) levels, à la dynamic quantization.
+    Dynamic,
+}
+
+impl Mapping {
+    /// The `2^b` codebook values, strictly increasing.
+    pub fn levels(&self, bits: u32) -> Vec<f32> {
+        let n = 1usize << bits;
+        let half = (n / 2) as i64 - 1; // index of the zero level, Eq. (4)
+        match self {
+            Mapping::Linear => (0..n)
+                .map(|j| -1.0 + 2.0 * j as f32 / (n as f32 - 1.0))
+                .collect(),
+            Mapping::Linear2 => (0..n)
+                .map(|j| {
+                    let j = j as i64;
+                    let u = -1.0 + 2.0 * j as f32 / (n as f32 - 1.0);
+                    if j < half {
+                        -(u * u)
+                    } else if j == half {
+                        0.0
+                    } else {
+                        u * u
+                    }
+                })
+                .collect(),
+            Mapping::Dynamic => {
+                // Negative side: −2^0 … −2^{−(half−1)}, then 0, then the
+                // positive mirror; 2^b values total, increasing.
+                let mut v = Vec::with_capacity(n);
+                for k in 0..half {
+                    v.push(-(2.0f32.powi(-(k as i32))));
+                }
+                v.push(0.0);
+                for k in (0..(n as i64 - half - 1)).rev() {
+                    v.push(2.0f32.powi(-(k as i32)));
+                }
+                v
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mapping::Linear => "linear",
+            Mapping::Linear2 => "linear2",
+            Mapping::Dynamic => "dynamic",
+        }
+    }
+}
+
+/// Precomputed nearest-level quantizer for one (mapping, bits) pair.
+///
+/// `encode` maps a normalized value in [−1, 1] to the argmin index of
+/// Eq. (3) via binary search over level midpoints; `decode` is a table
+/// lookup.
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    pub bits: u32,
+    pub levels: Vec<f32>,
+    mids: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn new(mapping: Mapping, bits: u32) -> Codebook {
+        let levels = mapping.levels(bits);
+        debug_assert!(levels.windows(2).all(|w| w[0] < w[1]), "levels must increase");
+        let mids = levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+        Codebook { bits, levels, mids }
+    }
+
+    /// Nearest-level index for normalized `x` (clamped to [−1, 1]).
+    #[inline]
+    pub fn encode(&self, x: f32) -> u8 {
+        let x = x.clamp(-1.0, 1.0);
+        // Branchless count of midpoints below x (≡ partition_point, but the
+        // fixed-length compare loop autovectorizes — EXPERIMENTS.md §Perf).
+        let mut idx = 0usize;
+        for &m in &self.mids {
+            idx += (m < x) as usize;
+        }
+        // Tie-break toward the closer level (partition_point puts x==mid up).
+        if idx > 0 {
+            let lo = self.levels[idx - 1];
+            let hi = self.levels[idx];
+            if (x - lo).abs() <= (hi - x).abs() {
+                return (idx - 1) as u8;
+            }
+        }
+        idx as u8
+    }
+
+    #[inline]
+    pub fn decode(&self, q: u8) -> f32 {
+        self.levels[q as usize]
+    }
+
+    /// Worst-case |decode(encode(x)) − x| over the codebook's domain:
+    /// half the largest gap between adjacent levels (plus edge gaps).
+    pub fn max_abs_error(&self) -> f32 {
+        let mut worst = 0.0f32;
+        for w in self.levels.windows(2) {
+            worst = worst.max(0.5 * (w[1] - w[0]));
+        }
+        // Values clamp at ±1; levels end at ±1 for all our mappings.
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear2_matches_eq4() {
+        // b=4: j=0 → −1, j=7 → 0, j=15 → +1, j=11 → (−1+22/15)² = (7/15)².
+        let l = Mapping::Linear2.levels(4);
+        assert_eq!(l.len(), 16);
+        assert!((l[0] + 1.0).abs() < 1e-6);
+        assert_eq!(l[7], 0.0);
+        assert!((l[15] - 1.0).abs() < 1e-6);
+        let want = (7.0f32 / 15.0).powi(2);
+        assert!((l[11] - want).abs() < 1e-6);
+        // symmetric-ish: M(j) near −M(14−j) for the square parts
+        assert!((l[1] + l[14]).abs() < 0.07);
+    }
+
+    #[test]
+    fn all_mappings_strictly_increasing() {
+        for m in [Mapping::Linear, Mapping::Linear2, Mapping::Dynamic] {
+            for bits in [2, 3, 4, 8] {
+                let l = m.levels(bits);
+                assert_eq!(l.len(), 1 << bits);
+                assert!(
+                    l.windows(2).all(|w| w[0] < w[1]),
+                    "{}/{} not increasing: {:?}",
+                    m.name(),
+                    bits,
+                    l
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_nearest() {
+        let cb = Codebook::new(Mapping::Linear2, 4);
+        // Exact levels round-trip.
+        for (j, &lv) in cb.levels.iter().enumerate() {
+            assert_eq!(cb.encode(lv), j as u8, "level {j}");
+            assert_eq!(cb.decode(j as u8), lv);
+        }
+        // Arbitrary points map to the truly nearest level.
+        for i in 0..2000 {
+            let x = -1.0 + 2.0 * i as f32 / 1999.0;
+            let q = cb.encode(x);
+            let err = (cb.decode(q) - x).abs();
+            for &lv in &cb.levels {
+                assert!(err <= (lv - x).abs() + 1e-7, "x={x} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_clamps() {
+        let cb = Codebook::new(Mapping::Linear, 4);
+        assert_eq!(cb.encode(-5.0), 0);
+        assert_eq!(cb.encode(5.0), 15);
+    }
+
+    #[test]
+    fn zero_encodes_to_zero_level() {
+        for m in [Mapping::Linear2, Mapping::Dynamic] {
+            let cb = Codebook::new(m, 4);
+            assert_eq!(cb.decode(cb.encode(0.0)), 0.0, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn max_abs_error_bounds_roundtrip() {
+        for m in [Mapping::Linear, Mapping::Linear2, Mapping::Dynamic] {
+            let cb = Codebook::new(m, 4);
+            let bound = cb.max_abs_error();
+            for i in 0..500 {
+                let x = -1.0 + 2.0 * i as f32 / 499.0;
+                let err = (cb.decode(cb.encode(x)) - x).abs();
+                assert!(err <= bound + 1e-6, "{} x={x} err={err} bound={bound}", m.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! 4-bit quantization library (paper Sec. 3.2, 4.1–4.3).
+//!
+//! * [`mapping`] — the codebooks: **linear-2** (Eq. 4, the paper's choice),
+//!   plain linear, and dynamic-exponent mappings.
+//! * [`blockwise`] — B×B block-wise absmax quantization (Sec. 3.2) with
+//!   packed 4-bit storage.
+//! * [`offdiag`] — off-diagonal quantization keeping the diagonal in f32
+//!   (Sec. 4.1 / Tab. 2, and the CQ diagonal rule of Sec. 4.2).
+//! * [`tri_store`] — the Fig. 2 joint container: quantized Cholesky factor
+//!   in the lower triangle, quantized EF error state in the upper triangle
+//!   of the same packed buffer.
+//! * [`error_feedback`] — the EMA error-state update of Eq. (11).
+
+pub mod mapping;
+pub mod blockwise;
+pub mod packed;
+pub mod offdiag;
+pub mod tri_store;
+pub mod error_feedback;
+
+pub use blockwise::{BlockQuantizer, QuantConfig, QuantizedMatrix};
+pub use error_feedback::ErrorFeedback;
+pub use mapping::Mapping;
+pub use offdiag::{dequantize_offdiag, quantize_offdiag, OffDiagQuantized};
+pub use packed::PackedNibbles;
+pub use tri_store::TriJointStore;

@@ -1,0 +1,106 @@
+//! Packed 4-bit (nibble) storage.
+//!
+//! Two 4-bit codes per byte — the physical representation behind every
+//! "4-bit" number in the paper's memory tables. Element count may be odd;
+//! the trailing nibble of the last byte is zero-padded.
+
+/// A dense vector of 4-bit codes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedNibbles {
+    len: usize,
+    bytes: Vec<u8>,
+}
+
+impl PackedNibbles {
+    /// Zero-initialized packed buffer for `len` codes.
+    pub fn zeros(len: usize) -> PackedNibbles {
+        PackedNibbles { len, bytes: vec![0u8; len.div_ceil(2)] }
+    }
+
+    /// Pack a slice of codes (each must fit in 4 bits).
+    pub fn from_codes(codes: &[u8]) -> PackedNibbles {
+        let mut p = PackedNibbles::zeros(codes.len());
+        for (i, &c) in codes.iter().enumerate() {
+            p.set(i, c);
+        }
+        p
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Code at index `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        debug_assert!(i < self.len);
+        let b = self.bytes[i >> 1];
+        if i & 1 == 0 {
+            b & 0x0F
+        } else {
+            b >> 4
+        }
+    }
+
+    /// Store code `c` (≤ 15) at index `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, c: u8) {
+        debug_assert!(i < self.len);
+        debug_assert!(c <= 0x0F, "code {c} exceeds 4 bits");
+        let b = &mut self.bytes[i >> 1];
+        if i & 1 == 0 {
+            *b = (*b & 0xF0) | c;
+        } else {
+            *b = (*b & 0x0F) | (c << 4);
+        }
+    }
+
+    /// Unpack to one code per byte.
+    pub fn to_codes(&self) -> Vec<u8> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Physical storage bytes (the quantity the memory accountant counts).
+    pub fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_even_and_odd() {
+        for n in [0usize, 1, 2, 7, 64, 1001] {
+            let mut rng = Rng::new(n as u64 + 1);
+            let codes: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xF) as u8).collect();
+            let p = PackedNibbles::from_codes(&codes);
+            assert_eq!(p.to_codes(), codes, "n={n}");
+            assert_eq!(p.size_bytes(), n.div_ceil(2));
+        }
+    }
+
+    #[test]
+    fn set_overwrites_cleanly() {
+        let mut p = PackedNibbles::zeros(4);
+        p.set(0, 0xF);
+        p.set(1, 0x3);
+        p.set(0, 0x1);
+        assert_eq!(p.get(0), 0x1);
+        assert_eq!(p.get(1), 0x3);
+    }
+
+    #[test]
+    fn half_the_bytes_of_u8_codes() {
+        let p = PackedNibbles::zeros(1000);
+        assert_eq!(p.size_bytes(), 500);
+    }
+}

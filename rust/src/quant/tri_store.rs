@@ -1,0 +1,229 @@
+//! Joint triangular storage (paper Fig. 2).
+//!
+//! The Cholesky factor `C` is lower triangular with an f32 diagonal; the EF
+//! error state `E` is *strictly* lower triangular (quantization skips the
+//! diagonal, so its error is zero there). Their 4-bit codes therefore fit in
+//! ONE `n×n` nibble grid: `C`'s code for `(i,j), i>j` at slot `(i,j)`, and
+//! `E`'s code for `(i,j), i>j` at the mirrored slot `(j,i)` — so CQ+EF costs
+//! no more code bytes than vanilla 4-bit quantization of one full matrix
+//! (Sec. 4.3).
+
+use super::blockwise::{BlockQuantizer, QuantizedMatrix};
+use super::packed::PackedNibbles;
+use crate::linalg::Matrix;
+
+/// One packed buffer holding a quantized Cholesky factor (lower) and its
+/// quantized error state (upper, mirrored).
+#[derive(Clone, Debug)]
+pub struct TriJointStore {
+    pub n: usize,
+    /// Shared n×n nibble grid (lower: C codes, upper: mirrored E codes).
+    codes: PackedNibbles,
+    /// f32 diagonal of C (never quantized, Sec. 4.2).
+    pub diag: Vec<f32>,
+    /// Block scales of the C quantization.
+    c_scales: Vec<f32>,
+    /// Block scales of the E quantization.
+    e_scales: Vec<f32>,
+    block: usize,
+}
+
+impl TriJointStore {
+    /// Initial state `C = √ε·I`, `E = 0` (Algorithm 1 inputs).
+    pub fn init(n: usize, eps: f32, quantizer: &BlockQuantizer) -> TriJointStore {
+        let c = Matrix::eye_scaled(n, eps.sqrt());
+        let e = Matrix::zeros(n, n);
+        TriJointStore::store(&c, &e, quantizer)
+    }
+
+    /// Quantize and pack `c` (lower-tri incl. diagonal) and `e` (strictly
+    /// lower-tri). Entries on/above the diagonal of `c` and on/above the
+    /// diagonal of `e` are ignored.
+    pub fn store(c: &Matrix, e: &Matrix, quantizer: &BlockQuantizer) -> TriJointStore {
+        assert!(c.is_square() && e.is_square() && c.rows() == e.rows());
+        let n = c.rows();
+
+        // Strictly-lower copies for quantization (diag of C kept f32).
+        let c_off = Matrix::from_fn(n, n, |i, j| if i > j { c[(i, j)] } else { 0.0 });
+        let e_off = Matrix::from_fn(n, n, |i, j| if i > j { e[(i, j)] } else { 0.0 });
+        let qc = quantizer.quantize(&c_off);
+        let qe = quantizer.quantize(&e_off);
+
+        let mut codes = PackedNibbles::zeros(n * n);
+        for i in 0..n {
+            for j in 0..i {
+                codes.set(i * n + j, qc.codes.get(i * n + j)); // lower: C
+                codes.set(j * n + i, qe.codes.get(i * n + j)); // upper: E mirrored
+            }
+        }
+
+        TriJointStore {
+            n,
+            codes,
+            diag: c.diag(),
+            c_scales: qc.scales,
+            e_scales: qe.scales,
+            block: qc.block,
+        }
+    }
+
+    /// Unpack and dequantize: returns `(C, E)` with `C` lower triangular
+    /// (f32 diagonal restored) and `E` strictly lower triangular.
+    pub fn load(&self, quantizer: &BlockQuantizer) -> (Matrix, Matrix) {
+        let n = self.n;
+        // Rebuild the two QuantizedMatrix views and reuse the block dequantizer.
+        let mut c_codes = PackedNibbles::zeros(n * n);
+        let mut e_codes = PackedNibbles::zeros(n * n);
+        let zero = quantizer.codebook().encode(0.0);
+        for i in 0..n {
+            for j in 0..n {
+                if i > j {
+                    c_codes.set(i * n + j, self.codes.get(i * n + j));
+                    e_codes.set(i * n + j, self.codes.get(j * n + i));
+                } else {
+                    c_codes.set(i * n + j, zero);
+                    e_codes.set(i * n + j, zero);
+                }
+            }
+        }
+        let qc = QuantizedMatrix {
+            rows: n,
+            cols: n,
+            block: self.block,
+            bits: quantizer.cfg.bits,
+            mapping: quantizer.cfg.mapping,
+            codes: c_codes,
+            scales: self.c_scales.clone(),
+        };
+        let qe = QuantizedMatrix {
+            rows: n,
+            cols: n,
+            block: self.block,
+            bits: quantizer.cfg.bits,
+            mapping: quantizer.cfg.mapping,
+            codes: e_codes,
+            scales: self.e_scales.clone(),
+        };
+        let mut c = quantizer.dequantize(&qc);
+        let mut e = quantizer.dequantize(&qe);
+        // Mask the structural zeros explicitly: codebooks without an exact
+        // zero level (e.g. plain linear) would otherwise leak ±scale/15
+        // into the upper triangles.
+        for i in 0..n {
+            for j in i..n {
+                c[(i, j)] = 0.0;
+                e[(i, j)] = 0.0;
+            }
+            e[(i, i)] = 0.0;
+        }
+        for (i, &d) in self.diag.iter().enumerate() {
+            c[(i, i)] = d;
+        }
+        (c, e)
+    }
+
+    /// Physical bytes: ONE n×n nibble grid + f32 diagonal + both scale sets.
+    /// Compare: vanilla 4-bit VQ of one preconditioner = one n×n nibble grid
+    /// + diagonal + one scale set — EF adds only the second scale set.
+    pub fn size_bytes(&self) -> usize {
+        self.codes.size_bytes()
+            + self.diag.len() * 4
+            + (self.c_scales.len() + self.e_scales.len()) * 4
+    }
+
+    /// Bytes without the error-state scales (pure CQ, no EF).
+    pub fn size_bytes_cq_only(&self) -> usize {
+        // CQ stores only the lower triangle: ⌈n(n+1)/2 codes / 2⌉ bytes.
+        let tri_codes = (self.n * (self.n + 1)) / 2;
+        tri_codes.div_ceil(2) + self.diag.len() * 4 + self.c_scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::blockwise::QuantConfig;
+    use crate::util::rng::Rng;
+
+    fn lower_tri(n: usize, rng: &mut Rng) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| {
+            if i > j {
+                rng.normal_f32(1.0)
+            } else if i == j {
+                2.0 + rng.uniform() as f32
+            } else {
+                0.0
+            }
+        })
+    }
+
+    fn strictly_lower(n: usize, rng: &mut Rng, std: f32) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| if i > j { rng.normal_f32(std) } else { 0.0 })
+    }
+
+    #[test]
+    fn roundtrip_recovers_structure() {
+        let mut rng = Rng::new(1);
+        let quantizer = BlockQuantizer::new(QuantConfig { block: 8, ..Default::default() });
+        let c = lower_tri(17, &mut rng);
+        let e = strictly_lower(17, &mut rng, 0.1);
+        let store = TriJointStore::store(&c, &e, &quantizer);
+        let (c2, e2) = store.load(&quantizer);
+
+        // Structure: C lower-tri with exact diagonal, E strictly lower.
+        for i in 0..17 {
+            assert_eq!(c2[(i, i)], c[(i, i)], "diag exact");
+            for j in (i + 1)..17 {
+                assert_eq!(c2[(i, j)], 0.0);
+                assert_eq!(e2[(i, j)], 0.0);
+            }
+            assert_eq!(e2[(i, i)], 0.0);
+        }
+        // Values: within block-quantization error.
+        for i in 0..17 {
+            for j in 0..i {
+                assert!((c2[(i, j)] - c[(i, j)]).abs() < 0.5, "c[{i}][{j}]");
+                assert!((e2[(i, j)] - e[(i, j)]).abs() < 0.05, "e[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn c_and_e_do_not_interfere() {
+        let mut rng = Rng::new(2);
+        let quantizer = BlockQuantizer::new(QuantConfig { block: 4, ..Default::default() });
+        let c = lower_tri(9, &mut rng);
+        let zero = Matrix::zeros(9, 9);
+        // Same C with and without an error state must load the same C.
+        let s1 = TriJointStore::store(&c, &zero, &quantizer);
+        let e = strictly_lower(9, &mut rng, 5.0);
+        let s2 = TriJointStore::store(&c, &e, &quantizer);
+        let (c1, _) = s1.load(&quantizer);
+        let (c2, e2) = s2.load(&quantizer);
+        assert_eq!(c1, c2, "E must not perturb C");
+        assert!(e2.max_abs_diff(&e) < 1.0);
+    }
+
+    #[test]
+    fn init_state_matches_algorithm1() {
+        let quantizer = BlockQuantizer::new(QuantConfig::default());
+        let s = TriJointStore::init(12, 1e-6, &quantizer);
+        let (c, e) = s.load(&quantizer);
+        let want = Matrix::eye_scaled(12, (1e-6f32).sqrt());
+        assert!(c.max_abs_diff(&want) < 1e-9);
+        assert_eq!(e, Matrix::zeros(12, 12));
+    }
+
+    #[test]
+    fn joint_codes_cost_one_grid() {
+        let quantizer = BlockQuantizer::new(QuantConfig { block: 64, ..Default::default() });
+        let n = 64;
+        let mut rng = Rng::new(3);
+        let c = lower_tri(n, &mut rng);
+        let e = strictly_lower(n, &mut rng, 0.1);
+        let s = TriJointStore::store(&c, &e, &quantizer);
+        // One n×n nibble grid = n²/2 bytes.
+        let code_bytes = n * n / 2;
+        assert_eq!(s.size_bytes(), code_bytes + n * 4 + 2 * 4);
+    }
+}

@@ -1,0 +1,5 @@
+//! Paper-style table rendering + figure series export.
+
+pub mod table;
+
+pub use table::Table;

@@ -1,0 +1,123 @@
+//! Aligned-text table renderer matching the paper's row structure.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as aligned monospace text.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line =
+            |out: &mut String, cells: &[String]| {
+                for i in 0..ncol {
+                    let pad = widths[i] - cells[i].chars().count();
+                    let _ = write!(out, "| {}{} ", cells[i], " ".repeat(pad));
+                }
+                let _ = writeln!(out, "|");
+            };
+        line(&mut out, &self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&mut out, &sep);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Also persist as CSV next to the figure dumps.
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = crate::util::csv::CsvWriter::create(
+            path,
+            &self.headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        )?;
+        for row in &self.rows {
+            w.row(row)?;
+        }
+        w.flush()
+    }
+}
+
+/// Format a metric as the paper does (percent with 2 decimals).
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+/// Format bytes as MB with one decimal (paper's memory columns).
+pub fn mb(bytes: usize) -> String {
+    format!("{:.2}", bytes as f64 / 1e6)
+}
+
+/// Format seconds with one decimal.
+pub fn secs(s: f64) -> String {
+    format!("{s:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Tab X", &["Optimizer", "Accuracy", "Memory"]);
+        t.row(vec!["SGDM".into(), "74.43".into(), "597.3".into()]);
+        t.row(vec!["SGDM + 32-bit Shampoo".into(), "75.02".into(), "1065.2".into()]);
+        let r = t.render();
+        assert!(r.contains("== Tab X =="));
+        let lines: Vec<&str> = r.lines().collect();
+        // All body lines same display width.
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(pct(0.7443), "74.43");
+        assert_eq!(mb(64_800_000), "64.80");
+        assert_eq!(secs(12.34), "12.3");
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let p = std::env::temp_dir().join("quartz_table_test.csv");
+        t.save_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,94 @@
+//! The PJRT execution engine: compile-once, execute-many.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A CPU PJRT client with a per-artifact executable cache.
+///
+/// Not `Send`: one `Runtime` per thread (the coordinator arranges this).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir).context("loading manifest")?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: std::cell::RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact directory: `$QUARTZ_ARTIFACTS` or `./artifacts`.
+    pub fn artifact_dir() -> PathBuf {
+        std::env::var("QUARTZ_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Open the default directory.
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::open(&Self::artifact_dir())
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let spec = self.spec(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact. All graphs are lowered with `return_tuple=True`,
+    /// so the single output buffer is a tuple that we decompose into
+    /// `spec.outputs` literals.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec_inputs = self.spec(name)?.inputs.len();
+        anyhow::ensure!(
+            inputs.len() == spec_inputs,
+            "artifact '{name}' wants {spec_inputs} inputs, got {}",
+            inputs.len()
+        );
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Number of artifacts compiled so far (cache introspection for tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

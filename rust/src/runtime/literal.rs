@@ -1,0 +1,73 @@
+//! Conversions between our [`Matrix`]/vec types and `xla::Literal`.
+
+use crate::linalg::Matrix;
+use anyhow::Result;
+
+/// Row-major f32 matrix → 2-D literal.
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// f32 slice → literal with the given shape.
+pub fn vec_f32_to_literal(v: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(v.len() == n, "shape {:?} needs {} elems, got {}", shape, n, v.len());
+    Ok(xla::Literal::vec1(v).reshape(&dims)?)
+}
+
+/// i32 slice → literal with the given shape (labels / token ids).
+pub fn vec_i32_to_literal(v: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(v.len() == n, "shape {:?} needs {} elems, got {}", shape, n, v.len());
+    Ok(xla::Literal::vec1(v).reshape(&dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// 2-D literal → Matrix.
+pub fn literal_to_matrix(l: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = l.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() == rows * cols, "literal has {} elems, want {}x{}", v.len(), rows, cols);
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+/// Any-rank f32 literal → flat vec.
+pub fn literal_to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Scalar f32 from a literal (loss outputs).
+pub fn literal_to_scalar_f32(l: &xla::Literal) -> Result<f32> {
+    let v = l.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let l = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&l, 2, 2).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn i32_literal_shape() {
+        let l = vec_i32_to_literal(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(vec_f32_to_literal(&[1.0, 2.0], &[3]).is_err());
+    }
+}

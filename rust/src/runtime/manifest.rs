@@ -1,0 +1,208 @@
+//! `artifacts/manifest.json` — the contract between the python compile path
+//! and the rust runtime (single source of truth for shapes & inits).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ManifestError {
+    #[error("io error reading {path}: {source}")]
+    Io { path: PathBuf, source: std::io::Error },
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+}
+
+/// Shape + dtype of one executable input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: usize,
+}
+
+/// One model parameter (name, shape, init std).
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub std: f32,
+}
+
+/// A registered model: parameter inventory + workload metadata.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: String,
+    pub batch: usize,
+    pub meta: BTreeMap<String, f64>,
+    pub params: Vec<ParamInfo>,
+}
+
+impl ModelInfo {
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.params.iter().map(|p| (p.rows, p.cols)).collect()
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).map(|&v| v as usize)
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.params.iter().map(|p| p.rows * p.cols).sum()
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|source| ManifestError::Io { path: path.clone(), source })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, ManifestError> {
+        let v = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let mut out = Manifest::default();
+
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| ManifestError::Parse("missing 'artifacts'".into()))?;
+        for (name, spec) in arts {
+            let file = spec
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| ManifestError::Parse(format!("{name}: missing file")))?
+                .to_string();
+            let inputs = spec
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| ManifestError::Parse(format!("{name}: missing inputs")))?
+                .iter()
+                .map(|i| {
+                    let shape = i
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|s| s.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default();
+                    let dtype = i
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("float32")
+                        .to_string();
+                    TensorSpec { shape, dtype }
+                })
+                .collect();
+            let outputs = spec.get("outputs").and_then(|o| o.as_usize()).unwrap_or(1);
+            out.artifacts.insert(name.clone(), ArtifactSpec { file, inputs, outputs });
+        }
+
+        if let Some(models) = v.get("models").and_then(|m| m.as_obj()) {
+            for (name, m) in models {
+                let kind = m.get("kind").and_then(|k| k.as_str()).unwrap_or("").to_string();
+                let batch = m.get("batch").and_then(|b| b.as_usize()).unwrap_or(1);
+                let mut meta = BTreeMap::new();
+                if let Some(obj) = m.get("meta").and_then(|x| x.as_obj()) {
+                    for (k, val) in obj {
+                        if let Some(f) = val.as_f64() {
+                            meta.insert(k.clone(), f);
+                        }
+                    }
+                }
+                let params = m
+                    .get("params")
+                    .and_then(|p| p.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|p| ParamInfo {
+                                name: p
+                                    .get("name")
+                                    .and_then(|n| n.as_str())
+                                    .unwrap_or("")
+                                    .to_string(),
+                                rows: p.get("rows").and_then(|r| r.as_usize()).unwrap_or(0),
+                                cols: p.get("cols").and_then(|c| c.as_usize()).unwrap_or(0),
+                                std: p.get("std").and_then(|s| s.as_f64()).unwrap_or(0.0) as f32,
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                out.models.insert(
+                    name.clone(),
+                    ModelInfo { name: name.clone(), kind, batch, meta, params },
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "m.fwd_bwd": {"file": "m.fwd_bwd.hlo.txt",
+          "inputs": [{"shape": [4, 3], "dtype": "float32"},
+                     {"shape": [8], "dtype": "int32"}],
+          "outputs": 2}
+      },
+      "models": {
+        "m": {"kind": "classifier", "batch": 8,
+              "meta": {"dim": 3, "classes": 4},
+              "params": [{"name": "w0", "rows": 4, "cols": 3, "std": 0.5}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["m.fwd_bwd"];
+        assert_eq!(a.file, "m.fwd_bwd.hlo.txt");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, "int32");
+        assert_eq!(a.outputs, 2);
+        let model = &m.models["m"];
+        assert_eq!(model.kind, "classifier");
+        assert_eq!(model.meta_usize("classes"), Some(4));
+        assert_eq!(model.shapes(), vec![(4, 3)]);
+        assert_eq!(model.params[0].std, 0.5);
+        assert_eq!(model.n_weights(), 12);
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        // Integration sanity against the actual artifacts (skipped when the
+        // build step hasn't run).
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.contains_key("kernel.quant_roundtrip"));
+            assert!(m.models.contains_key("lm_s"));
+        }
+    }
+}

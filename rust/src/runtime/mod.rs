@@ -1,0 +1,17 @@
+//! PJRT runtime — loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client from the L3 hot path.
+//!
+//! Python never runs here: the interchange is `artifacts/*.hlo.txt` (HLO
+//! text; see DESIGN.md §1 for why text, not serialized protos) plus
+//! `artifacts/manifest.json` describing shapes and parameter inventories.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so a [`Runtime`] is
+//! thread-local by construction; the coordinator gives each worker its own.
+
+pub mod client;
+pub mod literal;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use literal::{literal_to_matrix, literal_to_vec_f32, matrix_to_literal};
+pub use manifest::{ArtifactSpec, Manifest, ModelInfo, ParamInfo, TensorSpec};

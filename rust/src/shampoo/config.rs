@@ -1,0 +1,121 @@
+//! Shampoo configuration (paper App. C.3 defaults).
+
+use crate::linalg::schur_newton::SchurNewtonConfig;
+use crate::quant::QuantConfig;
+
+/// Which preconditioner representation the optimizer keeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShampooVariant {
+    /// Algorithm 2: f32 `(L, R, L^{-1/4}, R^{-1/4})`.
+    Full32,
+    /// Sec. 4.1: 4-bit off-diagonal block-wise quantization of all four
+    /// matrices ("vanilla 4-bit Shampoo", the paper's VQ baseline).
+    Vq4,
+    /// Sec. 4.2/4.3: 4-bit Cholesky quantization — store quantized Cholesky
+    /// factors of `L, R` (+ 4-bit inverse roots). With `error_feedback` the
+    /// EF state rides in the upper triangle (Alg. 1, Fig. 2).
+    Cq4 { error_feedback: bool },
+}
+
+impl ShampooVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShampooVariant::Full32 => "32-bit",
+            ShampooVariant::Vq4 => "4-bit (VQ)",
+            ShampooVariant::Cq4 { error_feedback: false } => "4-bit (CQ)",
+            ShampooVariant::Cq4 { error_feedback: true } => "4-bit (CQ+EF)",
+        }
+    }
+
+    /// Parse from the config-file spelling.
+    pub fn parse(s: &str) -> Option<ShampooVariant> {
+        match s {
+            "32bit" | "full32" | "32-bit" => Some(ShampooVariant::Full32),
+            "vq" | "vq4" | "4bit-vq" => Some(ShampooVariant::Vq4),
+            "cq" | "cq4" | "4bit-cq" => Some(ShampooVariant::Cq4 { error_feedback: false }),
+            "cq-ef" | "cqef" | "4bit-cq-ef" | "ours" => {
+                Some(ShampooVariant::Cq4 { error_feedback: true })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Full Shampoo configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ShampooConfig {
+    pub variant: ShampooVariant,
+    /// Preconditioner EMA momentum β (paper: 0.95).
+    pub beta: f32,
+    /// Error-state EMA momentum βₑ (paper: 0.95).
+    pub beta_e: f32,
+    /// Numerical-stability constant ε (paper: 1e-6).
+    pub eps: f32,
+    /// Gram/Cholesky update interval T₁ (paper: 100 for CIFAR-scale).
+    pub t1: u64,
+    /// Inverse-root update interval T₂ (paper: 500 for CIFAR-scale).
+    pub t2: u64,
+    /// Max preconditioner order: larger dims are blocked (paper: 1200).
+    pub max_order: usize,
+    /// Block-wise quantizer settings (b=4, B=64, linear-2).
+    pub quant: QuantConfig,
+    /// Learning-rate grafting (Eq. 13).
+    pub grafting: bool,
+    /// Tab. 2 ablation: quantize the diagonal too ("Original" block-wise
+    /// quantization). Default false = off-diagonal quantization.
+    pub vq_quantize_diag: bool,
+    /// Schur–Newton settings for the inverse 4th root.
+    pub schur: SchurNewtonConfig,
+}
+
+impl Default for ShampooConfig {
+    fn default() -> Self {
+        ShampooConfig {
+            variant: ShampooVariant::Cq4 { error_feedback: true },
+            beta: 0.95,
+            beta_e: 0.95,
+            eps: 1e-6,
+            t1: 100,
+            t2: 500,
+            max_order: 1200,
+            quant: QuantConfig::default(),
+            grafting: true,
+            vq_quantize_diag: false,
+            schur: SchurNewtonConfig::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_appendix_c3() {
+        let c = ShampooConfig::default();
+        assert_eq!(c.beta, 0.95);
+        assert_eq!(c.beta_e, 0.95);
+        assert_eq!(c.eps, 1e-6);
+        assert_eq!(c.quant.bits, 4);
+        assert_eq!(c.quant.block, 64);
+        assert_eq!(c.max_order, 1200);
+        assert!(c.grafting);
+    }
+
+    #[test]
+    fn variant_parsing() {
+        assert_eq!(ShampooVariant::parse("32bit"), Some(ShampooVariant::Full32));
+        assert_eq!(ShampooVariant::parse("vq"), Some(ShampooVariant::Vq4));
+        assert_eq!(
+            ShampooVariant::parse("cq-ef"),
+            Some(ShampooVariant::Cq4 { error_feedback: true })
+        );
+        assert_eq!(ShampooVariant::parse("nope"), None);
+    }
+
+    #[test]
+    fn variant_names_match_tables() {
+        assert_eq!(ShampooVariant::Vq4.name(), "4-bit (VQ)");
+        assert_eq!(ShampooVariant::Cq4 { error_feedback: true }.name(), "4-bit (CQ+EF)");
+    }
+}

@@ -1,0 +1,344 @@
+//! The Shampoo optimizer family (paper Algorithms 1 & 2).
+//!
+//! * [`config`] — variants: 32-bit (Alg. 2), 4-bit vanilla quantization
+//!   (Sec. 4.1), 4-bit Cholesky quantization (Sec. 4.2), and 4-bit CQ with
+//!   error feedback (Sec. 4.3, Alg. 1).
+//! * [`blocking`] — layer-wise max-order blocking (App. C.3: large dims are
+//!   split so each preconditioner stays below a cap).
+//! * [`state`] — per-block preconditioner storage for every variant, with
+//!   exact byte accounting.
+//! * [`Shampoo`] — the driver: Gram EMA every `T1` steps, inverse-4th-roots
+//!   every `T2` steps, preconditioned + grafted gradient into the base
+//!   optimizer every step.
+
+pub mod blocking;
+pub mod config;
+pub mod state;
+
+pub use blocking::Blocking;
+pub use config::{ShampooConfig, ShampooVariant};
+pub use state::LayerState;
+
+use crate::linalg::Matrix;
+use crate::optim::{graft, BaseOptimizer};
+use crate::quant::BlockQuantizer;
+
+/// Shampoo wrapping a first-order base optimizer `F` (Algorithm 1).
+pub struct Shampoo {
+    pub base: BaseOptimizer,
+    pub cfg: ShampooConfig,
+    pub layers: Vec<LayerState>,
+    quantizer: BlockQuantizer,
+}
+
+impl Shampoo {
+    /// Build for a fixed set of parameter shapes `(rows, cols)`.
+    pub fn new(mut base: BaseOptimizer, cfg: ShampooConfig, shapes: &[(usize, usize)]) -> Shampoo {
+        base.init(shapes.len());
+        let quantizer = BlockQuantizer::new(cfg.quant);
+        let layers = shapes
+            .iter()
+            .map(|&(m, n)| LayerState::new(m, n, &cfg, &quantizer))
+            .collect();
+        Shampoo { base, cfg, layers, quantizer }
+    }
+
+    /// One optimization step (Algorithm 1 lines 2–16).
+    ///
+    /// `step` is 1-based (the paper's `k`); preconditioner states update when
+    /// `k % T1 == 0`, inverse roots when `k % T2 == 0`.
+    pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], step: u64, lr_scale: f32) {
+        assert_eq!(params.len(), self.layers.len());
+        assert_eq!(grads.len(), self.layers.len());
+        let update_gram = step % self.cfg.t1 == 0;
+        let update_roots = step % self.cfg.t2 == 0;
+
+        for i in 0..params.len() {
+            let layer = &mut self.layers[i];
+            let g = &grads[i];
+            if update_gram {
+                layer.update_gram(g, &self.cfg, &self.quantizer);
+            }
+            if update_roots {
+                layer.update_inv_roots(&self.cfg, &self.quantizer);
+            }
+            // Ĝ = D(L̂)·G·D(R̂)  (line 15), then grafting (Eq. 13).
+            let mut ghat = layer.precondition(g, &self.quantizer);
+            if self.cfg.grafting {
+                graft(g, &mut ghat);
+            }
+            self.base.step_param(i, &mut params[i], &ghat, lr_scale);
+        }
+    }
+
+    /// Persistent optimizer-state bytes: Shampoo preconditioner storage
+    /// plus the base optimizer's buffers (the quantity behind the paper's
+    /// peak-memory deltas, App. C.4).
+    pub fn state_bytes(&self) -> usize {
+        self.shampoo_state_bytes() + self.base.state_bytes()
+    }
+
+    /// Preconditioner storage only.
+    pub fn shampoo_state_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.size_bytes()).sum()
+    }
+
+    /// Dequantized inverse-root pairs `(D(L̂), D(R̂))` of every block of
+    /// layer `idx` — used by the Fig. 3 eigenvalue-histogram harness.
+    pub fn dequant_inv_roots(&self, idx: usize) -> Vec<(Matrix, Matrix)> {
+        self.layers[idx].dequant_inv_roots(&self.quantizer)
+    }
+
+    /// Reconstructed preconditioner pairs `(L, R)` of every block of layer
+    /// `idx` (for the Tab. 1/10 NRE/AE harvest).
+    pub fn reconstructed_preconditioners(&self, idx: usize) -> Vec<(Matrix, Matrix)> {
+        self.layers[idx].reconstructed_preconditioners(&self.quantizer)
+    }
+
+    pub fn quantizer(&self) -> &BlockQuantizer {
+        &self.quantizer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{eig_sym, fro_norm, kron, matmul, matmul_nt, matmul_tn};
+    use crate::linalg::kron::vec_cols;
+    use crate::optim::OptimizerKind;
+    use crate::util::rng::Rng;
+
+    fn sgd_base() -> BaseOptimizer {
+        BaseOptimizer::sgd(0.05, 0.0)
+    }
+
+    #[test]
+    fn identity_preconditioner_before_first_update() {
+        // Before step T1, L̂ = R̂ = I, so (without grafting) Ĝ = G and
+        // Shampoo+SGD equals SGD.
+        let cfg = ShampooConfig {
+            t1: 10,
+            t2: 10,
+            grafting: false,
+            variant: ShampooVariant::Full32,
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(sgd_base(), cfg, &[(4, 3)]);
+        let mut rng = Rng::new(1);
+        let mut w1 = Matrix::randn(4, 3, 1.0, &mut rng);
+        let mut w2 = w1.clone();
+        let g = Matrix::randn(4, 3, 1.0, &mut rng);
+
+        sh.step(std::slice::from_mut(&mut w1), std::slice::from_ref(&g), 1, 1.0);
+
+        let mut plain = sgd_base();
+        plain.init(1);
+        plain.step_param(0, &mut w2, &g, 1.0);
+        assert!(w1.max_abs_diff(&w2) < 1e-6);
+    }
+
+    /// Validate the full-precision update against the vectorized oracle of
+    /// Eq. (15): x ← x − η (R̂ ⊗ L̂) g with exact Kronecker algebra.
+    #[test]
+    fn full32_matches_kronecker_oracle() {
+        let cfg = ShampooConfig {
+            t1: 1,
+            t2: 1,
+            grafting: false,
+            variant: ShampooVariant::Full32,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(2);
+        let (m, n) = (3, 4);
+        let mut sh = Shampoo::new(sgd_base(), cfg, &[(m, n)]);
+        let mut w = Matrix::randn(m, n, 1.0, &mut rng);
+        let w0 = w.clone();
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+
+        sh.step(std::slice::from_mut(&mut w), std::slice::from_ref(&g), 1, 1.0);
+
+        // Pull L̂/R̂ from the state and check the parameter delta equals
+        // η·unvec((R̂ᵀ ⊗ L̂)·vec(G)).
+        let roots = sh.dequant_inv_roots(0);
+        let (lhat, rhat) = &roots[0];
+        let h = kron(&rhat.transpose(), lhat);
+        let vg = vec_cols(&g);
+        let mut hv = vec![0.0f32; vg.len()];
+        for i in 0..h.rows() {
+            hv[i] = crate::linalg::matmul::dot(h.row(i), &vg);
+        }
+        // un-vec (column stacking)
+        let mut want = w0.clone();
+        for j in 0..n {
+            for i in 0..m {
+                want[(i, j)] -= 0.05 * hv[j * m + i];
+            }
+        }
+        assert!(w.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn gram_ema_matches_eq2() {
+        // After one update at k=T1=1: L = β·εI + (1−β)GGᵀ.
+        let cfg = ShampooConfig {
+            t1: 1,
+            t2: 1,
+            variant: ShampooVariant::Full32,
+            beta: 0.9,
+            eps: 1e-6,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(3);
+        let g = Matrix::randn(4, 5, 1.0, &mut rng);
+        let mut sh = Shampoo::new(sgd_base(), cfg, &[(4, 5)]);
+        let mut w = Matrix::zeros(4, 5);
+        sh.step(std::slice::from_mut(&mut w), std::slice::from_ref(&g), 1, 1.0);
+
+        let recon = sh.reconstructed_preconditioners(0);
+        let (l, r) = &recon[0];
+        let mut want_l = matmul_nt(&g, &g);
+        want_l.scale(0.1);
+        want_l.add_diag(0.9 * 1e-6);
+        assert!(l.max_abs_diff(&want_l) < 1e-5);
+        let mut want_r = matmul_tn(&g, &g);
+        want_r.scale(0.1);
+        want_r.add_diag(0.9 * 1e-6);
+        assert!(r.max_abs_diff(&want_r) < 1e-5);
+    }
+
+    #[test]
+    fn all_variants_run_and_stay_finite() {
+        let mut rng = Rng::new(4);
+        for variant in [
+            ShampooVariant::Full32,
+            ShampooVariant::Vq4,
+            ShampooVariant::Cq4 { error_feedback: false },
+            ShampooVariant::Cq4 { error_feedback: true },
+        ] {
+            let cfg = ShampooConfig { t1: 2, t2: 4, variant, ..Default::default() };
+            let mut sh = Shampoo::new(sgd_base(), cfg, &[(16, 8), (8, 8)]);
+            let mut params = vec![
+                Matrix::randn(16, 8, 0.5, &mut rng),
+                Matrix::randn(8, 8, 0.5, &mut rng),
+            ];
+            for k in 1..=12 {
+                let grads: Vec<Matrix> = params
+                    .iter()
+                    .map(|p| {
+                        let mut g = p.clone();
+                        g.scale(0.1);
+                        g.axpy(0.01, &Matrix::randn(p.rows(), p.cols(), 1.0, &mut rng));
+                        g
+                    })
+                    .collect();
+                sh.step(&mut params, &grads, k, 1.0);
+            }
+            for p in &params {
+                assert!(!p.has_non_finite(), "{variant:?} produced non-finite params");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_variants_use_less_memory() {
+        let shapes = [(64usize, 64usize), (128, 64)];
+        let mk = |variant| {
+            let cfg = ShampooConfig {
+                t1: 1,
+                t2: 1,
+                variant,
+                // allow quantization of these (small) test tensors
+                quant: crate::quant::QuantConfig { min_quant_elems: 0, ..Default::default() },
+                ..Default::default()
+            };
+            let mut sh = Shampoo::new(sgd_base(), cfg, &shapes);
+            let mut rng = Rng::new(5);
+            let mut params: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+            sh.step(&mut params, &grads, 1, 1.0);
+            sh.shampoo_state_bytes()
+        };
+        let full = mk(ShampooVariant::Full32);
+        let vq = mk(ShampooVariant::Vq4);
+        let cq = mk(ShampooVariant::Cq4 { error_feedback: false });
+        let cqef = mk(ShampooVariant::Cq4 { error_feedback: true });
+        assert!(vq < full / 4, "vq={vq} full={full}");
+        assert!(cq < vq, "cq={cq} vq={vq}");
+        assert!(cqef >= cq && cqef <= vq + 64, "cq={cq} cqef={cqef} vq={vq}");
+    }
+
+    #[test]
+    fn vector_params_bypass_preconditioning() {
+        let cfg = ShampooConfig { t1: 1, t2: 1, grafting: false, ..Default::default() };
+        let mut sh = Shampoo::new(sgd_base(), cfg, &[(5, 1)]);
+        let mut w = Matrix::zeros(5, 1);
+        let g = Matrix::from_fn(5, 1, |i, _| i as f32);
+        sh.step(std::slice::from_mut(&mut w), std::slice::from_ref(&g), 1, 1.0);
+        // Pure SGD on the bias: w = −lr·g.
+        for i in 0..5 {
+            assert!((w[(i, 0)] + 0.05 * i as f32).abs() < 1e-7);
+        }
+        assert_eq!(sh.shampoo_state_bytes(), 0);
+    }
+
+    #[test]
+    fn preconditioning_beats_sgd_on_ill_conditioned_quadratic() {
+        // f(W) = 0.5·tr(Wᵀ A W B) with A, B badly conditioned: Shampoo's
+        // preconditioner whitens the curvature, SGD crawls.
+        let mut rng = Rng::new(6);
+        let (m, n) = (8, 6);
+        let mut mk_spd = |dim: usize, cond: f32, rng: &mut Rng| {
+            let g = Matrix::randn(dim, dim, 1.0, rng);
+            let (_, v) = eig_sym(&crate::linalg::syrk(&g), 1e-10, 100);
+            let mut a = Matrix::zeros(dim, dim);
+            for k in 0..dim {
+                let lam = cond.powf(k as f32 / (dim - 1) as f32);
+                for i in 0..dim {
+                    for j in 0..dim {
+                        a[(i, j)] += lam * v[(i, k)] * v[(j, k)];
+                    }
+                }
+            }
+            a
+        };
+        let a = mk_spd(m, 50.0, &mut rng);
+        let b = mk_spd(n, 50.0, &mut rng);
+        let grad = |w: &Matrix| matmul(&matmul(&a, w), &b);
+        let loss = |w: &Matrix| {
+            let awb = grad(w);
+            0.5 * crate::linalg::inner(w, &awb)
+        };
+
+        let w0 = Matrix::randn(m, n, 1.0, &mut rng);
+
+        // SGD baseline.
+        let mut w_sgd = w0.clone();
+        let mut opt = BaseOptimizer::new(OptimizerKind::Sgd, crate::optim::optimizer::Hyper {
+            lr: 5e-4,
+            ..Default::default()
+        });
+        opt.init(1);
+        for _ in 0..600 {
+            let g = grad(&w_sgd);
+            opt.step_param(0, &mut w_sgd, &g, 1.0);
+        }
+
+        // Shampoo (full precision, grafted).
+        let cfg = ShampooConfig { t1: 1, t2: 5, variant: ShampooVariant::Full32, ..Default::default() };
+        let mut sh = Shampoo::new(BaseOptimizer::sgd(5e-4, 0.0), cfg, &[(m, n)]);
+        let mut w_sh = w0.clone();
+        for k in 1..=600 {
+            let g = grad(&w_sh);
+            sh.step(std::slice::from_mut(&mut w_sh), std::slice::from_ref(&g), k, 1.0);
+        }
+
+        let (l_sgd, l_sh) = (loss(&w_sgd), loss(&w_sh));
+        assert!(
+            l_sh < l_sgd * 0.7,
+            "shampoo should win on ill-conditioned quadratic: sgd={l_sgd:.4} shampoo={l_sh:.4}"
+        );
+        let _ = fro_norm(&w_sh);
+    }
+}

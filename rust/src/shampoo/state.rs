@@ -1,0 +1,454 @@
+//! Per-layer preconditioner state for every Shampoo variant.
+//!
+//! Each parameter is tiled by [`Blocking`]; each block keeps an `(L, R)`
+//! pair in the representation the variant dictates, plus the (possibly
+//! quantized) inverse-4th-roots. Dequantized roots are cached between `T2`
+//! refreshes — the quantized state is the persistent store, the cache is
+//! transient scratch that never diverges from `D(L̂)` because `L̂` only
+//! changes at refresh time.
+
+use super::blocking::Blocking;
+use super::config::{ShampooConfig, ShampooVariant};
+use crate::linalg::cholesky::cholesky_jittered;
+use crate::linalg::schur_newton::inverse_pth_root;
+use crate::linalg::{matmul, matmul_nt, matmul_tn, syrk, Matrix};
+use crate::quant::error_feedback::ErrorFeedback;
+use crate::quant::{
+    dequantize_offdiag, quantize_offdiag, BlockQuantizer, OffDiagQuantized, QuantizedMatrix,
+    TriJointStore,
+};
+
+/// Storage of one Gram-side preconditioner (`L` or `R`).
+#[derive(Clone, Debug)]
+pub enum SideStore {
+    /// f32 `L` (Algorithm 2, or small tensors exempt from quantization).
+    Full(Matrix),
+    /// 4-bit off-diagonal quantized `L` (Sec. 4.1).
+    Vq(OffDiagQuantized),
+    /// Tab. 2 "Original": full block-wise quantization including diagonal.
+    VqFull(QuantizedMatrix),
+    /// 4-bit quantized Cholesky factor (+ EF error state) of `L` (Sec. 4.2/4.3).
+    Cq { store: TriJointStore, ef: bool },
+}
+
+/// Storage of one inverse-root matrix (`L̂` or `R̂`).
+#[derive(Clone, Debug)]
+pub enum RootStore {
+    Full(Matrix),
+    Quant(OffDiagQuantized),
+    QuantFull(QuantizedMatrix),
+}
+
+impl SideStore {
+    fn init(dim: usize, cfg: &ShampooConfig, q: &BlockQuantizer) -> SideStore {
+        let quantize = dim * dim >= cfg.quant.min_quant_elems;
+        match cfg.variant {
+            ShampooVariant::Full32 => SideStore::Full(Matrix::eye_scaled(dim, cfg.eps)),
+            ShampooVariant::Vq4 if quantize && cfg.vq_quantize_diag => {
+                SideStore::VqFull(q.quantize(&Matrix::eye_scaled(dim, cfg.eps)))
+            }
+            ShampooVariant::Vq4 if quantize => {
+                SideStore::Vq(quantize_offdiag(&Matrix::eye_scaled(dim, cfg.eps), q))
+            }
+            ShampooVariant::Cq4 { error_feedback } if quantize => SideStore::Cq {
+                store: TriJointStore::init(dim, cfg.eps, q),
+                ef: error_feedback,
+            },
+            _ => SideStore::Full(Matrix::eye_scaled(dim, cfg.eps)),
+        }
+    }
+
+    /// Reconstruct the f32 preconditioner (Eq. (5) `D(L̄)` or Eq. (7)
+    /// `D(C̄)·D(C̄)ᵀ`).
+    fn reconstruct(&self, q: &BlockQuantizer) -> Matrix {
+        match self {
+            SideStore::Full(l) => l.clone(),
+            SideStore::Vq(s) => dequantize_offdiag(s, q),
+            SideStore::VqFull(s) => q.dequantize(s),
+            SideStore::Cq { store, .. } => {
+                let (c, _) = store.load(q);
+                matmul_nt(&c, &c)
+            }
+        }
+    }
+
+    /// Absorb the fresh Gram statistic: `L ← β·L_prev + (1−β)·gram`, then
+    /// re-store in this representation (Eq. (5) for VQ, Eq. (7)–(11) for CQ).
+    fn update(&mut self, gram: &Matrix, cfg: &ShampooConfig, q: &BlockQuantizer) {
+        let mut l_new = self.reconstruct(q);
+        l_new.ema(cfg.beta, gram);
+        l_new.symmetrize();
+        match self {
+            SideStore::Full(l) => *l = l_new,
+            SideStore::Vq(s) => *s = quantize_offdiag(&l_new, q),
+            SideStore::VqFull(s) => *s = q.quantize(&l_new),
+            SideStore::Cq { store, ef } => {
+                // Eq. (7): C = Cholesky(L + εI); escalating jitter guards
+                // quantization-induced PSD violations.
+                let (c, _) = match cholesky_jittered(&l_new, cfg.eps, 12) {
+                    Ok(v) => v,
+                    Err(_) => {
+                        // Pathological input (e.g. non-finite gradient blew up
+                        // the Gram). Reset to the initial factor — the EMA
+                        // will rebuild state over the next T1 windows.
+                        (Matrix::eye_scaled(l_new.rows(), cfg.eps.sqrt()), cfg.eps)
+                    }
+                };
+                let (_, e_prev) = store.load(q);
+                if *ef {
+                    let efb = ErrorFeedback::new(cfg.beta_e);
+                    // Eq. (10): quantize the compensated factor.
+                    let comp = efb.compensate(&c, &e_prev);
+                    // D(C̄): round-trip the strictly-lower part (diagonal is
+                    // stored exactly, so it carries no quantization error).
+                    let n = comp.rows();
+                    let comp_off =
+                        Matrix::from_fn(n, n, |i, j| if i > j { comp[(i, j)] } else { 0.0 });
+                    let mut c_deq = q.roundtrip(&comp_off);
+                    for i in 0..n {
+                        c_deq[(i, i)] = comp[(i, i)];
+                    }
+                    // Eq. (11): EMA of the residual.
+                    let e_new = efb.update(&c, &e_prev, &c_deq);
+                    *store = TriJointStore::store(&comp, &e_new, q);
+                } else {
+                    *store = TriJointStore::store(&c, &Matrix::zeros(c.rows(), c.cols()), q);
+                }
+            }
+        }
+    }
+
+    fn size_bytes(&self) -> usize {
+        match self {
+            SideStore::Full(l) => l.size_bytes(),
+            SideStore::Vq(s) => s.size_bytes(),
+            SideStore::VqFull(s) => s.size_bytes(),
+            SideStore::Cq { store, ef } => {
+                if *ef {
+                    store.size_bytes()
+                } else {
+                    store.size_bytes_cq_only()
+                }
+            }
+        }
+    }
+}
+
+impl RootStore {
+    fn dequant(&self, q: &BlockQuantizer) -> Matrix {
+        match self {
+            RootStore::Full(x) => x.clone(),
+            RootStore::Quant(s) => dequantize_offdiag(s, q),
+            RootStore::QuantFull(s) => q.dequantize(s),
+        }
+    }
+
+    fn size_bytes(&self) -> usize {
+        match self {
+            RootStore::Full(x) => x.size_bytes(),
+            RootStore::Quant(s) => s.size_bytes(),
+            RootStore::QuantFull(s) => s.size_bytes(),
+        }
+    }
+}
+
+/// State of one sub-block of one parameter.
+#[derive(Clone, Debug)]
+pub struct BlockState {
+    pub rows: usize,
+    pub cols: usize,
+    l: SideStore,
+    r: SideStore,
+    lhat: RootStore,
+    rhat: RootStore,
+    /// Dequantized root caches (refreshed whenever `lhat`/`rhat` change).
+    cache_lhat: Matrix,
+    cache_rhat: Matrix,
+}
+
+impl BlockState {
+    fn new(rows: usize, cols: usize, cfg: &ShampooConfig, q: &BlockQuantizer) -> BlockState {
+        BlockState {
+            rows,
+            cols,
+            l: SideStore::init(rows, cfg, q),
+            r: SideStore::init(cols, cfg, q),
+            // Algorithm 1: L̂₀ = I, R̂₀ = I.
+            lhat: RootStore::Full(Matrix::eye(rows)),
+            rhat: RootStore::Full(Matrix::eye(cols)),
+            cache_lhat: Matrix::eye(rows),
+            cache_rhat: Matrix::eye(cols),
+        }
+    }
+
+    fn update_gram(&mut self, g: &Matrix, cfg: &ShampooConfig, q: &BlockQuantizer) {
+        let gram_l = syrk(g); // G·Gᵀ
+        let gram_r = matmul_tn(g, g); // Gᵀ·G
+        self.l.update(&gram_l, cfg, q);
+        self.r.update(&gram_r, cfg, q);
+    }
+
+    fn update_inv_roots(&mut self, cfg: &ShampooConfig, q: &BlockQuantizer) {
+        for (side, root, cache) in [
+            (&self.l, &mut self.lhat, &mut self.cache_lhat),
+            (&self.r, &mut self.rhat, &mut self.cache_rhat),
+        ] {
+            let precond = side.reconstruct(q);
+            // Eq. (6)/(12): ridge λ_max·ε·I handled inside the iteration.
+            let (x, stats) = inverse_pth_root(&precond, &cfg.schur);
+            // Direct (VQ) quantization can break positive-definiteness
+            // (Tab. 9); Schur–Newton then diverges. Fall back to the exact
+            // eigendecomposition route with eigenvalue clamping — defined
+            // for indefinite inputs, so VQ stays *functional but degraded*,
+            // matching the paper's observed behavior.
+            // The true root satisfies ‖X‖_max ≤ (λmin + ridge)^{-1/4}; a
+            // quantization-created negative eigendirection can pass through
+            // zero during the iteration, leaving M ≈ I (small residual) while
+            // X accumulated an enormous finite factor — bound the magnitude.
+            let lam0 = stats.lambda_max.max(0.0);
+            let root_bound = 10.0 * ((lam0 * cfg.schur.eps).max(1e-10) as f64).powf(-0.25) as f32;
+            let x = if x.has_non_finite()
+                || !stats.residual.is_finite()
+                || stats.residual > 0.1
+                || crate::linalg::max_abs(&x) > root_bound
+            {
+                let mut ridged = precond.clone();
+                let lam = stats.lambda_max.max(0.0);
+                ridged.add_diag(lam * cfg.schur.eps);
+                // Clamp at λmax·1e-4 (not the ε ridge): quantization-created
+                // negative directions would otherwise get ~(1e-6)^{-1/4} ≈ 30×
+                // amplification and swamp the true curvature signal.
+                crate::linalg::inverse_pth_root_eig(
+                    &ridged,
+                    cfg.schur.p as f64,
+                    (lam * 1e-4).max(1e-10),
+                )
+            } else {
+                x
+            };
+            let dim = x.rows();
+            let quantize = !matches!(cfg.variant, ShampooVariant::Full32)
+                && dim * dim >= cfg.quant.min_quant_elems;
+            *root = if quantize && cfg.vq_quantize_diag {
+                RootStore::QuantFull(q.quantize(&x))
+            } else if quantize {
+                RootStore::Quant(quantize_offdiag(&x, q))
+            } else {
+                RootStore::Full(x)
+            };
+            *cache = root.dequant(q);
+        }
+    }
+
+    /// `Ĝ = D(L̂)·G·D(R̂)` (Algorithm 1 line 15).
+    fn precondition(&self, g: &Matrix) -> Matrix {
+        matmul(&matmul(&self.cache_lhat, g), &self.cache_rhat)
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.l.size_bytes() + self.r.size_bytes() + self.lhat.size_bytes() + self.rhat.size_bytes()
+    }
+}
+
+/// State of one parameter (all its blocks, or passthrough for vectors).
+pub struct LayerState {
+    pub rows: usize,
+    pub cols: usize,
+    pub blocking: Blocking,
+    pub blocks: Vec<BlockState>,
+    /// Vectors/scalars skip preconditioning entirely.
+    pub passthrough: bool,
+}
+
+impl LayerState {
+    pub fn new(rows: usize, cols: usize, cfg: &ShampooConfig, q: &BlockQuantizer) -> LayerState {
+        let passthrough = rows.min(cols) <= 1;
+        let blocking = Blocking::new(rows, cols, cfg.max_order);
+        let blocks = if passthrough {
+            Vec::new()
+        } else {
+            blocking
+                .blocks
+                .iter()
+                .map(|b| BlockState::new(b.rows, b.cols, cfg, q))
+                .collect()
+        };
+        LayerState { rows, cols, blocking, blocks, passthrough }
+    }
+
+    pub fn update_gram(&mut self, g: &Matrix, cfg: &ShampooConfig, q: &BlockQuantizer) {
+        if self.passthrough {
+            return;
+        }
+        for (spec, state) in self.blocking.blocks.iter().zip(self.blocks.iter_mut()) {
+            let gb = g.block(spec.r0, spec.c0, spec.rows, spec.cols);
+            state.update_gram(&gb, cfg, q);
+        }
+    }
+
+    pub fn update_inv_roots(&mut self, cfg: &ShampooConfig, q: &BlockQuantizer) {
+        if self.passthrough {
+            return;
+        }
+        for state in self.blocks.iter_mut() {
+            state.update_inv_roots(cfg, q);
+        }
+    }
+
+    pub fn precondition(&self, g: &Matrix, _q: &BlockQuantizer) -> Matrix {
+        if self.passthrough {
+            return g.clone();
+        }
+        if self.blocking.is_trivial() {
+            return self.blocks[0].precondition(g);
+        }
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for (spec, state) in self.blocking.blocks.iter().zip(self.blocks.iter()) {
+            let gb = g.block(spec.r0, spec.c0, spec.rows, spec.cols);
+            out.set_block(spec.r0, spec.c0, &state.precondition(&gb));
+        }
+        out
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.size_bytes()).sum()
+    }
+
+    pub fn dequant_inv_roots(&self, _q: &BlockQuantizer) -> Vec<(Matrix, Matrix)> {
+        self.blocks
+            .iter()
+            .map(|b| (b.cache_lhat.clone(), b.cache_rhat.clone()))
+            .collect()
+    }
+
+    pub fn reconstructed_preconditioners(&self, q: &BlockQuantizer) -> Vec<(Matrix, Matrix)> {
+        self.blocks
+            .iter()
+            .map(|b| (b.l.reconstruct(q), b.r.reconstruct(q)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantConfig;
+    use crate::util::rng::Rng;
+
+    fn cfg(variant: ShampooVariant) -> ShampooConfig {
+        ShampooConfig {
+            variant,
+            t1: 1,
+            t2: 1,
+            quant: QuantConfig { min_quant_elems: 0, block: 8, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cq_reconstruction_is_psd() {
+        let c = cfg(ShampooVariant::Cq4 { error_feedback: true });
+        let q = BlockQuantizer::new(c.quant);
+        let mut rng = Rng::new(1);
+        let mut side = SideStore::init(12, &c, &q);
+        for _ in 0..5 {
+            let g = Matrix::randn(12, 16, 1.0, &mut rng);
+            side.update(&syrk(&g), &c, &q);
+            let l = side.reconstruct(&q);
+            // PSD check via eigensolver.
+            let (vals, _) = crate::linalg::eig_sym(&l, 1e-10, 100);
+            assert!(vals[0] >= -1e-4, "λmin={} — CQ must preserve PSD", vals[0]);
+            // Symmetry by construction.
+            assert!(l.max_abs_diff(&l.transpose()) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn vq_reconstruction_can_lose_psd_cq_does_not() {
+        // The paper's Tab. 9 phenomenon on the toy ill-conditioned matrix:
+        // direct quantization can produce a negative eigenvalue while CQ's
+        // C·Cᵀ reconstruction cannot.
+        let c_vq = cfg(ShampooVariant::Vq4);
+        let q = BlockQuantizer::new(QuantConfig {
+            min_quant_elems: 0,
+            block: 2,
+            ..Default::default()
+        });
+        // quantize the paper's [[10,3],[3,1]] directly (full quantization,
+        // i.e. including diagonal, mirroring C.1's "VQ perturbs elements")
+        let l = Matrix::from_rows(&[&[10.0, 3.0], &[3.0, 1.0]]);
+        let vq_back = q.roundtrip(&l);
+        let (vals_vq, _) = crate::linalg::eig_sym(&vq_back, 1e-12, 100);
+        // CQ path on the same matrix.
+        let c_cfg = cfg(ShampooVariant::Cq4 { error_feedback: false });
+        let (chol, _) = cholesky_jittered(&l, 1e-6, 8).unwrap();
+        let store = TriJointStore::store(&chol, &Matrix::zeros(2, 2), &q);
+        let (c_back, _) = store.load(&q);
+        let cq_back = matmul_nt(&c_back, &c_back);
+        let (vals_cq, _) = crate::linalg::eig_sym(&cq_back, 1e-12, 100);
+        assert!(
+            vals_cq[0] >= 0.0,
+            "CQ reconstruction must stay PSD, got λmin={}",
+            vals_cq[0]
+        );
+        // (VQ on this matrix may or may not go negative depending on block
+        // size; the Tab. 9 harness reproduces the paper's exact setting.)
+        let _ = (vals_vq, c_vq, c_cfg);
+    }
+
+    #[test]
+    fn blocked_layer_partitions_work() {
+        let mut c = cfg(ShampooVariant::Full32);
+        c.max_order = 8;
+        let q = BlockQuantizer::new(c.quant);
+        let mut rng = Rng::new(2);
+        let mut layer = LayerState::new(20, 12, &c, &q);
+        assert_eq!(layer.blocks.len(), 3 * 2);
+        let g = Matrix::randn(20, 12, 1.0, &mut rng);
+        layer.update_gram(&g, &c, &q);
+        layer.update_inv_roots(&c, &q);
+        let ghat = layer.precondition(&g, &q);
+        assert_eq!((ghat.rows(), ghat.cols()), (20, 12));
+        assert!(!ghat.has_non_finite());
+    }
+
+    #[test]
+    fn small_tensor_exemption_keeps_f32() {
+        let mut c = cfg(ShampooVariant::Vq4);
+        c.quant.min_quant_elems = 4096; // paper default
+        let q = BlockQuantizer::new(c.quant);
+        // 32×32 preconditioners are 1024 < 4096 elems → stay f32.
+        let layer = LayerState::new(32, 32, &c, &q);
+        assert!(matches!(layer.blocks[0].l, SideStore::Full(_)));
+        // 128×128 → 16384 ≥ 4096 → quantized.
+        let layer2 = LayerState::new(128, 128, &c, &q);
+        assert!(matches!(layer2.blocks[0].l, SideStore::Vq(_)));
+    }
+
+    #[test]
+    fn root_cache_matches_store() {
+        let c = cfg(ShampooVariant::Vq4);
+        let q = BlockQuantizer::new(c.quant);
+        let mut rng = Rng::new(3);
+        let mut block = BlockState::new(10, 10, &c, &q);
+        let g = Matrix::randn(10, 10, 1.0, &mut rng);
+        block.update_gram(&g, &c, &q);
+        block.update_inv_roots(&c, &q);
+        assert!(block.cache_lhat.max_abs_diff(&block.lhat.dequant(&q)) < 1e-7);
+        assert!(block.cache_rhat.max_abs_diff(&block.rhat.dequant(&q)) < 1e-7);
+    }
+
+    #[test]
+    fn cholesky_failure_resets_state() {
+        // Inject a Gram update that is wildly non-PSD after quantization
+        // noise: NaN gram — state must reset, not crash.
+        let c = cfg(ShampooVariant::Cq4 { error_feedback: true });
+        let q = BlockQuantizer::new(c.quant);
+        let mut side = SideStore::init(6, &c, &q);
+        let mut bad = Matrix::zeros(6, 6);
+        bad[(0, 0)] = f32::NAN;
+        side.update(&bad, &c, &q);
+        let l = side.reconstruct(&q);
+        assert!(!l.has_non_finite(), "reset must clear NaNs");
+    }
+}

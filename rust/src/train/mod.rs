@@ -1,0 +1,8 @@
+//! The training engine: drives AOT-compiled fwd/bwd graphs through the PJRT
+//! runtime and applies the (possibly Shampoo-wrapped) optimizer in rust.
+
+pub mod trainer;
+pub mod stack;
+
+pub use stack::OptimizerStack;
+pub use trainer::{train_classifier, train_lm, ClassifierData, RunMetrics, TrainConfig};

@@ -1,0 +1,84 @@
+//! Optimizer stack: a base optimizer alone, or Shampoo wrapping it
+//! (paper's "base" vs "base + Shampoo" table rows).
+
+use crate::linalg::Matrix;
+use crate::optim::BaseOptimizer;
+use crate::shampoo::Shampoo;
+
+/// Either a first-order optimizer or Shampoo-wrapped.
+pub enum OptimizerStack {
+    Base(BaseOptimizer),
+    Shampoo(Box<Shampoo>),
+}
+
+impl OptimizerStack {
+    /// Initialize for the parameter set (no-op for Shampoo, which is built
+    /// with shapes up-front).
+    pub fn init(&mut self, n_params: usize) {
+        if let OptimizerStack::Base(b) = self {
+            b.init(n_params);
+        }
+    }
+
+    /// Apply one step across all parameters.
+    pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], k: u64, lr_scale: f32) {
+        match self {
+            OptimizerStack::Base(b) => {
+                for (i, (w, g)) in params.iter_mut().zip(grads.iter()).enumerate() {
+                    b.step_param(i, w, g, lr_scale);
+                }
+            }
+            OptimizerStack::Shampoo(s) => s.step(params, grads, k, lr_scale),
+        }
+    }
+
+    /// Persistent optimizer-state bytes.
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            OptimizerStack::Base(b) => b.state_bytes(),
+            OptimizerStack::Shampoo(s) => s.state_bytes(),
+        }
+    }
+
+    /// Human label for table rows ("SGDM + 4-bit Shampoo (CQ+EF)" style).
+    pub fn label(&self) -> String {
+        match self {
+            OptimizerStack::Base(b) => b.kind.name().to_uppercase(),
+            OptimizerStack::Shampoo(s) => {
+                format!("{} + {} Shampoo", s.base.kind.name().to_uppercase(), s.cfg.variant.name())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shampoo::{ShampooConfig, ShampooVariant};
+
+    #[test]
+    fn labels() {
+        let b = OptimizerStack::Base(BaseOptimizer::sgdm(0.1, 0.9, 0.0));
+        assert_eq!(b.label(), "SGDM");
+        let s = OptimizerStack::Shampoo(Box::new(Shampoo::new(
+            BaseOptimizer::adamw(1e-3, 0.9, 0.999, 1e-8, 0.05),
+            ShampooConfig { variant: ShampooVariant::Cq4 { error_feedback: true }, ..Default::default() },
+            &[(8, 8)],
+        )));
+        assert_eq!(s.label(), "ADAMW + 4-bit (CQ+EF) Shampoo");
+    }
+
+    #[test]
+    fn base_step_applies_to_all_params() {
+        let mut stack = OptimizerStack::Base(BaseOptimizer::sgd(0.5, 0.0));
+        stack.init(2);
+        let mut params = vec![Matrix::zeros(1, 1), Matrix::zeros(1, 1)];
+        let grads = vec![
+            Matrix::from_rows(&[&[1.0]]),
+            Matrix::from_rows(&[&[2.0]]),
+        ];
+        stack.step(&mut params, &grads, 1, 1.0);
+        assert_eq!(params[0][(0, 0)], -0.5);
+        assert_eq!(params[1][(0, 0)], -1.0);
+    }
+}

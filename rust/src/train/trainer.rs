@@ -1,0 +1,323 @@
+//! Training loops over AOT artifacts (the request path: rust-only).
+//!
+//! One step = pack params + minibatch into PJRT literals → execute the
+//! model's `fwd_bwd` HLO → unpack loss/gradients → optimizer step in rust.
+
+use crate::data::images::ImageDataset;
+use crate::data::synthetic::ClusterDataset;
+use crate::data::tokens::TokenCorpus;
+use crate::linalg::Matrix;
+use crate::metrics::scoring::{accuracy, perplexity_from_nll};
+use crate::metrics::Stopwatch;
+use crate::models::init_params;
+use crate::optim::LrSchedule;
+use crate::runtime::literal::{
+    literal_to_matrix, literal_to_scalar_f32, literal_to_vec_f32, matrix_to_literal,
+    vec_f32_to_literal, vec_i32_to_literal,
+};
+use crate::runtime::{ModelInfo, Runtime};
+use crate::train::OptimizerStack;
+use anyhow::{Context, Result};
+
+/// Unified classifier data view (built from either synthetic dataset).
+#[derive(Clone, Debug)]
+pub struct ClassifierData {
+    pub dim: usize,
+    pub classes: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<u32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<u32>,
+}
+
+impl From<(&ClusterDataset, &ClusterDataset)> for ClassifierData {
+    fn from((tr, te): (&ClusterDataset, &ClusterDataset)) -> Self {
+        ClassifierData {
+            dim: tr.dim,
+            classes: tr.classes,
+            train_x: tr.features.clone(),
+            train_y: tr.labels.clone(),
+            test_x: te.features.clone(),
+            test_y: te.labels.clone(),
+        }
+    }
+}
+
+impl From<(&ImageDataset, &ImageDataset)> for ClassifierData {
+    fn from((tr, te): (&ImageDataset, &ImageDataset)) -> Self {
+        ClassifierData {
+            dim: tr.dim(),
+            classes: tr.classes,
+            train_x: tr.pixels.clone(),
+            train_y: tr.labels.clone(),
+            test_x: te.pixels.clone(),
+            test_y: te.labels.clone(),
+        }
+    }
+}
+
+impl ClassifierData {
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+}
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: u64,
+    pub schedule: LrSchedule,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: u64,
+    /// Record the loss every `log_every` steps.
+    pub log_every: u64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            schedule: LrSchedule::Constant,
+            eval_every: 0,
+            log_every: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything a table/figure needs from one run.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub model: String,
+    pub optimizer: String,
+    /// (step, train loss)
+    pub loss_curve: Vec<(u64, f32)>,
+    /// (step, eval metric) — accuracy (classifier) or PPL (lm)
+    pub eval_curve: Vec<(u64, f64)>,
+    /// Final eval metric.
+    pub final_metric: f64,
+    /// Persistent optimizer-state bytes at end of training.
+    pub state_bytes: usize,
+    /// End-to-end wall-clock seconds.
+    pub wall_secs: f64,
+    /// Seconds inside the optimizer (the paper's "update time" column).
+    pub opt_secs: f64,
+}
+
+/// Train a classifier model on `data`, returning metrics.
+///
+/// `opt` must have been initialized (or be a Shampoo built with the model's
+/// shapes). Parameters are initialized deterministically from `cfg.seed`.
+pub fn train_classifier(
+    rt: &Runtime,
+    model: &ModelInfo,
+    data: &ClassifierData,
+    mut opt: OptimizerStack,
+    cfg: &TrainConfig,
+) -> Result<RunMetrics> {
+    anyhow::ensure!(model.kind == "classifier", "{} is not a classifier", model.name);
+    anyhow::ensure!(
+        data.dim == model.meta_usize("dim").unwrap_or(0),
+        "data dim {} != model dim {:?}",
+        data.dim,
+        model.meta_usize("dim")
+    );
+    let fwd_bwd = format!("{}.fwd_bwd", model.name);
+    let batch = model.batch;
+    let mut params = init_params(model, cfg.seed);
+    opt.init(params.len());
+
+    let mut wall = Stopwatch::new();
+    let mut opt_time = Stopwatch::new();
+    let mut loss_curve = Vec::new();
+    let mut eval_curve = Vec::new();
+
+    wall.start();
+    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xBA7C);
+    let n = data.n_train();
+    for k in 1..=cfg.steps {
+        // Sample a batch (with replacement — stream-style).
+        let idx: Vec<usize> = (0..batch).map(|_| rng.below(n)).collect();
+        let mut x = Vec::with_capacity(batch * data.dim);
+        let mut y = Vec::with_capacity(batch);
+        for &i in &idx {
+            x.extend_from_slice(&data.train_x[i * data.dim..(i + 1) * data.dim]);
+            y.push(data.train_y[i] as i32);
+        }
+
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for p in &params {
+            inputs.push(matrix_to_literal(p)?);
+        }
+        inputs.push(vec_f32_to_literal(&x, &[batch, data.dim])?);
+        inputs.push(vec_i32_to_literal(&y, &[batch])?);
+
+        let outputs = rt.execute(&fwd_bwd, &inputs).context("fwd_bwd execution")?;
+        let loss = literal_to_scalar_f32(&outputs[0])?;
+        let grads: Vec<Matrix> = outputs[1..]
+            .iter()
+            .zip(params.iter())
+            .map(|(l, p)| literal_to_matrix(l, p.rows(), p.cols()))
+            .collect::<Result<_>>()?;
+
+        let lr_scale = cfg.schedule.scale(k - 1);
+        opt_time.time(|| opt.step(&mut params, &grads, k, lr_scale));
+
+        if k % cfg.log_every.max(1) == 0 || k == 1 {
+            loss_curve.push((k, loss));
+        }
+        if cfg.eval_every > 0 && k % cfg.eval_every == 0 {
+            let acc = eval_classifier(rt, model, data, &params)?;
+            eval_curve.push((k, acc));
+        }
+    }
+    let final_acc = eval_classifier(rt, model, data, &params)?;
+    eval_curve.push((cfg.steps, final_acc));
+    wall.stop();
+
+    Ok(RunMetrics {
+        model: model.name.clone(),
+        optimizer: opt.label(),
+        loss_curve,
+        eval_curve,
+        final_metric: final_acc,
+        state_bytes: opt.state_bytes(),
+        wall_secs: wall.total_secs(),
+        opt_secs: opt_time.total_secs(),
+    })
+}
+
+/// Test-set accuracy through the model's `eval` artifact.
+pub fn eval_classifier(
+    rt: &Runtime,
+    model: &ModelInfo,
+    data: &ClassifierData,
+    params: &[Matrix],
+) -> Result<f64> {
+    let eval_name = format!("{}.eval", model.name);
+    let batch = model.batch;
+    let n_test = data.test_y.len();
+    let mut correct_weighted = 0.0f64;
+    let mut counted = 0usize;
+    let mut start = 0usize;
+    while start + batch <= n_test {
+        let x = &data.test_x[start * data.dim..(start + batch) * data.dim];
+        let mut inputs = Vec::with_capacity(params.len() + 1);
+        for p in params {
+            inputs.push(matrix_to_literal(p)?);
+        }
+        inputs.push(vec_f32_to_literal(x, &[batch, data.dim])?);
+        let out = rt.execute(&eval_name, &inputs)?;
+        let logits = literal_to_vec_f32(&out[0])?;
+        let labels = &data.test_y[start..start + batch];
+        correct_weighted += accuracy(&logits, data.classes, labels) * batch as f64;
+        counted += batch;
+        start += batch;
+    }
+    anyhow::ensure!(counted > 0, "test set smaller than one batch");
+    Ok(correct_weighted / counted as f64)
+}
+
+/// Train an LM on a token corpus; final metric is held-out perplexity.
+pub fn train_lm(
+    rt: &Runtime,
+    model: &ModelInfo,
+    corpus: &TokenCorpus,
+    mut opt: OptimizerStack,
+    cfg: &TrainConfig,
+) -> Result<RunMetrics> {
+    anyhow::ensure!(model.kind == "lm", "{} is not an lm", model.name);
+    let seq = model.meta_usize("seq").context("lm needs seq")?;
+    let batch = model.batch;
+    let fwd_bwd = format!("{}.fwd_bwd", model.name);
+    let mut params = init_params(model, cfg.seed);
+    opt.init(params.len());
+
+    // Hold out the corpus tail for eval.
+    let split = corpus.tokens.len() * 9 / 10;
+    let train = TokenCorpus { vocab: corpus.vocab, tokens: corpus.tokens[..split].to_vec() };
+    let heldout = TokenCorpus { vocab: corpus.vocab, tokens: corpus.tokens[split..].to_vec() };
+
+    let mut wall = Stopwatch::new();
+    let mut opt_time = Stopwatch::new();
+    let mut loss_curve = Vec::new();
+    let mut eval_curve = Vec::new();
+
+    wall.start();
+    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0x7E57);
+    for k in 1..=cfg.steps {
+        let (x, y) = train.sample_batch(batch, seq, &mut rng);
+        let xi: Vec<i32> = x.iter().map(|&t| t as i32).collect();
+        let yi: Vec<i32> = y.iter().map(|&t| t as i32).collect();
+
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for p in &params {
+            inputs.push(matrix_to_literal(p)?);
+        }
+        inputs.push(vec_i32_to_literal(&xi, &[batch, seq])?);
+        inputs.push(vec_i32_to_literal(&yi, &[batch, seq])?);
+
+        let outputs = rt.execute(&fwd_bwd, &inputs)?;
+        let loss = literal_to_scalar_f32(&outputs[0])?;
+        let grads: Vec<Matrix> = outputs[1..]
+            .iter()
+            .zip(params.iter())
+            .map(|(l, p)| literal_to_matrix(l, p.rows(), p.cols()))
+            .collect::<Result<_>>()?;
+
+        let lr_scale = cfg.schedule.scale(k - 1);
+        opt_time.time(|| opt.step(&mut params, &grads, k, lr_scale));
+
+        if k % cfg.log_every.max(1) == 0 || k == 1 {
+            loss_curve.push((k, loss));
+        }
+        if cfg.eval_every > 0 && k % cfg.eval_every == 0 {
+            eval_curve.push((k, eval_lm(rt, model, &heldout, &params, cfg.seed)?));
+        }
+    }
+    let ppl = eval_lm(rt, model, &heldout, &params, cfg.seed)?;
+    eval_curve.push((cfg.steps, ppl));
+    wall.stop();
+
+    Ok(RunMetrics {
+        model: model.name.clone(),
+        optimizer: opt.label(),
+        loss_curve,
+        eval_curve,
+        final_metric: ppl,
+        state_bytes: opt.state_bytes(),
+        wall_secs: wall.total_secs(),
+        opt_secs: opt_time.total_secs(),
+    })
+}
+
+/// Held-out perplexity via the `eval` artifact (mean NLL over fixed batches).
+pub fn eval_lm(
+    rt: &Runtime,
+    model: &ModelInfo,
+    heldout: &TokenCorpus,
+    params: &[Matrix],
+    seed: u64,
+) -> Result<f64> {
+    let seq = model.meta_usize("seq").context("lm needs seq")?;
+    let batch = model.batch;
+    let eval_name = format!("{}.eval", model.name);
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0xEAE1);
+    let mut nll_sum = 0.0f64;
+    let eval_batches = 8;
+    for _ in 0..eval_batches {
+        let (x, y) = heldout.sample_batch(batch, seq, &mut rng);
+        let xi: Vec<i32> = x.iter().map(|&t| t as i32).collect();
+        let yi: Vec<i32> = y.iter().map(|&t| t as i32).collect();
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for p in params {
+            inputs.push(matrix_to_literal(p)?);
+        }
+        inputs.push(vec_i32_to_literal(&xi, &[batch, seq])?);
+        inputs.push(vec_i32_to_literal(&yi, &[batch, seq])?);
+        let out = rt.execute(&eval_name, &inputs)?;
+        nll_sum += literal_to_scalar_f32(&out[0])? as f64;
+    }
+    Ok(perplexity_from_nll(nll_sum / eval_batches as f64))
+}

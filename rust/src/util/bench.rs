@@ -1,0 +1,179 @@
+//! In-tree micro-benchmark harness (criterion is unavailable in the offline
+//! build set, so `cargo bench` targets use this with `harness = false`).
+//!
+//! Methodology mirrors criterion's core loop: warmup, then timed batches
+//! sized so one batch is ≳1 ms, reporting mean / std / p50 / p99 per
+//! iteration plus derived throughput. Output is stable, grep-friendly text.
+
+use super::stats::{percentile, Accumulator};
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected timings.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional work units per iteration for throughput (e.g. bytes, flops).
+    pub units_per_iter: Option<(f64, &'static str)>,
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        let thr = match self.units_per_iter {
+            Some((units, label)) => {
+                let per_sec = units / (self.mean_ns / 1e9);
+                format!("  {:>10}/s", fmt_si(per_sec, label))
+            }
+            None => String::new(),
+        };
+        println!(
+            "bench {:<44} {:>12}  ±{:>9}  p50 {:>10}  p99 {:>10}  ({} iters){}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters,
+            thr
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{:.0} ns", ns)
+    }
+}
+
+fn fmt_si(x: f64, label: &str) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G{label}", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M{label}", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} K{label}", x / 1e3)
+    } else {
+        format!("{x:.2} {label}")
+    }
+}
+
+/// Benchmark runner; construct once per bench binary.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_batches: usize,
+    /// Quick mode (QUARTZ_BENCH_QUICK=1) shrinks times for CI smoke runs.
+    pub reports: Vec<BenchReport>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let quick = std::env::var("QUARTZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        if quick {
+            Bencher {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(80),
+                max_batches: 20,
+                reports: Vec::new(),
+            }
+        } else {
+            Bencher {
+                warmup: Duration::from_millis(300),
+                measure: Duration::from_millis(1500),
+                max_batches: 200,
+                reports: Vec::new(),
+            }
+        }
+    }
+
+    /// Time `f`, which performs ONE iteration of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchReport {
+        self.bench_with_units(name, None, f)
+    }
+
+    /// Time `f` and report throughput given `units` of work per iteration.
+    pub fn bench_with_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units_per_iter: Option<(f64, &'static str)>,
+        mut f: F,
+    ) -> &BenchReport {
+        // Warmup + batch size calibration: target ≳1ms per batch.
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters as f64;
+        let batch = ((1e6 / per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let mut acc = Accumulator::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_batches {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(ns);
+            acc.add(ns);
+            total_iters += batch;
+        }
+
+        let report = BenchReport {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: acc.mean(),
+            std_ns: acc.std(),
+            p50_ns: percentile(&samples, 50.0),
+            p99_ns: percentile(&samples, 99.0),
+            units_per_iter,
+        };
+        report.print();
+        self.reports.push(report);
+        self.reports.last().unwrap()
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (ptr read/write
+/// barrier, same trick as criterion's `black_box` pre-std).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_quickly_in_quick_mode() {
+        std::env::set_var("QUARTZ_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Tiny CSV writer for figure series and run logs.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    /// Write one row of already-formatted cells.
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(cells.len(), self.cols, "csv row width mismatch");
+        writeln!(self.w, "{}", cells.join(","))
+    }
+
+    /// Write a row of f64 values.
+    pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        let cells: Vec<String> = cells.iter().map(|x| format!("{x}")).collect();
+        self.row(&cells)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("quartz_csv_test");
+        let path = dir.join("x.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row_f64(&[0.0, 2.5]).unwrap();
+            w.row(&["1".into(), "2.25".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n0,2.5\n1,2.25\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,57 @@
+//! Small self-contained infrastructure: RNG, statistics, JSON/TOML parsing,
+//! a scoped thread pool, CSV writing, and in-tree bench / property-test
+//! harnesses.
+//!
+//! This environment builds fully offline against a minimal crate set, so the
+//! pieces a production repo would pull from `rand`, `serde_json`, `toml`,
+//! `rayon`, `criterion`, and `proptest` are implemented here as first-class
+//! substrates (per the reproduction ground rules: build, don't stub).
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod toml;
+pub mod pool;
+pub mod csv;
+pub mod bench;
+pub mod prop;
+
+/// Round `x` to `d` decimal places (for stable table output).
+pub fn round_to(x: f64, d: u32) -> f64 {
+    let p = 10f64.powi(d as i32);
+    (x * p).round() / p
+}
+
+/// Human-readable byte count (`1.23 MB` style, decimal units to match the
+/// paper's MB/GB figures).
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_to_works() {
+        assert_eq!(round_to(1.23456, 2), 1.23);
+        assert_eq!(round_to(-1.005, 1), -1.0);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2_500), "2.5 KB");
+        assert_eq!(fmt_bytes(64_800_000), "64.8 MB");
+        assert_eq!(fmt_bytes(5_100_000_000), "5.10 GB");
+    }
+}

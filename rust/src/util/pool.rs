@@ -1,0 +1,166 @@
+//! A small scoped thread pool (the offline build set has no `rayon`).
+//!
+//! Two entry points:
+//! * [`parallel_for`] — split an index range over worker threads (used by the
+//!   blocked matmul and block-wise quantizers).
+//! * [`Pool`] — a persistent FIFO job queue used by the coordinator to run
+//!   experiment jobs concurrently with panic isolation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default (cores, capped).
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing chunks over up to
+/// `threads` scoped workers. `f` must be `Sync`; iteration order within a
+/// chunk is ascending. Falls back to inline execution for tiny ranges.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n < 2 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    // Chunked dynamic scheduling: grab `chunk` indices at a time.
+    let chunk = (n / (threads * 4)).max(1);
+    crossbeam_utils::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|_| loop {
+                let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + chunk).min(n) {
+                    f(i);
+                }
+            });
+        }
+    })
+    .expect("worker panicked in parallel_for");
+}
+
+/// Outcome of a pool job.
+#[derive(Debug)]
+pub enum JobResult<T> {
+    Ok(T),
+    Panicked(String),
+}
+
+/// Persistent thread pool executing boxed jobs; results are collected in
+/// completion order with their submission index. Worker panics are caught
+/// and surfaced as [`JobResult::Panicked`] so one bad experiment cannot take
+/// down a whole table run.
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Run all `jobs`, returning results ordered by submission index.
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<JobResult<T>>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send + std::panic::UnwindSafe,
+    {
+        let n = jobs.len();
+        let queue = Arc::new(Mutex::new(
+            jobs.into_iter().enumerate().collect::<Vec<(usize, F)>>(),
+        ));
+        let (tx, rx) = mpsc::channel::<(usize, JobResult<T>)>();
+
+        crossbeam_utils::thread::scope(|s| {
+            for _ in 0..self.threads.min(n.max(1)) {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                s.spawn(move |_| loop {
+                    let job = queue.lock().unwrap().pop();
+                    let Some((idx, f)) = job else { break };
+                    let res = match std::panic::catch_unwind(f) {
+                        Ok(v) => JobResult::Ok(v),
+                        Err(p) => JobResult::Panicked(panic_msg(p.as_ref())),
+                    };
+                    if tx.send((idx, res)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<JobResult<T>>> = (0..n).map(|_| None).collect();
+            for (idx, res) in rx {
+                out[idx] = Some(res);
+            }
+            out.into_iter().map(|r| r.expect("job result missing")).collect()
+        })
+        .expect("pool scope failed")
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(1000, 8, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_single_thread() {
+        let sum = AtomicU64::new(0);
+        parallel_for(100, 1, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn pool_preserves_order() {
+        let pool = Pool::new(4);
+        let jobs: Vec<_> = (0..32usize).map(|i| move || i * i).collect();
+        let results = pool.run(jobs);
+        for (i, r) in results.iter().enumerate() {
+            match r {
+                JobResult::Ok(v) => assert_eq!(*v, i * i),
+                JobResult::Panicked(m) => panic!("unexpected panic: {m}"),
+            }
+        }
+    }
+
+    #[test]
+    fn pool_isolates_panics() {
+        let pool = Pool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send + std::panic::UnwindSafe>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3),
+        ];
+        let results = pool.run(jobs);
+        assert!(matches!(results[0], JobResult::Ok(1)));
+        assert!(matches!(results[1], JobResult::Panicked(ref m) if m.contains("boom")));
+        assert!(matches!(results[2], JobResult::Ok(3)));
+    }
+}

@@ -1,0 +1,242 @@
+//! Minimal TOML-subset parser for experiment configuration files.
+//!
+//! Supports the subset the coordinator's `.toml` specs use: `[table]` and
+//! `[[array-of-tables]]` headers, `key = value` with strings, integers,
+//! floats, booleans, and flat arrays, plus `#` comments. Nested inline
+//! tables are intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+/// A TOML value (subset).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One table (section) of key/value pairs.
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// A parsed document: the root table, named tables, and arrays of tables.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub root: TomlTable,
+    pub tables: BTreeMap<String, TomlTable>,
+    pub table_arrays: BTreeMap<String, Vec<TomlTable>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        // Which table keys are currently written into.
+        enum Target {
+            Root,
+            Table(String),
+            ArrayElem(String),
+        }
+        let mut target = Target::Root;
+
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+            if let Some(name) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                doc.table_arrays.entry(name.clone()).or_default().push(TomlTable::new());
+                target = Target::ArrayElem(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                doc.tables.entry(name.clone()).or_default();
+                target = Target::Table(name);
+            } else {
+                let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+                let key = line[..eq].trim().trim_matches('"').to_string();
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|m| err(&m))?;
+                let table = match &target {
+                    Target::Root => &mut doc.root,
+                    Target::Table(n) => doc.tables.get_mut(n).unwrap(),
+                    Target::ArrayElem(n) => {
+                        doc.table_arrays.get_mut(n).unwrap().last_mut().unwrap()
+                    }
+                };
+                table.insert(key, val);
+            }
+        }
+        Ok(doc)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+/// Split on top-level commas (not inside nested brackets or strings).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_doc() {
+        let src = r#"
+# experiment spec
+name = "tab3"
+seed = 42
+lr = 1.5e-3
+verbose = true
+dims = [64, 128, 256]
+
+[model]
+kind = "mlp"
+width = 128
+
+[[runs]]
+optimizer = "sgdm"
+
+[[runs]]
+optimizer = "shampoo-cq-ef"  # ours
+"#;
+        let doc = TomlDoc::parse(src).unwrap();
+        assert_eq!(doc.root["name"].as_str(), Some("tab3"));
+        assert_eq!(doc.root["seed"].as_i64(), Some(42));
+        assert!((doc.root["lr"].as_f64().unwrap() - 1.5e-3).abs() < 1e-12);
+        assert_eq!(doc.root["verbose"].as_bool(), Some(true));
+        assert_eq!(doc.root["dims"].as_arr().unwrap().len(), 3);
+        assert_eq!(doc.tables["model"]["kind"].as_str(), Some("mlp"));
+        let runs = &doc.table_arrays["runs"];
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[1]["optimizer"].as_str(), Some("shampoo-cq-ef"));
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let doc = TomlDoc::parse("s = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(doc.root["s"].as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("m = [[1, 2], [3, 4]]").unwrap();
+        let outer = doc.root["m"].as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_arr().unwrap()[1].as_i64(), Some(2));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+}

@@ -1,0 +1,150 @@
+//! Coordinator integration: TOML specs → scheduled runs → aggregated
+//! outcomes (requires artifacts; skips cleanly otherwise).
+
+use quartz::coordinator::runner::run_all;
+use quartz::coordinator::spec::{ExperimentSpec, OptimizerSpec, RunSpec, Workload};
+use quartz::data::synthetic::ClusterSpec;
+use quartz::optim::OptimizerKind;
+use quartz::shampoo::{ShampooConfig, ShampooVariant};
+
+fn artifacts_available() -> bool {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let ok = dir.join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts not built");
+    } else {
+        std::env::set_var("QUARTZ_ARTIFACTS", dir);
+    }
+    ok
+}
+
+fn tiny_cluster(seed: u64) -> Workload {
+    Workload::Cluster(ClusterSpec {
+        classes: 32,
+        dim: 64,
+        train: 512,
+        test: 128,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn parallel_grid_executes_all_runs() {
+    if !artifacts_available() {
+        return;
+    }
+    let hyper = OptimizerSpec::paper_hyper(OptimizerKind::Sgdm);
+    let mut specs = Vec::new();
+    for i in 0..4 {
+        let opt = if i % 2 == 0 {
+            OptimizerSpec::base_only(OptimizerKind::Sgdm, hyper)
+        } else {
+            OptimizerSpec::with_shampoo(
+                OptimizerKind::Sgdm,
+                hyper,
+                ShampooConfig {
+                    variant: ShampooVariant::Cq4 { error_feedback: true },
+                    t1: 5,
+                    t2: 10,
+                    max_order: 96,
+                    ..Default::default()
+                },
+            )
+        };
+        specs.push(RunSpec::new("mlp_vgg_c32", tiny_cluster(i as u64), opt, 20));
+    }
+    let outcomes = run_all(&specs, 2);
+    assert_eq!(outcomes.len(), 4);
+    for o in &outcomes {
+        assert!(o.error.is_none(), "run {} failed: {:?}", o.id, o.error);
+        let m = o.metrics.as_ref().unwrap();
+        assert!(m.loss_curve.last().unwrap().1.is_finite());
+    }
+}
+
+#[test]
+fn unknown_model_is_isolated_error() {
+    if !artifacts_available() {
+        return;
+    }
+    let hyper = OptimizerSpec::paper_hyper(OptimizerKind::Sgdm);
+    let specs = vec![
+        RunSpec::new("no_such_model", tiny_cluster(0), OptimizerSpec::base_only(OptimizerKind::Sgdm, hyper), 5),
+        RunSpec::new("mlp_vgg_c32", tiny_cluster(0), OptimizerSpec::base_only(OptimizerKind::Sgdm, hyper), 5),
+    ];
+    let outcomes = run_all(&specs, 2);
+    assert!(outcomes[0].error.as_deref().unwrap_or("").contains("unknown model"));
+    assert!(outcomes[1].error.is_none(), "good run must survive bad sibling");
+}
+
+#[test]
+fn toml_spec_end_to_end() {
+    if !artifacts_available() {
+        return;
+    }
+    let text = r#"
+name = "it-spec"
+steps = 15
+workers = 2
+
+[workload]
+kind = "cluster"
+classes = 32
+dim = 64
+train = 512
+test = 128
+
+[[runs]]
+model = "mlp_vgg_c32"
+base = "sgdm"
+shampoo = "cq-ef"
+t1 = 5
+t2 = 10
+max_order = 96
+
+[[runs]]
+model = "mlp_vgg_c32"
+base = "adamw"
+shampoo = "none"
+"#;
+    let spec = ExperimentSpec::from_toml(text).unwrap();
+    assert_eq!(spec.runs.len(), 2);
+    let outcomes = run_all(&spec.runs, spec.workers);
+    for o in &outcomes {
+        assert!(o.error.is_none(), "{:?}", o.error);
+    }
+    // Shampoo run carries preconditioner bytes; AdamW-only run carries 2×
+    // param bytes.
+    let m0 = outcomes[0].metrics.as_ref().unwrap();
+    let m1 = outcomes[1].metrics.as_ref().unwrap();
+    assert!(m0.state_bytes > m1.state_bytes / 2);
+    assert!(outcomes[0].optimizer.contains("Shampoo"));
+    assert!(!outcomes[1].optimizer.contains("Shampoo"));
+}
+
+#[test]
+fn memory_budget_gates_before_execution() {
+    if !artifacts_available() {
+        return;
+    }
+    let hyper = OptimizerSpec::paper_hyper(OptimizerKind::AdamW);
+    let mut spec = RunSpec::new(
+        "lm_l",
+        Workload::Tokens(quartz::data::tokens::CorpusSpec {
+            length: 5_000,
+            ..Default::default()
+        }),
+        OptimizerSpec::with_shampoo(
+            OptimizerKind::AdamW,
+            hyper,
+            ShampooConfig { variant: ShampooVariant::Full32, max_order: 96, ..Default::default() },
+        ),
+        1000, // would take minutes if actually run — the gate must fire first
+    );
+    spec.memory_budget = Some(1024);
+    let t0 = std::time::Instant::now();
+    let outcomes = run_all(std::slice::from_ref(&spec), 1);
+    assert!(outcomes[0].is_oom());
+    assert!(t0.elapsed().as_secs() < 30, "gate must fire without training");
+}

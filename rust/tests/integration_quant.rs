@@ -1,0 +1,103 @@
+//! Cross-module quantization integration: quantizers ↔ linalg ↔ shampoo
+//! state, plus the paper's qualitative claims at integration scope.
+
+use quartz::analysis::{cq_roundtrip, nre_ae, synthetic_pd, vq_roundtrip};
+use quartz::linalg::{eig_sym, Matrix};
+use quartz::quant::{BlockQuantizer, ErrorFeedback, Mapping, QuantConfig};
+use quartz::util::rng::Rng;
+
+#[test]
+fn cq_dominates_vq_across_mappings_and_blocks() {
+    // The Sec. 4.2 claim must hold regardless of codebook/block choice.
+    let mut rng = Rng::new(1);
+    let mats: Vec<Matrix> = (0..3).map(|_| synthetic_pd(32, 1e-2, 1e2, &mut rng)).collect();
+    for mapping in [Mapping::Linear, Mapping::Linear2, Mapping::Dynamic] {
+        for block in [8usize, 32, 64] {
+            let q = BlockQuantizer::new(QuantConfig {
+                mapping,
+                block,
+                min_quant_elems: 0,
+                ..Default::default()
+            });
+            let mut vq_sum = 0.0;
+            let mut cq_sum = 0.0;
+            for a in &mats {
+                vq_sum += nre_ae(a, &vq_roundtrip(a, &q)).0;
+                cq_sum += nre_ae(a, &cq_roundtrip(a, 1e-6, &q)).0;
+            }
+            assert!(
+                cq_sum < vq_sum,
+                "CQ must beat VQ for {mapping:?}/B={block}: cq={cq_sum:.3} vq={vq_sum:.3}"
+            );
+        }
+    }
+}
+
+#[test]
+fn error_feedback_improves_time_averaged_fidelity() {
+    // Sec. 4.3: EF's EMA compensation reduces the time-averaged factor error.
+    let q = BlockQuantizer::new(QuantConfig { block: 16, min_quant_elems: 0, ..Default::default() });
+    let mut rng = Rng::new(2);
+    let n = 24;
+    let c = Matrix::from_fn(n, n, |i, j| {
+        if i > j {
+            rng.normal_f32(1.0)
+        } else if i == j {
+            2.5
+        } else {
+            0.0
+        }
+    });
+    for beta_e in [0.5f32, 0.9, 0.95] {
+        let ef = ErrorFeedback::new(beta_e);
+        let steps = 150;
+        let mut e = Matrix::zeros(n, n);
+        let mut avg_ef = Matrix::zeros(n, n);
+        for _ in 0..steps {
+            let comp = ef.compensate(&c, &e);
+            let back = q.roundtrip(&comp);
+            e = ef.update(&c, &e, &back);
+            avg_ef.axpy(1.0 / steps as f32, &back);
+        }
+        let plain = q.roundtrip(&c);
+        let mut err_ef = 0.0f64;
+        let mut err_plain = 0.0f64;
+        for i in 0..n {
+            for j in 0..i {
+                err_ef += ((avg_ef[(i, j)] - c[(i, j)]) as f64).powi(2);
+                err_plain += ((plain[(i, j)] - c[(i, j)]) as f64).powi(2);
+            }
+        }
+        assert!(
+            err_ef < err_plain * 0.6,
+            "βₑ={beta_e}: ef={err_ef:.3e} plain={err_plain:.3e}"
+        );
+    }
+}
+
+#[test]
+fn quantized_preconditioner_spectra_stay_positive_cq() {
+    // Fig. 3's claim at unit scope: CQ-reconstructed preconditioners and
+    // their quantized inverse roots have positive spectra.
+    let q = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
+    let mut rng = Rng::new(3);
+    for _ in 0..5 {
+        let a = synthetic_pd(48, 1e-2, 1e2, &mut rng);
+        let recon = cq_roundtrip(&a, 1e-6, &q);
+        let (vals, _) = eig_sym(&recon, 1e-10, 100);
+        assert!(vals[0] > -1e-5, "λmin={}", vals[0]);
+    }
+}
+
+#[test]
+fn four_bit_shampoo_state_is_eighth_of_f32() {
+    // End-to-end byte check on a realistic layer: 4-bit codes + scales +
+    // diag must land near 1/8 of the f32 PRECONDITIONER payload.
+    let q = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
+    let mut rng = Rng::new(4);
+    let a = Matrix::randn(512, 512, 1.0, &mut rng);
+    let quantized = q.quantize(&a);
+    let f32_bytes = 512 * 512 * 4;
+    let ratio = quantized.size_bytes() as f64 / f32_bytes as f64;
+    assert!((0.12..0.14).contains(&ratio), "ratio {ratio}");
+}

@@ -1,0 +1,180 @@
+//! Shampoo-level integration: variant behavior over multi-step optimization
+//! on deterministic objectives (no PJRT needed).
+
+use quartz::linalg::{fro_norm, matmul, Matrix};
+use quartz::optim::BaseOptimizer;
+use quartz::quant::QuantConfig;
+use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+use quartz::util::rng::Rng;
+
+/// Quadratic objective f(W) = 0.5·tr(Wᵀ A W B); grad = A·W·B.
+struct Quadratic {
+    a: Matrix,
+    b: Matrix,
+}
+
+impl Quadratic {
+    fn new(m: usize, n: usize, cond: f32, seed: u64) -> Quadratic {
+        let mut rng = Rng::new(seed);
+        let mk = |dim: usize, rng: &mut Rng| {
+            let g = Matrix::randn(dim, dim, 1.0, rng);
+            let (_, v) = quartz::linalg::eig_sym(&quartz::linalg::syrk(&g), 1e-10, 100);
+            let mut a = Matrix::zeros(dim, dim);
+            for k in 0..dim {
+                let lam = cond.powf(k as f32 / (dim - 1) as f32);
+                for i in 0..dim {
+                    for j in 0..dim {
+                        a[(i, j)] += lam * v[(i, k)] * v[(j, k)];
+                    }
+                }
+            }
+            a
+        };
+        Quadratic { a: mk(m, &mut rng), b: mk(n, &mut rng) }
+    }
+
+    fn grad(&self, w: &Matrix) -> Matrix {
+        matmul(&matmul(&self.a, w), &self.b)
+    }
+
+    fn loss(&self, w: &Matrix) -> f64 {
+        0.5 * quartz::linalg::inner(w, &self.grad(w))
+    }
+}
+
+fn train(variant: Option<ShampooVariant>, quad: &Quadratic, w0: &Matrix, steps: u64) -> f64 {
+    let shapes = [(w0.rows(), w0.cols())];
+    let lr = 5e-4;
+    let mut w = w0.clone();
+    match variant {
+        None => {
+            let mut opt = BaseOptimizer::sgd(lr, 0.0);
+            opt.init(1);
+            for _ in 0..steps {
+                let g = quad.grad(&w);
+                opt.step_param(0, &mut w, &g, 1.0);
+            }
+        }
+        Some(v) => {
+            let cfg = ShampooConfig {
+                variant: v,
+                t1: 2,
+                t2: 10,
+                max_order: 96,
+                quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+                ..Default::default()
+            };
+            let mut sh = Shampoo::new(BaseOptimizer::sgd(lr, 0.0), cfg, &shapes);
+            for k in 1..=steps {
+                let g = quad.grad(&w);
+                sh.step(std::slice::from_mut(&mut w), std::slice::from_ref(&g), k, 1.0);
+            }
+        }
+    }
+    quad.loss(&w)
+}
+
+/// The paper's qualitative ordering on an ill-conditioned quadratic:
+/// every Shampoo variant beats SGD, and CQ(+EF) stays close to 32-bit.
+#[test]
+fn variant_ordering_on_ill_conditioned_quadratic() {
+    let quad = Quadratic::new(12, 8, 50.0, 7);
+    let mut rng = Rng::new(8);
+    let w0 = Matrix::randn(12, 8, 1.0, &mut rng);
+    let steps = 500;
+
+    let sgd = train(None, &quad, &w0, steps);
+    let full = train(Some(ShampooVariant::Full32), &quad, &w0, steps);
+    let cq = train(Some(ShampooVariant::Cq4 { error_feedback: false }), &quad, &w0, steps);
+    let cqef = train(Some(ShampooVariant::Cq4 { error_feedback: true }), &quad, &w0, steps);
+
+    assert!(full < sgd * 0.8, "32-bit {full:.4} vs sgd {sgd:.4}");
+    assert!(cq < sgd, "cq {cq:.4} vs sgd {sgd:.4}");
+    assert!(cqef < sgd, "cqef {cqef:.4} vs sgd {sgd:.4}");
+    // Quantized variants stay within a small constant factor of 32-bit on
+    // this convex problem (quantization noise costs some progress).
+    assert!(cqef < full * 5.0 + 1e-3, "cqef {cqef:.4} vs full {full:.4}");
+}
+
+#[test]
+fn t1_t2_intervals_are_respected() {
+    // With T1 = T2 = very large, Shampoo must behave exactly like its base
+    // (plus grafting disabled ⇒ identical trajectories).
+    let quad = Quadratic::new(6, 6, 10.0, 9);
+    let mut rng = Rng::new(10);
+    let w0 = Matrix::randn(6, 6, 1.0, &mut rng);
+    let cfg = ShampooConfig {
+        variant: ShampooVariant::Full32,
+        t1: 1_000_000,
+        t2: 1_000_000,
+        grafting: false,
+        ..Default::default()
+    };
+    let mut sh = Shampoo::new(BaseOptimizer::sgd(1e-3, 0.0), cfg, &[(6, 6)]);
+    let mut w_sh = w0.clone();
+    let mut base = BaseOptimizer::sgd(1e-3, 0.0);
+    base.init(1);
+    let mut w_base = w0.clone();
+    for k in 1..=50 {
+        let g = quad.grad(&w_sh);
+        sh.step(std::slice::from_mut(&mut w_sh), std::slice::from_ref(&g), k, 1.0);
+        let g2 = quad.grad(&w_base);
+        base.step_param(0, &mut w_base, &g2, 1.0);
+    }
+    assert!(w_sh.max_abs_diff(&w_base) < 1e-6);
+}
+
+#[test]
+fn blocked_large_layer_trains() {
+    // A layer above max_order must be blocked and still descend.
+    let quad = Quadratic::new(48, 40, 20.0, 11);
+    let mut rng = Rng::new(12);
+    let w0 = Matrix::randn(48, 40, 1.0, &mut rng);
+    let cfg = ShampooConfig {
+        variant: ShampooVariant::Cq4 { error_feedback: true },
+        t1: 2,
+        t2: 10,
+        max_order: 16, // force 3×3 block grid
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let mut sh = Shampoo::new(BaseOptimizer::sgd(5e-4, 0.0), cfg, &[(48, 40)]);
+    assert_eq!(sh.layers[0].blocks.len(), 9);
+    let start = quad.loss(&w0);
+    let mut w = w0;
+    for k in 1..=300 {
+        let g = quad.grad(&w);
+        sh.step(std::slice::from_mut(&mut w), std::slice::from_ref(&g), k, 1.0);
+    }
+    let end = quad.loss(&w);
+    assert!(end < start * 0.5, "blocked training must descend: {start:.3} → {end:.3}");
+    assert!(fro_norm(&w).is_finite());
+}
+
+#[test]
+fn beta_sweep_remains_stable() {
+    // Tab. 7's robustness claim at integration scope: every β in the
+    // paper's sweep trains without blow-up.
+    let quad = Quadratic::new(10, 10, 30.0, 13);
+    let mut rng = Rng::new(14);
+    let w0 = Matrix::randn(10, 10, 1.0, &mut rng);
+    for beta in [0.6f32, 0.8, 0.95, 0.98] {
+        let cfg = ShampooConfig {
+            variant: ShampooVariant::Cq4 { error_feedback: true },
+            beta,
+            beta_e: beta,
+            t1: 2,
+            t2: 10,
+            quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(BaseOptimizer::sgd(5e-4, 0.0), cfg, &[(10, 10)]);
+        let mut w = w0.clone();
+        for k in 1..=200 {
+            let g = quad.grad(&w);
+            sh.step(std::slice::from_mut(&mut w), std::slice::from_ref(&g), k, 1.0);
+        }
+        assert!(!w.has_non_finite(), "β={beta}");
+        assert!(quad.loss(&w) < quad.loss(&w0), "β={beta} must descend");
+    }
+}

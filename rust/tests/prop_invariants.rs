@@ -1,0 +1,242 @@
+//! Property-based tests of the paper's formal invariants (DESIGN.md §6).
+
+use quartz::linalg::{
+    cholesky_jittered, diag_dominance_margin, eig_sym, fro_norm, matmul, matmul_nt, syrk, Matrix,
+};
+use quartz::metrics::MemoryModel;
+use quartz::optim::graft;
+use quartz::quant::{
+    dequantize_offdiag, quantize_offdiag, BlockQuantizer, Mapping, QuantConfig, TriJointStore,
+};
+use quartz::shampoo::{Blocking, ShampooConfig, ShampooVariant};
+use quartz::util::prop::{run_prop, Gen};
+
+fn quantizer(g: &mut Gen) -> BlockQuantizer {
+    let block = *g.choice(&[4usize, 8, 16, 32, 64]);
+    let mapping = *g.choice(&[Mapping::Linear, Mapping::Linear2, Mapping::Dynamic]);
+    BlockQuantizer::new(QuantConfig { block, mapping, bits: 4, min_quant_elems: 0 })
+}
+
+/// Proposition B.1: ‖D(Q(x)) − x‖∞ ≤ ‖x‖∞-per-block · max-half-gap.
+/// (The paper states the bound with 2^{-b} for the linear codebook; we use
+/// the exact codebook geometry, which covers linear-2 and dynamic too.)
+#[test]
+fn prop_b1_quantization_error_bound() {
+    run_prop("prop B.1 error bound", 60, |g| {
+        let q = quantizer(g);
+        let rows = g.usize_in(1, 40);
+        let cols = g.usize_in(1, 40);
+        let vals = g.wide_range_vec(rows * cols, 2.0);
+        let x = Matrix::from_vec(rows, cols, vals);
+        let back = q.roundtrip(&x);
+        let half_gap = q.codebook().max_abs_error();
+        let b = q.cfg.block;
+        let bn = cols.div_ceil(b);
+        let qx = q.quantize(&x);
+        for i in 0..rows {
+            for j in 0..cols {
+                let scale = qx.scales[(i / b) * bn + j / b];
+                let err = (back[(i, j)] - x[(i, j)]).abs();
+                assert!(
+                    err <= scale * half_gap + 1e-5 * scale.max(1.0),
+                    "err {err} scale {scale} at ({i},{j})"
+                );
+            }
+        }
+    });
+}
+
+/// CQ reconstruction D(C̄)·D(C̄)ᵀ is symmetric PSD for any stored factor —
+/// the structural reason CQ preserves spectra (Sec. 4.2).
+#[test]
+fn prop_cq_reconstruction_is_psd() {
+    run_prop("CQ reconstruction PSD", 40, |g| {
+        let q = quantizer(g);
+        let n = g.usize_in(2, 24);
+        // Random SPD input.
+        let gmat = Matrix::from_vec(n, n + 4, g.normal_vec(n * (n + 4), 1.0));
+        let mut a = syrk(&gmat);
+        a.add_diag(g.f32_in(1e-4, 1.0));
+        let (c, _) = cholesky_jittered(&a, 1e-6, 10).unwrap();
+        let store = TriJointStore::store(&c, &Matrix::zeros(n, n), &q);
+        let (cb, _) = store.load(&q);
+        let recon = matmul_nt(&cb, &cb);
+        // Symmetry.
+        assert!(recon.max_abs_diff(&recon.transpose()) < 1e-5);
+        // PSD via eigensolver.
+        let (vals, _) = eig_sym(&recon, 1e-10, 100);
+        assert!(vals[0] >= -1e-4 * vals[vals.len() - 1].abs().max(1.0), "λmin = {}", vals[0]);
+    });
+}
+
+/// Packed triangular joint storage round-trips C and E independently.
+#[test]
+fn prop_tri_store_roundtrip_isolation() {
+    run_prop("tri store isolation", 40, |g| {
+        let q = quantizer(g);
+        let n = g.usize_in(2, 32);
+        let mut c = Matrix::zeros(n, n);
+        let mut e = Matrix::zeros(n, n);
+        for i in 0..n {
+            c[(i, i)] = g.f32_in(0.5, 5.0);
+            for j in 0..i {
+                c[(i, j)] = g.rng.normal_f32(1.0);
+                e[(i, j)] = g.rng.normal_f32(0.1);
+            }
+        }
+        let store = TriJointStore::store(&c, &e, &q);
+        let (c2, e2) = store.load(&q);
+        // Diagonal is exact; structure is preserved.
+        for i in 0..n {
+            assert_eq!(c2[(i, i)], c[(i, i)]);
+            for j in (i + 1)..n {
+                assert_eq!(c2[(i, j)], 0.0);
+                assert_eq!(e2[(i, j)], 0.0);
+            }
+        }
+        // Same C with a different E loads the same C codes.
+        let mut e3 = e.clone();
+        for i in 1..n {
+            e3[(i, 0)] += 1.0;
+        }
+        let store3 = TriJointStore::store(&c, &e3, &q);
+        let (c3, _) = store3.load(&q);
+        assert_eq!(c2, c3, "E must not leak into C");
+    });
+}
+
+/// Gershgorin PD certificate (Proposition 5.1): when the diagonal dominates
+/// by the 1 + 2/(2^b−1) factor, the off-diagonal-quantized matrix is PD.
+#[test]
+fn prop_gershgorin_pd_certificate() {
+    run_prop("Gershgorin PD after quantization", 40, |g| {
+        let q = BlockQuantizer::new(QuantConfig {
+            block: *g.choice(&[8usize, 16, 64]),
+            ..Default::default()
+        });
+        let n = g.usize_in(2, 24);
+        // Build a strongly diagonally dominant symmetric matrix.
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..i {
+                let v = g.rng.normal_f32(1.0);
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        let t = 1.0 + 2.0 / 15.0;
+        for i in 0..n {
+            let off: f32 = (0..n).filter(|&j| j != i).map(|j| m[(i, j)].abs()).sum();
+            m[(i, i)] = t * off + g.f32_in(0.1, 1.0);
+        }
+        assert!(diag_dominance_margin(&m, t as f64) > 0.0);
+        let back = dequantize_offdiag(&quantize_offdiag(&m, &q), &q);
+        let (vals, _) = eig_sym(&back, 1e-10, 100);
+        assert!(vals[0] > 0.0, "Prop 5.1 violated: λmin = {}", vals[0]);
+    });
+}
+
+/// Blocking covers every parameter cell exactly once for arbitrary shapes.
+#[test]
+fn prop_blocking_is_partition() {
+    run_prop("blocking partition", 100, |g| {
+        let m = g.usize_in(1, 300);
+        let n = g.usize_in(1, 300);
+        let cap = g.usize_in(1, 128);
+        let blocking = Blocking::new(m, n, cap);
+        let mut count = vec![0u8; m * n];
+        for b in &blocking.blocks {
+            assert!(b.rows <= cap && b.cols <= cap);
+            for i in b.r0..b.r0 + b.rows {
+                for j in b.c0..b.c0 + b.cols {
+                    count[i * n + j] += 1;
+                }
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1));
+    });
+}
+
+/// Grafting preserves the raw gradient's Frobenius norm (Eq. 13).
+#[test]
+fn prop_grafting_preserves_norm() {
+    run_prop("grafting norm", 60, |g| {
+        let rows = g.usize_in(1, 20);
+        let cols = g.usize_in(1, 20);
+        let raw = Matrix::from_vec(rows, cols, g.normal_vec(rows * cols, 2.0));
+        let mut pre = Matrix::from_vec(rows, cols, g.wide_range_vec(rows * cols, 3.0));
+        if fro_norm(&pre) == 0.0 {
+            return;
+        }
+        let dir_before = pre.clone();
+        graft(&raw, &mut pre);
+        let n_raw = fro_norm(&raw);
+        assert!((fro_norm(&pre) - n_raw).abs() <= 1e-4 * n_raw.max(1e-6));
+        // Direction unchanged: pre is a non-negative multiple of dir_before.
+        let dot = quartz::linalg::inner(&dir_before, &pre);
+        assert!(dot >= 0.0);
+    });
+}
+
+/// The memory accountant equals measured bytes for arbitrary shapes and
+/// every variant (no drift between model and implementation).
+#[test]
+fn prop_memory_model_matches_measured() {
+    run_prop("memory model exactness", 12, |g| {
+        let n_layers = g.usize_in(1, 3);
+        let shapes: Vec<(usize, usize)> = (0..n_layers)
+            .map(|_| (g.usize_in(2, 80), g.usize_in(2, 80)))
+            .collect();
+        let variant = *g.choice(&[
+            ShampooVariant::Full32,
+            ShampooVariant::Vq4,
+            ShampooVariant::Cq4 { error_feedback: false },
+            ShampooVariant::Cq4 { error_feedback: true },
+        ]);
+        let cfg = ShampooConfig {
+            variant,
+            t1: 1,
+            t2: 1,
+            max_order: 64,
+            quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut sh = quartz::shampoo::Shampoo::new(
+            quartz::optim::BaseOptimizer::sgd(0.01, 0.0),
+            cfg,
+            &shapes,
+        );
+        let mut params: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(m, n)| Matrix::from_vec(m, n, g.normal_vec(m * n, 0.3)))
+            .collect();
+        let grads: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(m, n)| Matrix::from_vec(m, n, g.normal_vec(m * n, 0.3)))
+            .collect();
+        sh.step(&mut params, &grads, 1, 1.0);
+        let measured = sh.shampoo_state_bytes();
+        let modeled = MemoryModel::new(&shapes).shampoo_bytes(&cfg);
+        assert_eq!(modeled, measured, "shapes {shapes:?} variant {variant:?}");
+    });
+}
+
+/// Quantized matmul sanity: D(Q(A))·D(Q(B)) stays close to A·B in relative
+/// Frobenius terms for well-scaled inputs.
+#[test]
+fn prop_quantized_product_close() {
+    run_prop("quantized product", 30, |g| {
+        let q = BlockQuantizer::new(QuantConfig {
+            block: 64,
+            min_quant_elems: 0,
+            ..Default::default()
+        });
+        let n = g.usize_in(4, 32);
+        let a = Matrix::from_vec(n, n, g.normal_vec(n * n, 1.0));
+        let b = Matrix::from_vec(n, n, g.normal_vec(n * n, 1.0));
+        let exact = matmul(&a, &b);
+        let approx = matmul(&q.roundtrip(&a), &q.roundtrip(&b));
+        let rel = quartz::linalg::relative_error(&exact, &approx);
+        assert!(rel < 0.25, "relative error {rel}");
+    });
+}
