@@ -13,7 +13,7 @@ use quartz::runtime::Runtime;
 use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
 use quartz::train::{train_classifier, ClassifierData, OptimizerStack, TrainConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> quartz::util::error::Result<()> {
     let rt = Runtime::open_default()?;
     // vit_lite_c32 consumes flattened 8×8 images (dim 64).
     let model = rt.manifest.models["vit_lite_c32"].clone();

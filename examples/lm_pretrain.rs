@@ -21,7 +21,7 @@ use quartz::util::csv::CsvWriter;
 use quartz::util::fmt_bytes;
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> quartz::util::error::Result<()> {
     let steps: u64 = std::env::var("QUARTZ_LM_STEPS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -105,7 +105,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\nloss curves written to runs/lm_pretrain.csv");
-    anyhow::ensure!(
+    quartz::ensure!(
         ours_run.final_metric < model.meta_usize("vocab").unwrap() as f64,
         "PPL must beat uniform"
     );

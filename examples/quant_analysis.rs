@@ -12,7 +12,7 @@ use quartz::quant::{BlockQuantizer, QuantConfig};
 use quartz::report::table::Table;
 use quartz::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> quartz::util::error::Result<()> {
     let q = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
 
     // 1. The paper's toy 2×2 (App. C.1): VQ breaks PD, CQ does not.

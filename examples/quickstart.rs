@@ -14,7 +14,7 @@ use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
 use quartz::train::{train_classifier, ClassifierData, OptimizerStack, TrainConfig};
 use quartz::util::fmt_bytes;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> quartz::util::error::Result<()> {
     // 1. Open the AOT artifact bundle (python ran once at build time).
     let rt = Runtime::open_default()?;
     let model = rt.manifest.models["res_mlp_c32"].clone();

@@ -14,7 +14,8 @@ use crate::shampoo::{ShampooConfig, ShampooVariant};
 use crate::train::ClassifierData;
 use crate::util::csv::CsvWriter;
 use crate::util::stats::Histogram;
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 use std::path::Path;
 
 fn steps(full: u64, quick: bool) -> u64 {

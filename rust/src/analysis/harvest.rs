@@ -10,7 +10,7 @@ use crate::runtime::literal::{literal_to_matrix, literal_to_scalar_f32, matrix_t
 use crate::runtime::Runtime;
 use crate::shampoo::{Shampoo, ShampooConfig};
 use crate::train::ClassifierData;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// One training checkpoint's optimizer internals.
 pub struct Snapshot {

@@ -22,7 +22,8 @@ use crate::runtime::Runtime;
 use crate::shampoo::{ShampooConfig, ShampooVariant};
 use crate::train::ClassifierData;
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 use std::path::Path;
 
 /// Shampoo intervals scaled from the paper's T1=100/T2=500-over-78k-steps

@@ -40,7 +40,7 @@ thread_local! {
         const { std::cell::RefCell::new(None) };
 }
 
-fn thread_runtime(dir: &PathBuf) -> anyhow::Result<std::rc::Rc<Runtime>> {
+fn thread_runtime(dir: &PathBuf) -> crate::util::error::Result<std::rc::Rc<Runtime>> {
     TL_RUNTIME.with(|slot| {
         let mut slot = slot.borrow_mut();
         if let Some((cached_dir, rt)) = slot.as_ref() {
@@ -55,13 +55,13 @@ fn thread_runtime(dir: &PathBuf) -> anyhow::Result<std::rc::Rc<Runtime>> {
 }
 
 /// Execute one run in the current thread (reuses the thread's Runtime).
-pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> anyhow::Result<RunOutcome> {
+pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> crate::util::error::Result<RunOutcome> {
     let rt = thread_runtime(artifact_dir)?;
     let model = rt
         .manifest
         .models
         .get(&spec.model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", spec.model))?
+        .ok_or_else(|| crate::anyhow!("unknown model '{}'", spec.model))?
         .clone();
 
     // Memory gate: the modeled footprint stands in for the paper's 80 GB

@@ -9,7 +9,8 @@ use crate::optim::{BaseOptimizer, LrSchedule, OptimizerKind};
 use crate::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
 use crate::train::OptimizerStack;
 use crate::util::toml::{TomlDoc, TomlTable};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// What data the run trains on.
 #[derive(Clone, Debug)]
@@ -150,7 +151,7 @@ impl ExperimentSpec {
     /// shampoo = "cq-ef"      # 32bit | vq | cq | cq-ef | none
     /// ```
     pub fn from_toml(text: &str) -> Result<ExperimentSpec> {
-        let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let doc = TomlDoc::parse(text)?;
         let name = doc
             .root
             .get("name")

@@ -1,17 +1,30 @@
 //! Cholesky factorization (the heart of the paper's CQ scheme, Eq. (7)).
 
 use super::matrix::Matrix;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CholeskyError {
-    #[error("matrix is not square ({0}x{1})")]
     NotSquare(usize, usize),
-    #[error("matrix is not positive definite (pivot {pivot} at index {index})")]
     NotPd { index: usize, pivot: f32 },
-    #[error("non-finite entry encountered during factorization")]
     NonFinite,
 }
+
+impl fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CholeskyError::NotSquare(r, c) => write!(f, "matrix is not square ({r}x{c})"),
+            CholeskyError::NotPd { index, pivot } => {
+                write!(f, "matrix is not positive definite (pivot {pivot} at index {index})")
+            }
+            CholeskyError::NonFinite => {
+                write!(f, "non-finite entry encountered during factorization")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 /// Lower-triangular Cholesky factor `C` with `C·Cᵀ = A`.
 ///

@@ -11,7 +11,8 @@
 //! quartz list                                        # artifacts + models
 //! ```
 
-use anyhow::{bail, Context, Result};
+use quartz::bail;
+use quartz::util::error::{Context, Result};
 use quartz::analysis::{figures, tables};
 use quartz::coordinator::spec::{ExperimentSpec, OptimizerSpec, RunSpec, Workload};
 use quartz::coordinator::runner::run_all;
@@ -86,7 +87,7 @@ fn main() {
         }
         other => {
             print_help();
-            Err(anyhow::anyhow!("unknown command '{other}'"))
+            Err(quartz::anyhow!("unknown command '{other}'"))
         }
     };
     if let Err(e) = result {

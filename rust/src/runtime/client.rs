@@ -1,7 +1,8 @@
 //! The PJRT execution engine: compile-once, execute-many.
 
 use super::manifest::{ArtifactSpec, Manifest};
-use anyhow::{Context, Result};
+use super::xla;
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
@@ -72,7 +73,7 @@ impl Runtime {
     /// `spec.outputs` literals.
     pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         let spec_inputs = self.spec(name)?.inputs.len();
-        anyhow::ensure!(
+        crate::ensure!(
             inputs.len() == spec_inputs,
             "artifact '{name}' wants {spec_inputs} inputs, got {}",
             inputs.len()

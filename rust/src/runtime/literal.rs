@@ -1,7 +1,8 @@
 //! Conversions between our [`Matrix`]/vec types and `xla::Literal`.
 
 use crate::linalg::Matrix;
-use anyhow::Result;
+use crate::runtime::xla;
+use crate::util::error::Result;
 
 /// Row-major f32 matrix → 2-D literal.
 pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
@@ -12,7 +13,7 @@ pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
 pub fn vec_f32_to_literal(v: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     let n: usize = shape.iter().product();
-    anyhow::ensure!(v.len() == n, "shape {:?} needs {} elems, got {}", shape, n, v.len());
+    crate::ensure!(v.len() == n, "shape {:?} needs {} elems, got {}", shape, n, v.len());
     Ok(xla::Literal::vec1(v).reshape(&dims)?)
 }
 
@@ -20,7 +21,7 @@ pub fn vec_f32_to_literal(v: &[f32], shape: &[usize]) -> Result<xla::Literal> {
 pub fn vec_i32_to_literal(v: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     let n: usize = shape.iter().product();
-    anyhow::ensure!(v.len() == n, "shape {:?} needs {} elems, got {}", shape, n, v.len());
+    crate::ensure!(v.len() == n, "shape {:?} needs {} elems, got {}", shape, n, v.len());
     Ok(xla::Literal::vec1(v).reshape(&dims)?)
 }
 
@@ -32,7 +33,7 @@ pub fn scalar_f32(x: f32) -> xla::Literal {
 /// 2-D literal → Matrix.
 pub fn literal_to_matrix(l: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
     let v = l.to_vec::<f32>()?;
-    anyhow::ensure!(v.len() == rows * cols, "literal has {} elems, want {}x{}", v.len(), rows, cols);
+    crate::ensure!(v.len() == rows * cols, "literal has {} elems, want {}x{}", v.len(), rows, cols);
     Ok(Matrix::from_vec(rows, cols, v))
 }
 
@@ -44,7 +45,7 @@ pub fn literal_to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
 /// Scalar f32 from a literal (loss outputs).
 pub fn literal_to_scalar_f32(l: &xla::Literal) -> Result<f32> {
     let v = l.to_vec::<f32>()?;
-    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    crate::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
     Ok(v[0])
 }
 

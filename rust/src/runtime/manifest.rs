@@ -3,15 +3,33 @@
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io error reading {path}: {source}")]
     Io { path: PathBuf, source: std::io::Error },
-    #[error("manifest parse error: {0}")]
     Parse(String),
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Io { path, source } => {
+                write!(f, "io error reading {}: {source}", path.display())
+            }
+            ManifestError::Parse(msg) => write!(f, "manifest parse error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io { source, .. } => Some(source),
+            ManifestError::Parse(_) => None,
+        }
+    }
 }
 
 /// Shape + dtype of one executable input.

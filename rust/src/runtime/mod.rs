@@ -11,6 +11,7 @@
 pub mod client;
 pub mod literal;
 pub mod manifest;
+pub mod xla;
 
 pub use client::Runtime;
 pub use literal::{literal_to_matrix, literal_to_vec_f32, matrix_to_literal};

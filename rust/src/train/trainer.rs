@@ -17,7 +17,7 @@ use crate::runtime::literal::{
 };
 use crate::runtime::{ModelInfo, Runtime};
 use crate::train::OptimizerStack;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// Unified classifier data view (built from either synthetic dataset).
 #[derive(Clone, Debug)]
@@ -116,8 +116,8 @@ pub fn train_classifier(
     mut opt: OptimizerStack,
     cfg: &TrainConfig,
 ) -> Result<RunMetrics> {
-    anyhow::ensure!(model.kind == "classifier", "{} is not a classifier", model.name);
-    anyhow::ensure!(
+    crate::ensure!(model.kind == "classifier", "{} is not a classifier", model.name);
+    crate::ensure!(
         data.dim == model.meta_usize("dim").unwrap_or(0),
         "data dim {} != model dim {:?}",
         data.dim,
@@ -215,7 +215,7 @@ pub fn eval_classifier(
         counted += batch;
         start += batch;
     }
-    anyhow::ensure!(counted > 0, "test set smaller than one batch");
+    crate::ensure!(counted > 0, "test set smaller than one batch");
     Ok(correct_weighted / counted as f64)
 }
 
@@ -227,7 +227,7 @@ pub fn train_lm(
     mut opt: OptimizerStack,
     cfg: &TrainConfig,
 ) -> Result<RunMetrics> {
-    anyhow::ensure!(model.kind == "lm", "{} is not an lm", model.name);
+    crate::ensure!(model.kind == "lm", "{} is not an lm", model.name);
     let seq = model.meta_usize("seq").context("lm needs seq")?;
     let batch = model.batch;
     let fwd_bwd = format!("{}.fwd_bwd", model.name);

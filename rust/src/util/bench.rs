@@ -149,9 +149,34 @@ impl Bencher {
             units_per_iter,
         };
         report.print();
+        append_json_record(&report);
         self.reports.push(report);
         self.reports.last().unwrap()
     }
+}
+
+/// When `QUARTZ_BENCH_JSON=<path>` is set, append one JSON object per
+/// report as a line to that file (JSONL). `scripts/harvest_bench.sh`
+/// assembles these into `BENCH_quartz.json` for the perf trajectory.
+fn append_json_record(r: &BenchReport) {
+    let Ok(path) = std::env::var("QUARTZ_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    use std::io::Write as _;
+    let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) else {
+        return;
+    };
+    // Bench names are plain ASCII identifiers (letters, digits, /x_.-); a
+    // replace guard keeps the output valid JSON regardless.
+    let name = r.name.replace(['"', '\\'], "_");
+    // One write(2) per record: O_APPEND appends are atomic per syscall, so
+    // concurrent bench processes sharing the file cannot tear a line.
+    let record = format!(
+        "{{\"name\":\"{}\",\"mean_ns\":{:.1},\"std_ns\":{:.1},\"p50_ns\":{:.1},\"p99_ns\":{:.1},\"iters\":{}}}\n",
+        name, r.mean_ns, r.std_ns, r.p50_ns, r.p99_ns, r.iters
+    );
+    let _ = f.write_all(record.as_bytes());
 }
 
 /// Prevent the optimizer from eliding a computed value (ptr read/write
@@ -165,15 +190,46 @@ pub fn black_box<T>(x: T) -> T {
 mod tests {
     use super::*;
 
+    /// Both tests below mutate process-wide env vars the harness reads;
+    /// serialize them so parallel test threads never observe each other's
+    /// transient state.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn bench_runs_quickly_in_quick_mode() {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         std::env::set_var("QUARTZ_BENCH_QUICK", "1");
         let mut b = Bencher::new();
         let mut acc = 0u64;
         let r = b.bench("noop-ish", || {
             acc = black_box(acc.wrapping_add(1));
         });
+        std::env::remove_var("QUARTZ_BENCH_QUICK");
         assert!(r.iters > 0);
         assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn bench_emits_json_records_when_asked() {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::env::set_var("QUARTZ_BENCH_QUICK", "1");
+        let path = std::env::temp_dir().join(format!("quartz_bench_{}.jsonl", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        std::env::set_var("QUARTZ_BENCH_JSON", &path);
+        let mut b = Bencher::new();
+        let mut acc = 0u64;
+        b.bench("json-hook-probe", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        std::env::remove_var("QUARTZ_BENCH_JSON");
+        std::env::remove_var("QUARTZ_BENCH_QUICK");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text
+            .lines()
+            .find(|l| l.contains("json-hook-probe"))
+            .expect("record for this bench");
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"mean_ns\":"), "{line}");
+        std::fs::remove_file(&path).ok();
     }
 }

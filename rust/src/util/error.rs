@@ -1,0 +1,188 @@
+//! Minimal `anyhow`-style error handling (the offline build set has no
+//! `anyhow`/`thiserror`, per the repo's dependency-free ground rules).
+//!
+//! Provides:
+//! * [`Error`] — an opaque, context-carrying application error.
+//! * [`Result`] — `Result<T, Error>` alias with a default error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, mirroring anyhow's ergonomics.
+//! * [`crate::anyhow!`], [`crate::bail!`], [`crate::ensure!`] — the familiar
+//!   formatting macros (exported at the crate root).
+//!
+//! Like anyhow's `Error`, this type deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket
+//! `impl<E: std::error::Error> From<E> for Error` coherent, so `?` works on
+//! any std-error result inside functions returning [`Result`].
+
+use std::fmt;
+
+/// An application error: a root message plus a stack of context frames
+/// (outermost first, like anyhow's `{:#}` rendering).
+pub struct Error {
+    /// Context frames, outermost last (pushed as the error bubbles up).
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { frames: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.frames.push(c.to_string());
+        self
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.first().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Outermost context first, then the chain down to the root cause.
+        for (i, frame) in self.frames.iter().rev().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{frame}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Fold the std source chain into the frame stack (innermost first).
+        let mut frames = Vec::new();
+        frames.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.insert(0, s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, anyhow-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Create an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: Result<()> = Err(io_err()).context("loading manifest");
+        let msg = format!("{}", r.unwrap_err());
+        assert!(msg.starts_with("loading manifest:"), "{msg}");
+        assert!(msg.contains("file missing"), "{msg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<String> {
+            let bytes = [0xFFu8];
+            let s = std::str::from_utf8(&bytes)?;
+            Ok(s.to_string())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(50).unwrap_err()), "x too big: 50");
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        let e = crate::anyhow!("code {}", 7);
+        assert_eq!(e.root_cause(), "code 7");
+    }
+
+    #[test]
+    fn alternate_format_matches_display() {
+        let e = Error::msg("root").context("outer");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+        assert_eq!(format!("{e:?}"), "outer: root");
+    }
+}

@@ -1,4 +1,6 @@
-//! A small scoped thread pool (the offline build set has no `rayon`).
+//! A small scoped thread pool built on `std::thread::scope` (the offline
+//! build set has no `rayon` or `crossbeam`; std scoped threads, stable since
+//! 1.63, give the same borrow-friendly fork/join shape with zero deps).
 //!
 //! Two entry points:
 //! * [`parallel_for`] — split an index range over worker threads (used by the
@@ -18,6 +20,9 @@ pub fn default_threads() -> usize {
 /// Run `f(i)` for every `i in 0..n`, distributing chunks over up to
 /// `threads` scoped workers. `f` must be `Sync`; iteration order within a
 /// chunk is ascending. Falls back to inline execution for tiny ranges.
+///
+/// A panic in `f` propagates out of this call when the scope joins the
+/// worker that hit it (other workers drain their remaining chunks first).
 pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
     let threads = threads.max(1).min(n.max(1));
     if threads == 1 || n < 2 {
@@ -29,20 +34,30 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
     let counter = AtomicUsize::new(0);
     // Chunked dynamic scheduling: grab `chunk` indices at a time.
     let chunk = (n / (threads * 4)).max(1);
-    crossbeam_utils::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|_| loop {
-                let start = counter.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                for i in start..(start + chunk).min(n) {
-                    f(i);
-                }
-            });
+    let f = &f;
+    let counter = &counter;
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(move || loop {
+                    let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    for i in start..(start + chunk).min(n) {
+                        f(i);
+                    }
+                })
+            })
+            .collect();
+        // Join explicitly so a worker's panic payload (not the scope's
+        // generic "a scoped thread panicked") reaches the caller.
+        for h in handles {
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
         }
-    })
-    .expect("worker panicked in parallel_for");
+    });
 }
 
 /// Outcome of a pool job.
@@ -72,16 +87,21 @@ impl Pool {
         F: FnOnce() -> T + Send + std::panic::UnwindSafe,
     {
         let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
         let queue = Arc::new(Mutex::new(
             jobs.into_iter().enumerate().collect::<Vec<(usize, F)>>(),
         ));
         let (tx, rx) = mpsc::channel::<(usize, JobResult<T>)>();
 
-        crossbeam_utils::thread::scope(|s| {
-            for _ in 0..self.threads.min(n.max(1)) {
+        thread::scope(|s| {
+            for _ in 0..self.threads.min(n) {
                 let queue = Arc::clone(&queue);
                 let tx = tx.clone();
-                s.spawn(move |_| loop {
+                s.spawn(move || loop {
+                    // The lock guard is dropped before the job runs, so a
+                    // panicking job can never poison the queue mutex.
                     let job = queue.lock().unwrap().pop();
                     let Some((idx, f)) = job else { break };
                     let res = match std::panic::catch_unwind(f) {
@@ -100,7 +120,6 @@ impl Pool {
             }
             out.into_iter().map(|r| r.expect("job result missing")).collect()
         })
-        .expect("pool scope failed")
     }
 }
 
@@ -138,6 +157,54 @@ mod tests {
     }
 
     #[test]
+    fn parallel_for_zero_items_is_noop() {
+        let calls = AtomicUsize::new(0);
+        parallel_for(0, 8, |_| {
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn parallel_for_single_item_runs_inline() {
+        let calls = AtomicUsize::new(0);
+        parallel_for(1, 8, |i| {
+            assert_eq!(i, 0);
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_for_more_threads_than_items() {
+        // threads is clamped to n; every index must still run exactly once.
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(5, 64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_threads_is_clamped() {
+        let sum = AtomicU64::new(0);
+        parallel_for(10, 0, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom at 3")]
+    fn parallel_for_propagates_worker_panic() {
+        parallel_for(8, 4, |i| {
+            if i == 3 {
+                panic!("boom at 3");
+            }
+        });
+    }
+
+    #[test]
     fn pool_preserves_order() {
         let pool = Pool::new(4);
         let jobs: Vec<_> = (0..32usize).map(|i| move || i * i).collect();
@@ -147,6 +214,24 @@ mod tests {
                 JobResult::Ok(v) => assert_eq!(*v, i * i),
                 JobResult::Panicked(m) => panic!("unexpected panic: {m}"),
             }
+        }
+    }
+
+    #[test]
+    fn pool_zero_jobs() {
+        let pool = Pool::new(4);
+        let jobs: Vec<fn() -> usize> = Vec::new();
+        assert!(pool.run(jobs).is_empty());
+    }
+
+    #[test]
+    fn pool_more_threads_than_jobs() {
+        let pool = Pool::new(16);
+        let jobs: Vec<_> = (0..3usize).map(|i| move || i + 10).collect();
+        let results = pool.run(jobs);
+        assert_eq!(results.len(), 3);
+        for (i, r) in results.iter().enumerate() {
+            assert!(matches!(r, JobResult::Ok(v) if *v == i + 10));
         }
     }
 
@@ -162,5 +247,33 @@ mod tests {
         assert!(matches!(results[0], JobResult::Ok(1)));
         assert!(matches!(results[1], JobResult::Panicked(ref m) if m.contains("boom")));
         assert!(matches!(results[2], JobResult::Ok(3)));
+    }
+
+    #[test]
+    fn pool_survives_repeated_panicking_batches() {
+        // The queue mutex must not be poisoned by panicking jobs; the same
+        // Pool value must keep working across batches.
+        let pool = Pool::new(3);
+        for round in 0..3u32 {
+            let jobs: Vec<Box<dyn FnOnce() -> u32 + Send + std::panic::UnwindSafe>> = (0..6)
+                .map(|i| {
+                    let f: Box<dyn FnOnce() -> u32 + Send + std::panic::UnwindSafe> =
+                        if i % 2 == 0 {
+                            Box::new(move || panic!("round {round} job {i}"))
+                        } else {
+                            Box::new(move || round * 100 + i)
+                        };
+                    f
+                })
+                .collect();
+            let results = pool.run(jobs);
+            for (i, r) in results.iter().enumerate() {
+                if i % 2 == 0 {
+                    assert!(matches!(r, JobResult::Panicked(_)));
+                } else {
+                    assert!(matches!(r, JobResult::Ok(v) if *v == round * 100 + i as u32));
+                }
+            }
+        }
     }
 }

@@ -62,12 +62,19 @@ pub struct TomlDoc {
     pub table_arrays: BTreeMap<String, Vec<TomlTable>>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 impl TomlDoc {
     pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {

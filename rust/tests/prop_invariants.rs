@@ -221,6 +221,37 @@ fn prop_memory_model_matches_measured() {
     });
 }
 
+/// The cache-blocked (and, above the FLOP threshold, multi-threaded) matmul
+/// must agree with a naive f64 triple loop for arbitrary shapes — including
+/// shapes large enough to take the parallel path (2·m·n·k ≥ 2²⁰ FLOPs).
+#[test]
+fn prop_matmul_parallel_matches_naive() {
+    run_prop("matmul parallel vs naive", 30, |g| {
+        // Mix small shapes (single-threaded path, ragged tails) with large
+        // ones (threaded row-block path).
+        let (m, k, n) = if g.bool() {
+            (g.usize_in(1, 40), g.usize_in(1, 40), g.usize_in(1, 40))
+        } else {
+            (g.usize_in(80, 130), g.usize_in(80, 130), g.usize_in(80, 130))
+        };
+        let a = Matrix::from_vec(m, k, g.normal_vec(m * k, 1.0));
+        let b = Matrix::from_vec(k, n, g.normal_vec(k * n, 1.0));
+        let c = matmul(&a, &b);
+        let mut want = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for l in 0..k {
+                    s += a[(i, l)] as f64 * b[(l, j)] as f64;
+                }
+                want[(i, j)] = s as f32;
+            }
+        }
+        let diff = c.max_abs_diff(&want);
+        assert!(diff < 1e-3 * k as f32, "shape {m}x{k}x{n}: diff {diff}");
+    });
+}
+
 /// Quantized matmul sanity: D(Q(A))·D(Q(B)) stays close to A·B in relative
 /// Frobenius terms for well-scaled inputs.
 #[test]

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Bench smoke + harvest: run the in-tree bench suite in quick mode and
+# assemble the per-report JSONL records (emitted by util::bench when
+# QUARTZ_BENCH_JSON is set) into a single BENCH_quartz.json.
+#
+# Usage: scripts/harvest_bench.sh [output.json]
+#
+# The quick mode (QUARTZ_BENCH_QUICK=1) shrinks warmup/measure windows so the
+# whole suite finishes in well under a minute — this is a smoke run seeding
+# the perf trajectory, not a statistically rigorous measurement.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+OUT="${1:-BENCH_quartz.json}"
+JSONL="$(mktemp)"
+trap 'rm -f "$JSONL"' EXIT
+
+export QUARTZ_BENCH_QUICK=1
+export QUARTZ_BENCH_JSON="$JSONL"
+
+(cd rust && cargo bench)
+
+{
+  printf '{"suite":"quartz","mode":"quick","results":['
+  # Join the JSONL records with commas (empty file -> empty array).
+  paste -sd, "$JSONL"
+  printf ']}\n'
+} > "$OUT"
+
+COUNT="$(wc -l < "$JSONL" | tr -d ' ')"
+echo "harvested $COUNT bench records into $OUT"
+# A smoke run with zero records means the benches did not actually execute.
+test "$COUNT" -gt 0
