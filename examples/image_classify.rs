@@ -10,8 +10,8 @@ use quartz::data::images::{ImageDataset, ImageSpec};
 use quartz::optim::{BaseOptimizer, LrSchedule};
 use quartz::report::table::{mb, pct, Table};
 use quartz::runtime::Runtime;
-use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
-use quartz::train::{train_classifier, ClassifierData, OptimizerStack, TrainConfig};
+use quartz::shampoo::ShampooConfig;
+use quartz::train::{registry, train_classifier, ClassifierData, TrainConfig};
 
 fn main() -> quartz::util::error::Result<()> {
     let rt = Runtime::open_default()?;
@@ -44,26 +44,14 @@ fn main() -> quartz::util::error::Result<()> {
         &["Optimizer", "Accuracy (%)", "Opt-State (MB)", "Wall (s)"],
     );
 
-    // Base optimizer alone.
-    let run = train_classifier(&rt, &model, &data, OptimizerStack::Base(adamw()), &cfg)?;
-    table.row(vec![
-        run.optimizer.clone(),
-        pct(run.final_metric),
-        mb(run.state_bytes),
-        format!("{:.1}", run.wall_secs),
-    ]);
-
-    // All Shampoo variants.
-    for variant in [
-        ShampooVariant::Full32,
-        ShampooVariant::Vq4,
-        ShampooVariant::Cq4 { error_feedback: false },
-        ShampooVariant::Cq4 { error_feedback: true },
-    ] {
-        let scfg = ShampooConfig { variant, t1: 10, t2: 50, max_order: 96, ..Default::default() };
-        let sh = Shampoo::new(adamw(), scfg, &model.shapes());
-        let run =
-            train_classifier(&rt, &model, &data, OptimizerStack::Shampoo(Box::new(sh)), &cfg)?;
+    // Every variant by registry key: the base alone, the paper's four
+    // Shampoo representations, and the 8-bit codec — one loop, no
+    // per-variant construction code.
+    let scfg = ShampooConfig { t1: 10, t2: 50, max_order: 96, ..Default::default() };
+    for key in ["none", "32bit", "vq", "cq", "cq-ef", "bw8"] {
+        let opt = registry::build(key, adamw(), &scfg, &model.shapes())
+            .expect("builtin stack key");
+        let run = train_classifier(&rt, &model, &data, opt, &cfg)?;
         table.row(vec![
             run.optimizer.clone(),
             pct(run.final_metric),

@@ -15,8 +15,8 @@
 use quartz::data::tokens::{CorpusSpec, TokenCorpus};
 use quartz::optim::{BaseOptimizer, LrSchedule, OptimizerKind};
 use quartz::runtime::Runtime;
-use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
-use quartz::train::{train_lm, OptimizerStack, TrainConfig};
+use quartz::shampoo::ShampooConfig;
+use quartz::train::{registry, train_lm, TrainConfig};
 use quartz::util::csv::CsvWriter;
 use quartz::util::fmt_bytes;
 use std::path::Path;
@@ -63,20 +63,14 @@ fn main() -> quartz::util::error::Result<()> {
         BaseOptimizer::new(OptimizerKind::AdamW, h)
     };
 
-    // Baseline: AdamW alone.
-    let base_run = train_lm(&rt, &model, &corpus, OptimizerStack::Base(adamw()), &cfg)?;
-
-    // Ours: AdamW + 4-bit Shampoo (CQ+EF).
-    let scfg = ShampooConfig {
-        variant: ShampooVariant::Cq4 { error_feedback: true },
-        t1: 10,
-        t2: 50,
-        max_order: 96,
-        ..Default::default()
+    // Both rows by registry key: AdamW alone, and AdamW + 4-bit Shampoo
+    // (CQ+EF) — swap "cq-ef" for any `quartz codecs` key to compare others.
+    let scfg = ShampooConfig { t1: 10, t2: 50, max_order: 96, ..Default::default() };
+    let stack = |key| {
+        registry::build(key, adamw(), &scfg, &model.shapes()).expect("builtin stack key")
     };
-    let shampoo = Shampoo::new(adamw(), scfg, &model.shapes());
-    let ours_run =
-        train_lm(&rt, &model, &corpus, OptimizerStack::Shampoo(Box::new(shampoo)), &cfg)?;
+    let base_run = train_lm(&rt, &model, &corpus, stack("none"), &cfg)?;
+    let ours_run = train_lm(&rt, &model, &corpus, stack("cq-ef"), &cfg)?;
 
     // Log curves.
     std::fs::create_dir_all("runs")?;

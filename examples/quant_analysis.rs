@@ -16,7 +16,8 @@ fn main() -> quartz::util::error::Result<()> {
     let q = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
 
     // 1. The paper's toy 2×2 (App. C.1): VQ breaks PD, CQ does not.
-    let q2 = BlockQuantizer::new(QuantConfig { block: 2, min_quant_elems: 0, ..Default::default() });
+    let q2 =
+        BlockQuantizer::new(QuantConfig { block: 2, min_quant_elems: 0, ..Default::default() });
     let l = Matrix::from_rows(&[&[10.0, 3.0], &[3.0, 1.0]]);
     let vq = vq_roundtrip(&l, &q2);
     let cq = cq_roundtrip(&l, 1e-6, &q2);
@@ -60,7 +61,38 @@ fn main() -> quartz::util::error::Result<()> {
     }
     t.print();
 
-    // 3. Error-feedback effect: time-averaged reconstruction error of a
+    // 3. The codec API: the same perturbation measurement through registered
+    //    `PrecondCodec`s — any key from `quartz codecs` (including codecs
+    //    registered by downstream crates) drops into this loop.
+    let ctx = quartz::quant::CodecCtx::new(1e-6, 0.95, std::sync::Arc::new(q.clone()));
+    let mut tc = Table::new(
+        "NRE / AE of inverse-4th-roots by preconditioner codec (κ = 1e4, n = 64)",
+        &["codec", "NRE", "AE (deg)"],
+    );
+    let mut rng_c = Rng::new(7);
+    for key in ["f32", "vq4", "bw8", "cq4", "cq4-ef"] {
+        let b = quartz::quant::codec::lookup(key).expect("builtin codec");
+        let (mut nre, mut ae) = (0.0, 0.0);
+        let n_mats = 5;
+        let warm_stores = 8;
+        for _ in 0..n_mats {
+            let a = synthetic_pd(64, 1e-2, 1e2, &mut rng_c);
+            let mut codec = (b.side)(&ctx);
+            // Repeated stores of the same matrix, as the T1 refresh loop
+            // does — this is what lets cq4-ef's error feedback accumulate
+            // and separate from plain cq4 (a single store is EF-neutral).
+            for _ in 0..warm_stores {
+                codec.store(&a);
+            }
+            let (n1, a1) = nre_ae(&a, &codec.load());
+            nre += n1 / n_mats as f64;
+            ae += a1 / n_mats as f64;
+        }
+        tc.row(vec![key.to_string(), format!("{nre:.4}"), format!("{ae:.3}")]);
+    }
+    tc.print();
+
+    // 4. Error-feedback effect: time-averaged reconstruction error of a
     //    repeatedly quantized Cholesky factor with and without EF.
     let ef = quartz::quant::ErrorFeedback::new(0.95);
     let mut rng = Rng::new(9);

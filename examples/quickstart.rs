@@ -10,15 +10,16 @@
 use quartz::data::synthetic::{ClusterDataset, ClusterSpec};
 use quartz::optim::{BaseOptimizer, LrSchedule};
 use quartz::runtime::Runtime;
-use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
-use quartz::train::{train_classifier, ClassifierData, OptimizerStack, TrainConfig};
+use quartz::shampoo::ShampooConfig;
+use quartz::train::{registry, train_classifier, ClassifierData, TrainConfig};
 use quartz::util::fmt_bytes;
 
 fn main() -> quartz::util::error::Result<()> {
     // 1. Open the AOT artifact bundle (python ran once at build time).
     let rt = Runtime::open_default()?;
     let model = rt.manifest.models["res_mlp_c32"].clone();
-    println!("model {} — {} params, {} weights", model.name, model.params.len(), model.n_weights());
+    let (name, n_params, n_weights) = (&model.name, model.params.len(), model.n_weights());
+    println!("model {name} — {n_params} params, {n_weights} weights");
 
     // 2. Synthetic 32-class workload (CIFAR-100 analog).
     let (tr, te) = ClusterDataset::generate(&ClusterSpec {
@@ -30,16 +31,11 @@ fn main() -> quartz::util::error::Result<()> {
     let data = ClassifierData::from((&tr, &te));
 
     // 3. 4-bit Shampoo (compensated Cholesky quantization, Algorithm 1)
-    //    wrapping SGDM — the paper's headline configuration.
-    let cfg = ShampooConfig {
-        variant: ShampooVariant::Cq4 { error_feedback: true },
-        t1: 10,
-        t2: 50,
-        max_order: 96,
-        ..Default::default()
-    };
-    let shampoo = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 5e-4), cfg, &model.shapes());
-    let opt = OptimizerStack::Shampoo(Box::new(shampoo));
+    //    wrapping SGDM — the paper's headline configuration, constructed by
+    //    registry key: any variant in `quartz codecs` works here.
+    let cfg = ShampooConfig { t1: 10, t2: 50, max_order: 96, ..Default::default() };
+    let opt = registry::build("cq-ef", BaseOptimizer::sgdm(0.05, 0.9, 5e-4), &cfg, &model.shapes())
+        .expect("cq-ef is a builtin stack key");
 
     // 4. Train.
     let steps = 400;

@@ -1,0 +1,45 @@
+//! Preconditioner-codec throughput: `store` (quantize) and `load`
+//! (dequantize/reconstruct) for every registered `PrecondCodec` at the
+//! paper-relevant preconditioner orders 512 and 1024.
+//!
+//! Runs over the registry, so a newly registered codec is benchmarked with
+//! zero changes here. Records land in `BENCH_quartz.json` via the
+//! `QUARTZ_BENCH_JSON` hook (see `scripts/harvest_bench.sh`), seeding the
+//! codec-throughput regression trajectory.
+//!
+//! Run: `cargo bench --bench bench_codecs` (QUARTZ_BENCH_QUICK=1 for smoke).
+
+use quartz::quant::codec::{codec_keys, lookup};
+use quartz::quant::{BlockQuantizer, CodecCtx, QuantConfig};
+use quartz::util::bench::{black_box, Bencher};
+use quartz::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bencher::new();
+    let quantizer = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
+    let ctx = CodecCtx::new(1e-6, 0.95, Arc::new(quantizer));
+    let mut rng = Rng::new(1);
+
+    for n in [512usize, 1024] {
+        // A well-conditioned SPD input so Cholesky-based codecs take their
+        // fast path (the jitter loop would dominate otherwise).
+        let g = quartz::linalg::Matrix::randn(n, n, 1.0, &mut rng);
+        let mut spd = quartz::linalg::syrk(&g);
+        spd.scale(1.0 / n as f32);
+        spd.add_diag(1.0);
+        let bytes = (n * n * 4) as f64;
+
+        for key in codec_keys() {
+            let builder = lookup(key).expect("registered codec");
+            let mut codec = (builder.side)(&ctx);
+            b.bench_with_units(&format!("codec_store/{key}/{n}"), Some((bytes, "B")), || {
+                codec.store(&spd);
+                black_box(codec.size_bytes());
+            });
+            b.bench_with_units(&format!("codec_load/{key}/{n}"), Some((bytes, "B")), || {
+                black_box(codec.load());
+            });
+        }
+    }
+}

@@ -25,6 +25,7 @@ fn main() {
         ("vq4", ShampooVariant::Vq4),
         ("cq4", ShampooVariant::Cq4 { error_feedback: false }),
         ("cq4_ef", ShampooVariant::Cq4 { error_feedback: true }),
+        ("bw8", ShampooVariant::Bw8),
     ] {
         let mk = |t1: u64, t2: u64| {
             let cfg = ShampooConfig {

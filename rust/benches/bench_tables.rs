@@ -30,7 +30,8 @@ fn main() {
 
     // Tab 3/4/5 unit: one amortized train step of the ResNet analog.
     let model = rt.manifest.models["res_mlp_c32"].clone();
-    let spec = ClusterSpec { classes: 32, dim: 64, train: 512, test: 64, seed: 1, ..Default::default() };
+    let spec =
+        ClusterSpec { classes: 32, dim: 64, train: 512, test: 64, seed: 1, ..Default::default() };
     let (tr, _) = ClusterDataset::generate(&spec);
     let mut rng = Rng::new(5);
 
@@ -45,17 +46,23 @@ fn main() {
             None => {
                 let mut o = BaseOptimizer::sgdm(0.05, 0.9, 5e-4);
                 o.init(params.len());
-                OptimizerStack::Base(o)
+                OptimizerStack::base(o)
             }
             Some(v) => {
                 // Paper-ratio intervals (T1=10, T2=50) so the bench includes
                 // the amortized gram/root refresh cost.
-                let cfg = ShampooConfig { variant: v, t1: 10, t2: 50, max_order: 96, ..Default::default() };
-                OptimizerStack::Shampoo(Box::new(Shampoo::new(
+                let cfg = ShampooConfig {
+                    variant: v,
+                    t1: 10,
+                    t2: 50,
+                    max_order: 96,
+                    ..Default::default()
+                };
+                OptimizerStack::shampoo(Shampoo::new(
                     BaseOptimizer::sgdm(0.05, 0.9, 5e-4),
                     cfg,
                     &model.shapes(),
-                )))
+                ))
             }
         };
 
@@ -97,15 +104,15 @@ fn main() {
                 max_order: 96,
                 ..Default::default()
             };
-            OptimizerStack::Shampoo(Box::new(Shampoo::new(
+            OptimizerStack::shampoo(Shampoo::new(
                 BaseOptimizer::adamw(3e-3, 0.9, 0.999, 1e-8, 0.0),
                 cfg,
                 &model.shapes(),
-            )))
+            ))
         } else {
             let mut o = BaseOptimizer::adamw(3e-3, 0.9, 0.999, 1e-8, 0.0);
             o.init(params.len());
-            OptimizerStack::Base(o)
+            OptimizerStack::base(o)
         };
         let mut k = 1u64;
         b.bench(&format!("tab6_step/lm_s/{label}"), || {

@@ -11,11 +11,11 @@ use crate::optim::{BaseOptimizer, OptimizerKind};
 use crate::report::table::{mb, pct, Table};
 use crate::runtime::Runtime;
 use crate::shampoo::{ShampooConfig, ShampooVariant};
+use crate::bail;
 use crate::train::ClassifierData;
 use crate::util::csv::CsvWriter;
-use crate::util::stats::Histogram;
-use crate::bail;
 use crate::util::error::Result;
+use crate::util::stats::Histogram;
 use std::path::Path;
 
 fn steps(full: u64, quick: bool) -> u64 {
@@ -136,9 +136,11 @@ pub fn fig4(quick: bool, out_dir: &Path) -> Result<Table> {
             OptimizerSpec::base_only(base, hyper),
             total,
         ));
-        for variant in
-            [ShampooVariant::Full32, ShampooVariant::Vq4, ShampooVariant::Cq4 { error_feedback: true }]
-        {
+        for variant in [
+            ShampooVariant::Full32,
+            ShampooVariant::Vq4,
+            ShampooVariant::Cq4 { error_feedback: true },
+        ] {
             specs.push(RunSpec::new(
                 model,
                 workload_for(model, classes, 41),
@@ -164,10 +166,12 @@ pub fn fig4(quick: bool, out_dir: &Path) -> Result<Table> {
     for o in &outcomes {
         let Some(m) = &o.metrics else { continue };
         for (step, loss) in &m.loss_curve {
-            w.row(&[o.model.clone(), o.optimizer.clone(), "loss".into(), format!("{step}"), format!("{loss}")])?;
+            let (model, opt) = (o.model.clone(), o.optimizer.clone());
+            w.row(&[model, opt, "loss".into(), format!("{step}"), format!("{loss}")])?;
         }
         for (step, acc) in &m.eval_curve {
-            w.row(&[o.model.clone(), o.optimizer.clone(), "acc".into(), format!("{step}"), format!("{acc}")])?;
+            let (model, opt) = (o.model.clone(), o.optimizer.clone());
+            w.row(&[model, opt, "acc".into(), format!("{step}"), format!("{acc}")])?;
         }
         t.row(vec![
             o.model.clone(),
@@ -195,7 +199,10 @@ pub fn run_figure(id: &str, quick: bool, out_dir: &Path) -> Result<()> {
             }
             return Ok(());
         }
-        _ => bail!("unknown figure id '{id}' (fig1, fig3, fig4, all; fig2 is demonstrated by `quartz quant-demo` and the tri_store tests)"),
+        _ => bail!(
+            "unknown figure id '{id}' (fig1, fig3, fig4, all; fig2 is demonstrated by \
+             `quartz quant-demo` and the tri_store tests)"
+        ),
     };
     table.print();
     Ok(())

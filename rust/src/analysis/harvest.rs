@@ -6,7 +6,10 @@
 use crate::linalg::Matrix;
 use crate::models::init_params;
 use crate::optim::BaseOptimizer;
-use crate::runtime::literal::{literal_to_matrix, literal_to_scalar_f32, matrix_to_literal, vec_f32_to_literal, vec_i32_to_literal};
+use crate::runtime::literal::{
+    literal_to_matrix, literal_to_scalar_f32, matrix_to_literal, vec_f32_to_literal,
+    vec_i32_to_literal,
+};
 use crate::runtime::Runtime;
 use crate::shampoo::{Shampoo, ShampooConfig};
 use crate::train::ClassifierData;

@@ -119,7 +119,8 @@ mod tests {
     /// Tab. 9 toy example: the paper's exact 2×2 matrix.
     #[test]
     fn toy_matrix_vq_breaks_pd_cq_does_not() {
-        let q = BlockQuantizer::new(QuantConfig { block: 2, min_quant_elems: 0, ..Default::default() });
+        let q =
+            BlockQuantizer::new(QuantConfig { block: 2, min_quant_elems: 0, ..Default::default() });
         let l = Matrix::from_rows(&[&[10.0, 3.0], &[3.0, 1.0]]);
         let (orig_vals, _) = eig_sym(&l, 1e-12, 100);
         assert!((orig_vals[1] - 10.908).abs() < 1e-2);

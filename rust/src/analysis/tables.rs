@@ -8,8 +8,8 @@
 
 use super::harvest::train_with_snapshots;
 use super::spectral::{cq_roundtrip, cumulative_nre_ae, synthetic_pd, vq_roundtrip};
-use crate::coordinator::spec::{OptimizerSpec, RunSpec, Workload};
 use crate::coordinator::runner::{run_all, RunOutcome};
+use crate::coordinator::spec::{OptimizerSpec, RunSpec, Workload};
 use crate::data::images::ImageSpec;
 use crate::data::synthetic::{ClusterDataset, ClusterSpec};
 use crate::data::tokens::CorpusSpec;
@@ -20,10 +20,10 @@ use crate::quant::{BlockQuantizer, QuantConfig};
 use crate::report::table::{mb, pct, secs, Table};
 use crate::runtime::Runtime;
 use crate::shampoo::{ShampooConfig, ShampooVariant};
-use crate::train::ClassifierData;
-use crate::util::rng::Rng;
 use crate::bail;
+use crate::train::ClassifierData;
 use crate::util::error::Result;
+use crate::util::rng::Rng;
 use std::path::Path;
 
 /// Shampoo intervals scaled from the paper's T1=100/T2=500-over-78k-steps
@@ -127,7 +127,13 @@ pub fn tab_nre_ae(rt: &Runtime, model_name: &str, quick: bool, title: &str) -> R
         model_name,
         &data,
         BaseOptimizer::sgdm(0.05, 0.9, 5e-4),
-        ShampooConfig { variant: ShampooVariant::Full32, t1: 5, t2: 20, max_order: 96, ..Default::default() },
+        ShampooConfig {
+            variant: ShampooVariant::Full32,
+            t1: 5,
+            t2: 20,
+            max_order: 96,
+            ..Default::default()
+        },
         total,
         4,
         17,
@@ -315,7 +321,10 @@ pub fn tab6(rt: &Runtime, quick: bool) -> Result<Table> {
         b
     };
 
-    let corpus = |seed| Workload::Tokens(CorpusSpec { length: if quick { 30_000 } else { 120_000 }, seed, ..Default::default() });
+    let corpus = |seed| {
+        let length = if quick { 30_000 } else { 120_000 };
+        Workload::Tokens(CorpusSpec { length, seed, ..Default::default() })
+    };
     let mut specs = Vec::new();
     for model in ["lm_s", "lm_m", "lm_l"] {
         specs.push(RunSpec::new(model, corpus(6), OptimizerSpec::base_only(base, hyper), total));
@@ -362,7 +371,8 @@ pub fn tab7(quick: bool) -> Result<Table> {
         let mut cfg = scaled_shampoo(ShampooVariant::Cq4 { error_feedback: true });
         cfg.beta = b;
         cfg.beta_e = b;
-        specs.push(RunSpec::new("res_mlp_c32", cluster(32, 7), OptimizerSpec::with_shampoo(base, hyper, cfg), total));
+        let opt = OptimizerSpec::with_shampoo(base, hyper, cfg);
+        specs.push(RunSpec::new("res_mlp_c32", cluster(32, 7), opt, total));
     }
     let outcomes = run_all(&specs, workers());
     let mut t = Table::new(

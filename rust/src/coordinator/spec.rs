@@ -1,16 +1,16 @@
 //! Declarative experiment specifications (+ TOML loading for user-defined
 //! grids; the built-in paper tables construct these programmatically).
 
+use crate::bail;
 use crate::data::images::ImageSpec;
 use crate::data::synthetic::ClusterSpec;
 use crate::data::tokens::CorpusSpec;
 use crate::optim::optimizer::Hyper;
 use crate::optim::{BaseOptimizer, LrSchedule, OptimizerKind};
-use crate::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
-use crate::train::OptimizerStack;
-use crate::util::toml::{TomlDoc, TomlTable};
-use crate::bail;
+use crate::shampoo::{ShampooConfig, ShampooVariant};
+use crate::train::{registry, OptimizerStack};
 use crate::util::error::{Context, Result};
+use crate::util::toml::{TomlDoc, TomlTable};
 
 /// What data the run trains on.
 #[derive(Clone, Debug)]
@@ -26,11 +26,16 @@ pub struct OptimizerSpec {
     pub base: OptimizerKind,
     pub hyper: Hyper,
     pub shampoo: Option<ShampooConfig>,
+    /// Registry key overriding the variant-derived one — set when the spec
+    /// was parsed from a name `ShampooVariant` does not cover (a stack
+    /// registered at runtime). The memory model then approximates the
+    /// footprint with `shampoo`'s variant.
+    pub stack: Option<String>,
 }
 
 impl OptimizerSpec {
     pub fn base_only(base: OptimizerKind, hyper: Hyper) -> OptimizerSpec {
-        OptimizerSpec { base, hyper, shampoo: None }
+        OptimizerSpec { base, hyper, shampoo: None, stack: None }
     }
 
     pub fn with_shampoo(
@@ -38,7 +43,7 @@ impl OptimizerSpec {
         hyper: Hyper,
         shampoo: ShampooConfig,
     ) -> OptimizerSpec {
-        OptimizerSpec { base, hyper, shampoo: Some(shampoo) }
+        OptimizerSpec { base, hyper, shampoo: Some(shampoo), stack: None }
     }
 
     /// The paper's default base hypers (App. C.3), scaled for the analogs.
@@ -68,24 +73,64 @@ impl OptimizerSpec {
         }
     }
 
-    /// Materialize the optimizer stack for a model's shapes.
-    pub fn build(&self, shapes: &[(usize, usize)]) -> OptimizerStack {
-        let base = BaseOptimizer::new(self.base, self.hyper);
-        match &self.shampoo {
-            None => OptimizerStack::Base(base),
-            Some(cfg) => OptimizerStack::Shampoo(Box::new(Shampoo::new(base, *cfg, shapes))),
+    /// Spec from config-file spellings: any base the optim layer knows and
+    /// any stack key in `train::registry` — built-in variants, their
+    /// aliases, AND keys registered at runtime — with the paper's default
+    /// hypers for that base.
+    pub fn from_names(base: &str, shampoo: &str) -> Result<OptimizerSpec> {
+        let base = OptimizerKind::parse(base)
+            .with_context(|| format!("unknown base optimizer '{base}'"))?;
+        let hyper = OptimizerSpec::paper_hyper(base);
+        match shampoo {
+            "none" => Ok(OptimizerSpec::base_only(base, hyper)),
+            s => {
+                if let Some(variant) = ShampooVariant::parse(s) {
+                    let cfg = ShampooConfig { variant, ..Default::default() };
+                    return Ok(OptimizerSpec::with_shampoo(base, hyper, cfg));
+                }
+                crate::ensure!(
+                    registry::lookup(s).is_some(),
+                    "unknown shampoo variant or stack key '{s}'"
+                );
+                let mut spec = OptimizerSpec::with_shampoo(base, hyper, ShampooConfig::default());
+                spec.stack = Some(s.to_string());
+                Ok(spec)
+            }
         }
     }
 
-    /// Row label matching the paper's tables.
+    /// The `train::registry` key this spec resolves to.
+    pub fn stack_key(&self) -> &str {
+        if let Some(key) = &self.stack {
+            return key;
+        }
+        match &self.shampoo {
+            None => "none",
+            Some(cfg) => cfg.variant.key(),
+        }
+    }
+
+    /// Materialize the optimizer stack for a model's shapes via the
+    /// string-keyed registry (so registered stacks and codec overrides flow
+    /// through the same path as the built-ins).
+    pub fn build(&self, shapes: &[(usize, usize)]) -> OptimizerStack {
+        let base = BaseOptimizer::new(self.base, self.hyper);
+        let cfg = self.shampoo.unwrap_or_default();
+        registry::build(self.stack_key(), base, &cfg, shapes)
+            .expect("stack key was validated when the spec was constructed")
+    }
+
+    /// Row label matching the paper's tables (same composition as
+    /// `Optimizer::name`, usable before the stack is materialized — OOM
+    /// rows are labeled without ever building the optimizer). For
+    /// runtime-registered keys the key itself names the row.
     pub fn label(&self) -> String {
+        if let Some(key) = &self.stack {
+            return format!("{} + {} Shampoo", self.base.name().to_uppercase(), key);
+        }
         match &self.shampoo {
             None => self.base.name().to_uppercase(),
-            Some(cfg) => format!(
-                "{} + {} Shampoo",
-                self.base.name().to_uppercase(),
-                cfg.variant.name()
-            ),
+            Some(cfg) => cfg.variant.stack_label(self.base),
         }
     }
 }
@@ -148,7 +193,8 @@ impl ExperimentSpec {
     /// [[runs]]
     /// model = "res_mlp_c32"
     /// base = "sgdm"
-    /// shampoo = "cq-ef"      # 32bit | vq | cq | cq-ef | none
+    /// shampoo = "cq-ef"      # any train::registry key: 32bit | vq | cq |
+    ///                        # cq-ef | bw8 | none | registered additions
     /// ```
     pub fn from_toml(text: &str) -> Result<ExperimentSpec> {
         let doc = TomlDoc::parse(text)?;
@@ -182,11 +228,23 @@ impl ExperimentSpec {
             if let Some(lr) = t.get("lr").and_then(|v| v.as_f64()) {
                 hyper.lr = lr as f32;
             }
+            let mut stack = None;
             let shampoo = match t.get("shampoo").and_then(|v| v.as_str()) {
                 None | Some("none") => None,
                 Some(s) => {
-                    let variant = ShampooVariant::parse(s)
-                        .with_context(|| format!("runs[{i}]: unknown shampoo variant '{s}'"))?;
+                    // Built-in variant spellings first; otherwise any stack
+                    // key registered in `train::registry` is accepted.
+                    let variant = match ShampooVariant::parse(s) {
+                        Some(v) => v,
+                        None => {
+                            crate::ensure!(
+                                registry::lookup(s).is_some(),
+                                "runs[{i}]: unknown shampoo variant or stack key '{s}'"
+                            );
+                            stack = Some(s.to_string());
+                            ShampooVariant::default_for_custom()
+                        }
+                    };
                     let mut cfg = ShampooConfig { variant, ..Default::default() };
                     if let Some(t1) = t.get("t1").and_then(|v| v.as_i64()) {
                         cfg.t1 = t1 as u64;
@@ -203,7 +261,7 @@ impl ExperimentSpec {
                     Some(cfg)
                 }
             };
-            let opt = OptimizerSpec { base, hyper, shampoo };
+            let opt = OptimizerSpec { base, hyper, shampoo, stack };
             let mut run = RunSpec::new(&model, workload.clone(), opt, steps);
             run.seed = seed;
             runs.push(run);
@@ -213,14 +271,10 @@ impl ExperimentSpec {
 }
 
 fn parse_base(s: &str) -> Result<OptimizerKind> {
-    Ok(match s {
-        "sgd" => OptimizerKind::Sgd,
-        "sgdm" => OptimizerKind::Sgdm,
-        "adam" => OptimizerKind::Adam,
-        "adamw" => OptimizerKind::AdamW,
-        "rmsprop" => OptimizerKind::RmsProp,
-        _ => bail!("unknown base optimizer '{s}'"),
-    })
+    match OptimizerKind::parse(s) {
+        Some(kind) => Ok(kind),
+        None => bail!("unknown base optimizer '{s}'"),
+    }
 }
 
 fn parse_workload(t: Option<&TomlTable>, seed: u64) -> Result<Workload> {
@@ -323,5 +377,59 @@ base = "adamw"
             ShampooConfig { variant: ShampooVariant::Vq4, ..Default::default() },
         );
         assert_eq!(o.label(), "SGDM + 4-bit (VQ) Shampoo");
+    }
+
+    #[test]
+    fn from_names_builds_any_registered_variant() {
+        for key in ["none", "32bit", "vq", "cq", "cq-ef", "bw8", "ours"] {
+            let spec = OptimizerSpec::from_names("sgdm", key).unwrap();
+            let stack = spec.build(&[(8, 8)]);
+            // Spec label (pre-build) and trait name (post-build) must agree.
+            assert_eq!(spec.label(), stack.label(), "key '{key}'");
+        }
+        assert!(OptimizerSpec::from_names("lion", "cq-ef").is_err());
+        assert!(OptimizerSpec::from_names("sgdm", "5bit").is_err());
+    }
+
+    #[test]
+    fn toml_accepts_bw8() {
+        let text = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"bw8\"\n";
+        let spec = ExperimentSpec::from_toml(text).unwrap();
+        let sh = spec.runs[0].optimizer.shampoo.as_ref().unwrap();
+        assert_eq!(sh.variant, ShampooVariant::Bw8);
+    }
+
+    #[test]
+    fn runtime_registered_stack_reaches_specs_and_toml() {
+        use crate::optim::BaseOptimizer;
+        use crate::shampoo::Shampoo;
+
+        fn build_custom(
+            base: BaseOptimizer,
+            cfg: &ShampooConfig,
+            shapes: &[(usize, usize)],
+        ) -> OptimizerStack {
+            let cfg = ShampooConfig { variant: ShampooVariant::Vq4, ..*cfg };
+            OptimizerStack::shampoo(Shampoo::new(base, cfg, shapes))
+        }
+        registry::register(registry::StackBuilder {
+            key: "custom-vq",
+            summary: "test-only registered stack",
+            build: build_custom,
+        });
+
+        // from_names resolves the registered key…
+        let spec = OptimizerSpec::from_names("sgdm", "custom-vq").unwrap();
+        assert_eq!(spec.stack_key(), "custom-vq");
+        assert!(spec.label().contains("custom-vq"), "{}", spec.label());
+        let stack = spec.build(&[(8, 8)]);
+        assert!(stack.label().contains("Shampoo"));
+
+        // …and so does a TOML spec, with interval overrides applied.
+        let text = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"custom-vq\"\nt1 = 7\n";
+        let parsed = ExperimentSpec::from_toml(text).unwrap();
+        let opt = &parsed.runs[0].optimizer;
+        assert_eq!(opt.stack_key(), "custom-vq");
+        assert_eq!(opt.shampoo.as_ref().unwrap().t1, 7);
     }
 }

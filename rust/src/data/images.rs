@@ -121,7 +121,8 @@ mod tests {
 
     #[test]
     fn gather_extracts_rows() {
-        let (tr, _) = ImageDataset::generate(&ImageSpec { train: 10, test: 1, ..Default::default() });
+        let (tr, _) =
+            ImageDataset::generate(&ImageSpec { train: 10, test: 1, ..Default::default() });
         let (x, y) = tr.gather(&[3, 7]);
         assert_eq!(x.len(), 2 * 64);
         assert_eq!(x[..64], tr.pixels[3 * 64..4 * 64]);

@@ -87,7 +87,8 @@ impl ClusterDataset {
 
         let mut train_rng = rng.fork(1);
         let mut test_rng = rng.fork(2);
-        let (mut train, mut test) = (make(spec.train, &mut train_rng), make(spec.test, &mut test_rng));
+        let (mut train, mut test) =
+            (make(spec.train, &mut train_rng), make(spec.test, &mut test_rng));
 
         // Standardize to unit global variance (train statistics applied to
         // both splits): keeps the anisotropic covariance *structure* while

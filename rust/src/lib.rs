@@ -23,13 +23,13 @@
 //! |---|---|
 //! | [`util`] | RNG, stats, JSON/TOML parsers, thread pool, bench + property-test harnesses |
 //! | [`linalg`] | dense f32 matrices, blocked matmul, Cholesky, Schur–Newton inverse p-th root, Jacobi eigensolver, power iteration |
-//! | [`quant`] | linear-2 / linear / dynamic mappings, block-wise 4-bit quantizers, off-diagonal quantization, packed triangular joint storage (paper Fig. 2), error feedback |
-//! | [`optim`] | SGD(M), Adam(W), RMSProp, grafting, LR schedules |
-//! | [`shampoo`] | practical 32-bit Shampoo (Alg. 2) and 4-bit Shampoo VQ / CQ / CQ+EF (Alg. 1), max-order blocking |
+//! | [`quant`] | codebook mappings, block-wise quantizers (4/8-bit), off-diagonal quantization, the Fig. 2 joint triangular store, error feedback, and the open [`quant::codec`] registry |
+//! | [`optim`] | the [`optim::Optimizer`] trait; SGD(M), Adam(W), RMSProp, grafting, LR schedules |
+//! | [`shampoo`] | 32-bit Shampoo (Alg. 2) and quantized Shampoo VQ / CQ / CQ+EF (Alg. 1) / 8-bit, all storing state through `PrecondCodec` trait objects; max-order blocking; parallel per-layer stepping |
 //! | [`data`] | seeded synthetic datasets: gaussian-cluster classification, patch images, Markov token corpus |
 //! | [`models`] | model/artifact specs and deterministic parameter initialization mirroring `model.py` |
 //! | [`runtime`] | PJRT CPU client, HLO-text loading, executable cache, literal helpers |
-//! | [`train`] | training loop over AOT artifacts, eval (accuracy / perplexity), curve logging |
+//! | [`train`] | training loop over AOT artifacts, [`train::OptimizerStack`] + string-keyed [`train::registry`], eval, curve logging |
 //! | [`metrics`] | exact optimizer-state memory accountant, timers |
 //! | [`coordinator`] | experiment specs, multi-worker scheduler, result registry |
 //! | [`report`] | paper-style table renderer, figure series dumps |
@@ -38,11 +38,35 @@
 //!
 //! ```no_run
 //! use quartz::prelude::*;
-//! let cfg = ShampooConfig { variant: ShampooVariant::Cq4 { error_feedback: true }, ..Default::default() };
+//! // Construct any registered variant by string key…
+//! let stack = quartz::train::registry::build(
+//!     "cq-ef",
+//!     BaseOptimizer::sgdm(0.1, 0.9, 5e-4),
+//!     &ShampooConfig::default(),
+//!     &[(64, 32)],
+//! )
+//! .unwrap();
+//! // …or build the concrete type directly:
+//! let cfg = ShampooConfig { variant: ShampooVariant::Bw8, ..Default::default() };
 //! let mut opt = Shampoo::new(BaseOptimizer::sgdm(0.1, 0.9, 5e-4), cfg, &[(64, 32)]);
 //! // feed per-layer gradients each step:
-//! // opt.step(&mut params, &grads, step_idx);
+//! // opt.step(&mut params, &grads, step_idx, lr_scale);
+//! # let _ = stack;
 //! ```
+
+// The numerical kernels are written in explicit-index style on purpose (the
+// perf notes depend on the autovectorizable fixed-loop shape), and a few
+// internal signatures are wide by design; silence the style lints that fight
+// that idiom so `clippy -D warnings` can gate everything else.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy,
+    clippy::type_complexity,
+    clippy::len_without_is_empty,
+    clippy::new_without_default,
+    clippy::many_single_char_names
+)]
 
 pub mod util;
 pub mod linalg;
@@ -62,8 +86,9 @@ pub mod analysis;
 pub mod prelude {
     pub use crate::linalg::{Matrix, MatmulPlan};
     pub use crate::metrics::memory::MemoryModel;
-    pub use crate::optim::{BaseOptimizer, LrSchedule};
-    pub use crate::quant::{BlockQuantizer, Mapping, QuantConfig};
+    pub use crate::optim::{BaseOptimizer, LrSchedule, Optimizer};
+    pub use crate::quant::{BlockQuantizer, CodecCtx, Mapping, PrecondCodec, QuantConfig};
     pub use crate::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+    pub use crate::train::OptimizerStack;
     pub use crate::util::rng::Rng;
 }

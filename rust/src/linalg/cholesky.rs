@@ -73,7 +73,11 @@ pub fn cholesky(a: &Matrix) -> Result<Matrix, CholeskyError> {
 /// Cholesky with escalating diagonal jitter, mirroring the paper's `+εI`
 /// regularization (Eq. (7)): retries with ε · 10^t for t = 0.. until the
 /// factorization succeeds. Returns the factor and the jitter actually used.
-pub fn cholesky_jittered(a: &Matrix, eps: f32, max_tries: u32) -> Result<(Matrix, f32), CholeskyError> {
+pub fn cholesky_jittered(
+    a: &Matrix,
+    eps: f32,
+    max_tries: u32,
+) -> Result<(Matrix, f32), CholeskyError> {
     let mut jitter = eps;
     let mut last_err = None;
     for _ in 0..max_tries {

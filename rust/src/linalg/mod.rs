@@ -23,7 +23,10 @@ pub use eigen::{eig_sym, inverse_pth_root_eig};
 pub use kron::kron;
 pub use matmul::{matmul, matmul_into, matmul_into_planned, matmul_tn, matmul_nt, syrk, MatmulPlan};
 pub use matrix::Matrix;
-pub use norms::{angle_between, diag_dominance_margin, fro_norm, inner, max_abs, off_diag_max_abs, relative_error};
+pub use norms::{
+    angle_between, diag_dominance_margin, fro_norm, inner, max_abs, off_diag_max_abs,
+    relative_error,
+};
 pub use power_iter::lambda_max;
 pub use schur_newton::inverse_pth_root;
 pub use triangular::{solve_lower, solve_lower_transpose};

@@ -11,19 +11,17 @@
 //! quartz list                                        # artifacts + models
 //! ```
 
-use quartz::bail;
-use quartz::util::error::{Context, Result};
 use quartz::analysis::{figures, tables};
-use quartz::coordinator::spec::{ExperimentSpec, OptimizerSpec, RunSpec, Workload};
+use quartz::bail;
 use quartz::coordinator::runner::run_all;
+use quartz::coordinator::spec::{ExperimentSpec, OptimizerSpec, RunSpec, Workload};
 use quartz::data::synthetic::ClusterSpec;
 use quartz::data::tokens::CorpusSpec;
 use quartz::linalg::Matrix;
-use quartz::optim::OptimizerKind;
 use quartz::quant::{BlockQuantizer, QuantConfig, TriJointStore};
 use quartz::report::table::Table;
 use quartz::runtime::Runtime;
-use quartz::shampoo::ShampooVariant;
+use quartz::util::error::{Context, Result};
 use quartz::util::fmt_bytes;
 use quartz::util::rng::Rng;
 use std::collections::HashMap;
@@ -80,6 +78,7 @@ fn main() {
         "train" => cmd_train(&args),
         "run" => cmd_run(&args),
         "quant-demo" => cmd_quant_demo(),
+        "codecs" => cmd_codecs(),
         "list" => cmd_list(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -102,12 +101,35 @@ fn print_help() {
          commands:\n\
          \x20 table  --id <tab1..tab10|mem-breakdown|all> [--quick] [--out DIR]\n\
          \x20 figure --id <fig1|fig3|fig4|all> [--quick] [--out DIR]\n\
-         \x20 train  --model NAME [--base sgdm] [--shampoo cq-ef|cq|vq|32bit|none]\n\
+         \x20 train  --model NAME [--base sgdm] [--shampoo KEY]\n\
          \x20        [--steps N] [--lm] [--seed N]\n\
          \x20 run    --config FILE.toml [--out DIR]\n\
          \x20 quant-demo\n\
+         \x20 codecs                               # registered optimizer/codec keys\n\
          \x20 list"
     );
+    println!("\noptimizer keys (--shampoo / TOML `shampoo =`):");
+    for key in quartz::train::registry::stack_keys() {
+        let b = quartz::train::registry::lookup(key).unwrap();
+        println!("  {key:<8} {}", b.summary);
+    }
+}
+
+/// List every registered optimizer stack and preconditioner codec.
+fn cmd_codecs() -> Result<()> {
+    let mut t = Table::new("optimizer stacks (train::registry)", &["key", "summary"]);
+    for key in quartz::train::registry::stack_keys() {
+        let b = quartz::train::registry::lookup(key).unwrap();
+        t.row(vec![key.to_string(), b.summary.to_string()]);
+    }
+    t.print();
+    let mut t = Table::new("preconditioner codecs (quant::codec)", &["key", "summary"]);
+    for key in quartz::quant::codec::codec_keys() {
+        let b = quartz::quant::codec::lookup(key).unwrap();
+        t.row(vec![key.to_string(), b.summary.to_string()]);
+    }
+    t.print();
+    Ok(())
 }
 
 fn cmd_table(args: &Args) -> Result<()> {
@@ -126,22 +148,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let model = args.get("model").context("--model required")?;
     let steps: u64 = args.get("steps").unwrap_or("300").parse()?;
     let seed: u64 = args.get("seed").unwrap_or("0").parse()?;
-    let base = match args.get("base").unwrap_or("sgdm") {
-        "sgd" => OptimizerKind::Sgd,
-        "sgdm" => OptimizerKind::Sgdm,
-        "adam" => OptimizerKind::Adam,
-        "adamw" => OptimizerKind::AdamW,
-        "rmsprop" => OptimizerKind::RmsProp,
-        other => bail!("unknown base '{other}'"),
-    };
-    let hyper = OptimizerSpec::paper_hyper(base);
-    let opt = match args.get("shampoo").unwrap_or("cq-ef") {
-        "none" => OptimizerSpec::base_only(base, hyper),
-        s => {
-            let variant = ShampooVariant::parse(s).context("bad --shampoo")?;
-            OptimizerSpec::with_shampoo(base, hyper, tables::scaled_shampoo(variant))
-        }
-    };
+    let base_name = args.get("base").unwrap_or("sgdm");
+    // Any `train::registry` key works here — built-in variants, aliases,
+    // or stacks registered at runtime (`quartz codecs` lists them).
+    let mut opt = OptimizerSpec::from_names(base_name, args.get("shampoo").unwrap_or("cq-ef"))?;
+    if let Some(cfg) = &mut opt.shampoo {
+        // Analog-scale intervals (paper ratios over a few hundred steps).
+        let scaled = tables::scaled_shampoo(cfg.variant);
+        cfg.t1 = scaled.t1;
+        cfg.t2 = scaled.t2;
+        cfg.max_order = scaled.max_order;
+    }
     let workload = if args.has("lm") || model.starts_with("lm_") {
         Workload::Tokens(CorpusSpec { seed, ..Default::default() })
     } else {
@@ -199,7 +216,8 @@ fn cmd_run(args: &Args) -> Result<()> {
                 format!("{:.1}", m.wall_secs),
             ),
             (None, Some(e)) => {
-                (format!("ERR {}", e.lines().next().unwrap_or("")), "-".to_string(), "-".to_string())
+                let first = e.lines().next().unwrap_or("");
+                (format!("ERR {first}"), "-".to_string(), "-".to_string())
             }
             (None, None) => ("OOM".to_string(), fmt_bytes(o.modeled_bytes as u64), "-".to_string()),
         };

@@ -87,6 +87,10 @@ fn side_bytes(dim: usize, cfg: &ShampooConfig) -> usize {
             // lower-triangle nibbles only + diag + 1 scale set
             ((dim * (dim + 1)) / 2).div_ceil(2) + dim * 4 + n_scales(dim, cfg.quant.block) * 4
         }
+        ShampooVariant::Bw8 => {
+            // one byte per off-diag code + scales + f32 diagonal
+            dim * dim + n_scales(dim, cfg.quant.block) * 4 + dim * 4
+        }
     }
 }
 
@@ -97,6 +101,8 @@ fn root_bytes(dim: usize, cfg: &ShampooConfig) -> usize {
     match cfg.variant {
         ShampooVariant::Full32 => f32_full,
         _ if !quantized => f32_full,
+        // 8-bit roots: one byte per off-diag code + scales + diagonal.
+        ShampooVariant::Bw8 => dim * dim + n_scales(dim, cfg.quant.block) * 4 + dim * 4,
         // All 4-bit variants quantize the roots off-diagonally (Sec. 4.2:
         // roots are NOT Cholesky-factored — they're used every step).
         ShampooVariant::Vq4 if cfg.vq_quantize_diag => {
@@ -144,6 +150,7 @@ mod tests {
             ShampooVariant::Vq4,
             ShampooVariant::Cq4 { error_feedback: false },
             ShampooVariant::Cq4 { error_feedback: true },
+            ShampooVariant::Bw8,
         ] {
             let (measured, cfg) = run_one_step(variant, &shapes);
             let predicted = MemoryModel::new(&shapes).shampoo_bytes(&cfg);
@@ -199,6 +206,22 @@ mod tests {
         let vq = mm.shampoo_bytes(&mk(ShampooVariant::Vq4));
         let cqef = mm.shampoo_bytes(&mk(ShampooVariant::Cq4 { error_feedback: true }));
         assert!(cqef <= vq + 2 * 16 * 4, "cqef={cqef} vq={vq}");
+    }
+
+    /// 8-bit lands strictly between 4-bit VQ and f32 (≈ 2× VQ's codes).
+    #[test]
+    fn bw8_is_between_vq_and_full() {
+        let shapes = [(512, 512)];
+        let mk = |variant| ShampooConfig {
+            variant,
+            quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mm = MemoryModel::new(&shapes);
+        let vq = mm.shampoo_bytes(&mk(ShampooVariant::Vq4));
+        let bw8 = mm.shampoo_bytes(&mk(ShampooVariant::Bw8));
+        let full = mm.shampoo_bytes(&mk(ShampooVariant::Full32));
+        assert!(vq < bw8 && bw8 < full / 3, "vq={vq} bw8={bw8} full={full}");
     }
 
     #[test]

@@ -51,7 +51,14 @@ mod tests {
     use super::*;
 
     fn hyper(wd: f32) -> Hyper {
-        Hyper { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: wd, ..Default::default() }
+        Hyper {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: wd,
+            ..Default::default()
+        }
     }
 
     #[test]

@@ -1,10 +1,13 @@
-//! First-order base optimizers `F` (paper Algorithm 1, step 16).
+//! The optimizer API: the [`Optimizer`] trait plus the first-order base
+//! rules `F` (paper Algorithm 1, step 16).
 //!
-//! Shampoo wraps a base optimizer: the preconditioned (and grafted)
-//! gradient replaces the raw gradient fed to `F`. We implement the bases the
-//! paper evaluates — SGDM (Tab. 3/4), AdamW (Tab. 3–6), RMSProp (Tab. 8) —
-//! plus plain SGD and Adam, cosine/warmup LR schedules, and the grafting
-//! trick of Eq. (13) [1].
+//! Every full optimizer — a base rule alone or Shampoo wrapping one —
+//! implements [`Optimizer`] (`step`/`state_bytes`/`name`); the training
+//! loop, coordinator, and examples see only that trait, boxed inside
+//! `train::OptimizerStack` and constructed by string key through
+//! `train::registry`. The concrete bases are the ones the paper evaluates —
+//! SGDM (Tab. 3/4), AdamW (Tab. 3–6), RMSProp (Tab. 8) — plus plain SGD and
+//! Adam, cosine/warmup LR schedules, and the grafting trick of Eq. (13).
 
 pub mod optimizer;
 pub mod sgd;
@@ -14,5 +17,5 @@ pub mod grafting;
 pub mod schedule;
 
 pub use grafting::graft;
-pub use optimizer::{BaseOptimizer, OptimizerKind, ParamState};
+pub use optimizer::{BaseOptimizer, Optimizer, OptimizerKind, ParamState};
 pub use schedule::LrSchedule;

@@ -1,6 +1,32 @@
-//! The base-optimizer abstraction `F(W, s, Ĝ)` of Algorithm 1/2.
+//! The base-optimizer abstraction `F(W, s, Ĝ)` of Algorithm 1/2, and the
+//! [`Optimizer`] trait every full optimizer (base or Shampoo-wrapped)
+//! implements.
 
 use crate::linalg::Matrix;
+
+/// A complete optimizer over a fixed parameter list: one `step` advances
+/// every parameter given its gradient. Implemented by [`BaseOptimizer`]
+/// (first-order rules) and `shampoo::Shampoo` (preconditioned); the trainer,
+/// coordinator, and examples program exclusively against this trait (boxed
+/// inside `train::OptimizerStack`), so new optimizers plug in without
+/// touching any of them.
+pub trait Optimizer: Send {
+    /// Allocate per-parameter state for `n_params` parameters. Optimizers
+    /// built with shapes up-front may make this a no-op.
+    fn init(&mut self, n_params: usize);
+
+    /// Apply one update across all parameters. `k` is the 1-based global
+    /// step (drives preconditioner refresh schedules); `lr_scale` is the
+    /// LR-schedule multiplier.
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], k: u64, lr_scale: f32);
+
+    /// Persistent optimizer-state bytes (the paper's memory columns).
+    fn state_bytes(&self) -> usize;
+
+    /// Human label for table rows ("SGDM + 4-bit (CQ+EF) Shampoo" style) —
+    /// the single naming source for every stack.
+    fn name(&self) -> String;
+}
 
 /// Which first-order rule is in use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -20,6 +46,18 @@ impl OptimizerKind {
             OptimizerKind::Adam => "adam",
             OptimizerKind::AdamW => "adamw",
             OptimizerKind::RmsProp => "rmsprop",
+        }
+    }
+
+    /// Parse the config-file spelling (inverse of [`OptimizerKind::name`]).
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        match s {
+            "sgd" => Some(OptimizerKind::Sgd),
+            "sgdm" => Some(OptimizerKind::Sgdm),
+            "adam" => Some(OptimizerKind::Adam),
+            "adamw" => Some(OptimizerKind::AdamW),
+            "rmsprop" => Some(OptimizerKind::RmsProp),
+            _ => None,
         }
     }
 
@@ -129,23 +167,55 @@ impl BaseOptimizer {
     /// multiplier).
     pub fn step_param(&mut self, idx: usize, w: &mut Matrix, g: &Matrix, lr_scale: f32) {
         assert!(idx < self.states.len(), "optimizer not initialized for param {idx}");
-        let lr = self.hyper.lr * lr_scale;
-        match self.kind {
+        Self::step_one(&self.hyper, self.kind, &mut self.states[idx], w, g, lr_scale);
+    }
+
+    /// The rule dispatch with explicit state — lets callers holding disjoint
+    /// `&mut ParamState`s (e.g. Shampoo's parallel per-layer loop) update
+    /// parameters concurrently without borrowing the whole optimizer.
+    pub fn step_one(
+        hyper: &Hyper,
+        kind: OptimizerKind,
+        state: &mut ParamState,
+        w: &mut Matrix,
+        g: &Matrix,
+        lr_scale: f32,
+    ) {
+        let lr = hyper.lr * lr_scale;
+        match kind {
             OptimizerKind::Sgd | OptimizerKind::Sgdm => {
-                super::sgd::step(&self.hyper, self.kind, &mut self.states[idx], w, g, lr)
+                super::sgd::step(hyper, kind, state, w, g, lr)
             }
             OptimizerKind::Adam | OptimizerKind::AdamW => {
-                super::adam::step(&self.hyper, self.kind, &mut self.states[idx], w, g, lr)
+                super::adam::step(hyper, kind, state, w, g, lr)
             }
-            OptimizerKind::RmsProp => {
-                super::rmsprop::step(&self.hyper, &mut self.states[idx], w, g, lr)
-            }
+            OptimizerKind::RmsProp => super::rmsprop::step(hyper, state, w, g, lr),
         }
     }
 
     /// Total optimizer-state bytes currently held.
     pub fn state_bytes(&self) -> usize {
         self.states.iter().map(|s| s.size_bytes()).sum()
+    }
+}
+
+impl Optimizer for BaseOptimizer {
+    fn init(&mut self, n_params: usize) {
+        BaseOptimizer::init(self, n_params);
+    }
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], _k: u64, lr_scale: f32) {
+        for (i, (w, g)) in params.iter_mut().zip(grads.iter()).enumerate() {
+            self.step_param(i, w, g, lr_scale);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        BaseOptimizer::state_bytes(self)
+    }
+
+    fn name(&self) -> String {
+        self.kind.name().to_uppercase()
     }
 }
 
@@ -169,5 +239,38 @@ mod tests {
         assert_eq!(opt.state_bytes(), 0);
         opt.step_param(0, &mut w, &g, 1.0);
         assert_eq!(opt.state_bytes(), 2 * 10 * 10 * 4);
+    }
+
+    #[test]
+    fn kind_parse_inverts_name() {
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::Sgdm,
+            OptimizerKind::Adam,
+            OptimizerKind::AdamW,
+            OptimizerKind::RmsProp,
+        ] {
+            assert_eq!(OptimizerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(OptimizerKind::parse("lion"), None);
+    }
+
+    #[test]
+    fn trait_step_matches_per_param_loop() {
+        let mut a = BaseOptimizer::sgd(0.5, 0.0);
+        let mut b = BaseOptimizer::sgd(0.5, 0.0);
+        a.init(2);
+        b.init(2);
+        let grads = vec![Matrix::eye(3), Matrix::eye_scaled(3, 2.0)];
+        let mut pa = vec![Matrix::zeros(3, 3), Matrix::zeros(3, 3)];
+        let mut pb = pa.clone();
+        Optimizer::step(&mut a, &mut pa, &grads, 1, 1.0);
+        for (i, (w, g)) in pb.iter_mut().zip(grads.iter()).enumerate() {
+            b.step_param(i, w, g, 1.0);
+        }
+        for (x, y) in pa.iter().zip(pb.iter()) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(Optimizer::name(&a), "SGD");
     }
 }

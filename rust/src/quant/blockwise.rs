@@ -11,7 +11,7 @@ use super::packed::PackedNibbles;
 use crate::linalg::Matrix;
 
 /// Quantizer configuration (paper defaults: b=4, B=64, linear-2).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct QuantConfig {
     pub bits: u32,
     pub block: usize,
@@ -26,6 +26,62 @@ impl Default for QuantConfig {
     }
 }
 
+/// Physical code storage: nibble-packed for `b ≤ 4`, one byte per code
+/// above (the 8-bit codecs store one code per byte; no packing needed).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodeStore {
+    Nibbles(PackedNibbles),
+    Bytes(Vec<u8>),
+}
+
+impl CodeStore {
+    /// Zero-initialized storage for `len` codes of width `bits`.
+    pub fn zeros(len: usize, bits: u32) -> CodeStore {
+        if bits <= 4 {
+            CodeStore::Nibbles(PackedNibbles::zeros(len))
+        } else {
+            CodeStore::Bytes(vec![0u8; len])
+        }
+    }
+
+    /// Code at index `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        match self {
+            CodeStore::Nibbles(p) => p.get(i),
+            CodeStore::Bytes(v) => v[i],
+        }
+    }
+
+    /// Store code `c` at index `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, c: u8) {
+        match self {
+            CodeStore::Nibbles(p) => p.set(i, c),
+            CodeStore::Bytes(v) => v[i] = c,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            CodeStore::Nibbles(p) => p.len(),
+            CodeStore::Bytes(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Physical storage bytes (what the memory accountant counts).
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            CodeStore::Nibbles(p) => p.size_bytes(),
+            CodeStore::Bytes(v) => v.len(),
+        }
+    }
+}
+
 /// A block-quantized matrix: packed codes + per-block scales.
 #[derive(Clone, Debug)]
 pub struct QuantizedMatrix {
@@ -35,7 +91,7 @@ pub struct QuantizedMatrix {
     pub bits: u32,
     pub mapping: Mapping,
     /// Row-major packed codes (same element order as the source matrix).
-    pub codes: PackedNibbles,
+    pub codes: CodeStore,
     /// Per-block normalization factors `N_p`, blocks in row-major block order.
     pub scales: Vec<f32>,
 }
@@ -63,7 +119,7 @@ impl BlockQuantizer {
         let bm = m.div_ceil(b);
         let bn = n.div_ceil(b);
         let mut scales = vec![0.0f32; bm * bn];
-        let mut codes = PackedNibbles::zeros(m * n);
+        let mut codes = CodeStore::zeros(m * n, self.cfg.bits);
 
         let zero_code = self.codebook.encode(0.0);
         for bi in 0..bm {
@@ -221,6 +277,21 @@ mod tests {
         let payload = 128 * 128 / 2;
         let scales = 4 * 4; // 2x2 blocks of 64 → 4 scales × 4 bytes
         assert_eq!(qx.size_bytes(), payload + scales);
+    }
+
+    #[test]
+    fn eight_bit_codes_use_one_byte_each_and_beat_four_bit() {
+        let mut rng = Rng::new(5);
+        let x = Matrix::randn(32, 32, 1.0, &mut rng);
+        let q4 = quantizer(16);
+        let q8 = BlockQuantizer::new(QuantConfig { bits: 8, block: 16, ..Default::default() });
+        let e4 = q4.roundtrip(&x).max_abs_diff(&x);
+        let e8 = q8.roundtrip(&x).max_abs_diff(&x);
+        assert!(e8 < e4 * 0.5, "8-bit must beat 4-bit: e8={e8} e4={e4}");
+        let qx = q8.quantize(&x);
+        assert!(matches!(qx.codes, CodeStore::Bytes(_)));
+        // One byte per code + 2×2 blocks of f32 scales.
+        assert_eq!(qx.size_bytes(), 32 * 32 + 4 * 4);
     }
 
     #[test]

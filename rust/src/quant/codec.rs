@@ -1,0 +1,510 @@
+//! The open preconditioner-codec API.
+//!
+//! A [`PrecondCodec`] is the persistent storage of ONE preconditioner-shaped
+//! matrix slot (a Gram side `L`/`R` or an inverse root `L̂`/`R̂`): it owns the
+//! representation (f32, 4-bit off-diagonal, quantized Cholesky factor, …),
+//! knows how to absorb a fresh f32 value (`store`), reconstruct it (`load`),
+//! and account for its exact physical bytes (`size_bytes`).
+//!
+//! Every variant the paper studies ships as a codec:
+//!
+//! | key        | representation                                   | paper  |
+//! |------------|--------------------------------------------------|--------|
+//! | `f32`      | dense f32                                        | Alg. 2 |
+//! | `vq4`      | 4-bit block-wise, f32 diagonal                   | §4.1   |
+//! | `vq4-full` | 4-bit block-wise incl. diagonal (Tab. 2 ablation) | §3.2   |
+//! | `cq4`      | 4-bit quantized Cholesky factor                  | §4.2   |
+//! | `cq4-ef`   | `cq4` + error feedback in the upper triangle     | §4.3   |
+//! | `bw8`      | 8-bit block-wise, f32 diagonal                   | —      |
+//!
+//! The set is *open*: [`register`] adds a codec at runtime, and everything
+//! above the quant layer (Shampoo state, TOML specs, the memory accountant's
+//! callers, the codec benches and the codec-generic test suite) resolves
+//! codecs through [`lookup`] by string key. Adding a representation is one
+//! `impl PrecondCodec` plus one `register` call — no enum arms to edit.
+
+use super::blockwise::{BlockQuantizer, QuantConfig, QuantizedMatrix};
+use super::error_feedback::ErrorFeedback;
+use super::offdiag::{dequantize_offdiag, quantize_offdiag, OffDiagQuantized};
+use super::tri_store::TriJointStore;
+use crate::linalg::{cholesky_jittered, matmul_nt, Matrix};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Shared context handed to codec constructors: the numerical-stability
+/// constant, the EF momentum, and the experiment's block quantizer.
+#[derive(Clone, Debug)]
+pub struct CodecCtx {
+    /// Stability constant ε (initial state is `ε·I` for sides).
+    pub eps: f32,
+    /// Error-feedback EMA momentum βₑ (Eq. 11); ignored by non-EF codecs.
+    pub beta_e: f32,
+    /// The experiment's 4-bit block quantizer (block size, mapping).
+    pub quantizer: Arc<BlockQuantizer>,
+}
+
+impl CodecCtx {
+    pub fn new(eps: f32, beta_e: f32, quantizer: Arc<BlockQuantizer>) -> CodecCtx {
+        CodecCtx { eps, beta_e, quantizer }
+    }
+}
+
+/// Persistent storage of one preconditioner matrix, behind a uniform
+/// store/load/account interface. Implementations own their representation.
+pub trait PrecondCodec: std::fmt::Debug + Send {
+    /// Registry key of this codec (`"f32"`, `"cq4-ef"`, …).
+    fn key(&self) -> &'static str;
+
+    /// Reset to the canonical initial state for a `dim×dim` slot: the
+    /// stored value reconstructs to `eps·I` (Algorithm 1/2 inputs).
+    fn init(&mut self, dim: usize, eps: f32) {
+        self.store(&Matrix::eye_scaled(dim, eps));
+    }
+
+    /// Absorb a fresh f32 value into this representation. For side codecs
+    /// `x` is the EMA'd Gram statistic (symmetric PSD up to quantization
+    /// noise); EF-aware codecs compensate with their error state here.
+    fn store(&mut self, x: &Matrix);
+
+    /// Reconstruct the stored matrix to f32 (Eq. (5) `D(L̄)`, or Eq. (7)
+    /// `D(C̄)·D(C̄)ᵀ` for Cholesky codecs).
+    fn load(&self) -> Matrix;
+
+    /// Exact physical bytes of the persistent state (the quantity behind
+    /// the paper's memory tables; no caches, no transient scratch).
+    fn size_bytes(&self) -> usize;
+
+    /// The strictly-lower error-feedback state, if this codec keeps one.
+    fn error_state(&self) -> Option<Matrix> {
+        None
+    }
+
+    /// Clone through the trait object (enables `Clone` for boxed codecs).
+    fn clone_box(&self) -> Box<dyn PrecondCodec>;
+}
+
+impl Clone for Box<dyn PrecondCodec> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+// ---------------------------------------------------------------- f32 ----
+
+/// Dense f32 storage (Algorithm 2, and the small-tensor exemption).
+#[derive(Clone, Debug, Default)]
+pub struct F32Codec {
+    m: Option<Matrix>,
+}
+
+impl PrecondCodec for F32Codec {
+    fn key(&self) -> &'static str {
+        "f32"
+    }
+
+    fn store(&mut self, x: &Matrix) {
+        self.m = Some(x.clone());
+    }
+
+    fn load(&self) -> Matrix {
+        self.m.clone().expect("F32Codec::load before store")
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.m.as_ref().map(|m| m.size_bytes()).unwrap_or(0)
+    }
+
+    fn clone_box(&self) -> Box<dyn PrecondCodec> {
+        Box::new(self.clone())
+    }
+}
+
+// ------------------------------------------------------ block-wise VQ ----
+
+/// Block-wise quantization with an exact f32 diagonal (Sec. 4.1's VQ at
+/// b = 4; the same struct at b = 8 is the `bw8` codec).
+#[derive(Clone, Debug)]
+pub struct OffDiagCodec {
+    key: &'static str,
+    q: Arc<BlockQuantizer>,
+    s: Option<OffDiagQuantized>,
+}
+
+impl OffDiagCodec {
+    pub fn new(key: &'static str, q: Arc<BlockQuantizer>) -> OffDiagCodec {
+        OffDiagCodec { key, q, s: None }
+    }
+}
+
+impl PrecondCodec for OffDiagCodec {
+    fn key(&self) -> &'static str {
+        self.key
+    }
+
+    fn store(&mut self, x: &Matrix) {
+        self.s = Some(quantize_offdiag(x, &self.q));
+    }
+
+    fn load(&self) -> Matrix {
+        dequantize_offdiag(self.s.as_ref().expect("OffDiagCodec::load before store"), &self.q)
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.s.as_ref().map(|s| s.size_bytes()).unwrap_or(0)
+    }
+
+    fn clone_box(&self) -> Box<dyn PrecondCodec> {
+        Box::new(self.clone())
+    }
+}
+
+/// Full-grid block-wise quantization including the diagonal (Tab. 2's
+/// "Original" ablation).
+#[derive(Clone, Debug)]
+pub struct FullGridCodec {
+    key: &'static str,
+    q: Arc<BlockQuantizer>,
+    s: Option<QuantizedMatrix>,
+}
+
+impl FullGridCodec {
+    pub fn new(key: &'static str, q: Arc<BlockQuantizer>) -> FullGridCodec {
+        FullGridCodec { key, q, s: None }
+    }
+}
+
+impl PrecondCodec for FullGridCodec {
+    fn key(&self) -> &'static str {
+        self.key
+    }
+
+    fn store(&mut self, x: &Matrix) {
+        self.s = Some(self.q.quantize(x));
+    }
+
+    fn load(&self) -> Matrix {
+        self.q.dequantize(self.s.as_ref().expect("FullGridCodec::load before store"))
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.s.as_ref().map(|s| s.size_bytes()).unwrap_or(0)
+    }
+
+    fn clone_box(&self) -> Box<dyn PrecondCodec> {
+        Box::new(self.clone())
+    }
+}
+
+// -------------------------------------------------- Cholesky quantized ----
+
+/// 4-bit Cholesky quantization (Sec. 4.2), optionally with error feedback
+/// (Sec. 4.3): `store` factorizes the incoming PSD matrix, compensates with
+/// the EF state, and packs factor + error into the Fig. 2 joint triangular
+/// buffer; `load` reconstructs `D(C̄)·D(C̄)ᵀ` (PSD by construction).
+#[derive(Clone, Debug)]
+pub struct CholeskyCodec {
+    ef: bool,
+    eps: f32,
+    beta_e: f32,
+    q: Arc<BlockQuantizer>,
+    s: Option<TriJointStore>,
+}
+
+impl CholeskyCodec {
+    pub fn new(ef: bool, ctx: &CodecCtx) -> CholeskyCodec {
+        CholeskyCodec {
+            ef,
+            eps: ctx.eps,
+            beta_e: ctx.beta_e,
+            q: Arc::clone(&ctx.quantizer),
+            s: None,
+        }
+    }
+}
+
+impl PrecondCodec for CholeskyCodec {
+    fn key(&self) -> &'static str {
+        if self.ef {
+            "cq4-ef"
+        } else {
+            "cq4"
+        }
+    }
+
+    /// Algorithm 1 inputs: `C₀ = √ε·I`, `E₀ = 0` (stored directly — no
+    /// factorization round-trip, so the initial bits match the paper).
+    fn init(&mut self, dim: usize, eps: f32) {
+        self.eps = eps;
+        self.s = Some(TriJointStore::init(dim, eps, &self.q));
+    }
+
+    fn store(&mut self, x: &Matrix) {
+        // Eq. (7): C = Cholesky(L + εI); escalating jitter guards
+        // quantization-induced PSD violations.
+        let (c, _) = match cholesky_jittered(x, self.eps, 12) {
+            Ok(v) => v,
+            Err(_) => {
+                // Pathological input (e.g. non-finite gradient blew up the
+                // Gram). Reset to the initial factor — the EMA will rebuild
+                // state over the next T1 windows.
+                (Matrix::eye_scaled(x.rows(), self.eps.sqrt()), self.eps)
+            }
+        };
+        if self.ef {
+            let e_prev = match &self.s {
+                Some(s) => s.load(&self.q).1,
+                None => Matrix::zeros(c.rows(), c.cols()),
+            };
+            let efb = ErrorFeedback::new(self.beta_e);
+            // Eq. (10): quantize the compensated factor.
+            let comp = efb.compensate(&c, &e_prev);
+            // D(C̄): round-trip the strictly-lower part (diagonal is stored
+            // exactly, so it carries no quantization error).
+            let n = comp.rows();
+            let comp_off = Matrix::from_fn(n, n, |i, j| if i > j { comp[(i, j)] } else { 0.0 });
+            let mut c_deq = self.q.roundtrip(&comp_off);
+            for i in 0..n {
+                c_deq[(i, i)] = comp[(i, i)];
+            }
+            // Eq. (11): EMA of the residual.
+            let e_new = efb.update(&c, &e_prev, &c_deq);
+            self.s = Some(TriJointStore::store(&comp, &e_new, &self.q));
+        } else {
+            self.s = Some(TriJointStore::store(&c, &Matrix::zeros(c.rows(), c.cols()), &self.q));
+        }
+    }
+
+    fn load(&self) -> Matrix {
+        let (c, _) = self.s.as_ref().expect("CholeskyCodec::load before store").load(&self.q);
+        matmul_nt(&c, &c)
+    }
+
+    fn size_bytes(&self) -> usize {
+        match &self.s {
+            Some(s) if self.ef => s.size_bytes(),
+            Some(s) => s.size_bytes_cq_only(),
+            None => 0,
+        }
+    }
+
+    fn error_state(&self) -> Option<Matrix> {
+        if self.ef {
+            self.s.as_ref().map(|s| s.load(&self.q).1)
+        } else {
+            None
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn PrecondCodec> {
+        Box::new(self.clone())
+    }
+}
+
+// ----------------------------------------------------------- registry ----
+
+/// One registry entry: constructors for the side (`L`/`R`) and root
+/// (`L̂`/`R̂`) storage of this scheme. They may differ — CQ factorizes the
+/// sides but keeps roots off-diagonal-quantized, because roots are applied
+/// every step (Sec. 4.2).
+#[derive(Clone, Copy)]
+pub struct CodecBuilder {
+    pub key: &'static str,
+    /// One-line description for docs/CLI listings.
+    pub summary: &'static str,
+    pub side: fn(&CodecCtx) -> Box<dyn PrecondCodec>,
+    pub root: fn(&CodecCtx) -> Box<dyn PrecondCodec>,
+}
+
+fn f32_ctor(_ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::new(F32Codec::default())
+}
+
+fn vq4_ctor(ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::new(OffDiagCodec::new("vq4", Arc::clone(&ctx.quantizer)))
+}
+
+fn vq4_full_ctor(ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::new(FullGridCodec::new("vq4-full", Arc::clone(&ctx.quantizer)))
+}
+
+fn cq4_ctor(ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::new(CholeskyCodec::new(false, ctx))
+}
+
+fn cq4_ef_ctor(ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::new(CholeskyCodec::new(true, ctx))
+}
+
+/// An 8-bit quantizer mirroring the context's block/mapping settings,
+/// cached per distinct config so the hundreds of codec instances of a large
+/// model share one 256-level codebook (like the 4-bit one in the ctx).
+fn eight_bit(ctx: &CodecCtx) -> Arc<BlockQuantizer> {
+    static CACHE: OnceLock<Mutex<Vec<Arc<BlockQuantizer>>>> = OnceLock::new();
+    let cfg = QuantConfig { bits: 8, ..ctx.quantizer.cfg };
+    let mut cache = CACHE
+        .get_or_init(|| Mutex::new(Vec::new()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    if let Some(q) = cache.iter().find(|q| q.cfg == cfg) {
+        return Arc::clone(q);
+    }
+    let q = Arc::new(BlockQuantizer::new(cfg));
+    cache.push(Arc::clone(&q));
+    q
+}
+
+fn bw8_ctor(ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::new(OffDiagCodec::new("bw8", eight_bit(ctx)))
+}
+
+fn builtin_codecs() -> Vec<CodecBuilder> {
+    vec![
+        CodecBuilder {
+            key: "f32",
+            summary: "dense f32 (Algorithm 2)",
+            side: f32_ctor,
+            root: f32_ctor,
+        },
+        CodecBuilder {
+            key: "vq4",
+            summary: "4-bit block-wise, f32 diagonal (Sec. 4.1)",
+            side: vq4_ctor,
+            root: vq4_ctor,
+        },
+        CodecBuilder {
+            key: "vq4-full",
+            summary: "4-bit block-wise incl. diagonal (Tab. 2 ablation)",
+            side: vq4_full_ctor,
+            root: vq4_full_ctor,
+        },
+        CodecBuilder {
+            key: "cq4",
+            summary: "4-bit quantized Cholesky factor (Sec. 4.2)",
+            side: cq4_ctor,
+            root: vq4_ctor,
+        },
+        CodecBuilder {
+            key: "cq4-ef",
+            summary: "4-bit Cholesky + error feedback (Sec. 4.3, Alg. 1)",
+            side: cq4_ef_ctor,
+            root: vq4_ctor,
+        },
+        CodecBuilder {
+            key: "bw8",
+            summary: "8-bit block-wise, f32 diagonal",
+            side: bw8_ctor,
+            root: bw8_ctor,
+        },
+    ]
+}
+
+fn registry() -> &'static Mutex<Vec<CodecBuilder>> {
+    static REGISTRY: OnceLock<Mutex<Vec<CodecBuilder>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(builtin_codecs()))
+}
+
+/// Register a codec. Returns `false` (and changes nothing) if the key is
+/// already taken — built-ins cannot be shadowed.
+pub fn register(builder: CodecBuilder) -> bool {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    if reg.iter().any(|b| b.key == builder.key) {
+        return false;
+    }
+    reg.push(builder);
+    true
+}
+
+/// Look up a codec builder by key.
+pub fn lookup(key: &str) -> Option<CodecBuilder> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().find(|b| b.key == key).copied()
+}
+
+/// All registered keys, built-ins first, registration order after.
+pub fn codec_keys() -> Vec<&'static str> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().map(|b| b.key).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ctx() -> CodecCtx {
+        let q = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
+        CodecCtx::new(1e-6, 0.95, Arc::new(q))
+    }
+
+    #[test]
+    fn builtins_are_registered() {
+        for key in ["f32", "vq4", "vq4-full", "cq4", "cq4-ef", "bw8"] {
+            let b = lookup(key).unwrap_or_else(|| panic!("missing builtin '{key}'"));
+            assert_eq!(b.key, key);
+        }
+        assert!(lookup("no-such-codec").is_none());
+    }
+
+    #[test]
+    fn builtin_keys_cannot_be_shadowed() {
+        let b = lookup("f32").unwrap();
+        assert!(!register(b), "re-registering an existing key must fail");
+    }
+
+    #[test]
+    fn init_reconstructs_eps_identity() {
+        let ctx = ctx();
+        for key in codec_keys() {
+            let b = lookup(key).unwrap();
+            let mut side = (b.side)(&ctx);
+            side.init(12, 1e-6);
+            let back = side.load();
+            let want = Matrix::eye_scaled(12, 1e-6);
+            assert!(back.max_abs_diff(&want) < 1e-6, "{key}: init must be ≈ ε·I");
+        }
+    }
+
+    #[test]
+    fn store_load_roundtrips_within_codec_error() {
+        let ctx = ctx();
+        let mut rng = Rng::new(1);
+        let g = Matrix::randn(16, 20, 1.0, &mut rng);
+        let mut spd = crate::linalg::syrk(&g);
+        spd.add_diag(0.5);
+        for key in codec_keys() {
+            let b = lookup(key).unwrap();
+            let mut side = (b.side)(&ctx);
+            side.store(&spd);
+            let back = side.load();
+            let rel = crate::linalg::relative_error(&spd, &back);
+            assert!(rel < 0.35, "{key}: relative store/load error {rel}");
+        }
+    }
+
+    #[test]
+    fn boxed_codecs_clone_deeply() {
+        let ctx = ctx();
+        let mut rng = Rng::new(2);
+        let g = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut spd = crate::linalg::syrk(&g);
+        spd.add_diag(1.0);
+        let mut a: Box<dyn PrecondCodec> = (lookup("vq4").unwrap().side)(&ctx);
+        a.store(&spd);
+        let b = a.clone();
+        a.store(&Matrix::eye(8));
+        // The clone must keep the original value.
+        assert!(b.load().max_abs_diff(&spd) < 0.35 * crate::linalg::max_abs(&spd));
+    }
+
+    #[test]
+    fn only_ef_codec_exposes_error_state() {
+        let ctx = ctx();
+        for key in ["f32", "vq4", "vq4-full", "cq4", "bw8"] {
+            let mut c = (lookup(key).unwrap().side)(&ctx);
+            c.init(8, 1e-6);
+            assert!(c.error_state().is_none(), "{key} must not carry EF state");
+        }
+        let mut c = (lookup("cq4-ef").unwrap().side)(&ctx);
+        c.init(8, 1e-6);
+        assert!(c.error_state().is_some());
+    }
+}

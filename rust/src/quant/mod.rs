@@ -1,15 +1,21 @@
-//! 4-bit quantization library (paper Sec. 3.2, 4.1–4.3).
+//! Quantization library (paper Sec. 3.2, 4.1–4.3) and the open
+//! preconditioner-codec API.
 //!
 //! * [`mapping`] — the codebooks: **linear-2** (Eq. 4, the paper's choice),
-//!   plain linear, and dynamic-exponent mappings.
+//!   plain linear, and dynamic-exponent mappings, at any bit width.
 //! * [`blockwise`] — B×B block-wise absmax quantization (Sec. 3.2) with
-//!   packed 4-bit storage.
+//!   packed 4-bit (or byte-per-code 8-bit) storage.
 //! * [`offdiag`] — off-diagonal quantization keeping the diagonal in f32
 //!   (Sec. 4.1 / Tab. 2, and the CQ diagonal rule of Sec. 4.2).
 //! * [`tri_store`] — the Fig. 2 joint container: quantized Cholesky factor
 //!   in the lower triangle, quantized EF error state in the upper triangle
 //!   of the same packed buffer.
 //! * [`error_feedback`] — the EMA error-state update of Eq. (11).
+//! * [`codec`] — the [`PrecondCodec`] trait + string-keyed registry that
+//!   every preconditioner representation (f32 / vq4 / vq4-full / cq4 /
+//!   cq4-ef / bw8 / user-registered) plugs into. The Shampoo state layer
+//!   stores all of `L`, `R`, `L̂`, `R̂` behind this trait; see the README's
+//!   "add your own codec" walkthrough.
 
 pub mod mapping;
 pub mod blockwise;
@@ -17,8 +23,10 @@ pub mod packed;
 pub mod offdiag;
 pub mod tri_store;
 pub mod error_feedback;
+pub mod codec;
 
-pub use blockwise::{BlockQuantizer, QuantConfig, QuantizedMatrix};
+pub use blockwise::{BlockQuantizer, CodeStore, QuantConfig, QuantizedMatrix};
+pub use codec::{CodecBuilder, CodecCtx, PrecondCodec};
 pub use error_feedback::ErrorFeedback;
 pub use mapping::Mapping;
 pub use offdiag::{dequantize_offdiag, quantize_offdiag, OffDiagQuantized};

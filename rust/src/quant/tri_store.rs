@@ -8,7 +8,7 @@
 //! no more code bytes than vanilla 4-bit quantization of one full matrix
 //! (Sec. 4.3).
 
-use super::blockwise::{BlockQuantizer, QuantizedMatrix};
+use super::blockwise::{BlockQuantizer, CodeStore, QuantizedMatrix};
 use super::packed::PackedNibbles;
 use crate::linalg::Matrix;
 
@@ -41,6 +41,9 @@ impl TriJointStore {
     /// diagonal of `e` are ignored.
     pub fn store(c: &Matrix, e: &Matrix, quantizer: &BlockQuantizer) -> TriJointStore {
         assert!(c.is_square() && e.is_square() && c.rows() == e.rows());
+        // The joint nibble grid is a 4-bit layout by construction (Fig. 2);
+        // wider codes would not fit two triangles in one n×n grid.
+        debug_assert!(quantizer.cfg.bits <= 4, "TriJointStore requires b ≤ 4");
         let n = c.rows();
 
         // Strictly-lower copies for quantization (diag of C kept f32).
@@ -92,7 +95,7 @@ impl TriJointStore {
             block: self.block,
             bits: quantizer.cfg.bits,
             mapping: quantizer.cfg.mapping,
-            codes: c_codes,
+            codes: CodeStore::Nibbles(c_codes),
             scales: self.c_scales.clone(),
         };
         let qe = QuantizedMatrix {
@@ -101,7 +104,7 @@ impl TriJointStore {
             block: self.block,
             bits: quantizer.cfg.bits,
             mapping: quantizer.cfg.mapping,
-            codes: e_codes,
+            codes: CodeStore::Nibbles(e_codes),
             scales: self.e_scales.clone(),
         };
         let mut c = quantizer.dequantize(&qc);

@@ -4,6 +4,11 @@ use crate::linalg::schur_newton::SchurNewtonConfig;
 use crate::quant::QuantConfig;
 
 /// Which preconditioner representation the optimizer keeps.
+///
+/// Each variant is sugar for a pair of [`crate::quant::codec`] registry
+/// keys (one for the Gram sides, one for the inverse roots); representations
+/// outside this list are reached through [`ShampooConfig::side_codec`] /
+/// [`ShampooConfig::root_codec`] overrides, which accept ANY registered key.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShampooVariant {
     /// Algorithm 2: f32 `(L, R, L^{-1/4}, R^{-1/4})`.
@@ -15,6 +20,10 @@ pub enum ShampooVariant {
     /// factors of `L, R` (+ 4-bit inverse roots). With `error_feedback` the
     /// EF state rides in the upper triangle (Alg. 1, Fig. 2).
     Cq4 { error_feedback: bool },
+    /// 8-bit block-wise quantization of all four matrices, f32 diagonals —
+    /// the half-memory middle ground of "Memory Efficient Optimizers with
+    /// 4-bit States" (arXiv 2309.01507)-style 8-bit baselines.
+    Bw8,
 }
 
 impl ShampooVariant {
@@ -24,6 +33,19 @@ impl ShampooVariant {
             ShampooVariant::Vq4 => "4-bit (VQ)",
             ShampooVariant::Cq4 { error_feedback: false } => "4-bit (CQ)",
             ShampooVariant::Cq4 { error_feedback: true } => "4-bit (CQ+EF)",
+            ShampooVariant::Bw8 => "8-bit (BW)",
+        }
+    }
+
+    /// Canonical registry key (the spelling `train::registry` and the
+    /// optimizer builders resolve; `parse` accepts the aliases).
+    pub fn key(&self) -> &'static str {
+        match self {
+            ShampooVariant::Full32 => "32bit",
+            ShampooVariant::Vq4 => "vq",
+            ShampooVariant::Cq4 { error_feedback: false } => "cq",
+            ShampooVariant::Cq4 { error_feedback: true } => "cq-ef",
+            ShampooVariant::Bw8 => "bw8",
         }
     }
 
@@ -36,8 +58,23 @@ impl ShampooVariant {
             "cq-ef" | "cqef" | "4bit-cq-ef" | "ours" => {
                 Some(ShampooVariant::Cq4 { error_feedback: true })
             }
+            "bw8" | "8bit" | "8bit-bw" => Some(ShampooVariant::Bw8),
             _ => None,
         }
+    }
+
+    /// Paper-style row label for a full optimizer stack — the ONE place the
+    /// "`BASE` + `variant` Shampoo" composition lives (`Optimizer::name`
+    /// impls and `OptimizerSpec::label` both call this).
+    pub fn stack_label(&self, base: crate::optim::OptimizerKind) -> String {
+        format!("{} + {} Shampoo", base.name().to_uppercase(), self.name())
+    }
+
+    /// Placeholder variant carried by specs built from a runtime-registered
+    /// stack key (the keyed builder overrides it; the memory model uses it
+    /// as its footprint approximation).
+    pub fn default_for_custom() -> ShampooVariant {
+        ShampooVariant::Cq4 { error_feedback: true }
     }
 }
 
@@ -66,6 +103,44 @@ pub struct ShampooConfig {
     pub vq_quantize_diag: bool,
     /// Schur–Newton settings for the inverse 4th root.
     pub schur: SchurNewtonConfig,
+    /// Override the Gram-side codec with ANY registered key (e.g. one added
+    /// via `quant::codec::register`). `None` = derive from `variant`.
+    pub side_codec: Option<&'static str>,
+    /// Override the inverse-root codec likewise.
+    pub root_codec: Option<&'static str>,
+}
+
+impl ShampooConfig {
+    /// Codec registry key for the Gram sides `L`/`R` (before the
+    /// small-tensor exemption, which the state layer applies per block).
+    pub fn side_codec_key(&self) -> &'static str {
+        if let Some(key) = self.side_codec {
+            return key;
+        }
+        match self.variant {
+            ShampooVariant::Full32 => "f32",
+            ShampooVariant::Vq4 if self.vq_quantize_diag => "vq4-full",
+            ShampooVariant::Vq4 => "vq4",
+            ShampooVariant::Cq4 { error_feedback: false } => "cq4",
+            ShampooVariant::Cq4 { error_feedback: true } => "cq4-ef",
+            ShampooVariant::Bw8 => "bw8",
+        }
+    }
+
+    /// Codec registry key for the inverse roots `L̂`/`R̂`. Roots are applied
+    /// every step and therefore never Cholesky-factored (Sec. 4.2): the CQ
+    /// variants keep 4-bit off-diagonal roots.
+    pub fn root_codec_key(&self) -> &'static str {
+        if let Some(key) = self.root_codec {
+            return key;
+        }
+        match self.variant {
+            ShampooVariant::Full32 => "f32",
+            ShampooVariant::Bw8 => "bw8",
+            _ if self.vq_quantize_diag => "vq4-full",
+            _ => "vq4",
+        }
+    }
 }
 
 impl Default for ShampooConfig {
@@ -82,6 +157,8 @@ impl Default for ShampooConfig {
             grafting: true,
             vq_quantize_diag: false,
             schur: SchurNewtonConfig::default(),
+            side_codec: None,
+            root_codec: None,
         }
     }
 }
@@ -117,5 +194,56 @@ mod tests {
     fn variant_names_match_tables() {
         assert_eq!(ShampooVariant::Vq4.name(), "4-bit (VQ)");
         assert_eq!(ShampooVariant::Cq4 { error_feedback: true }.name(), "4-bit (CQ+EF)");
+        assert_eq!(ShampooVariant::Bw8.name(), "8-bit (BW)");
+    }
+
+    #[test]
+    fn canonical_keys_parse_back() {
+        for v in [
+            ShampooVariant::Full32,
+            ShampooVariant::Vq4,
+            ShampooVariant::Cq4 { error_feedback: false },
+            ShampooVariant::Cq4 { error_feedback: true },
+            ShampooVariant::Bw8,
+        ] {
+            assert_eq!(ShampooVariant::parse(v.key()), Some(v), "key '{}'", v.key());
+        }
+    }
+
+    #[test]
+    fn codec_keys_resolve_in_registry() {
+        for v in [
+            ShampooVariant::Full32,
+            ShampooVariant::Vq4,
+            ShampooVariant::Cq4 { error_feedback: false },
+            ShampooVariant::Cq4 { error_feedback: true },
+            ShampooVariant::Bw8,
+        ] {
+            let cfg = ShampooConfig { variant: v, ..Default::default() };
+            for key in [cfg.side_codec_key(), cfg.root_codec_key()] {
+                assert!(
+                    crate::quant::codec::lookup(key).is_some(),
+                    "{v:?}: codec '{key}' not registered"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn codec_overrides_win() {
+        let cfg = ShampooConfig {
+            side_codec: Some("bw8"),
+            root_codec: Some("f32"),
+            ..Default::default()
+        };
+        assert_eq!(cfg.side_codec_key(), "bw8");
+        assert_eq!(cfg.root_codec_key(), "f32");
+    }
+
+    #[test]
+    fn stack_label_composes_once() {
+        use crate::optim::OptimizerKind;
+        let v = ShampooVariant::Cq4 { error_feedback: true };
+        assert_eq!(v.stack_label(OptimizerKind::Sgdm), "SGDM + 4-bit (CQ+EF) Shampoo");
     }
 }

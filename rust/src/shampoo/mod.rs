@@ -1,15 +1,18 @@
 //! The Shampoo optimizer family (paper Algorithms 1 & 2).
 //!
-//! * [`config`] — variants: 32-bit (Alg. 2), 4-bit vanilla quantization
-//!   (Sec. 4.1), 4-bit Cholesky quantization (Sec. 4.2), and 4-bit CQ with
-//!   error feedback (Sec. 4.3, Alg. 1).
+//! * [`config`] — variants as sugar over preconditioner-codec keys: 32-bit
+//!   (Alg. 2), 4-bit vanilla quantization (Sec. 4.1), 4-bit Cholesky
+//!   quantization (Sec. 4.2), 4-bit CQ with error feedback (Sec. 4.3,
+//!   Alg. 1), and 8-bit block-wise — plus `side_codec`/`root_codec`
+//!   overrides that accept ANY key registered in `quant::codec`.
 //! * [`blocking`] — layer-wise max-order blocking (App. C.3: large dims are
 //!   split so each preconditioner stays below a cap).
-//! * [`state`] — per-block preconditioner storage for every variant, with
-//!   exact byte accounting.
+//! * [`state`] — per-block storage behind `PrecondCodec` trait objects,
+//!   with exact byte accounting.
 //! * [`Shampoo`] — the driver: Gram EMA every `T1` steps, inverse-4th-roots
 //!   every `T2` steps, preconditioned + grafted gradient into the base
-//!   optimizer every step.
+//!   optimizer every step — with the per-layer loop fanned out over the
+//!   `util::pool` scoped-thread helper (layers are independent).
 
 pub mod blocking;
 pub mod config;
@@ -20,55 +23,93 @@ pub use config::{ShampooConfig, ShampooVariant};
 pub use state::LayerState;
 
 use crate::linalg::Matrix;
-use crate::optim::{graft, BaseOptimizer};
+use crate::optim::optimizer::ParamState;
+use crate::optim::{graft, BaseOptimizer, Optimizer};
+use crate::quant::codec::CodecCtx;
 use crate::quant::BlockQuantizer;
+use std::sync::{Arc, Mutex};
 
 /// Shampoo wrapping a first-order base optimizer `F` (Algorithm 1).
 pub struct Shampoo {
     pub base: BaseOptimizer,
     pub cfg: ShampooConfig,
     pub layers: Vec<LayerState>,
-    quantizer: BlockQuantizer,
+    ctx: CodecCtx,
 }
 
 impl Shampoo {
     /// Build for a fixed set of parameter shapes `(rows, cols)`.
     pub fn new(mut base: BaseOptimizer, cfg: ShampooConfig, shapes: &[(usize, usize)]) -> Shampoo {
         base.init(shapes.len());
-        let quantizer = BlockQuantizer::new(cfg.quant);
+        let quantizer = Arc::new(BlockQuantizer::new(cfg.quant));
+        let ctx = CodecCtx::new(cfg.eps, cfg.beta_e, quantizer);
         let layers = shapes
             .iter()
-            .map(|&(m, n)| LayerState::new(m, n, &cfg, &quantizer))
+            .map(|&(m, n)| LayerState::new(m, n, &cfg, &ctx))
             .collect();
-        Shampoo { base, cfg, layers, quantizer }
+        Shampoo { base, cfg, layers, ctx }
     }
 
     /// One optimization step (Algorithm 1 lines 2–16).
     ///
     /// `step` is 1-based (the paper's `k`); preconditioner states update when
     /// `k % T1 == 0`, inverse roots when `k % T2 == 0`.
+    ///
+    /// Layers are mutually independent (disjoint state, disjoint parameter /
+    /// momentum buffers), so the per-layer work — Gram EMA, root refresh,
+    /// preconditioning, base update — runs on the scoped-thread pool. Per
+    /// layer the math is identical to the sequential loop, so trajectories
+    /// are bit-for-bit deterministic regardless of thread count.
     pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], step: u64, lr_scale: f32) {
         assert_eq!(params.len(), self.layers.len());
         assert_eq!(grads.len(), self.layers.len());
         let update_gram = step % self.cfg.t1 == 0;
         let update_roots = step % self.cfg.t2 == 0;
 
-        for i in 0..params.len() {
-            let layer = &mut self.layers[i];
-            let g = &grads[i];
+        let cfg = &self.cfg;
+        let ctx = &self.ctx;
+        let hyper = self.base.hyper;
+        let kind = self.base.kind;
+        assert_eq!(self.base.states.len(), self.layers.len(), "optimizer not initialized");
+
+        let n = params.len();
+        // Disjoint per-layer work items; the Mutex hands each scoped worker
+        // exclusive &mut access to exactly one layer's state.
+        let work: Vec<Mutex<(&mut LayerState, &mut Matrix, &Matrix, &mut ParamState)>> = self
+            .layers
+            .iter_mut()
+            .zip(params.iter_mut())
+            .zip(grads.iter())
+            .zip(self.base.states.iter_mut())
+            .map(|(((layer, w), g), st)| Mutex::new((layer, w, g, st)))
+            .collect();
+        // Fan out only when this step does refresh work (Gram EMA /
+        // Cholesky / Schur–Newton dominate there); the common in-between
+        // step is two small matmuls per layer — thread spawn/join would
+        // cost more than it saves, and the blocked matmul already
+        // parallelizes internally for large layers. threads == 1 makes
+        // `parallel_for` run inline with zero spawns.
+        let threads = if update_gram || update_roots {
+            crate::util::pool::default_threads().min(n.max(1))
+        } else {
+            1
+        };
+        crate::util::pool::parallel_for(n, threads, |i| {
+            let mut item = work[i].lock().unwrap();
+            let (layer, w, g, st) = &mut *item;
             if update_gram {
-                layer.update_gram(g, &self.cfg, &self.quantizer);
+                layer.update_gram(g, cfg);
             }
             if update_roots {
-                layer.update_inv_roots(&self.cfg, &self.quantizer);
+                layer.update_inv_roots(cfg, ctx);
             }
             // Ĝ = D(L̂)·G·D(R̂)  (line 15), then grafting (Eq. 13).
-            let mut ghat = layer.precondition(g, &self.quantizer);
-            if self.cfg.grafting {
+            let mut ghat = layer.precondition(g);
+            if cfg.grafting {
                 graft(g, &mut ghat);
             }
-            self.base.step_param(i, &mut params[i], &ghat, lr_scale);
-        }
+            BaseOptimizer::step_one(&hyper, kind, st, w, &ghat, lr_scale);
+        });
     }
 
     /// Persistent optimizer-state bytes: Shampoo preconditioner storage
@@ -86,25 +127,55 @@ impl Shampoo {
     /// Dequantized inverse-root pairs `(D(L̂), D(R̂))` of every block of
     /// layer `idx` — used by the Fig. 3 eigenvalue-histogram harness.
     pub fn dequant_inv_roots(&self, idx: usize) -> Vec<(Matrix, Matrix)> {
-        self.layers[idx].dequant_inv_roots(&self.quantizer)
+        self.layers[idx].dequant_inv_roots()
     }
 
     /// Reconstructed preconditioner pairs `(L, R)` of every block of layer
     /// `idx` (for the Tab. 1/10 NRE/AE harvest).
     pub fn reconstructed_preconditioners(&self, idx: usize) -> Vec<(Matrix, Matrix)> {
-        self.layers[idx].reconstructed_preconditioners(&self.quantizer)
+        self.layers[idx].reconstructed_preconditioners()
     }
 
     pub fn quantizer(&self) -> &BlockQuantizer {
-        &self.quantizer
+        &self.ctx.quantizer
+    }
+
+    /// The codec context (for building compatible codecs outside the state).
+    pub fn codec_ctx(&self) -> &CodecCtx {
+        &self.ctx
+    }
+}
+
+impl Optimizer for Shampoo {
+    /// Shampoo is built with shapes up-front; `init` is a no-op.
+    fn init(&mut self, _n_params: usize) {}
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], k: u64, lr_scale: f32) {
+        Shampoo::step(self, params, grads, k, lr_scale);
+    }
+
+    fn state_bytes(&self) -> usize {
+        Shampoo::state_bytes(self)
+    }
+
+    fn name(&self) -> String {
+        let mut label = self.cfg.variant.stack_label(self.base.kind);
+        // Codec overrides change what actually runs — surface them so table
+        // rows never attribute an override's results to the base variant.
+        if self.cfg.side_codec.is_some() || self.cfg.root_codec.is_some() {
+            let side = self.cfg.side_codec_key();
+            let root = self.cfg.root_codec_key();
+            label.push_str(&format!(" [codecs {side}/{root}]"));
+        }
+        label
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{eig_sym, fro_norm, kron, matmul, matmul_nt, matmul_tn};
     use crate::linalg::kron::vec_cols;
+    use crate::linalg::{eig_sym, fro_norm, kron, matmul, matmul_nt, matmul_tn};
     use crate::optim::OptimizerKind;
     use crate::util::rng::Rng;
 
@@ -214,6 +285,7 @@ mod tests {
             ShampooVariant::Vq4,
             ShampooVariant::Cq4 { error_feedback: false },
             ShampooVariant::Cq4 { error_feedback: true },
+            ShampooVariant::Bw8,
         ] {
             let cfg = ShampooConfig { t1: 2, t2: 4, variant, ..Default::default() };
             let mut sh = Shampoo::new(sgd_base(), cfg, &[(16, 8), (8, 8)]);
@@ -236,6 +308,64 @@ mod tests {
             for p in &params {
                 assert!(!p.has_non_finite(), "{variant:?} produced non-finite params");
             }
+        }
+    }
+
+    #[test]
+    fn parallel_step_matches_sequential_oracle() {
+        // The fanned-out step must reproduce a hand-written sequential
+        // per-layer loop bit-for-bit: same state pairing, same operation
+        // order within each layer, no cross-layer interaction.
+        let cfg = ShampooConfig {
+            t1: 1,
+            t2: 2,
+            variant: ShampooVariant::Cq4 { error_feedback: true },
+            quant: crate::quant::QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let shapes = [(12usize, 8usize), (8, 8), (16, 4), (6, 10)];
+        let mut rng = Rng::new(11);
+        let params0: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+        let grads: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+
+        // Parallel path: the real optimizer.
+        let mut sh = Shampoo::new(sgd_base(), cfg, &shapes);
+        let mut pa = params0.clone();
+        for k in 1..=6u64 {
+            sh.step(&mut pa, &grads, k, 1.0);
+        }
+
+        // Sequential oracle over the same public per-layer operations.
+        let ctx = CodecCtx::new(
+            cfg.eps,
+            cfg.beta_e,
+            Arc::new(BlockQuantizer::new(cfg.quant)),
+        );
+        let mut layers: Vec<LayerState> =
+            shapes.iter().map(|&(m, n)| LayerState::new(m, n, &cfg, &ctx)).collect();
+        let mut base = sgd_base();
+        base.init(shapes.len());
+        let mut pb = params0.clone();
+        for k in 1..=6u64 {
+            for i in 0..shapes.len() {
+                if k % cfg.t1 == 0 {
+                    layers[i].update_gram(&grads[i], &cfg);
+                }
+                if k % cfg.t2 == 0 {
+                    layers[i].update_inv_roots(&cfg, &ctx);
+                }
+                let mut ghat = layers[i].precondition(&grads[i]);
+                if cfg.grafting {
+                    graft(&grads[i], &mut ghat);
+                }
+                base.step_param(i, &mut pb[i], &ghat, 1.0);
+            }
+        }
+
+        for (a, b) in pa.iter().zip(pb.iter()) {
+            assert_eq!(a.max_abs_diff(b), 0.0, "parallel step must match sequential oracle");
         }
     }
 
@@ -264,9 +394,12 @@ mod tests {
         let vq = mk(ShampooVariant::Vq4);
         let cq = mk(ShampooVariant::Cq4 { error_feedback: false });
         let cqef = mk(ShampooVariant::Cq4 { error_feedback: true });
+        let bw8 = mk(ShampooVariant::Bw8);
         assert!(vq < full / 4, "vq={vq} full={full}");
         assert!(cq < vq, "cq={cq} vq={vq}");
         assert!(cqef >= cq && cqef <= vq + 64, "cq={cq} cqef={cqef} vq={vq}");
+        // 8-bit sits strictly between 4-bit and f32.
+        assert!(bw8 > vq && bw8 < full / 2, "vq={vq} bw8={bw8} full={full}");
     }
 
     #[test]
@@ -281,6 +414,21 @@ mod tests {
             assert!((w[(i, 0)] + 0.05 * i as f32).abs() < 1e-7);
         }
         assert_eq!(sh.shampoo_state_bytes(), 0);
+    }
+
+    #[test]
+    fn optimizer_trait_object_drives_shampoo() {
+        let cfg = ShampooConfig { t1: 1, t2: 1, ..Default::default() };
+        let mut opt: Box<dyn Optimizer> =
+            Box::new(Shampoo::new(sgd_base(), cfg, &[(8, 8)]));
+        assert_eq!(opt.name(), "SGD + 4-bit (CQ+EF) Shampoo");
+        let mut rng = Rng::new(9);
+        let mut params = vec![Matrix::randn(8, 8, 1.0, &mut rng)];
+        let grads = vec![Matrix::randn(8, 8, 1.0, &mut rng)];
+        opt.init(1); // no-op for Shampoo
+        opt.step(&mut params, &grads, 1, 1.0);
+        assert!(!params[0].has_non_finite());
+        assert!(opt.state_bytes() > 0);
     }
 
     #[test]
@@ -315,10 +463,10 @@ mod tests {
 
         // SGD baseline.
         let mut w_sgd = w0.clone();
-        let mut opt = BaseOptimizer::new(OptimizerKind::Sgd, crate::optim::optimizer::Hyper {
-            lr: 5e-4,
-            ..Default::default()
-        });
+        let mut opt = BaseOptimizer::new(
+            OptimizerKind::Sgd,
+            crate::optim::optimizer::Hyper { lr: 5e-4, ..Default::default() },
+        );
         opt.init(1);
         for _ in 0..600 {
             let g = grad(&w_sgd);
@@ -326,7 +474,12 @@ mod tests {
         }
 
         // Shampoo (full precision, grafted).
-        let cfg = ShampooConfig { t1: 1, t2: 5, variant: ShampooVariant::Full32, ..Default::default() };
+        let cfg = ShampooConfig {
+            t1: 1,
+            t2: 5,
+            variant: ShampooVariant::Full32,
+            ..Default::default()
+        };
         let mut sh = Shampoo::new(BaseOptimizer::sgd(5e-4, 0.0), cfg, &[(m, n)]);
         let mut w_sh = w0.clone();
         for k in 1..=600 {

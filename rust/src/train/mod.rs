@@ -1,8 +1,15 @@
 //! The training engine: drives AOT-compiled fwd/bwd graphs through the PJRT
-//! runtime and applies the (possibly Shampoo-wrapped) optimizer in rust.
+//! runtime and applies a boxed [`crate::optim::Optimizer`] in rust.
+//!
+//! * [`stack`] — [`OptimizerStack`], the trait-object carrier every loop
+//!   programs against.
+//! * [`registry`] — string-keyed stack construction (`"cq-ef"`, `"bw8"`, …)
+//!   used by coordinator specs, the CLI, and the examples.
+//! * [`trainer`] — the classifier/LM training loops and evaluation.
 
 pub mod trainer;
 pub mod stack;
+pub mod registry;
 
 pub use stack::OptimizerStack;
 pub use trainer::{train_classifier, train_lm, ClassifierData, RunMetrics, TrainConfig};

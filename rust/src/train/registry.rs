@@ -1,0 +1,184 @@
+//! String-keyed optimizer-stack registry.
+//!
+//! Maps a variant key (`"none"`, `"32bit"`, `"vq"`, `"cq"`, `"cq-ef"`,
+//! `"bw8"`, or anything added via [`register`]) to a builder producing an
+//! [`OptimizerStack`] for a model's parameter shapes. Coordinator specs,
+//! the CLI, and the examples all construct optimizers through [`build`], so
+//! a variant registered at startup is immediately reachable from TOML specs
+//! and `--shampoo` flags without touching any construction site.
+//!
+//! Aliases (`"cqef"`, `"ours"`, `"full32"`, …) are resolved through
+//! [`ShampooVariant::parse`] — the registry itself stores only canonical
+//! keys.
+
+use crate::optim::BaseOptimizer;
+use crate::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+use crate::train::OptimizerStack;
+use std::sync::{Mutex, OnceLock};
+
+/// One registry entry.
+#[derive(Clone, Copy)]
+pub struct StackBuilder {
+    /// Canonical key (what [`ShampooVariant::key`] returns, or a new name).
+    pub key: &'static str,
+    /// One-line description for CLI/docs listings.
+    pub summary: &'static str,
+    /// Build the stack. `cfg` carries intervals/quantizer settings; builders
+    /// for a fixed variant override `cfg.variant` with their own.
+    pub build: fn(BaseOptimizer, &ShampooConfig, &[(usize, usize)]) -> OptimizerStack,
+}
+
+fn build_none(
+    base: BaseOptimizer,
+    _cfg: &ShampooConfig,
+    _shapes: &[(usize, usize)],
+) -> OptimizerStack {
+    OptimizerStack::base(base)
+}
+
+fn with_variant(
+    variant: ShampooVariant,
+    base: BaseOptimizer,
+    cfg: &ShampooConfig,
+    shapes: &[(usize, usize)],
+) -> OptimizerStack {
+    let cfg = ShampooConfig { variant, ..*cfg };
+    OptimizerStack::shampoo(Shampoo::new(base, cfg, shapes))
+}
+
+fn build_full32(b: BaseOptimizer, c: &ShampooConfig, s: &[(usize, usize)]) -> OptimizerStack {
+    with_variant(ShampooVariant::Full32, b, c, s)
+}
+
+fn build_vq(b: BaseOptimizer, c: &ShampooConfig, s: &[(usize, usize)]) -> OptimizerStack {
+    with_variant(ShampooVariant::Vq4, b, c, s)
+}
+
+fn build_cq(b: BaseOptimizer, c: &ShampooConfig, s: &[(usize, usize)]) -> OptimizerStack {
+    with_variant(ShampooVariant::Cq4 { error_feedback: false }, b, c, s)
+}
+
+fn build_cq_ef(b: BaseOptimizer, c: &ShampooConfig, s: &[(usize, usize)]) -> OptimizerStack {
+    with_variant(ShampooVariant::Cq4 { error_feedback: true }, b, c, s)
+}
+
+fn build_bw8(b: BaseOptimizer, c: &ShampooConfig, s: &[(usize, usize)]) -> OptimizerStack {
+    with_variant(ShampooVariant::Bw8, b, c, s)
+}
+
+fn builtin_stacks() -> Vec<StackBuilder> {
+    vec![
+        StackBuilder {
+            key: "none",
+            summary: "base optimizer alone (no preconditioning)",
+            build: build_none,
+        },
+        StackBuilder {
+            key: "32bit",
+            summary: "f32 Shampoo (Algorithm 2)",
+            build: build_full32,
+        },
+        StackBuilder {
+            key: "vq",
+            summary: "4-bit Shampoo, vanilla quantization (Sec. 4.1)",
+            build: build_vq,
+        },
+        StackBuilder {
+            key: "cq",
+            summary: "4-bit Shampoo, Cholesky quantization (Sec. 4.2)",
+            build: build_cq,
+        },
+        StackBuilder {
+            key: "cq-ef",
+            summary: "4-bit Shampoo, CQ + error feedback (Alg. 1, ours)",
+            build: build_cq_ef,
+        },
+        StackBuilder {
+            key: "bw8",
+            summary: "8-bit Shampoo, block-wise quantization",
+            build: build_bw8,
+        },
+    ]
+}
+
+fn registry() -> &'static Mutex<Vec<StackBuilder>> {
+    static REGISTRY: OnceLock<Mutex<Vec<StackBuilder>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(builtin_stacks()))
+}
+
+/// Register a stack builder under a new key. Returns `false` (unchanged
+/// registry) if the key is taken.
+pub fn register(builder: StackBuilder) -> bool {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    if reg.iter().any(|b| b.key == builder.key) {
+        return false;
+    }
+    reg.push(builder);
+    true
+}
+
+/// Look up a builder by canonical key, then by variant alias.
+pub fn lookup(key: &str) -> Option<StackBuilder> {
+    let found = {
+        let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        reg.iter().find(|b| b.key == key).copied()
+    };
+    found.or_else(|| {
+        let canonical = ShampooVariant::parse(key)?.key();
+        let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        reg.iter().find(|b| b.key == canonical).copied()
+    })
+}
+
+/// Build a stack by key (canonical or alias). `cfg.variant` is overridden
+/// by keyed builders; other config fields (intervals, quantizer, codec
+/// overrides) pass through.
+pub fn build(
+    key: &str,
+    base: BaseOptimizer,
+    cfg: &ShampooConfig,
+    shapes: &[(usize, usize)],
+) -> Option<OptimizerStack> {
+    lookup(key).map(|b| (b.build)(base, cfg, shapes))
+}
+
+/// All registered canonical keys, built-ins first.
+pub fn stack_keys() -> Vec<&'static str> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().map(|b| b.key).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_key_builds() {
+        let cfg = ShampooConfig { t1: 1, t2: 1, max_order: 16, ..Default::default() };
+        for key in stack_keys() {
+            let stack = build(key, BaseOptimizer::sgd(0.1, 0.0), &cfg, &[(8, 8)])
+                .unwrap_or_else(|| panic!("key '{key}' must build"));
+            if key == "none" {
+                assert_eq!(stack.label(), "SGD");
+            } else {
+                assert!(stack.label().contains("Shampoo"), "{key}: {}", stack.label());
+            }
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_via_variant_parse() {
+        let cfg = ShampooConfig::default();
+        for (alias, canonical) in [("ours", "cq-ef"), ("full32", "32bit"), ("8bit", "bw8")] {
+            let a = lookup(alias).unwrap_or_else(|| panic!("alias '{alias}'"));
+            assert_eq!(a.key, canonical);
+        }
+        assert!(build("no-such-stack", BaseOptimizer::sgd(0.1, 0.0), &cfg, &[(4, 4)]).is_none());
+    }
+
+    #[test]
+    fn builtin_stack_keys_cannot_be_shadowed() {
+        let b = lookup("cq-ef").unwrap();
+        assert!(!register(b));
+    }
+}

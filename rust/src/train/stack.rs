@@ -1,53 +1,64 @@
-//! Optimizer stack: a base optimizer alone, or Shampoo wrapping it
-//! (paper's "base" vs "base + Shampoo" table rows).
+//! Optimizer stack: a thin newtype over a boxed [`Optimizer`] trait object.
+//!
+//! Everything downstream (trainer, coordinator, examples, benches) holds an
+//! `OptimizerStack` and sees only the trait — any optimizer registered in
+//! [`crate::train::registry`] (or constructed directly and boxed) slots in
+//! without a code change here.
 
 use crate::linalg::Matrix;
-use crate::optim::BaseOptimizer;
+use crate::optim::{BaseOptimizer, Optimizer};
 use crate::shampoo::Shampoo;
 
-/// Either a first-order optimizer or Shampoo-wrapped.
-pub enum OptimizerStack {
-    Base(BaseOptimizer),
-    Shampoo(Box<Shampoo>),
-}
+/// A boxed optimizer driving one training run.
+pub struct OptimizerStack(Box<dyn Optimizer>);
 
 impl OptimizerStack {
-    /// Initialize for the parameter set (no-op for Shampoo, which is built
-    /// with shapes up-front).
+    /// Wrap any optimizer.
+    pub fn new(opt: Box<dyn Optimizer>) -> OptimizerStack {
+        OptimizerStack(opt)
+    }
+
+    /// A first-order base optimizer alone (the paper's baseline rows).
+    pub fn base(b: BaseOptimizer) -> OptimizerStack {
+        OptimizerStack(Box::new(b))
+    }
+
+    /// Shampoo wrapping its base (the "… + Shampoo" rows).
+    pub fn shampoo(s: Shampoo) -> OptimizerStack {
+        OptimizerStack(Box::new(s))
+    }
+
+    /// Initialize for the parameter set (no-op for optimizers built with
+    /// shapes up-front, e.g. Shampoo).
     pub fn init(&mut self, n_params: usize) {
-        if let OptimizerStack::Base(b) = self {
-            b.init(n_params);
-        }
+        self.0.init(n_params);
     }
 
     /// Apply one step across all parameters.
     pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], k: u64, lr_scale: f32) {
-        match self {
-            OptimizerStack::Base(b) => {
-                for (i, (w, g)) in params.iter_mut().zip(grads.iter()).enumerate() {
-                    b.step_param(i, w, g, lr_scale);
-                }
-            }
-            OptimizerStack::Shampoo(s) => s.step(params, grads, k, lr_scale),
-        }
+        self.0.step(params, grads, k, lr_scale);
     }
 
     /// Persistent optimizer-state bytes.
     pub fn state_bytes(&self) -> usize {
-        match self {
-            OptimizerStack::Base(b) => b.state_bytes(),
-            OptimizerStack::Shampoo(s) => s.state_bytes(),
-        }
+        self.0.state_bytes()
     }
 
-    /// Human label for table rows ("SGDM + 4-bit Shampoo (CQ+EF)" style).
+    /// Human label for table rows ("SGDM + 4-bit Shampoo (CQ+EF)" style) —
+    /// delegated to [`Optimizer::name`], the single naming source.
     pub fn label(&self) -> String {
-        match self {
-            OptimizerStack::Base(b) => b.kind.name().to_uppercase(),
-            OptimizerStack::Shampoo(s) => {
-                format!("{} + {} Shampoo", s.base.kind.name().to_uppercase(), s.cfg.variant.name())
-            }
-        }
+        self.0.name()
+    }
+
+    /// Borrow the underlying trait object.
+    pub fn inner(&self) -> &dyn Optimizer {
+        self.0.as_ref()
+    }
+}
+
+impl From<Box<dyn Optimizer>> for OptimizerStack {
+    fn from(opt: Box<dyn Optimizer>) -> OptimizerStack {
+        OptimizerStack(opt)
     }
 }
 
@@ -58,19 +69,22 @@ mod tests {
 
     #[test]
     fn labels() {
-        let b = OptimizerStack::Base(BaseOptimizer::sgdm(0.1, 0.9, 0.0));
+        let b = OptimizerStack::base(BaseOptimizer::sgdm(0.1, 0.9, 0.0));
         assert_eq!(b.label(), "SGDM");
-        let s = OptimizerStack::Shampoo(Box::new(Shampoo::new(
+        let s = OptimizerStack::shampoo(Shampoo::new(
             BaseOptimizer::adamw(1e-3, 0.9, 0.999, 1e-8, 0.05),
-            ShampooConfig { variant: ShampooVariant::Cq4 { error_feedback: true }, ..Default::default() },
+            ShampooConfig {
+                variant: ShampooVariant::Cq4 { error_feedback: true },
+                ..Default::default()
+            },
             &[(8, 8)],
-        )));
+        ));
         assert_eq!(s.label(), "ADAMW + 4-bit (CQ+EF) Shampoo");
     }
 
     #[test]
     fn base_step_applies_to_all_params() {
-        let mut stack = OptimizerStack::Base(BaseOptimizer::sgd(0.5, 0.0));
+        let mut stack = OptimizerStack::base(BaseOptimizer::sgd(0.5, 0.0));
         stack.init(2);
         let mut params = vec![Matrix::zeros(1, 1), Matrix::zeros(1, 1)];
         let grads = vec![
@@ -80,5 +94,33 @@ mod tests {
         stack.step(&mut params, &grads, 1, 1.0);
         assert_eq!(params[0][(0, 0)], -0.5);
         assert_eq!(params[1][(0, 0)], -1.0);
+    }
+
+    #[test]
+    fn custom_optimizer_slots_in_through_the_trait() {
+        // A user-defined optimizer the core has never heard of drives the
+        // stack — the open-world property the newtype exists for.
+        #[derive(Debug)]
+        struct HalvingOptimizer;
+        impl crate::optim::Optimizer for HalvingOptimizer {
+            fn init(&mut self, _n: usize) {}
+            fn step(&mut self, params: &mut [Matrix], _g: &[Matrix], _k: u64, _lr: f32) {
+                for p in params.iter_mut() {
+                    p.scale(0.5);
+                }
+            }
+            fn state_bytes(&self) -> usize {
+                0
+            }
+            fn name(&self) -> String {
+                "HALVING".to_string()
+            }
+        }
+        let mut stack = OptimizerStack::new(Box::new(HalvingOptimizer));
+        assert_eq!(stack.label(), "HALVING");
+        let mut params = vec![Matrix::eye(2)];
+        let grads = vec![Matrix::zeros(2, 2)];
+        stack.step(&mut params, &grads, 1, 1.0);
+        assert_eq!(params[0][(0, 0)], 0.5);
     }
 }

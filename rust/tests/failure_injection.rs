@@ -89,6 +89,7 @@ fn constant_rank_one_gradients_stay_finite() {
         ShampooVariant::Vq4,
         ShampooVariant::Cq4 { error_feedback: false },
         ShampooVariant::Cq4 { error_feedback: true },
+        ShampooVariant::Bw8,
     ] {
         let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), cfg(variant), &[(10, 4)]);
         let mut params = vec![Matrix::zeros(10, 4)];

@@ -69,9 +69,10 @@ fn unknown_model_is_isolated_error() {
         return;
     }
     let hyper = OptimizerSpec::paper_hyper(OptimizerKind::Sgdm);
+    let base = OptimizerSpec::base_only(OptimizerKind::Sgdm, hyper);
     let specs = vec![
-        RunSpec::new("no_such_model", tiny_cluster(0), OptimizerSpec::base_only(OptimizerKind::Sgdm, hyper), 5),
-        RunSpec::new("mlp_vgg_c32", tiny_cluster(0), OptimizerSpec::base_only(OptimizerKind::Sgdm, hyper), 5),
+        RunSpec::new("no_such_model", tiny_cluster(0), base.clone(), 5),
+        RunSpec::new("mlp_vgg_c32", tiny_cluster(0), base, 5),
     ];
     let outcomes = run_all(&specs, 2);
     assert!(outcomes[0].error.as_deref().unwrap_or("").contains("unknown model"));

@@ -1,10 +1,13 @@
 //! Cross-module quantization integration: quantizers ↔ linalg ↔ shampoo
-//! state, plus the paper's qualitative claims at integration scope.
+//! state, the paper's qualitative claims at integration scope, and the
+//! codec-generic property suite every registered `PrecondCodec` must pass.
 
 use quartz::analysis::{cq_roundtrip, nre_ae, synthetic_pd, vq_roundtrip};
 use quartz::linalg::{eig_sym, Matrix};
-use quartz::quant::{BlockQuantizer, ErrorFeedback, Mapping, QuantConfig};
+use quartz::quant::codec::{codec_keys, lookup, register, CodecBuilder};
+use quartz::quant::{BlockQuantizer, CodecCtx, ErrorFeedback, Mapping, PrecondCodec, QuantConfig};
 use quartz::util::rng::Rng;
+use std::sync::Arc;
 
 #[test]
 fn cq_dominates_vq_across_mappings_and_blocks() {
@@ -36,7 +39,8 @@ fn cq_dominates_vq_across_mappings_and_blocks() {
 #[test]
 fn error_feedback_improves_time_averaged_fidelity() {
     // Sec. 4.3: EF's EMA compensation reduces the time-averaged factor error.
-    let q = BlockQuantizer::new(QuantConfig { block: 16, min_quant_elems: 0, ..Default::default() });
+    let q =
+        BlockQuantizer::new(QuantConfig { block: 16, min_quant_elems: 0, ..Default::default() });
     let mut rng = Rng::new(2);
     let n = 24;
     let c = Matrix::from_fn(n, n, |i, j| {
@@ -87,6 +91,199 @@ fn quantized_preconditioner_spectra_stay_positive_cq() {
         let (vals, _) = eig_sym(&recon, 1e-10, 100);
         assert!(vals[0] > -1e-5, "λmin={}", vals[0]);
     }
+}
+
+// ---------------------------------------------------------------------
+// Codec-generic property suite: every registered PrecondCodec (including
+// any added at runtime) must satisfy the same invariants the shampoo state
+// layer relies on. Runs over the registry, so new codecs are covered the
+// moment they are registered.
+// ---------------------------------------------------------------------
+
+const BLOCK: usize = 16;
+
+fn codec_ctx() -> CodecCtx {
+    let q = BlockQuantizer::new(QuantConfig {
+        block: BLOCK,
+        min_quant_elems: 0,
+        ..Default::default()
+    });
+    CodecCtx::new(1e-6, 0.95, Arc::new(q))
+}
+
+fn spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    synthetic_pd(n, 1e-1, 1e1, &mut rng)
+}
+
+/// `load(store(x))` stays within the representation's error bound, for
+/// every registered codec, at several sizes (including non-block-divisible).
+#[test]
+fn codec_roundtrip_error_bounds() {
+    let ctx = codec_ctx();
+    for key in codec_keys() {
+        let b = lookup(key).unwrap();
+        for (n, seed) in [(12usize, 1u64), (33, 2), (64, 3)] {
+            let a = spd(n, seed);
+            for ctor in [b.side, b.root] {
+                let mut codec = ctor(&ctx);
+                codec.store(&a);
+                let back = codec.load();
+                assert!(!back.has_non_finite(), "{key}/{n}: non-finite");
+                let rel = quartz::linalg::relative_error(&a, &back);
+                // f32 must be exact; quantized codecs within a loose 4-bit
+                // bound (8-bit and CQ are far tighter).
+                let bound = if key == "f32" { 1e-12 } else { 0.35 };
+                assert!(rel < bound, "{key}/{n}: relative error {rel}");
+            }
+        }
+    }
+}
+
+/// `size_bytes` is exact — byte-identical to the closed-form accounting the
+/// paper's memory tables use (and `metrics::MemoryModel` mirrors).
+#[test]
+fn codec_size_bytes_exactness() {
+    let ctx = codec_ctx();
+    for n in [32usize, 48] {
+        let scales = n.div_ceil(BLOCK) * n.div_ceil(BLOCK) * 4;
+        let expected: &[(&str, usize)] = &[
+            ("f32", n * n * 4),
+            ("vq4", (n * n).div_ceil(2) + scales + n * 4),
+            ("vq4-full", (n * n).div_ceil(2) + scales),
+            ("cq4", ((n * (n + 1)) / 2).div_ceil(2) + n * 4 + scales),
+            ("cq4-ef", (n * n).div_ceil(2) + n * 4 + 2 * scales),
+            ("bw8", n * n + scales + n * 4),
+        ];
+        for &(key, want) in expected {
+            let mut codec = (lookup(key).unwrap().side)(&ctx);
+            codec.store(&spd(n, 4));
+            assert_eq!(codec.size_bytes(), want, "{key} at n={n}");
+        }
+    }
+}
+
+/// The EF codec preserves its error state across stores (it compensates
+/// next time), and repeated re-quantization of the same factor converges
+/// in time-average — the Sec. 4.3 claim expressed through the trait.
+#[test]
+fn codec_ef_state_preserved_and_effective() {
+    let ctx = codec_ctx();
+    let a = spd(24, 5);
+    let mut ef = (lookup("cq4-ef").unwrap().side)(&ctx);
+    let mut plain = (lookup("cq4").unwrap().side)(&ctx);
+    ef.init(24, 1e-6);
+    plain.init(24, 1e-6);
+    assert!(plain.error_state().is_none());
+    let e0 = ef.error_state().expect("EF codec must expose its error state");
+    assert_eq!(quartz::linalg::max_abs(&e0), 0.0, "initial error state is zero");
+
+    let steps = 60;
+    let mut avg_ef = Matrix::zeros(24, 24);
+    let mut avg_plain = Matrix::zeros(24, 24);
+    for _ in 0..steps {
+        ef.store(&a);
+        plain.store(&a);
+        avg_ef.axpy(1.0 / steps as f32, &ef.load());
+        avg_plain.axpy(1.0 / steps as f32, &plain.load());
+    }
+    let e = ef.error_state().unwrap();
+    assert!(quartz::linalg::max_abs(&e) > 0.0, "error state must accumulate");
+    let err_ef = quartz::linalg::relative_error(&a, &avg_ef);
+    let err_plain = quartz::linalg::relative_error(&a, &avg_plain);
+    assert!(
+        err_ef < err_plain,
+        "EF time-average must beat plain CQ: ef={err_ef:.4} plain={err_plain:.4}"
+    );
+}
+
+/// `init` always reconstructs ≈ ε·I, and a second `init` resets state.
+#[test]
+fn codec_init_is_reset() {
+    let ctx = codec_ctx();
+    for key in codec_keys() {
+        let mut codec = (lookup(key).unwrap().side)(&ctx);
+        codec.init(16, 1e-6);
+        codec.store(&spd(16, 6));
+        codec.init(16, 1e-6);
+        let back = codec.load();
+        assert!(
+            back.max_abs_diff(&Matrix::eye_scaled(16, 1e-6)) < 1e-5,
+            "{key}: re-init must reset to ε·I"
+        );
+    }
+}
+
+// A codec the core crate has never heard of: stores f32 but rounds to a
+// fixed grid. Registering it makes it constructible by key and subject to
+// the same suite — the open-world property the redesign exists for.
+#[derive(Clone, Debug, Default)]
+struct RoundedCodec {
+    m: Option<Matrix>,
+}
+
+impl PrecondCodec for RoundedCodec {
+    fn key(&self) -> &'static str {
+        "test-rounded"
+    }
+    fn store(&mut self, x: &Matrix) {
+        self.m = Some(Matrix::from_fn(x.rows(), x.cols(), |i, j| {
+            (x[(i, j)] * 256.0).round() / 256.0
+        }));
+    }
+    fn load(&self) -> Matrix {
+        self.m.clone().expect("load before store")
+    }
+    fn size_bytes(&self) -> usize {
+        self.m.as_ref().map(|m| m.size_bytes()).unwrap_or(0)
+    }
+    fn clone_box(&self) -> Box<dyn PrecondCodec> {
+        Box::new(self.clone())
+    }
+}
+
+fn rounded_ctor(_ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::<RoundedCodec>::default()
+}
+
+#[test]
+fn runtime_registered_codec_is_a_first_class_citizen() {
+    register(CodecBuilder {
+        key: "test-rounded",
+        summary: "f32 rounded to 1/256 grid (test codec)",
+        side: rounded_ctor,
+        root: rounded_ctor,
+    });
+    assert!(codec_keys().contains(&"test-rounded"));
+
+    // Constructible by string key, round-trips within its grid error.
+    let ctx = codec_ctx();
+    let b = lookup("test-rounded").unwrap();
+    let mut codec = (b.side)(&ctx);
+    let a = spd(20, 7);
+    codec.store(&a);
+    assert!(codec.load().max_abs_diff(&a) <= 0.5 / 256.0 + 1e-6);
+
+    // And it drives a full Shampoo run through the config override — no
+    // enum arm, no state-layer edit, just the registry key.
+    use quartz::optim::BaseOptimizer;
+    use quartz::shampoo::{Shampoo, ShampooConfig};
+    let cfg = ShampooConfig {
+        t1: 1,
+        t2: 2,
+        side_codec: Some("test-rounded"),
+        root_codec: Some("test-rounded"),
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), cfg, &[(12, 8)]);
+    let mut rng = Rng::new(8);
+    let mut params = vec![Matrix::randn(12, 8, 0.5, &mut rng)];
+    let grads = vec![Matrix::randn(12, 8, 0.5, &mut rng)];
+    for k in 1..=4 {
+        sh.step(&mut params, &grads, k, 1.0);
+    }
+    assert!(!params[0].has_non_finite());
 }
 
 #[test]

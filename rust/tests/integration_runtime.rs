@@ -111,10 +111,17 @@ fn executable_cache_compiles_once() {
 fn classifier_training_reduces_loss() {
     let Some(rt) = runtime_or_skip() else { return };
     let model = rt.manifest.models["mlp_vgg_c32"].clone();
-    let spec = ClusterSpec { classes: 32, dim: 64, train: 2048, test: 512, seed: 11, ..Default::default() };
+    let spec = ClusterSpec {
+        classes: 32,
+        dim: 64,
+        train: 2048,
+        test: 512,
+        seed: 11,
+        ..Default::default()
+    };
     let (tr, te) = ClusterDataset::generate(&spec);
     let data = ClassifierData::from((&tr, &te));
-    let opt = OptimizerStack::Base(BaseOptimizer::sgdm(0.05, 0.9, 5e-4));
+    let opt = OptimizerStack::base(BaseOptimizer::sgdm(0.05, 0.9, 5e-4));
     let cfg = TrainConfig { steps: 150, log_every: 10, ..Default::default() };
     let m = train_classifier(&rt, &model, &data, opt, &cfg).expect("train");
     let first = m.loss_curve.first().unwrap().1;
@@ -127,7 +134,14 @@ fn classifier_training_reduces_loss() {
 fn shampoo_cqef_trains_classifier() {
     let Some(rt) = runtime_or_skip() else { return };
     let model = rt.manifest.models["mlp_vgg_c32"].clone();
-    let spec = ClusterSpec { classes: 32, dim: 64, train: 2048, test: 512, seed: 12, ..Default::default() };
+    let spec = ClusterSpec {
+        classes: 32,
+        dim: 64,
+        train: 2048,
+        test: 512,
+        seed: 12,
+        ..Default::default()
+    };
     let (tr, te) = ClusterDataset::generate(&spec);
     let data = ClassifierData::from((&tr, &te));
     let scfg = ShampooConfig {
@@ -138,7 +152,7 @@ fn shampoo_cqef_trains_classifier() {
         ..Default::default()
     };
     let sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 5e-4), scfg, &model.shapes());
-    let opt = OptimizerStack::Shampoo(Box::new(sh));
+    let opt = OptimizerStack::shampoo(sh);
     let cfg = TrainConfig { steps: 60, log_every: 5, ..Default::default() };
     let m = train_classifier(&rt, &model, &data, opt, &cfg).expect("train");
     let first = m.loss_curve.first().unwrap().1;
@@ -151,8 +165,9 @@ fn shampoo_cqef_trains_classifier() {
 fn lm_training_reduces_nll() {
     let Some(rt) = runtime_or_skip() else { return };
     let model = rt.manifest.models["lm_s"].clone();
-    let corpus = TokenCorpus::generate(&CorpusSpec { length: 50_000, seed: 5, ..Default::default() });
-    let opt = OptimizerStack::Base(BaseOptimizer::adamw(3e-3, 0.9, 0.999, 1e-8, 0.0));
+    let corpus =
+        TokenCorpus::generate(&CorpusSpec { length: 50_000, seed: 5, ..Default::default() });
+    let opt = OptimizerStack::base(BaseOptimizer::adamw(3e-3, 0.9, 0.999, 1e-8, 0.0));
     let cfg = TrainConfig { steps: 80, log_every: 10, ..Default::default() };
     let m = train_lm(&rt, &model, &corpus, opt, &cfg).expect("train");
     let first = m.loss_curve.first().unwrap().1;

@@ -87,13 +87,61 @@ fn variant_ordering_on_ill_conditioned_quadratic() {
     let full = train(Some(ShampooVariant::Full32), &quad, &w0, steps);
     let cq = train(Some(ShampooVariant::Cq4 { error_feedback: false }), &quad, &w0, steps);
     let cqef = train(Some(ShampooVariant::Cq4 { error_feedback: true }), &quad, &w0, steps);
+    let bw8 = train(Some(ShampooVariant::Bw8), &quad, &w0, steps);
 
     assert!(full < sgd * 0.8, "32-bit {full:.4} vs sgd {sgd:.4}");
     assert!(cq < sgd, "cq {cq:.4} vs sgd {sgd:.4}");
     assert!(cqef < sgd, "cqef {cqef:.4} vs sgd {sgd:.4}");
+    assert!(bw8 < sgd, "bw8 {bw8:.4} vs sgd {sgd:.4}");
     // Quantized variants stay within a small constant factor of 32-bit on
     // this convex problem (quantization noise costs some progress).
     assert!(cqef < full * 5.0 + 1e-3, "cqef {cqef:.4} vs full {full:.4}");
+    // 8-bit perturbs far less than 4-bit; it must track 32-bit closely.
+    assert!(bw8 < full * 5.0 + 1e-3, "bw8 {bw8:.4} vs full {full:.4}");
+}
+
+/// Acceptance: every registered stack key constructs a working optimizer by
+/// string, descends on the quadratic, and reports exact state bytes that
+/// match the analytic memory model.
+#[test]
+fn registry_constructs_every_stack_by_key() {
+    use quartz::metrics::MemoryModel;
+    use quartz::train::registry;
+
+    let quad = Quadratic::new(12, 8, 20.0, 15);
+    let mut rng = Rng::new(16);
+    let w0 = Matrix::randn(12, 8, 1.0, &mut rng);
+    let shapes = [(12usize, 8usize)];
+    for key in registry::stack_keys() {
+        let cfg = ShampooConfig {
+            t1: 2,
+            t2: 10,
+            max_order: 96,
+            quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut stack = registry::build(key, BaseOptimizer::sgd(5e-4, 0.0), &cfg, &shapes)
+            .unwrap_or_else(|| panic!("stack key '{key}' must build"));
+        stack.init(shapes.len());
+        let mut w = w0.clone();
+        for k in 1..=100 {
+            let g = quad.grad(&w);
+            stack.step(std::slice::from_mut(&mut w), std::slice::from_ref(&g), k, 1.0);
+        }
+        assert!(!w.has_non_finite(), "{key}: non-finite params");
+        assert!(quad.loss(&w) < quad.loss(&w0), "{key}: must descend");
+
+        // Memory-accounting parity: the analytic model predicts the live
+        // stack's preconditioner bytes exactly (the paper's headline claim
+        // survives the trait refactor byte-for-byte).
+        if key != "none" {
+            let variant = ShampooVariant::parse(key).unwrap();
+            let model_cfg = ShampooConfig { variant, ..cfg };
+            let predicted = MemoryModel::new(&shapes).shampoo_bytes(&model_cfg);
+            let measured = stack.state_bytes(); // sgd base holds no state
+            assert_eq!(predicted, measured, "{key}: modeled vs measured bytes");
+        }
+    }
 }
 
 #[test]

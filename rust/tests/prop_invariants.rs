@@ -192,6 +192,7 @@ fn prop_memory_model_matches_measured() {
             ShampooVariant::Vq4,
             ShampooVariant::Cq4 { error_feedback: false },
             ShampooVariant::Cq4 { error_feedback: true },
+            ShampooVariant::Bw8,
         ]);
         let cfg = ShampooConfig {
             variant,

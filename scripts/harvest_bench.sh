@@ -3,6 +3,10 @@
 # assemble the per-report JSONL records (emitted by util::bench when
 # QUARTZ_BENCH_JSON is set) into a single BENCH_quartz.json.
 #
+# `cargo bench` runs every [[bench]] target, including bench_codecs — the
+# per-codec quantize/dequantize throughput at orders 512/1024 whose records
+# (codec_store/*, codec_load/*) seed the codec regression trajectory.
+#
 # Usage: scripts/harvest_bench.sh [output.json]
 #
 # The quick mode (QUARTZ_BENCH_QUICK=1) shrinks warmup/measure windows so the
