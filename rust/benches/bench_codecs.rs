@@ -1,14 +1,19 @@
 //! Preconditioner-codec throughput: `store` (quantize) and `load`
 //! (dequantize/reconstruct) for every registered `PrecondCodec` at the
-//! paper-relevant preconditioner orders 512 and 1024.
+//! paper-relevant preconditioner orders 512/1024 (plus 2048 outside quick
+//! mode — the full suite stays CI-smoke-sized), and the scratch-aware
+//! `store_into`/`load_into` hot paths that the Shampoo refresh actually
+//! drives (arena-backed, zero steady-state allocation).
 //!
 //! Runs over the registry, so a newly registered codec is benchmarked with
 //! zero changes here. Records land in `BENCH_quartz.json` via the
 //! `QUARTZ_BENCH_JSON` hook (see `scripts/harvest_bench.sh`), seeding the
-//! codec-throughput regression trajectory.
+//! codec-throughput regression trajectory that
+//! `scripts/bench_regression.sh` diffs run-over-run.
 //!
 //! Run: `cargo bench --bench bench_codecs` (QUARTZ_BENCH_QUICK=1 for smoke).
 
+use quartz::linalg::{Matrix, ScratchArena};
 use quartz::quant::codec::{codec_keys, lookup};
 use quartz::quant::{BlockQuantizer, CodecCtx, QuantConfig};
 use quartz::util::bench::{black_box, Bencher};
@@ -21,10 +26,13 @@ fn main() {
     let ctx = CodecCtx::new(1e-6, 0.95, Arc::new(quantizer));
     let mut rng = Rng::new(1);
 
-    for n in [512usize, 1024] {
+    let quick = std::env::var("QUARTZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let orders: &[usize] = if quick { &[512, 1024] } else { &[512, 1024, 2048] };
+
+    for &n in orders {
         // A well-conditioned SPD input so Cholesky-based codecs take their
         // fast path (the jitter loop would dominate otherwise).
-        let g = quartz::linalg::Matrix::randn(n, n, 1.0, &mut rng);
+        let g = Matrix::randn(n, n, 1.0, &mut rng);
         let mut spd = quartz::linalg::syrk(&g);
         spd.scale(1.0 / n as f32);
         spd.add_diag(1.0);
@@ -39,6 +47,19 @@ fn main() {
             });
             b.bench_with_units(&format!("codec_load/{key}/{n}"), Some((bytes, "B")), || {
                 black_box(codec.load());
+            });
+
+            // Arena-backed hot paths (what `Shampoo::step` runs).
+            let mut arena = ScratchArena::new();
+            let mut out = Matrix::zeros(n, n);
+            codec.store_into(&spd, &mut arena);
+            b.bench_with_units(&format!("codec_store_into/{key}/{n}"), Some((bytes, "B")), || {
+                codec.store_into(&spd, &mut arena);
+                black_box(codec.size_bytes());
+            });
+            b.bench_with_units(&format!("codec_load_into/{key}/{n}"), Some((bytes, "B")), || {
+                codec.load_into(&mut out, &mut arena);
+                black_box(&out);
             });
         }
     }

@@ -3,17 +3,26 @@
 
 use quartz::linalg::schur_newton::SchurNewtonConfig;
 use quartz::linalg::{
-    cholesky, eig_sym, inverse_pth_root, lambda_max, matmul, matmul_into_planned, syrk, Matrix,
-    MatmulPlan,
+    cholesky, cholesky_naive, eig_sym, inverse_pth_root_scratch, lambda_max, matmul,
+    matmul_into_planned, syrk, Matrix, MatmulPlan, ScratchArena,
 };
 use quartz::util::bench::{black_box, Bencher};
 use quartz::util::rng::Rng;
 
 fn spd(n: usize, rng: &mut Rng) -> Matrix {
-    let g = Matrix::randn(n, n + 8, 1.0, rng);
-    let mut a = syrk(&g);
-    a.add_diag(0.5);
-    a
+    if n <= 512 {
+        let g = Matrix::randn(n, n + 8, 1.0, rng);
+        let mut a = syrk(&g);
+        a.add_diag(0.5);
+        a
+    } else {
+        // Gershgorin-dominant construction: O(n²) setup instead of an
+        // O(n³) syrk just to feed the large-order factorization benches.
+        let mut a = Matrix::randn(n, n, 1.0, rng);
+        a.symmetrize();
+        a.add_diag(2.0 * n as f32);
+        a
+    }
 }
 
 fn main() {
@@ -39,17 +48,42 @@ fn main() {
         });
     }
 
-    for n in [64usize, 128] {
+    // Naive reference kernel (the small-n path) vs the blocked
+    // right-looking factorization at preconditioner orders. The naive loop
+    // is O(n³) scalar, so it stops at 512; the blocked kernel carries the
+    // trajectory to 2048.
+    for n in [128usize, 256, 512] {
         let a = spd(n, &mut rng);
-        b.bench(&format!("cholesky/{n}"), || {
+        let flops = (n * n * n / 3) as f64;
+        b.bench_with_units(&format!("cholesky_naive/{n}"), Some((flops, "FLOP")), || {
+            black_box(cholesky_naive(&a).unwrap());
+        });
+    }
+    // Order 2048 stays out of quick mode (same gate as bench_codecs): a
+    // single blocked factorization there is ~2.9 GFLOP and would dominate
+    // the CI smoke budget.
+    let quick = std::env::var("QUARTZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let blocked_orders: &[usize] =
+        if quick { &[128, 256, 512, 1024] } else { &[128, 256, 512, 1024, 2048] };
+    for &n in blocked_orders {
+        let a = spd(n, &mut rng);
+        let flops = (n * n * n / 3) as f64;
+        b.bench_with_units(&format!("cholesky_blocked/{n}"), Some((flops, "FLOP")), || {
             black_box(cholesky(&a).unwrap());
         });
+    }
+
+    for n in [64usize, 128] {
+        let a = spd(n, &mut rng);
         b.bench(&format!("lambda_max/{n}"), || {
             black_box(lambda_max(&a, 50));
         });
         let cfg = SchurNewtonConfig::default();
+        let mut arena = ScratchArena::new();
         b.bench(&format!("schur_newton_p4/{n}"), || {
-            black_box(inverse_pth_root(&a, &cfg));
+            let (x, stats) = inverse_pth_root_scratch(&a, &cfg, &mut arena);
+            black_box(stats.iters);
+            arena.recycle(x);
         });
     }
 

@@ -1,5 +1,8 @@
-//! Quantization hot-path benchmarks (L3 §Perf): block-wise quantize /
-//! dequantize, off-diagonal variants, and the Fig. 2 joint triangular store.
+//! Quantization hot-path benchmarks (L3 §Perf): fused block-wise quantize /
+//! dequantize (boundary-table encode, streamed nibble packing, row-block
+//! parallelism), the buffer-reusing `quantize_into`, off-diagonal variants,
+//! and the fused Fig. 2 joint triangular store at preconditioner orders up
+//! to 2048.
 //!
 //! Run: `cargo bench --bench bench_quant` (QUARTZ_BENCH_QUICK=1 for smoke).
 
@@ -15,11 +18,24 @@ fn main() {
     let mut rng = Rng::new(1);
     let quantizer = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
 
-    for n in [64usize, 128, 256, 512] {
+    // Order 2048 stays out of quick mode (same gate as bench_codecs) so the
+    // CI smoke keeps its sub-minute budget; full runs cover it.
+    let quick = std::env::var("QUARTZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let orders: &[usize] =
+        if quick { &[64, 128, 256, 512, 1024] } else { &[64, 128, 256, 512, 1024, 2048] };
+    let tri_orders: &[usize] = if quick { &[256, 512, 1024] } else { &[256, 512, 1024, 2048] };
+
+    for &n in orders {
         let x = Matrix::randn(n, n, 1.0, &mut rng);
         let bytes = (n * n * 4) as f64;
         b.bench_with_units(&format!("quantize/{n}x{n}"), Some((bytes, "B")), || {
             black_box(quantizer.quantize(&x));
+        });
+        // Buffer-reusing variant — the codec store hot path (no alloc).
+        let mut shell = quantizer.quantize(&x);
+        b.bench_with_units(&format!("quantize_into/{n}x{n}"), Some((bytes, "B")), || {
+            quantizer.quantize_into(&x, &mut shell);
+            black_box(&shell);
         });
         let q = quantizer.quantize(&x);
         let mut out = Matrix::zeros(n, n);
@@ -40,24 +56,50 @@ fn main() {
         black_box(dequantize_offdiag(&s, &quantizer));
     });
 
-    // Fig. 2 joint triangular store (CQ+EF persistence).
-    let c = Matrix::from_fn(n, n, |i, j| if i >= j { 1.0 + (i * j % 7) as f32 * 0.1 } else { 0.0 });
-    let e = Matrix::from_fn(n, n, |i, j| if i > j { 0.01 } else { 0.0 });
-    b.bench(&format!("tri_store_pack/{n}x{n}"), || {
-        black_box(TriJointStore::store(&c, &e, &quantizer));
-    });
-    let store = TriJointStore::store(&c, &e, &quantizer);
-    b.bench(&format!("tri_store_load/{n}x{n}"), || {
-        black_box(store.load(&quantizer));
-    });
+    // Fig. 2 joint triangular store (CQ+EF persistence), fused paths at the
+    // paper-relevant preconditioner orders.
+    for &n in tri_orders {
+        let c = Matrix::from_fn(n, n, |i, j| {
+            if i >= j {
+                1.0 + (i * j % 7) as f32 * 0.1
+            } else {
+                0.0
+            }
+        });
+        let e = Matrix::from_fn(n, n, |i, j| if i > j { 0.01 } else { 0.0 });
+        b.bench(&format!("tri_store_pack/{n}x{n}"), || {
+            black_box(TriJointStore::store(&c, &e, &quantizer));
+        });
+        let mut store = TriJointStore::store(&c, &e, &quantizer);
+        b.bench(&format!("tri_store_pack_into/{n}x{n}"), || {
+            store.store_into(&c, &e, &quantizer);
+            black_box(&store);
+        });
+        b.bench(&format!("tri_store_load/{n}x{n}"), || {
+            black_box(store.load(&quantizer));
+        });
+        let (mut lc, mut le) = store.load(&quantizer);
+        b.bench(&format!("tri_store_load_into/{n}x{n}"), || {
+            store.load_into(&quantizer, &mut lc, &mut le);
+            black_box((&lc, &le));
+        });
+    }
 
-    // Codebook encode alone (the inner loop).
+    // Codebook encode alone (the inner loop): boundary-table vs the scalar
+    // midpoint reference it replaced.
     let cb = quantizer.codebook().clone();
     let vals: Vec<f32> = (0..4096).map(|i| -1.0 + 2.0 * (i as f32) / 4095.0).collect();
     b.bench_with_units("codebook_encode/4096", Some((4096.0, "elem")), || {
         let mut acc = 0u32;
         for &v in &vals {
             acc = acc.wrapping_add(cb.encode(v) as u32);
+        }
+        black_box(acc);
+    });
+    b.bench_with_units("codebook_encode_scalar/4096", Some((4096.0, "elem")), || {
+        let mut acc = 0u32;
+        for &v in &vals {
+            acc = acc.wrapping_add(cb.encode_scalar(v) as u32);
         }
         black_box(acc);
     });

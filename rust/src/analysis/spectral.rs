@@ -6,8 +6,8 @@
 //! positive-definiteness (Tab. 9's negative eigenvalue).
 
 use crate::linalg::{
-    angle_between, cholesky_jittered, eig_sym, inverse_pth_root_eig, matmul_nt, relative_error,
-    Matrix,
+    angle_between, cholesky_jittered, eig_sym, inverse_pth_root_eig_planned, matmul_nt,
+    relative_error, Matrix, MatmulPlan,
 };
 use crate::quant::{BlockQuantizer, TriJointStore};
 use crate::util::rng::Rng;
@@ -52,8 +52,14 @@ pub fn cq_roundtrip(a: &Matrix, eps: f32, q: &BlockQuantizer) -> Matrix {
 /// Near-singular (or quantization-broken) eigenvalues are clamped at
 /// `1e-12` so a PD violation shows up as a *large* error, as in the paper.
 pub fn nre_ae(a: &Matrix, ga: &Matrix) -> (f64, f64) {
-    let ra = inverse_pth_root_eig(a, 4.0, 1e-12);
-    let rg = inverse_pth_root_eig(ga, 4.0, 1e-12);
+    nre_ae_planned(a, ga, &mut MatmulPlan::new())
+}
+
+/// [`nre_ae`] with a caller-owned matmul plan (the sweep loops reuse one
+/// packed-B buffer across every root instead of allocating per call).
+pub fn nre_ae_planned(a: &Matrix, ga: &Matrix, plan: &mut MatmulPlan) -> (f64, f64) {
+    let ra = inverse_pth_root_eig_planned(a, 4.0, 1e-12, plan);
+    let rg = inverse_pth_root_eig_planned(ga, 4.0, 1e-12, plan);
     (relative_error(&ra, &rg), angle_between(&ra, &rg))
 }
 
@@ -62,8 +68,9 @@ pub fn nre_ae(a: &Matrix, ga: &Matrix) -> (f64, f64) {
 pub fn cumulative_nre_ae(mats: &[Matrix], g: impl Fn(&Matrix) -> Matrix) -> (f64, f64) {
     let mut nre = 0.0;
     let mut ae = 0.0;
+    let mut plan = MatmulPlan::new();
     for a in mats {
-        let (n, e) = nre_ae(a, &g(a));
+        let (n, e) = nre_ae_planned(a, &g(a), &mut plan);
         nre += n;
         ae += e;
     }

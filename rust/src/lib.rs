@@ -22,7 +22,7 @@
 //! | module | contents |
 //! |---|---|
 //! | [`util`] | RNG, stats, JSON/TOML parsers, thread pool, bench + property-test harnesses |
-//! | [`linalg`] | dense f32 matrices, blocked matmul, Cholesky, Schur–Newton inverse p-th root, Jacobi eigensolver, power iteration |
+//! | [`linalg`] | dense f32 matrices, blocked matmul, blocked + naive Cholesky, Schur–Newton inverse p-th root, Jacobi eigensolver, power iteration, the [`linalg::ScratchArena`] buffer pool behind the allocation-free refresh path |
 //! | [`quant`] | codebook mappings, block-wise quantizers (4/8-bit), off-diagonal quantization, the Fig. 2 joint triangular store, error feedback, and the open [`quant::codec`] registry |
 //! | [`optim`] | the [`optim::Optimizer`] trait; SGD(M), Adam(W), RMSProp, grafting, LR schedules |
 //! | [`shampoo`] | 32-bit Shampoo (Alg. 2) and quantized Shampoo VQ / CQ / CQ+EF (Alg. 1) / 8-bit, all storing state through `PrecondCodec` trait objects; max-order blocking; parallel per-layer stepping |
@@ -84,7 +84,7 @@ pub mod analysis;
 
 /// Convenience re-exports of the most commonly used types.
 pub mod prelude {
-    pub use crate::linalg::{Matrix, MatmulPlan};
+    pub use crate::linalg::{Matrix, MatmulPlan, ScratchArena};
     pub use crate::metrics::memory::MemoryModel;
     pub use crate::optim::{BaseOptimizer, LrSchedule, Optimizer};
     pub use crate::quant::{BlockQuantizer, CodecCtx, Mapping, PrecondCodec, QuantConfig};

@@ -5,7 +5,7 @@
 //! Fig. 3's eigenvalue histograms and the Tab. 9 toy example use it
 //! directly. Accuracy over speed by design.
 
-use super::matmul::matmul;
+use super::matmul::{matmul_into_planned, MatmulPlan};
 use super::matrix::Matrix;
 
 /// Eigen-decomposition of symmetric `a`: returns `(eigenvalues, V)` where
@@ -88,6 +88,21 @@ pub fn eig_sym(a: &Matrix, tol: f64, max_sweeps: usize) -> (Vec<f32>, Matrix) {
 /// Eigenvalues are clamped below at `clamp` to keep the result finite on
 /// near-singular inputs (matching the regularized definition in Eq. (6)).
 pub fn inverse_pth_root_eig(a: &Matrix, p: f64, clamp: f32) -> Matrix {
+    let mut plan = MatmulPlan::new();
+    inverse_pth_root_eig_planned(a, p, clamp, &mut plan)
+}
+
+/// [`inverse_pth_root_eig`] with a caller-owned matmul plan. Callers that
+/// hit this inside a loop (the Shampoo refresh fallback for
+/// quantization-broken preconditioners, the NRE/AE analysis sweeps) route
+/// their arena's plan here instead of paying a fresh packed-B allocation
+/// per call.
+pub fn inverse_pth_root_eig_planned(
+    a: &Matrix,
+    p: f64,
+    clamp: f32,
+    plan: &mut MatmulPlan,
+) -> Matrix {
     let n = a.rows();
     let (vals, v) = eig_sym(a, 1e-12, 100);
     let mut scaled = v.clone();
@@ -98,13 +113,15 @@ pub fn inverse_pth_root_eig(a: &Matrix, p: f64, clamp: f32) -> Matrix {
             scaled[(i, j)] *= w;
         }
     }
-    matmul(&scaled, &v.transpose())
+    let mut out = Matrix::zeros(n, n);
+    matmul_into_planned(&scaled, &v.transpose(), &mut out, plan);
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::matmul::syrk;
+    use crate::linalg::matmul::{matmul, syrk};
     use crate::linalg::norms::fro_norm;
     use crate::util::rng::Rng;
 

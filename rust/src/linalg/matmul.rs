@@ -15,7 +15,14 @@ const PAR_FLOP_THRESHOLD: usize = 1 << 20;
 
 /// Reusable scratch for repeated products of the same shape (avoids
 /// reallocating the packed-B buffer inside optimizer loops).
-#[derive(Default)]
+///
+/// Plan-audit rule (hot-path discipline): `matmul`/`matmul_into` create a
+/// fresh plan per call, which is fine for one-off products but silently
+/// re-allocates inside loops. Anything called per refresh step — Shampoo's
+/// preconditioning, the Schur–Newton iteration, the eigensolver fallback —
+/// must route through [`matmul_into_planned`] with a caller-owned plan
+/// (typically the one inside `linalg::ScratchArena`).
+#[derive(Debug, Default)]
 pub struct MatmulPlan {
     packed_b: Vec<f32>,
 }
@@ -26,14 +33,17 @@ impl MatmulPlan {
     }
 }
 
-struct SendPtr(*mut f32);
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
+/// Raw pointer that may cross the scoped-thread boundary. Every user must
+/// write through disjoint index ranges per task (row blocks here; byte
+/// ranges in the quant kernels).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
     /// Accessing through a method keeps closure captures on the whole
     /// wrapper (edition-2021 disjoint capture would otherwise grab the raw
     /// field and lose the `Sync` impl).
     #[inline]
-    fn get(&self) -> *mut f32 {
+    pub(crate) fn get(&self) -> *mut T {
         self.0
     }
 }
@@ -117,10 +127,18 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 
 /// `C = Aᵀ · B` (A is k×m): used for `GᵀG` shapes without materializing Aᵀ.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    matmul_tn_into(a, b, &mut c);
+    c
+}
+
+/// `C = Aᵀ · B` into an existing output (`C` is fully overwritten).
+pub fn matmul_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (k, m) = (a.rows(), a.cols());
     let n = b.cols();
     assert_eq!(b.rows(), k);
-    let mut c = Matrix::zeros(m, n);
+    assert_eq!((c.rows(), c.cols()), (m, n), "output shape mismatch");
+    c.data_mut().fill(0.0);
     // C[i][j] = sum_kk A[kk][i] * B[kk][j]  — accumulate row-by-row (streams
     // both operands contiguously).
     for kk in 0..k {
@@ -137,15 +155,21 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
-    c
 }
 
 /// `C = A · Bᵀ` (B is n×k): the `G·Gᵀ` shape with contiguous dots.
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.rows());
+    matmul_nt_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · Bᵀ` into an existing output (`C` is fully overwritten).
+pub fn matmul_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (m, k) = (a.rows(), a.cols());
     let n = b.rows();
     assert_eq!(b.cols(), k);
-    let mut c = Matrix::zeros(m, n);
+    assert_eq!((c.rows(), c.cols()), (m, n), "output shape mismatch");
     let threads = if 2 * m * n * k < PAR_FLOP_THRESHOLD {
         1
     } else {
@@ -160,13 +184,20 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
             *cv = dot(arow, b.row(j));
         }
     });
-    c
 }
 
 /// Symmetric rank-k update `C = A · Aᵀ` exploiting symmetry (half the dots).
 pub fn syrk(a: &Matrix) -> Matrix {
     let m = a.rows();
     let mut c = Matrix::zeros(m, m);
+    syrk_into(a, &mut c);
+    c
+}
+
+/// `C = A · Aᵀ` into an existing output (both triangles fully overwritten).
+pub fn syrk_into(a: &Matrix, c: &mut Matrix) {
+    let m = a.rows();
+    assert_eq!((c.rows(), c.cols()), (m, m), "output shape mismatch");
     let threads = if m * m * a.cols() < PAR_FLOP_THRESHOLD {
         1
     } else {
@@ -184,7 +215,6 @@ pub fn syrk(a: &Matrix) -> Matrix {
             }
         }
     });
-    c
 }
 
 #[cfg(test)]

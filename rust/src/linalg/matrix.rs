@@ -114,6 +114,23 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Overwrite `self` with `other`'s contents (shapes must match).
+    /// The allocation-free sibling of `clone` for scratch-buffer reuse.
+    #[inline]
+    pub fn copy_from(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "shape mismatch");
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Overwrite `self` (square) with `s·I`.
+    pub fn set_eye_scaled(&mut self, s: f32) {
+        assert!(self.is_square());
+        self.data.fill(0.0);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] = s;
+        }
+    }
+
     /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
@@ -193,6 +210,16 @@ impl Matrix {
                 .copy_from_slice(&self.row(r0 + i)[c0..c0 + cols]);
         }
         out
+    }
+
+    /// Extract a sub-block into an existing buffer (`out`'s shape selects
+    /// the block size) — the allocation-free sibling of [`Matrix::block`].
+    pub fn block_into(&self, r0: usize, c0: usize, out: &mut Matrix) {
+        let (rows, cols) = (out.rows, out.cols);
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols);
+        for i in 0..rows {
+            out.row_mut(i).copy_from_slice(&self.row(r0 + i)[c0..c0 + cols]);
+        }
     }
 
     /// Write a sub-block.

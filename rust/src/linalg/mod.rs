@@ -17,16 +17,24 @@ pub mod schur_newton;
 pub mod eigen;
 pub mod norms;
 pub mod kron;
+pub mod scratch;
 
-pub use cholesky::{cholesky, cholesky_jittered};
-pub use eigen::{eig_sym, inverse_pth_root_eig};
+pub use cholesky::{
+    cholesky, cholesky_into, cholesky_jittered, cholesky_jittered_into, cholesky_naive,
+    CHOLESKY_BLOCKED_MIN,
+};
+pub use eigen::{eig_sym, inverse_pth_root_eig, inverse_pth_root_eig_planned};
 pub use kron::kron;
-pub use matmul::{matmul, matmul_into, matmul_into_planned, matmul_tn, matmul_nt, syrk, MatmulPlan};
+pub use matmul::{
+    matmul, matmul_into, matmul_into_planned, matmul_nt, matmul_nt_into, matmul_tn,
+    matmul_tn_into, syrk, syrk_into, MatmulPlan,
+};
 pub use matrix::Matrix;
 pub use norms::{
     angle_between, diag_dominance_margin, fro_norm, inner, max_abs, off_diag_max_abs,
     relative_error,
 };
-pub use power_iter::lambda_max;
-pub use schur_newton::inverse_pth_root;
+pub use power_iter::{lambda_max, lambda_max_with};
+pub use schur_newton::{inverse_pth_root, inverse_pth_root_scratch};
+pub use scratch::ScratchArena;
 pub use triangular::{solve_lower, solve_lower_transpose};

@@ -9,20 +9,33 @@ use crate::util::rng::Rng;
 /// Estimate λ_max of symmetric PSD `a` via power iteration with a fixed,
 /// seeded start vector. Returns 0 for the zero matrix.
 pub fn lambda_max(a: &Matrix, iters: usize) -> f32 {
+    let n = a.rows();
+    let mut v = vec![0.0f32; n];
+    let mut w = vec![0.0f32; n];
+    lambda_max_with(a, iters, &mut v, &mut w)
+}
+
+/// [`lambda_max`] with caller-owned iterate buffers (`v`/`w`, each of
+/// length `n`) — the allocation-free variant the Schur–Newton scratch path
+/// uses. Contents of the buffers are fully overwritten.
+pub fn lambda_max_with(a: &Matrix, iters: usize, v: &mut [f32], w: &mut [f32]) -> f32 {
     assert!(a.is_square());
     let n = a.rows();
+    assert_eq!(v.len(), n);
+    assert_eq!(w.len(), n);
     if n == 0 {
         return 0.0;
     }
     let mut rng = Rng::new(0x9E1B);
-    let mut v: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
-    normalize(&mut v);
+    for vi in v.iter_mut() {
+        *vi = rng.normal_f32(1.0);
+    }
+    normalize(v);
     let mut lam = 0.0f32;
-    let mut w = vec![0.0f32; n];
     for _ in 0..iters.max(1) {
         // w = A v
         for i in 0..n {
-            w[i] = crate::linalg::matmul::dot(a.row(i), &v);
+            w[i] = crate::linalg::matmul::dot(a.row(i), v);
         }
         let norm = w.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32;
         if norm <= f32::MIN_POSITIVE {
@@ -35,7 +48,7 @@ pub fn lambda_max(a: &Matrix, iters: usize) -> f32 {
     }
     // Rayleigh quotient refinement.
     for i in 0..n {
-        w[i] = crate::linalg::matmul::dot(a.row(i), &v);
+        w[i] = crate::linalg::matmul::dot(a.row(i), v);
     }
     let rq: f64 = v.iter().zip(w.iter()).map(|(&x, &y)| x as f64 * y as f64).sum();
     if rq.is_finite() && rq as f32 > 0.0 {
@@ -84,5 +97,16 @@ mod tests {
     fn zero_matrix() {
         let a = Matrix::zeros(4, 4);
         assert_eq!(lambda_max(&a, 50), 0.0);
+    }
+
+    #[test]
+    fn with_buffers_matches_allocating_path() {
+        let mut rng = Rng::new(2);
+        let g = Matrix::randn(10, 14, 1.0, &mut rng);
+        let a = syrk(&g);
+        let mut v = vec![7.0f32; 10]; // stale contents must not matter
+        let mut w = vec![-3.0f32; 10];
+        let with = lambda_max_with(&a, 64, &mut v, &mut w);
+        assert_eq!(with, lambda_max(&a, 64), "same seed ⇒ bit-identical estimate");
     }
 }

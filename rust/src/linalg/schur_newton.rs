@@ -13,9 +13,10 @@
 //! `M_k → I` and `X_k → A^{-1/p}`. For Shampoo `p = 4`, so `T^4 = (T²)²`
 //! costs two squarings.
 
-use super::matmul::{matmul_into_planned, MatmulPlan};
+use super::matmul::matmul_into_planned;
 use super::matrix::Matrix;
-use super::power_iter::lambda_max;
+use super::power_iter::lambda_max_with;
+use super::scratch::ScratchArena;
 
 /// Configuration for the iteration.
 #[derive(Clone, Copy, Debug)]
@@ -52,25 +53,52 @@ pub struct SchurNewtonStats {
 ///
 /// Matches Algorithm 2 step 10–11: λ_max via power iteration, εI ridge,
 /// then the coupled Newton iteration. Returns the root and diagnostics.
+///
+/// Convenience wrapper over [`inverse_pth_root_scratch`] with a throwaway
+/// arena; loops that refresh roots every `T2` steps must call the scratch
+/// variant with a persistent arena instead (zero steady-state allocation,
+/// one shared matmul plan).
 pub fn inverse_pth_root(a: &Matrix, cfg: &SchurNewtonConfig) -> (Matrix, SchurNewtonStats) {
+    let mut arena = ScratchArena::new();
+    inverse_pth_root_scratch(a, cfg, &mut arena)
+}
+
+/// [`inverse_pth_root`] with every temporary (power-iteration vectors,
+/// `M`/`T` iterates, the `T^p` accumulator, the packed-B matmul buffer)
+/// drawn from a caller-owned [`ScratchArena`]. The returned root is backed
+/// by an arena buffer — recycle it when done to keep the steady state
+/// allocation-free. Bit-identical to the wrapper for the same inputs.
+pub fn inverse_pth_root_scratch(
+    a: &Matrix,
+    cfg: &SchurNewtonConfig,
+    arena: &mut ScratchArena,
+) -> (Matrix, SchurNewtonStats) {
     assert!(a.is_square());
     let n = a.rows();
     let p = cfg.p.max(1);
 
-    let lam = lambda_max(a, cfg.power_iters).max(f32::MIN_POSITIVE);
+    let lam = {
+        let mut v = arena.take(1, n);
+        let mut w = arena.take(1, n);
+        let lam = lambda_max_with(a, cfg.power_iters, v.data_mut(), w.data_mut());
+        arena.recycle(v);
+        arena.recycle(w);
+        lam.max(f32::MIN_POSITIVE)
+    };
     let ridge = lam * cfg.eps;
-    let mut m = a.clone();
+    let mut m = arena.take(n, n);
+    m.copy_from(a);
     m.add_diag(ridge);
 
     // Scale: M0 = (A + ridge) / s with s = λ_max(A + ridge) ≈ lam + ridge.
     let s = lam + ridge;
     m.scale(1.0 / s);
     let x0_scale = (s as f64).powf(-1.0 / p as f64) as f32;
-    let mut x = Matrix::eye_scaled(n, x0_scale);
+    let mut x = arena.take(n, n);
+    x.set_eye_scaled(x0_scale);
 
-    let mut plan = MatmulPlan::new();
-    let mut t = Matrix::zeros(n, n);
-    let mut tmp = Matrix::zeros(n, n);
+    let mut t = arena.take(n, n);
+    let mut tmp = arena.take(n, n);
     let mut iters = 0;
     let mut residual = residual_to_identity(&m);
 
@@ -83,11 +111,12 @@ pub fn inverse_pth_root(a: &Matrix, cfg: &SchurNewtonConfig) -> (Matrix, SchurNe
             }
         }
         // X ← X·T
-        matmul_into_planned(&x, &t, &mut tmp, &mut plan);
+        matmul_into_planned(&x, &t, &mut tmp, arena.plan());
         std::mem::swap(&mut x, &mut tmp);
         // M ← T^p · M  (p = 2^k fast path via repeated squaring)
-        let tp = matrix_power(&t, p, &mut plan);
-        matmul_into_planned(&tp, &m, &mut tmp, &mut plan);
+        let tp = matrix_power(&t, p, arena);
+        matmul_into_planned(&tp, &m, &mut tmp, arena.plan());
+        arena.recycle(tp);
         std::mem::swap(&mut m, &mut tmp);
         // Guard drift: M must stay symmetric-ish; re-symmetrize cheaply.
         m.symmetrize();
@@ -99,6 +128,9 @@ pub fn inverse_pth_root(a: &Matrix, cfg: &SchurNewtonConfig) -> (Matrix, SchurNe
         }
     }
 
+    arena.recycle(m);
+    arena.recycle(t);
+    arena.recycle(tmp);
     // Final symmetrization of the root (X inherits asymmetry from rounding).
     x.symmetrize();
     (x, SchurNewtonStats { iters, residual, lambda_max: lam })
@@ -116,29 +148,40 @@ fn residual_to_identity(m: &Matrix) -> f32 {
     r
 }
 
-/// `T^p` via binary exponentiation.
-fn matrix_power(t: &Matrix, p: u32, plan: &mut MatmulPlan) -> Matrix {
+/// `T^p` via binary exponentiation, all temporaries arena-backed. The
+/// returned matrix is an arena buffer — the caller recycles it.
+fn matrix_power(t: &Matrix, p: u32, arena: &mut ScratchArena) -> Matrix {
     debug_assert!(p >= 1);
+    let n = t.rows();
     let mut result: Option<Matrix> = None;
-    let mut base = t.clone();
+    let mut base = arena.take(n, n);
+    base.copy_from(t);
+    let mut tmp = arena.take(n, n);
     let mut e = p;
-    let mut tmp = Matrix::zeros(t.rows(), t.cols());
     while e > 0 {
         if e & 1 == 1 {
             result = Some(match result {
-                None => base.clone(),
+                None => {
+                    let mut r = arena.take(n, n);
+                    r.copy_from(&base);
+                    r
+                }
                 Some(r) => {
-                    matmul_into_planned(&r, &base, &mut tmp, plan);
-                    tmp.clone()
+                    matmul_into_planned(&r, &base, &mut tmp, arena.plan());
+                    // The product becomes the accumulator; the old one is
+                    // the next multiply's scratch.
+                    std::mem::replace(&mut tmp, r)
                 }
             });
         }
         e >>= 1;
         if e > 0 {
-            matmul_into_planned(&base, &base, &mut tmp, plan);
+            matmul_into_planned(&base, &base, &mut tmp, arena.plan());
             std::mem::swap(&mut base, &mut tmp);
         }
     }
+    arena.recycle(base);
+    arena.recycle(tmp);
     result.unwrap()
 }
 
@@ -212,10 +255,33 @@ mod tests {
     #[test]
     fn matrix_power_binary_exp() {
         let t = Matrix::from_rows(&[&[1.0, 1.0], &[0.0, 1.0]]);
-        let mut plan = MatmulPlan::new();
-        let t4 = matrix_power(&t, 4, &mut plan);
+        let mut arena = ScratchArena::new();
+        let t4 = matrix_power(&t, 4, &mut arena);
         assert_eq!(t4[(0, 1)], 4.0);
-        let t1 = matrix_power(&t, 1, &mut plan);
+        let t1 = matrix_power(&t, 1, &mut arena);
         assert_eq!(t1, t);
+    }
+
+    #[test]
+    fn scratch_variant_is_bit_identical_and_allocation_free() {
+        let mut rng = Rng::new(21);
+        let g = Matrix::randn(24, 30, 1.0, &mut rng);
+        let mut a = syrk(&g);
+        a.add_diag(0.3);
+        let cfg = SchurNewtonConfig::default();
+        let (want, wstats) = inverse_pth_root(&a, &cfg);
+
+        let mut arena = ScratchArena::new();
+        // Warm-up pass populates the pool.
+        let (x0, _) = inverse_pth_root_scratch(&a, &cfg, &mut arena);
+        arena.recycle(x0);
+        let baseline = arena.misses();
+        for _ in 0..3 {
+            let (x, stats) = inverse_pth_root_scratch(&a, &cfg, &mut arena);
+            assert_eq!(x.max_abs_diff(&want), 0.0, "scratch path must be bit-identical");
+            assert_eq!(stats.iters, wstats.iters);
+            arena.recycle(x);
+        }
+        assert_eq!(arena.misses(), baseline, "steady-state root refresh must not allocate");
     }
 }

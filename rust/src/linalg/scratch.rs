@@ -1,0 +1,159 @@
+//! Reusable scratch arena for the optimizer hot loops.
+//!
+//! A steady-state Shampoo refresh step performs the same sequence of
+//! matrix-shaped temporaries every `T1`/`T2` window: Gram products, codec
+//! round-trip buffers, Schur–Newton iterates, preconditioned gradients.
+//! [`ScratchArena`] turns those into buffer *reuse* instead of per-step heap
+//! allocation: [`take`](ScratchArena::take) hands out a `Matrix` backed by a
+//! pooled buffer (allocating only on a pool miss) and
+//! [`recycle`](ScratchArena::recycle) returns it for the next taker. After a
+//! warm-up step every `take` is a pool hit, so the store/load/root refresh
+//! pipeline runs with zero matrix allocations — asserted by the
+//! `kernel_equivalence` scratch-reuse suite via [`misses`](ScratchArena::misses).
+//!
+//! The arena also owns a [`MatmulPlan`], so every planned matmul issued
+//! through the same arena reuses one packed-B buffer (the "caller-owned
+//! plan" rule from the perf audit — see `linalg::matmul`).
+//!
+//! The arena is deliberately *not* thread-safe: each worker of the parallel
+//! per-layer loop borrows its own arena from a pool (`shampoo::Shampoo`
+//! keeps a `Mutex<Vec<ScratchArena>>`), so takes/recycles never contend.
+
+use super::matmul::MatmulPlan;
+use super::matrix::Matrix;
+
+/// Pool of reusable f32 buffers + one shared matmul plan.
+///
+/// Buffers are shape-agnostic: a `take(r, c)` is satisfied by any pooled
+/// buffer whose *capacity* covers `r·c` (best fit wins), so one arena serves
+/// mixed layer shapes without growing past the largest temporary.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    pool: Vec<Vec<f32>>,
+    plan: MatmulPlan,
+    hits: usize,
+    misses: usize,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// A zeroed `rows × cols` matrix backed by a pooled buffer when one with
+    /// enough capacity is available (pool hit), else freshly allocated
+    /// (pool miss). Always fully zero-filled, so `take` is a drop-in for
+    /// `Matrix::zeros`.
+    pub fn take(&mut self, rows: usize, cols: usize) -> Matrix {
+        let need = rows * cols;
+        let mut best: Option<usize> = None;
+        for (i, buf) in self.pool.iter().enumerate() {
+            if buf.capacity() < need {
+                continue;
+            }
+            let better = match best {
+                Some(j) => buf.capacity() < self.pool[j].capacity(),
+                None => true,
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let mut buf = match best {
+            Some(i) => {
+                self.hits += 1;
+                self.pool.swap_remove(i)
+            }
+            None => {
+                self.misses += 1;
+                Vec::with_capacity(need)
+            }
+        };
+        buf.clear();
+        buf.resize(need, 0.0);
+        Matrix::from_vec(rows, cols, buf)
+    }
+
+    /// Return a matrix's buffer to the pool for the next [`take`](Self::take).
+    pub fn recycle(&mut self, m: Matrix) {
+        self.pool.push(m.into_vec());
+    }
+
+    /// The arena's matmul plan (packed-B scratch shared by every planned
+    /// matmul issued through this arena).
+    pub fn plan(&mut self) -> &mut MatmulPlan {
+        &mut self.plan
+    }
+
+    /// Takes satisfied from the pool.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Takes that had to allocate. Stable across steps ⇔ the steady-state
+    /// pipeline is allocation-free (the scratch-reuse invariant).
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_like_matrix_zeros() {
+        let mut a = ScratchArena::new();
+        let mut m = a.take(3, 4);
+        m[(1, 2)] = 7.0;
+        a.recycle(m);
+        let m2 = a.take(3, 4);
+        assert_eq!(m2, Matrix::zeros(3, 4), "recycled buffer must come back zeroed");
+    }
+
+    #[test]
+    fn steady_state_has_no_misses() {
+        let mut a = ScratchArena::new();
+        // Warm-up: two concurrent shapes.
+        let x = a.take(8, 8);
+        let y = a.take(4, 16);
+        a.recycle(x);
+        a.recycle(y);
+        let baseline = a.misses();
+        for _ in 0..10 {
+            let x = a.take(8, 8);
+            let y = a.take(4, 16);
+            a.recycle(y);
+            a.recycle(x);
+        }
+        assert_eq!(a.misses(), baseline, "steady state must be allocation-free");
+        assert!(a.hits() >= 20);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut a = ScratchArena::new();
+        let big = a.take(32, 32);
+        let small = a.take(4, 4);
+        a.recycle(big);
+        a.recycle(small);
+        // A 4×4 take must grab the 16-capacity buffer, leaving 1024 pooled.
+        let m = a.take(4, 4);
+        assert!(m.into_vec().capacity() < 32 * 32);
+    }
+
+    #[test]
+    fn smaller_take_reuses_larger_buffer() {
+        let mut a = ScratchArena::new();
+        let m = a.take(16, 16);
+        a.recycle(m);
+        let m2 = a.take(2, 2);
+        assert_eq!(a.misses(), 1, "2x2 fits in the pooled 256-cap buffer");
+        assert_eq!(m2, Matrix::zeros(2, 2));
+    }
+}

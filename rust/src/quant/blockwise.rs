@@ -7,8 +7,38 @@
 //! push preconditioners to 4 bits at all.
 
 use super::mapping::{Codebook, Mapping};
-use super::packed::PackedNibbles;
+use super::packed::{NibbleReader, NibbleWriter, PackedNibbles};
+use crate::linalg::matmul::SendPtr;
 use crate::linalg::Matrix;
+use crate::util::pool::{default_threads, parallel_for};
+
+/// Element count below which quantize/dequantize stay single-threaded
+/// (fan-out overhead beats the scan for small preconditioner blocks).
+const PAR_ELEMS_THRESHOLD: usize = 1 << 15;
+
+/// Rows-per-chunk for row-parallel kernels over an `rows × cols` grid,
+/// sized so each worker gets ~4 chunks AND every chunk's flat start index
+/// (`row · cols`) is even. The latter is the bit-identical-parallelism
+/// guard for nibble-packed codes: a byte holds two consecutive codes, so
+/// chunks that start on an even flat index never share a byte — parallel
+/// workers write disjoint byte ranges and the result is independent of the
+/// thread count.
+pub(crate) fn even_aligned_chunk(rows: usize, cols: usize, threads: usize) -> usize {
+    let base = rows.div_ceil(threads.max(1) * 4).max(1);
+    if cols % 2 == 1 {
+        base.next_multiple_of(2)
+    } else {
+        base
+    }
+}
+
+pub(crate) fn auto_threads(elems: usize) -> usize {
+    if elems < PAR_ELEMS_THRESHOLD {
+        1
+    } else {
+        default_threads()
+    }
+}
 
 /// Quantizer configuration (paper defaults: b=4, B=64, linear-2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,6 +110,20 @@ impl CodeStore {
             CodeStore::Bytes(v) => v.len(),
         }
     }
+
+    /// Resize to `len` zeroed codes of width `bits`, reusing the existing
+    /// allocation when the variant matches and capacity suffices (the
+    /// `quantize_into` steady-state path).
+    pub fn reset(&mut self, len: usize, bits: u32) {
+        match (&mut *self, bits <= 4) {
+            (CodeStore::Nibbles(p), true) => p.reset(len),
+            (CodeStore::Bytes(v), false) => {
+                v.clear();
+                v.resize(len, 0);
+            }
+            (s, _) => *s = CodeStore::zeros(len, bits),
+        }
+    }
 }
 
 /// A block-quantized matrix: packed codes + per-block scales.
@@ -113,55 +157,155 @@ impl BlockQuantizer {
     }
 
     /// Quantize `x` block-wise (Eq. 3). All-zero blocks get scale 0.
+    /// Allocates a fresh [`QuantizedMatrix`]; loops should hold one and call
+    /// [`Self::quantize_into`] instead.
     pub fn quantize(&self, x: &Matrix) -> QuantizedMatrix {
+        let mut q = QuantizedMatrix {
+            rows: 0,
+            cols: 0,
+            block: self.cfg.block.max(1),
+            bits: self.cfg.bits,
+            mapping: self.cfg.mapping,
+            codes: CodeStore::zeros(0, self.cfg.bits),
+            scales: Vec::new(),
+        };
+        self.quantize_into(x, &mut q);
+        q
+    }
+
+    /// Quantize into a caller-owned [`QuantizedMatrix`], reusing its code
+    /// and scale buffers (zero allocations once capacities have warmed up —
+    /// the codec store hot path). `q` is fully overwritten, including its
+    /// shape/config metadata.
+    pub fn quantize_into(&self, x: &Matrix, q: &mut QuantizedMatrix) {
+        self.quantize_into_threaded(x, q, auto_threads(x.rows() * x.cols()));
+    }
+
+    /// [`Self::quantize_into`] with an explicit worker count.
+    ///
+    /// The fused kernel runs two passes — block absmax scales (parallel
+    /// over block rows), then encode+pack (parallel over row chunks,
+    /// streaming whole bytes through `NibbleWriter` instead of per-code
+    /// `CodeStore::set`). Every element's code depends only on its own
+    /// value and its block scale, workers write disjoint byte ranges
+    /// (even-aligned chunks), and per-block scale folds stay row-major —
+    /// so the result is bit-identical for every `threads` value (pinned by
+    /// the kernel-equivalence suite).
+    pub fn quantize_into_threaded(&self, x: &Matrix, q: &mut QuantizedMatrix, threads: usize) {
         let (m, n) = (x.rows(), x.cols());
         let b = self.cfg.block.max(1);
         let bm = m.div_ceil(b);
         let bn = n.div_ceil(b);
-        let mut scales = vec![0.0f32; bm * bn];
-        let mut codes = CodeStore::zeros(m * n, self.cfg.bits);
+        q.rows = m;
+        q.cols = n;
+        q.block = b;
+        q.bits = self.cfg.bits;
+        q.mapping = self.cfg.mapping;
+        q.scales.clear();
+        q.scales.resize(bm * bn, 0.0);
+        q.codes.reset(m * n, self.cfg.bits);
 
-        let zero_code = self.codebook.encode(0.0);
-        for bi in 0..bm {
-            for bj in 0..bn {
+        // Pass 1: per-block absmax → scales. Parallel over block rows;
+        // each task owns a disjoint `bn`-slice of the scale vector, and the
+        // fold within a block is row-major exactly like the scalar
+        // reference, so scales are bit-identical to a sequential pass.
+        {
+            let scales_ptr = SendPtr(q.scales.as_mut_ptr());
+            let threads1 = threads.min(bm.max(1));
+            parallel_for(bm, threads1, |bi| {
                 let r0 = bi * b;
-                let c0 = bj * b;
                 let r1 = (r0 + b).min(m);
-                let c1 = (c0 + b).min(n);
-                // absmax of the block
-                let mut amax = 0.0f32;
-                for i in r0..r1 {
-                    for &v in &x.row(i)[c0..c1] {
-                        amax = amax.max(v.abs());
-                    }
-                }
-                scales[bi * bn + bj] = amax;
-                if amax == 0.0 {
-                    for i in r0..r1 {
-                        for j in c0..c1 {
-                            codes.set(i * n + j, zero_code);
-                        }
-                    }
-                    continue;
-                }
-                let inv = 1.0 / amax;
+                let srow = unsafe {
+                    std::slice::from_raw_parts_mut(scales_ptr.get().add(bi * bn), bn)
+                };
                 for i in r0..r1 {
                     let row = x.row(i);
-                    for j in c0..c1 {
-                        codes.set(i * n + j, self.codebook.encode(row[j] * inv));
+                    for (bj, s) in srow.iter_mut().enumerate() {
+                        let c0 = bj * b;
+                        let c1 = (c0 + b).min(n);
+                        let mut amax = *s;
+                        for &v in &row[c0..c1] {
+                            amax = amax.max(v.abs());
+                        }
+                        *s = amax;
                     }
                 }
-            }
+            });
         }
 
-        QuantizedMatrix {
-            rows: m,
-            cols: n,
-            block: b,
-            bits: self.cfg.bits,
-            mapping: self.cfg.mapping,
-            codes,
-            scales,
+        // Pass 2: encode + pack, parallel over even-aligned row chunks.
+        let zero_code = self.codebook.encode(0.0);
+        let chunk = even_aligned_chunk(m, n, threads);
+        let n_chunks = m.div_ceil(chunk.max(1));
+        let scales = &q.scales;
+        match &mut q.codes {
+            CodeStore::Nibbles(p) => {
+                let bytes_ptr = SendPtr(p.bytes_mut().as_mut_ptr());
+                parallel_for(n_chunks, threads, |c| {
+                    let r0 = c * chunk;
+                    let r1 = (r0 + chunk).min(m);
+                    let flat0 = r0 * n; // even by construction
+                    let flat1 = r1 * n;
+                    let byte_lo = flat0 >> 1;
+                    let byte_hi = flat1.div_ceil(2);
+                    // Safety: chunks start on even flat indices, so byte
+                    // ranges are disjoint across tasks.
+                    let sub = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            bytes_ptr.get().add(byte_lo),
+                            byte_hi - byte_lo,
+                        )
+                    };
+                    let mut w = NibbleWriter::new(sub, 0);
+                    for i in r0..r1 {
+                        let row = x.row(i);
+                        let srow = &scales[(i / b) * bn..(i / b) * bn + bn];
+                        for (bj, &amax) in srow.iter().enumerate() {
+                            let c0 = bj * b;
+                            let c1 = (c0 + b).min(n);
+                            if amax == 0.0 {
+                                for _ in c0..c1 {
+                                    w.push(zero_code);
+                                }
+                            } else {
+                                let inv = 1.0 / amax;
+                                for &v in &row[c0..c1] {
+                                    w.push(self.codebook.encode(v * inv));
+                                }
+                            }
+                        }
+                    }
+                    w.finish();
+                });
+            }
+            CodeStore::Bytes(v) => {
+                let bytes_ptr = SendPtr(v.as_mut_ptr());
+                parallel_for(n_chunks, threads, |c| {
+                    let r0 = c * chunk;
+                    let r1 = (r0 + chunk).min(m);
+                    // Safety: one byte per code — row ranges are disjoint.
+                    let sub = unsafe {
+                        std::slice::from_raw_parts_mut(bytes_ptr.get().add(r0 * n), (r1 - r0) * n)
+                    };
+                    for i in r0..r1 {
+                        let row = x.row(i);
+                        let out = &mut sub[(i - r0) * n..(i - r0) * n + n];
+                        let srow = &scales[(i / b) * bn..(i / b) * bn + bn];
+                        for (bj, &amax) in srow.iter().enumerate() {
+                            let c0 = bj * b;
+                            let c1 = (c0 + b).min(n);
+                            if amax == 0.0 {
+                                out[c0..c1].fill(zero_code);
+                            } else {
+                                let inv = 1.0 / amax;
+                                for (slot, &v) in out[c0..c1].iter_mut().zip(&row[c0..c1]) {
+                                    *slot = self.codebook.encode(v * inv);
+                                }
+                            }
+                        }
+                    }
+                });
+            }
         }
     }
 
@@ -174,17 +318,80 @@ impl BlockQuantizer {
 
     /// Dequantize into an existing buffer (hot-path variant, no allocation).
     pub fn dequantize_into(&self, q: &QuantizedMatrix, out: &mut Matrix) {
+        self.dequantize_into_threaded(q, out, auto_threads(q.rows * q.cols));
+    }
+
+    /// [`Self::dequantize_into`] with an explicit worker count.
+    ///
+    /// Fused kernel: per row chunk, codes stream through `NibbleReader`
+    /// (one byte load per two codes) and each `B`-column segment is decoded
+    /// through a stack-resident 16-entry `scale·level` table, replacing the
+    /// per-element multiply of the scalar path with a load of the identical
+    /// precomputed product — bit-identical to sequential for any `threads`.
+    pub fn dequantize_into_threaded(&self, q: &QuantizedMatrix, out: &mut Matrix, threads: usize) {
         assert_eq!((out.rows(), out.cols()), (q.rows, q.cols));
         debug_assert_eq!(q.mapping, self.cfg.mapping);
         debug_assert_eq!(q.bits, self.cfg.bits);
         let (m, n, b) = (q.rows, q.cols, q.block);
         let bn = n.div_ceil(b);
-        for i in 0..m {
-            let bi = i / b;
-            let row = out.row_mut(i);
-            for (j, slot) in row.iter_mut().enumerate() {
-                let scale = q.scales[bi * bn + j / b];
-                *slot = scale * self.codebook.decode(q.codes.get(i * n + j));
+        let chunk = even_aligned_chunk(m, n, threads).max(1);
+        let n_chunks = m.div_ceil(chunk);
+        let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        match &q.codes {
+            CodeStore::Nibbles(p) => {
+                let nlevels = self.codebook.levels.len();
+                debug_assert!(nlevels <= 16);
+                let bytes = p.bytes();
+                parallel_for(n_chunks, threads, |c| {
+                    let r0 = c * chunk;
+                    let r1 = (r0 + chunk).min(m);
+                    let mut tab = [0.0f32; 16];
+                    for i in r0..r1 {
+                        // Safety: output rows are disjoint across tasks.
+                        let orow = unsafe {
+                            std::slice::from_raw_parts_mut(out_ptr.get().add(i * n), n)
+                        };
+                        let mut rd = NibbleReader::new(bytes, i * n);
+                        let srow = &q.scales[(i / b) * bn..(i / b) * bn + bn];
+                        for (bj, &scale) in srow.iter().enumerate() {
+                            let c0 = bj * b;
+                            let c1 = (c0 + b).min(n);
+                            // Rebuilt per (row, segment): 16/B extra
+                            // multiplies per element (25% of a mul at B=64,
+                            // vs. the 1 mul/elem the table replaces).
+                            // Amortizing across a block row would need a
+                            // bn×16 table heap buffer (breaking the
+                            // zero-alloc contract) or block-column-outer
+                            // iteration (re-traversing each row B times).
+                            self.codebook.scaled_levels(scale, &mut tab[..nlevels]);
+                            for slot in &mut orow[c0..c1] {
+                                *slot = tab[rd.next_code() as usize];
+                            }
+                        }
+                    }
+                });
+            }
+            CodeStore::Bytes(v) => {
+                let levels = &self.codebook.levels;
+                parallel_for(n_chunks, threads, |c| {
+                    let r0 = c * chunk;
+                    let r1 = (r0 + chunk).min(m);
+                    for i in r0..r1 {
+                        // Safety: output rows are disjoint across tasks.
+                        let orow = unsafe {
+                            std::slice::from_raw_parts_mut(out_ptr.get().add(i * n), n)
+                        };
+                        let crow = &v[i * n..i * n + n];
+                        let srow = &q.scales[(i / b) * bn..(i / b) * bn + bn];
+                        for (bj, &scale) in srow.iter().enumerate() {
+                            let c0 = bj * b;
+                            let c1 = (c0 + b).min(n);
+                            for (slot, &code) in orow[c0..c1].iter_mut().zip(&crow[c0..c1]) {
+                                *slot = scale * levels[code as usize];
+                            }
+                        }
+                    }
+                });
             }
         }
     }

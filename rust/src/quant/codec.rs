@@ -24,10 +24,9 @@
 //! `impl PrecondCodec` plus one `register` call — no enum arms to edit.
 
 use super::blockwise::{BlockQuantizer, QuantConfig, QuantizedMatrix};
-use super::error_feedback::ErrorFeedback;
 use super::offdiag::{dequantize_offdiag, quantize_offdiag, OffDiagQuantized};
 use super::tri_store::TriJointStore;
-use crate::linalg::{cholesky_jittered, matmul_nt, Matrix};
+use crate::linalg::{cholesky_jittered_into, matmul_nt_into, Matrix, ScratchArena};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// Shared context handed to codec constructors: the numerical-stability
@@ -69,6 +68,22 @@ pub trait PrecondCodec: std::fmt::Debug + Send {
     /// `D(C̄)·D(C̄)ᵀ` for Cholesky codecs).
     fn load(&self) -> Matrix;
 
+    /// Scratch-aware [`Self::store`]: temporaries come from the caller's
+    /// arena and internal buffers are reused, so a steady-state refresh
+    /// performs no heap allocation. The default falls back to `store`
+    /// (correct for any external codec; override to join the
+    /// allocation-free pipeline). Semantically identical to `store`.
+    fn store_into(&mut self, x: &Matrix, _scratch: &mut ScratchArena) {
+        self.store(x);
+    }
+
+    /// Scratch-aware [`Self::load`]: reconstruct into a caller-owned
+    /// `dim×dim` buffer (fully overwritten). The default falls back to
+    /// `load` plus a copy. Semantically identical to `load`.
+    fn load_into(&self, out: &mut Matrix, _scratch: &mut ScratchArena) {
+        out.copy_from(&self.load());
+    }
+
     /// Exact physical bytes of the persistent state (the quantity behind
     /// the paper's memory tables; no caches, no transient scratch).
     fn size_bytes(&self) -> usize;
@@ -102,11 +117,22 @@ impl PrecondCodec for F32Codec {
     }
 
     fn store(&mut self, x: &Matrix) {
-        self.m = Some(x.clone());
+        self.store_into(x, &mut ScratchArena::new());
     }
 
     fn load(&self) -> Matrix {
         self.m.clone().expect("F32Codec::load before store")
+    }
+
+    fn store_into(&mut self, x: &Matrix, _scratch: &mut ScratchArena) {
+        match &mut self.m {
+            Some(m) if (m.rows(), m.cols()) == (x.rows(), x.cols()) => m.copy_from(x),
+            slot => *slot = Some(x.clone()),
+        }
+    }
+
+    fn load_into(&self, out: &mut Matrix, _scratch: &mut ScratchArena) {
+        out.copy_from(self.m.as_ref().expect("F32Codec::load before store"));
     }
 
     fn size_bytes(&self) -> usize {
@@ -148,6 +174,35 @@ impl PrecondCodec for OffDiagCodec {
         dequantize_offdiag(self.s.as_ref().expect("OffDiagCodec::load before store"), &self.q)
     }
 
+    fn store_into(&mut self, x: &Matrix, scratch: &mut ScratchArena) {
+        assert!(x.is_square(), "off-diagonal quantization needs a square matrix");
+        let n = x.rows();
+        let mut off = scratch.take(n, n);
+        off.copy_from(x);
+        for i in 0..n {
+            off[(i, i)] = 0.0;
+        }
+        match &mut self.s {
+            Some(s) => {
+                self.q.quantize_into(&off, &mut s.q);
+                s.diag.clear();
+                for i in 0..n {
+                    s.diag.push(x[(i, i)]);
+                }
+            }
+            slot => *slot = Some(OffDiagQuantized { q: self.q.quantize(&off), diag: x.diag() }),
+        }
+        scratch.recycle(off);
+    }
+
+    fn load_into(&self, out: &mut Matrix, _scratch: &mut ScratchArena) {
+        let s = self.s.as_ref().expect("OffDiagCodec::load before store");
+        self.q.dequantize_into(&s.q, out);
+        for (i, &d) in s.diag.iter().enumerate() {
+            out[(i, i)] = d;
+        }
+    }
+
     fn size_bytes(&self) -> usize {
         self.s.as_ref().map(|s| s.size_bytes()).unwrap_or(0)
     }
@@ -185,6 +240,17 @@ impl PrecondCodec for FullGridCodec {
         self.q.dequantize(self.s.as_ref().expect("FullGridCodec::load before store"))
     }
 
+    fn store_into(&mut self, x: &Matrix, _scratch: &mut ScratchArena) {
+        match &mut self.s {
+            Some(s) => self.q.quantize_into(x, s),
+            slot => *slot = Some(self.q.quantize(x)),
+        }
+    }
+
+    fn load_into(&self, out: &mut Matrix, _scratch: &mut ScratchArena) {
+        self.q.dequantize_into(self.s.as_ref().expect("FullGridCodec::load before store"), out);
+    }
+
     fn size_bytes(&self) -> usize {
         self.s.as_ref().map(|s| s.size_bytes()).unwrap_or(0)
     }
@@ -211,6 +277,11 @@ pub struct CholeskyCodec {
 
 impl CholeskyCodec {
     pub fn new(ef: bool, ctx: &CodecCtx) -> CholeskyCodec {
+        // Same contract `ErrorFeedback::new` enforces; the EF update loops
+        // are inlined in `store_into` (Eq. (10)–(11)), so validate here.
+        if ef {
+            assert!((0.0..1.0).contains(&ctx.beta_e), "βₑ must be in [0,1)");
+        }
         CholeskyCodec {
             ef,
             eps: ctx.eps,
@@ -238,44 +309,78 @@ impl PrecondCodec for CholeskyCodec {
     }
 
     fn store(&mut self, x: &Matrix) {
-        // Eq. (7): C = Cholesky(L + εI); escalating jitter guards
-        // quantization-induced PSD violations.
-        let (c, _) = match cholesky_jittered(x, self.eps, 12) {
-            Ok(v) => v,
-            Err(_) => {
-                // Pathological input (e.g. non-finite gradient blew up the
-                // Gram). Reset to the initial factor — the EMA will rebuild
-                // state over the next T1 windows.
-                (Matrix::eye_scaled(x.rows(), self.eps.sqrt()), self.eps)
-            }
-        };
-        if self.ef {
-            let e_prev = match &self.s {
-                Some(s) => s.load(&self.q).1,
-                None => Matrix::zeros(c.rows(), c.cols()),
-            };
-            let efb = ErrorFeedback::new(self.beta_e);
-            // Eq. (10): quantize the compensated factor.
-            let comp = efb.compensate(&c, &e_prev);
-            // D(C̄): round-trip the strictly-lower part (diagonal is stored
-            // exactly, so it carries no quantization error).
-            let n = comp.rows();
-            let comp_off = Matrix::from_fn(n, n, |i, j| if i > j { comp[(i, j)] } else { 0.0 });
-            let mut c_deq = self.q.roundtrip(&comp_off);
-            for i in 0..n {
-                c_deq[(i, i)] = comp[(i, i)];
-            }
-            // Eq. (11): EMA of the residual.
-            let e_new = efb.update(&c, &e_prev, &c_deq);
-            self.s = Some(TriJointStore::store(&comp, &e_new, &self.q));
-        } else {
-            self.s = Some(TriJointStore::store(&c, &Matrix::zeros(c.rows(), c.cols()), &self.q));
-        }
+        self.store_into(x, &mut ScratchArena::new());
     }
 
     fn load(&self) -> Matrix {
-        let (c, _) = self.s.as_ref().expect("CholeskyCodec::load before store").load(&self.q);
-        matmul_nt(&c, &c)
+        let n = self.s.as_ref().expect("CholeskyCodec::load before store").n;
+        let mut out = Matrix::zeros(n, n);
+        self.load_into(&mut out, &mut ScratchArena::new());
+        out
+    }
+
+    /// Fused refresh: factor → (EF: compensate → pack C → read back `D(C̄)`
+    /// from the freshly packed codes → EMA residual) → pack E. The staged
+    /// `TriJointStore` API means the compensated factor is quantized ONCE
+    /// (the unfused path quantized it twice — once for the round-trip, once
+    /// for the store), with every temporary arena-backed.
+    fn store_into(&mut self, x: &Matrix, scratch: &mut ScratchArena) {
+        let n = x.rows();
+        let mut c = scratch.take(n, n);
+        // Eq. (7): C = Cholesky(L + εI); escalating jitter guards
+        // quantization-induced PSD violations.
+        if cholesky_jittered_into(x, self.eps, 12, &mut c).is_err() {
+            // Pathological input (e.g. non-finite gradient blew up the
+            // Gram). Reset to the initial factor — the EMA will rebuild
+            // state over the next T1 windows.
+            c.set_eye_scaled(self.eps.sqrt());
+        }
+        let store = self.s.get_or_insert_with(TriJointStore::empty);
+        if self.ef {
+            let mut e_prev = scratch.take(n, n);
+            if store.n == n {
+                store.load_e_into(&self.q, &mut e_prev);
+            }
+            // Eq. (10): compensate the factor in place (strict lower only;
+            // the diagonal stays the exact C diagonal — never quantized).
+            for i in 0..n {
+                let (erow, crow) = (e_prev.row(i), c.row_mut(i));
+                for j in 0..i {
+                    crow[j] += erow[j];
+                }
+            }
+            store.store_c_into(&c, &self.q);
+            // D(C̄): read the freshly packed strictly-lower codes back.
+            let mut c_deq = scratch.take(n, n);
+            store.load_c_into(&self.q, &mut c_deq);
+            // Eq. (11): EMA of the residual, in place on the old state.
+            let beta_e = self.beta_e;
+            for i in 0..n {
+                let (crow, drow) = (c.row(i), c_deq.row(i));
+                let erow = e_prev.row_mut(i);
+                for j in 0..i {
+                    let residual = crow[j] - drow[j];
+                    erow[j] = beta_e * erow[j] + (1.0 - beta_e) * residual;
+                }
+            }
+            store.store_e_into(&e_prev, &self.q);
+            scratch.recycle(c_deq);
+            scratch.recycle(e_prev);
+        } else {
+            store.store_c_into(&c, &self.q);
+            store.store_e_zero(&self.q);
+        }
+        scratch.recycle(c);
+    }
+
+    /// `D(C̄)·D(C̄)ᵀ` into `out` (Eq. (7) reconstruction, PSD by
+    /// construction), with the factor staged in the arena.
+    fn load_into(&self, out: &mut Matrix, scratch: &mut ScratchArena) {
+        let store = self.s.as_ref().expect("CholeskyCodec::load before store");
+        let mut c = scratch.take(store.n, store.n);
+        store.load_c_into(&self.q, &mut c);
+        matmul_nt_into(&c, &c, out);
+        scratch.recycle(c);
     }
 
     fn size_bytes(&self) -> usize {
@@ -493,6 +598,58 @@ mod tests {
         a.store(&Matrix::eye(8));
         // The clone must keep the original value.
         assert!(b.load().max_abs_diff(&spd) < 0.35 * crate::linalg::max_abs(&spd));
+    }
+
+    #[test]
+    fn scratch_paths_match_allocating_paths() {
+        // store_into/load_into are the same transforms as store/load, just
+        // without the allocations — pin them element-for-element.
+        let ctx = ctx();
+        let mut rng = Rng::new(3);
+        let g = Matrix::randn(16, 20, 1.0, &mut rng);
+        let mut spd = crate::linalg::syrk(&g);
+        spd.add_diag(0.5);
+        for key in codec_keys() {
+            let b = lookup(key).unwrap();
+            let mut plain = (b.side)(&ctx);
+            let mut scratched = (b.side)(&ctx);
+            let mut arena = ScratchArena::new();
+            plain.store(&spd);
+            scratched.store_into(&spd, &mut arena);
+            let want = plain.load();
+            let mut got = Matrix::zeros(16, 16);
+            scratched.load_into(&mut got, &mut arena);
+            assert_eq!(want.max_abs_diff(&got), 0.0, "{key}: scratch path diverged");
+            assert_eq!(plain.size_bytes(), scratched.size_bytes(), "{key}");
+        }
+    }
+
+    #[test]
+    fn steady_state_refresh_is_allocation_free() {
+        // After one warm-up refresh, repeated store_into/load_into must be
+        // served entirely from the arena pool and the codecs' own buffers.
+        let ctx = ctx();
+        let mut rng = Rng::new(4);
+        let mut fresh_spd = |rng: &mut Rng| {
+            let g = Matrix::randn(24, 28, 1.0, rng);
+            let mut s = crate::linalg::syrk(&g);
+            s.add_diag(0.5);
+            s
+        };
+        for key in ["f32", "vq4", "vq4-full", "cq4", "cq4-ef", "bw8"] {
+            let b = lookup(key).unwrap();
+            let mut codec = (b.side)(&ctx);
+            let mut arena = ScratchArena::new();
+            let mut out = Matrix::zeros(24, 24);
+            codec.store_into(&fresh_spd(&mut rng), &mut arena);
+            codec.load_into(&mut out, &mut arena);
+            let baseline = arena.misses();
+            for _ in 0..3 {
+                codec.store_into(&fresh_spd(&mut rng), &mut arena);
+                codec.load_into(&mut out, &mut arena);
+            }
+            assert_eq!(arena.misses(), baseline, "{key}: steady-state refresh allocated");
+        }
     }
 
     #[test]

@@ -66,29 +66,68 @@ impl Mapping {
 /// Precomputed nearest-level quantizer for one (mapping, bits) pair.
 ///
 /// `encode` maps a normalized value in [−1, 1] to the argmin index of
-/// Eq. (3) via binary search over level midpoints; `decode` is a table
-/// lookup.
+/// Eq. (3) with a single branchless pass over a precomputed **boundary
+/// table**: `bounds[k]` is the largest f32 that still encodes to level ≤ k
+/// (found once at construction by bit-level binary search against the
+/// scalar midpoint/tie-break reference), so `encode(x)` is just "count
+/// boundaries below x" — no per-call tie-break branch, and bit-identical
+/// to the reference by construction. `decode` is a table lookup.
 #[derive(Clone, Debug)]
 pub struct Codebook {
     pub bits: u32,
     pub levels: Vec<f32>,
     mids: Vec<f32>,
+    /// `bounds[k]` = largest f32 with `encode_scalar(x) ≤ k` (len 2^b − 1).
+    bounds: Vec<f32>,
 }
 
 impl Codebook {
     pub fn new(mapping: Mapping, bits: u32) -> Codebook {
         let levels = mapping.levels(bits);
         debug_assert!(levels.windows(2).all(|w| w[0] < w[1]), "levels must increase");
-        let mids = levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
-        Codebook { bits, levels, mids }
+        let mids: Vec<f32> = levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+        let mut cb = Codebook { bits, levels, mids, bounds: Vec::new() };
+        // Decision boundary k sits between levels k and k+1; the scalar
+        // reference's exact f32 cut is found by binary search over the
+        // total order of f32 bit patterns (the predicate is monotone in x).
+        cb.bounds = (0..cb.levels.len() - 1)
+            .map(|k| {
+                let mut lo = f32_ord(cb.levels[k]);
+                let mut hi = f32_ord(cb.levels[k + 1]);
+                debug_assert!(cb.encode_scalar(cb.levels[k]) as usize <= k);
+                debug_assert!(cb.encode_scalar(cb.levels[k + 1]) as usize > k);
+                while hi - lo > 1 {
+                    let mid = lo + (hi - lo) / 2;
+                    if cb.encode_scalar(f32_unord(mid)) as usize <= k {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                f32_unord(lo)
+            })
+            .collect();
+        cb
     }
 
     /// Nearest-level index for normalized `x` (clamped to [−1, 1]).
+    /// Branchless boundary count; bit-identical to [`Self::encode_scalar`].
     #[inline]
     pub fn encode(&self, x: f32) -> u8 {
         let x = x.clamp(-1.0, 1.0);
-        // Branchless count of midpoints below x (≡ partition_point, but the
-        // fixed-length compare loop autovectorizes — EXPERIMENTS.md §Perf).
+        let mut idx = 0usize;
+        for &b in &self.bounds {
+            idx += (b < x) as usize;
+        }
+        idx as u8
+    }
+
+    /// The scalar reference: midpoint count + tie-break toward the closer
+    /// level. Used to build the boundary table and as the oracle in the
+    /// kernel-equivalence tests.
+    #[inline]
+    pub fn encode_scalar(&self, x: f32) -> u8 {
+        let x = x.clamp(-1.0, 1.0);
         let mut idx = 0usize;
         for &m in &self.mids {
             idx += (m < x) as usize;
@@ -109,6 +148,23 @@ impl Codebook {
         self.levels[q as usize]
     }
 
+    /// Fill `out` (length `2^b`) with `scale · level` — the per-block
+    /// dequant table the fused kernels index by code, replacing a multiply
+    /// per element with a load. Entry `c` equals `scale * decode(c)`
+    /// bit-for-bit, so table-based dequantization matches the scalar path.
+    #[inline]
+    pub fn scaled_levels(&self, scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.levels.len());
+        for (o, &l) in out.iter_mut().zip(self.levels.iter()) {
+            *o = scale * l;
+        }
+    }
+
+    /// The decision-boundary table (test/diagnostic access).
+    pub fn bounds(&self) -> &[f32] {
+        &self.bounds
+    }
+
     /// Worst-case |decode(encode(x)) − x| over the codebook's domain:
     /// half the largest gap between adjacent levels (plus edge gaps).
     pub fn max_abs_error(&self) -> f32 {
@@ -121,9 +177,78 @@ impl Codebook {
     }
 }
 
+/// Map a finite f32 to a u32 preserving total order (sign-magnitude →
+/// biased representation; the classic IEEE-754 radix trick).
+#[inline]
+fn f32_ord(x: f32) -> u32 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    }
+}
+
+/// Inverse of [`f32_ord`].
+#[inline]
+fn f32_unord(o: u32) -> f32 {
+    let b = if o & 0x8000_0000 != 0 { o & 0x7fff_ffff } else { !o };
+    f32::from_bits(b)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn f32_order_trick_roundtrips_and_orders() {
+        let xs = [-1.0f32, -0.5, -1e-20, 0.0, 1e-20, 0.25, 1.0];
+        for &x in &xs {
+            assert_eq!(f32_unord(f32_ord(x)), x);
+        }
+        for w in xs.windows(2) {
+            assert!(f32_ord(w[0]) < f32_ord(w[1]), "{} !< {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn boundary_encode_is_bit_identical_to_scalar() {
+        for m in [Mapping::Linear, Mapping::Linear2, Mapping::Dynamic] {
+            for bits in [2u32, 3, 4, 8] {
+                let cb = Codebook::new(m, bits);
+                // Dense sweep…
+                for i in 0..20_000 {
+                    let x = -1.002 + 2.004 * i as f32 / 19_999.0;
+                    assert_eq!(cb.encode(x), cb.encode_scalar(x), "{} b={bits} x={x}", m.name());
+                }
+                // …plus the ulp-neighbourhood of every decision boundary,
+                // where the two formulations could disagree if the table
+                // were off by one bit.
+                for &b in cb.bounds() {
+                    let o = f32_ord(b);
+                    for d in -2i64..=2 {
+                        let x = f32_unord((o as i64 + d) as u32);
+                        assert_eq!(
+                            cb.encode(x),
+                            cb.encode_scalar(x),
+                            "{} b={bits} boundary {b} offset {d}",
+                            m.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_levels_table_matches_decode() {
+        let cb = Codebook::new(Mapping::Linear2, 4);
+        let mut tab = [0.0f32; 16];
+        cb.scaled_levels(3.7, &mut tab);
+        for c in 0u8..16 {
+            assert_eq!(tab[c as usize], 3.7 * cb.decode(c));
+        }
+    }
 
     #[test]
     fn linear2_matches_eq4() {

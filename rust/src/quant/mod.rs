@@ -30,5 +30,9 @@ pub use codec::{CodecBuilder, CodecCtx, PrecondCodec};
 pub use error_feedback::ErrorFeedback;
 pub use mapping::Mapping;
 pub use offdiag::{dequantize_offdiag, quantize_offdiag, OffDiagQuantized};
-pub use packed::PackedNibbles;
+pub use packed::{NibbleReader, NibbleWriter, PackedNibbles};
 pub use tri_store::TriJointStore;
+
+/// The scratch arena threaded through every `store_into`/`load_into`
+/// (defined in `linalg`, re-exported here next to the codec API it serves).
+pub use crate::linalg::ScratchArena;

@@ -70,6 +70,128 @@ impl PackedNibbles {
     pub fn size_bytes(&self) -> usize {
         self.bytes.len()
     }
+
+    /// Raw packed bytes (two codes per byte, low nibble first).
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Mutable raw bytes — the escape hatch the fused kernels use to write
+    /// whole bytes instead of per-code read-modify-write. Callers must keep
+    /// the two-codes-per-byte layout (see [`NibbleWriter`]).
+    #[inline]
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.bytes
+    }
+
+    /// Resize to `len` zeroed codes, reusing the existing allocation when
+    /// its capacity suffices (the `quantize_into` steady-state path).
+    pub fn reset(&mut self, len: usize) {
+        self.len = len;
+        self.bytes.clear();
+        self.bytes.resize(len.div_ceil(2), 0);
+    }
+
+    /// Bulk-write `codes` starting at code index `start`: whole-byte stores
+    /// in the interior, read-modify-write only at unaligned ends. Exactly
+    /// equivalent to `for (i, c) in codes { self.set(start + i, c) }`.
+    pub fn set_run(&mut self, start: usize, codes: &[u8]) {
+        debug_assert!(start + codes.len() <= self.len);
+        let mut w = NibbleWriter::new(&mut self.bytes, start);
+        for &c in codes {
+            w.push(c);
+        }
+        w.finish();
+    }
+
+    /// Bulk-read `out.len()` codes starting at code index `start`. Exactly
+    /// equivalent to `for (i, o) in out { *o = self.get(start + i) }`.
+    pub fn get_run(&self, start: usize, out: &mut [u8]) {
+        debug_assert!(start + out.len() <= self.len);
+        let mut r = NibbleReader::new(&self.bytes, start);
+        for o in out.iter_mut() {
+            *o = r.next_code();
+        }
+    }
+}
+
+/// Streaming writer of 4-bit codes into a packed byte buffer.
+///
+/// `bytes` is the (sub)buffer and `start` the code index *relative to it*;
+/// interior bytes are written whole (two codes per store), and only a
+/// half-covered first or last byte does a read-modify-write that preserves
+/// the neighbouring nibble. This is what lets the fused quantize kernels
+/// bypass `CodeStore::get`/`set` in their inner loops while remaining
+/// bit-exact with them, and what makes row-parallel packing sound: writers
+/// on byte-disjoint ranges never touch each other's bytes.
+pub struct NibbleWriter<'a> {
+    bytes: &'a mut [u8],
+    idx: usize,
+    carry: u8,
+}
+
+impl<'a> NibbleWriter<'a> {
+    #[inline]
+    pub fn new(bytes: &'a mut [u8], start: usize) -> NibbleWriter<'a> {
+        let carry = if start & 1 == 1 {
+            // Preserve the existing low nibble of the half-open first byte.
+            bytes[start >> 1] & 0x0F
+        } else {
+            0
+        };
+        NibbleWriter { bytes, idx: start, carry }
+    }
+
+    /// Append one code (must fit in 4 bits).
+    #[inline]
+    pub fn push(&mut self, c: u8) {
+        debug_assert!(c <= 0x0F, "code {c} exceeds 4 bits");
+        if self.idx & 1 == 0 {
+            self.carry = c;
+        } else {
+            self.bytes[self.idx >> 1] = self.carry | (c << 4);
+        }
+        self.idx += 1;
+    }
+
+    /// Flush a trailing half-byte, preserving the neighbouring high nibble.
+    #[inline]
+    pub fn finish(self) {
+        if self.idx & 1 == 1 {
+            let b = &mut self.bytes[self.idx >> 1];
+            *b = (*b & 0xF0) | self.carry;
+        }
+    }
+}
+
+/// Streaming reader of 4-bit codes from a packed byte buffer (byte cached
+/// across the two nibbles it holds).
+pub struct NibbleReader<'a> {
+    bytes: &'a [u8],
+    idx: usize,
+    cur: u8,
+}
+
+impl<'a> NibbleReader<'a> {
+    #[inline]
+    pub fn new(bytes: &'a [u8], start: usize) -> NibbleReader<'a> {
+        let cur = if start & 1 == 1 { bytes[start >> 1] } else { 0 };
+        NibbleReader { bytes, idx: start, cur }
+    }
+
+    /// Read the next code.
+    #[inline]
+    pub fn next_code(&mut self) -> u8 {
+        let c = if self.idx & 1 == 0 {
+            self.cur = self.bytes[self.idx >> 1];
+            self.cur & 0x0F
+        } else {
+            self.cur >> 4
+        };
+        self.idx += 1;
+        c
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +224,53 @@ mod tests {
     fn half_the_bytes_of_u8_codes() {
         let p = PackedNibbles::zeros(1000);
         assert_eq!(p.size_bytes(), 500);
+    }
+
+    #[test]
+    fn set_run_matches_scalar_set_at_any_alignment() {
+        let mut rng = Rng::new(42);
+        for total in [9usize, 16, 33, 128] {
+            for start in [0usize, 1, 2, 3, 5] {
+                for len in [0usize, 1, 2, 3, 7, 8] {
+                    if start + len > total {
+                        continue;
+                    }
+                    let codes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xF) as u8).collect();
+                    // Background pattern so preserved nibbles are visible.
+                    let bg: Vec<u8> = (0..total).map(|i| ((i * 7 + 3) & 0xF) as u8).collect();
+                    let mut bulk = PackedNibbles::from_codes(&bg);
+                    let mut scalar = PackedNibbles::from_codes(&bg);
+                    bulk.set_run(start, &codes);
+                    for (i, &c) in codes.iter().enumerate() {
+                        scalar.set(start + i, c);
+                    }
+                    assert_eq!(bulk, scalar, "total={total} start={start} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn get_run_matches_scalar_get_at_any_alignment() {
+        let mut rng = Rng::new(43);
+        let codes: Vec<u8> = (0..77).map(|_| (rng.next_u64() & 0xF) as u8).collect();
+        let p = PackedNibbles::from_codes(&codes);
+        for start in [0usize, 1, 4, 7] {
+            for len in [0usize, 1, 2, 9, 70 - start] {
+                let mut bulk = vec![0u8; len];
+                p.get_run(start, &mut bulk);
+                let scalar: Vec<u8> = (0..len).map(|i| p.get(start + i)).collect();
+                assert_eq!(bulk, scalar, "start={start} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_zeroes() {
+        let mut p = PackedNibbles::from_codes(&[0xF; 100]);
+        p.reset(40);
+        assert_eq!(p.len(), 40);
+        assert!(p.to_codes().iter().all(|&c| c == 0), "reset must zero");
+        assert_eq!(p.size_bytes(), 20);
     }
 }

@@ -7,10 +7,29 @@
 //! `E`'s code for `(i,j), i>j` at the mirrored slot `(j,i)` — so CQ+EF costs
 //! no more code bytes than vanilla 4-bit quantization of one full matrix
 //! (Sec. 4.3).
+//!
+//! ## Fused kernels
+//!
+//! The store/load paths quantize the triangles **directly into the joint
+//! grid** — no staging matrices, no second quantization pass, no per-code
+//! `get`/`set`: block scales are folded over the strictly-lower entries
+//! only, codes stream through `NibbleWriter`/`NibbleReader` (whole-byte
+//! traffic), and rows fan out over the thread pool. The staged API
+//! ([`store_c_into`](TriJointStore::store_c_into) →
+//! [`load_c_into`](TriJointStore::load_c_into) →
+//! [`store_e_into`](TriJointStore::store_e_into)) exists because the EF
+//! update needs `D(C̄)` *between* writing `C` and writing `E`; the staged
+//! flow reads the freshly packed codes back instead of quantizing the
+//! factor twice as the unfused path did. `store_c_into` must run first in a
+//! refresh (it owns shape changes); `store_e_into`/`store_e_zero` complete
+//! the grid. All `*_into` methods reuse the existing buffers — zero
+//! allocations in steady state.
 
-use super::blockwise::{BlockQuantizer, CodeStore, QuantizedMatrix};
-use super::packed::PackedNibbles;
+use super::blockwise::{auto_threads, even_aligned_chunk, BlockQuantizer};
+use super::packed::{NibbleReader, NibbleWriter, PackedNibbles};
+use crate::linalg::matmul::SendPtr;
 use crate::linalg::Matrix;
+use crate::util::pool::parallel_for;
 
 /// One packed buffer holding a quantized Cholesky factor (lower) and its
 /// quantized error state (upper, mirrored).
@@ -29,6 +48,18 @@ pub struct TriJointStore {
 }
 
 impl TriJointStore {
+    /// An unshaped store; the first `store_c_into` sizes it.
+    pub fn empty() -> TriJointStore {
+        TriJointStore {
+            n: 0,
+            codes: PackedNibbles::zeros(0),
+            diag: Vec::new(),
+            c_scales: Vec::new(),
+            e_scales: Vec::new(),
+            block: 1,
+        }
+    }
+
     /// Initial state `C = √ε·I`, `E = 0` (Algorithm 1 inputs).
     pub fn init(n: usize, eps: f32, quantizer: &BlockQuantizer) -> TriJointStore {
         let c = Matrix::eye_scaled(n, eps.sqrt());
@@ -40,89 +71,273 @@ impl TriJointStore {
     /// lower-tri). Entries on/above the diagonal of `c` and on/above the
     /// diagonal of `e` are ignored.
     pub fn store(c: &Matrix, e: &Matrix, quantizer: &BlockQuantizer) -> TriJointStore {
+        let mut s = TriJointStore::empty();
+        s.store_into(c, e, quantizer);
+        s
+    }
+
+    /// [`Self::store`] into this store's existing buffers.
+    pub fn store_into(&mut self, c: &Matrix, e: &Matrix, quantizer: &BlockQuantizer) {
         assert!(c.is_square() && e.is_square() && c.rows() == e.rows());
+        self.store_c_into(c, quantizer);
+        self.store_e_into(e, quantizer);
+    }
+
+    /// Stage 1 of a refresh: quantize `c`'s strict lower triangle into the
+    /// grid's lower half, record the exact f32 diagonal, and zero the
+    /// diagonal nibble slots. Owns reshaping; call before any `store_e_*`.
+    pub fn store_c_into(&mut self, c: &Matrix, quantizer: &BlockQuantizer) {
+        assert!(c.is_square());
         // The joint nibble grid is a 4-bit layout by construction (Fig. 2);
         // wider codes would not fit two triangles in one n×n grid.
         debug_assert!(quantizer.cfg.bits <= 4, "TriJointStore requires b ≤ 4");
         let n = c.rows();
+        let b = quantizer.cfg.block.max(1);
+        if self.n != n || self.block != b {
+            self.n = n;
+            self.block = b;
+            // Every nibble is rewritten by the C+E passes, so a plain
+            // reshape (no zero fill) is enough.
+            self.codes = PackedNibbles::zeros(n * n);
+        }
+        let bn = n.div_ceil(b);
 
-        // Strictly-lower copies for quantization (diag of C kept f32).
-        let c_off = Matrix::from_fn(n, n, |i, j| if i > j { c[(i, j)] } else { 0.0 });
-        let e_off = Matrix::from_fn(n, n, |i, j| if i > j { e[(i, j)] } else { 0.0 });
-        let qc = quantizer.quantize(&c_off);
-        let qe = quantizer.quantize(&e_off);
-
-        let mut codes = PackedNibbles::zeros(n * n);
+        self.diag.clear();
         for i in 0..n {
-            for j in 0..i {
-                codes.set(i * n + j, qc.codes.get(i * n + j)); // lower: C
-                codes.set(j * n + i, qe.codes.get(i * n + j)); // upper: E mirrored
-            }
+            self.diag.push(c[(i, i)]);
         }
+        strict_lower_scales(c, b, &mut self.c_scales);
 
-        TriJointStore {
-            n,
-            codes,
-            diag: c.diag(),
-            c_scales: qc.scales,
-            e_scales: qe.scales,
-            block: qc.block,
-        }
+        let cb = quantizer.codebook();
+        let zero_code = cb.encode(0.0);
+        let threads = auto_threads(n * n);
+        let chunk = even_aligned_chunk(n, n, threads).max(1);
+        let scales = &self.c_scales;
+        let bytes_ptr = SendPtr(self.codes.bytes_mut().as_mut_ptr());
+        parallel_for(n.div_ceil(chunk), threads, |ch| {
+            let r0 = ch * chunk;
+            let r1 = (r0 + chunk).min(n);
+            for r in r0..r1 {
+                // Row r writes codes for flat [r·n, r·n + r] — its C run
+                // plus the zeroed diagonal slot.
+                // Safety: row r's last slot is flat r·n + r and row r+1's
+                // first is (r+1)·n — distance n − r ≥ 2 for every row with
+                // a successor, which forces distinct bytes — see
+                // `row_writer`.
+                let mut w = unsafe { row_writer(bytes_ptr.get(), r * n, r + 1) };
+                let bi = r / b;
+                let crow = c.row(r);
+                let mut j = 0usize;
+                while j < r {
+                    let bj = j / b;
+                    let c1 = ((bj + 1) * b).min(r);
+                    let amax = scales[bi * bn + bj];
+                    if amax == 0.0 {
+                        for _ in j..c1 {
+                            w.push(zero_code);
+                        }
+                    } else {
+                        let inv = 1.0 / amax;
+                        for &v in &crow[j..c1] {
+                            w.push(cb.encode(v * inv));
+                        }
+                    }
+                    j = c1;
+                }
+                // Diagonal slot stays raw-nibble 0 (legacy grid layout;
+                // the diagonal is carried exactly in `diag`).
+                w.push(0);
+                w.finish();
+            }
+        });
+    }
+
+    /// Stage 3 of a refresh: quantize `e`'s strict lower triangle into the
+    /// grid's upper half (mirrored). Shape must match the last
+    /// `store_c_into`.
+    pub fn store_e_into(&mut self, e: &Matrix, quantizer: &BlockQuantizer) {
+        assert!(e.is_square() && e.rows() == self.n, "store_c_into must run first");
+        let (n, b) = (self.n, self.block);
+        let bn = n.div_ceil(b);
+        strict_lower_scales(e, b, &mut self.e_scales);
+
+        let cb = quantizer.codebook();
+        let zero_code = cb.encode(0.0);
+        let threads = auto_threads(n * n);
+        let chunk = even_aligned_chunk(n, n, threads).max(1);
+        let scales = &self.e_scales;
+        let bytes_ptr = SendPtr(self.codes.bytes_mut().as_mut_ptr());
+        parallel_for(n.div_ceil(chunk), threads, |ch| {
+            let r0 = ch * chunk;
+            let r1 = (r0 + chunk).min(n);
+            for r in r0..r1 {
+                // Grid row r's upper slots (r, cc), cc > r hold E[cc][r] —
+                // E's column r. Flat run [r·n + r + 1, (r+1)·n); row spans
+                // are pairwise disjoint as in the C pass.
+                let count = n - r - 1;
+                if count == 0 {
+                    continue;
+                }
+                // Safety: E runs of consecutive rows are ≥ 3 flat indices
+                // apart, hence byte-disjoint — see `row_writer`.
+                let mut w = unsafe { row_writer(bytes_ptr.get(), r * n + r + 1, count) };
+                let bjr = r / b; // logical column block of E's column r
+                let mut cc = r + 1;
+                while cc < n {
+                    let bi = cc / b;
+                    let c1 = ((bi + 1) * b).min(n);
+                    let amax = scales[bi * bn + bjr];
+                    if amax == 0.0 {
+                        for _ in cc..c1 {
+                            w.push(zero_code);
+                        }
+                    } else {
+                        let inv = 1.0 / amax;
+                        for i in cc..c1 {
+                            w.push(cb.encode(e[(i, r)] * inv));
+                        }
+                    }
+                    cc = c1;
+                }
+                w.finish();
+            }
+        });
+    }
+
+    /// [`Self::store_e_into`] for `E = 0` without materializing a zero
+    /// matrix (the non-EF CQ path): zero scales, zero-level codes.
+    pub fn store_e_zero(&mut self, quantizer: &BlockQuantizer) {
+        let (n, b) = (self.n, self.block);
+        let bn = n.div_ceil(b);
+        self.e_scales.clear();
+        self.e_scales.resize(bn * bn, 0.0);
+        let zero_code = quantizer.codebook().encode(0.0);
+        let threads = auto_threads(n * n);
+        let chunk = even_aligned_chunk(n, n, threads).max(1);
+        let bytes_ptr = SendPtr(self.codes.bytes_mut().as_mut_ptr());
+        parallel_for(n.div_ceil(chunk), threads, |ch| {
+            let r0 = ch * chunk;
+            let r1 = (r0 + chunk).min(n);
+            for r in r0..r1 {
+                let count = n - r - 1;
+                if count == 0 {
+                    continue;
+                }
+                // Safety: same byte-disjoint row spans as `store_e_into`.
+                let mut w = unsafe { row_writer(bytes_ptr.get(), r * n + r + 1, count) };
+                for _ in 0..count {
+                    w.push(zero_code);
+                }
+                w.finish();
+            }
+        });
     }
 
     /// Unpack and dequantize: returns `(C, E)` with `C` lower triangular
     /// (f32 diagonal restored) and `E` strictly lower triangular.
     pub fn load(&self, quantizer: &BlockQuantizer) -> (Matrix, Matrix) {
-        let n = self.n;
-        // Rebuild the two QuantizedMatrix views and reuse the block dequantizer.
-        let mut c_codes = PackedNibbles::zeros(n * n);
-        let mut e_codes = PackedNibbles::zeros(n * n);
-        let zero = quantizer.codebook().encode(0.0);
-        for i in 0..n {
-            for j in 0..n {
-                if i > j {
-                    c_codes.set(i * n + j, self.codes.get(i * n + j));
-                    e_codes.set(i * n + j, self.codes.get(j * n + i));
-                } else {
-                    c_codes.set(i * n + j, zero);
-                    e_codes.set(i * n + j, zero);
+        let mut c = Matrix::zeros(self.n, self.n);
+        let mut e = Matrix::zeros(self.n, self.n);
+        self.load_into(quantizer, &mut c, &mut e);
+        (c, e)
+    }
+
+    /// [`Self::load`] into caller-owned buffers (zero allocation).
+    pub fn load_into(&self, quantizer: &BlockQuantizer, c: &mut Matrix, e: &mut Matrix) {
+        self.load_c_into(quantizer, c);
+        self.load_e_into(quantizer, e);
+    }
+
+    /// Reconstruct `D(C̄)`: strictly-lower dequantized codes, exact f32
+    /// diagonal, zero above. `out` is fully overwritten.
+    pub fn load_c_into(&self, quantizer: &BlockQuantizer, out: &mut Matrix) {
+        let (n, b) = (self.n, self.block);
+        assert_eq!((out.rows(), out.cols()), (n, n));
+        let bn = n.div_ceil(b);
+        let cb = quantizer.codebook();
+        let nlevels = cb.levels.len();
+        debug_assert!(nlevels <= 16);
+        let threads = auto_threads(n * n);
+        let chunk = even_aligned_chunk(n, n, threads).max(1);
+        let bytes = self.codes.bytes();
+        let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        let (diag, scales) = (&self.diag, &self.c_scales);
+        parallel_for(n.div_ceil(chunk), threads, |ch| {
+            let r0 = ch * chunk;
+            let r1 = (r0 + chunk).min(n);
+            let mut tab = [0.0f32; 16];
+            for r in r0..r1 {
+                // Safety: output rows are disjoint across tasks.
+                let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r * n), n) };
+                let mut rd = NibbleReader::new(bytes, r * n);
+                let bi = r / b;
+                let mut j = 0usize;
+                while j < r {
+                    let bj = j / b;
+                    let c1 = ((bj + 1) * b).min(r);
+                    cb.scaled_levels(scales[bi * bn + bj], &mut tab[..nlevels]);
+                    for slot in &mut orow[j..c1] {
+                        *slot = tab[rd.next_code() as usize];
+                    }
+                    j = c1;
+                }
+                orow[r] = diag[r];
+                orow[r + 1..].fill(0.0);
+            }
+        });
+    }
+
+    /// Reconstruct `D(Ē)`: strictly-lower dequantized error state, zero on
+    /// and above the diagonal. `out` is fully overwritten.
+    pub fn load_e_into(&self, quantizer: &BlockQuantizer, out: &mut Matrix) {
+        let (n, b) = (self.n, self.block);
+        assert_eq!((out.rows(), out.cols()), (n, n));
+        let bn = n.div_ceil(b);
+        let cb = quantizer.codebook();
+        let nlevels = cb.levels.len();
+        debug_assert!(nlevels <= 16);
+        let threads = auto_threads(n * n);
+        let chunk = even_aligned_chunk(n, n, threads).max(1);
+        let bytes = self.codes.bytes();
+        let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        let scales = &self.e_scales;
+        // Pass A: zero fill (parallel over output rows).
+        parallel_for(n.div_ceil(chunk), threads, |ch| {
+            let r0 = ch * chunk;
+            let r1 = (r0 + chunk).min(n);
+            for r in r0..r1 {
+                // Safety: output rows are disjoint across tasks.
+                let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r * n), n) };
+                orow.fill(0.0);
+            }
+        });
+        // Pass B: stream grid row r's upper codes into E's column r —
+        // distinct r ⇒ distinct output columns, so tasks stay disjoint.
+        parallel_for(n.div_ceil(chunk), threads, |ch| {
+            let r0 = ch * chunk;
+            let r1 = (r0 + chunk).min(n);
+            let mut tab = [0.0f32; 16];
+            for r in r0..r1 {
+                if r + 1 >= n {
+                    continue;
+                }
+                let mut rd = NibbleReader::new(bytes, r * n + r + 1);
+                let bjr = r / b;
+                let base = out_ptr.get();
+                let mut cc = r + 1;
+                while cc < n {
+                    let bi = cc / b;
+                    let c1 = ((bi + 1) * b).min(n);
+                    cb.scaled_levels(scales[bi * bn + bjr], &mut tab[..nlevels]);
+                    for i in cc..c1 {
+                        // Safety: element (i, r) is written only by the
+                        // task owning grid row r.
+                        unsafe { *base.add(i * n + r) = tab[rd.next_code() as usize] };
+                    }
+                    cc = c1;
                 }
             }
-        }
-        let qc = QuantizedMatrix {
-            rows: n,
-            cols: n,
-            block: self.block,
-            bits: quantizer.cfg.bits,
-            mapping: quantizer.cfg.mapping,
-            codes: CodeStore::Nibbles(c_codes),
-            scales: self.c_scales.clone(),
-        };
-        let qe = QuantizedMatrix {
-            rows: n,
-            cols: n,
-            block: self.block,
-            bits: quantizer.cfg.bits,
-            mapping: quantizer.cfg.mapping,
-            codes: CodeStore::Nibbles(e_codes),
-            scales: self.e_scales.clone(),
-        };
-        let mut c = quantizer.dequantize(&qc);
-        let mut e = quantizer.dequantize(&qe);
-        // Mask the structural zeros explicitly: codebooks without an exact
-        // zero level (e.g. plain linear) would otherwise leak ±scale/15
-        // into the upper triangles.
-        for i in 0..n {
-            for j in i..n {
-                c[(i, j)] = 0.0;
-                e[(i, j)] = 0.0;
-            }
-            e[(i, i)] = 0.0;
-        }
-        for (i, &d) in self.diag.iter().enumerate() {
-            c[(i, i)] = d;
-        }
-        (c, e)
+        });
     }
 
     /// Physical bytes: ONE n×n nibble grid + f32 diagonal + both scale sets.
@@ -140,6 +355,60 @@ impl TriJointStore {
         let tri_codes = (self.n * (self.n + 1)) / 2;
         tri_codes.div_ceil(2) + self.diag.len() * 4 + self.c_scales.len() * 4
     }
+}
+
+/// A [`NibbleWriter`] positioned over grid slots `[flat0, flat0 + count)`:
+/// computes the run's byte span (`count ≥ 1`), materializes the sub-slice,
+/// and sets the start-nibble parity. The single audited site for the
+/// nibble→byte span arithmetic all three store passes share.
+///
+/// # Safety
+///
+/// Within one parallel pass, every two runs handed to `row_writer` must be
+/// **byte-disjoint**. A one-nibble gap between runs is NOT enough (two
+/// nibbles share a byte); the store passes guarantee a flat-index distance
+/// of ≥ 2 between one run's last slot and the next run's first slot, which
+/// is what forces distinct bytes. `ptr` must cover the whole grid.
+unsafe fn row_writer<'a>(ptr: *mut u8, flat0: usize, count: usize) -> NibbleWriter<'a> {
+    debug_assert!(count >= 1);
+    let byte_lo = flat0 >> 1;
+    let byte_hi = (flat0 + count - 1) / 2 + 1;
+    let sub = std::slice::from_raw_parts_mut(ptr.add(byte_lo), byte_hi - byte_lo);
+    NibbleWriter::new(sub, flat0 & 1)
+}
+
+/// Per-block absmax over the strictly-lower entries of square `x` (blocks
+/// with no lower entries get scale 0 — identical to quantizing the masked
+/// matrix, since zeros never raise an absmax). Parallel over block rows;
+/// the fold within a block stays row-major like the scalar reference.
+fn strict_lower_scales(x: &Matrix, b: usize, scales: &mut Vec<f32>) {
+    let n = x.rows();
+    let bn = n.div_ceil(b);
+    scales.clear();
+    scales.resize(bn * bn, 0.0);
+    let threads = auto_threads(n * n / 2);
+    let scales_ptr = SendPtr(scales.as_mut_ptr());
+    parallel_for(bn, threads, |bi| {
+        let r0 = bi * b;
+        let r1 = (r0 + b).min(n);
+        // Safety: each task owns scale row bi.
+        let srow = unsafe { std::slice::from_raw_parts_mut(scales_ptr.get().add(bi * bn), bn) };
+        for i in r0..r1 {
+            let row = x.row(i);
+            for (bj, s) in srow.iter_mut().enumerate().take(i / b + 1) {
+                let c0 = bj * b;
+                let c1 = ((bj + 1) * b).min(i); // strictly below the diagonal
+                if c0 >= c1 {
+                    continue;
+                }
+                let mut amax = *s;
+                for &v in &row[c0..c1] {
+                    amax = amax.max(v.abs());
+                }
+                *s = amax;
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -228,5 +497,72 @@ mod tests {
         // One n×n nibble grid = n²/2 bytes.
         let code_bytes = n * n / 2;
         assert_eq!(s.size_bytes(), code_bytes + n * 4 + 2 * 4);
+    }
+
+    #[test]
+    fn store_into_reuse_matches_fresh_store() {
+        // A store refreshed in place (different values, same shape) must be
+        // indistinguishable from a freshly built one — stale codes, scales
+        // or diagonals must never leak through the buffer reuse.
+        let mut rng = Rng::new(4);
+        let quantizer = BlockQuantizer::new(QuantConfig { block: 8, ..Default::default() });
+        let mut s = TriJointStore::store(
+            &lower_tri(19, &mut rng),
+            &strictly_lower(19, &mut rng, 2.0),
+            &quantizer,
+        );
+        let c = lower_tri(19, &mut rng);
+        let e = strictly_lower(19, &mut rng, 0.1);
+        s.store_into(&c, &e, &quantizer);
+        let fresh = TriJointStore::store(&c, &e, &quantizer);
+        let (sc, se) = s.load(&quantizer);
+        let (fc, fe) = fresh.load(&quantizer);
+        assert_eq!(sc, fc);
+        assert_eq!(se, fe);
+        assert_eq!(s.size_bytes(), fresh.size_bytes());
+    }
+
+    #[test]
+    fn staged_store_matches_joint_store() {
+        let mut rng = Rng::new(5);
+        let quantizer = BlockQuantizer::new(QuantConfig { block: 4, ..Default::default() });
+        for n in [6usize, 13] {
+            let c = lower_tri(n, &mut rng);
+            let e = strictly_lower(n, &mut rng, 0.2);
+            let joint = TriJointStore::store(&c, &e, &quantizer);
+            let mut staged = TriJointStore::empty();
+            staged.store_c_into(&c, &quantizer);
+            staged.store_e_into(&e, &quantizer);
+            let (jc, je) = joint.load(&quantizer);
+            let (sc, se) = staged.load(&quantizer);
+            assert_eq!(jc, sc, "n={n}");
+            assert_eq!(je, se, "n={n}");
+
+            // store_e_zero ≡ storing an explicit zero matrix.
+            let mut ez = TriJointStore::empty();
+            ez.store_c_into(&c, &quantizer);
+            ez.store_e_zero(&quantizer);
+            let explicit = TriJointStore::store(&c, &Matrix::zeros(n, n), &quantizer);
+            let (zc, ze) = ez.load(&quantizer);
+            let (xc, xe) = explicit.load(&quantizer);
+            assert_eq!(zc, xc, "n={n}");
+            assert_eq!(ze, xe, "n={n}");
+        }
+    }
+
+    #[test]
+    fn load_c_reads_back_packed_codes() {
+        // The staged EF flow relies on load_c_into returning exactly the
+        // D(C̄) the grid holds, into a dirty buffer.
+        let mut rng = Rng::new(6);
+        let quantizer = BlockQuantizer::new(QuantConfig { block: 8, ..Default::default() });
+        let c = lower_tri(11, &mut rng);
+        let mut s = TriJointStore::empty();
+        s.store_c_into(&c, &quantizer);
+        s.store_e_zero(&quantizer);
+        let (want, _) = s.load(&quantizer);
+        let mut got = Matrix::from_fn(11, 11, |_, _| f32::NAN);
+        s.load_c_into(&quantizer, &mut got);
+        assert_eq!(got, want);
     }
 }

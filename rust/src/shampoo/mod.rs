@@ -22,7 +22,7 @@ pub use blocking::Blocking;
 pub use config::{ShampooConfig, ShampooVariant};
 pub use state::LayerState;
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, ScratchArena};
 use crate::optim::optimizer::ParamState;
 use crate::optim::{graft, BaseOptimizer, Optimizer};
 use crate::quant::codec::CodecCtx;
@@ -35,6 +35,11 @@ pub struct Shampoo {
     pub cfg: ShampooConfig,
     pub layers: Vec<LayerState>,
     ctx: CodecCtx,
+    /// Worker-checked-out scratch arenas: each step worker pops one, runs
+    /// its layers' store/load/root pipeline out of it, and returns it. The
+    /// pool grows to the peak concurrent worker count and then every
+    /// steady-state step is allocation-free (see `scratch_stats`).
+    scratch_pool: Mutex<Vec<ScratchArena>>,
 }
 
 impl Shampoo {
@@ -47,7 +52,7 @@ impl Shampoo {
             .iter()
             .map(|&(m, n)| LayerState::new(m, n, &cfg, &ctx))
             .collect();
-        Shampoo { base, cfg, layers, ctx }
+        Shampoo { base, cfg, layers, ctx, scratch_pool: Mutex::new(Vec::new()) }
     }
 
     /// One optimization step (Algorithm 1 lines 2–16).
@@ -68,6 +73,7 @@ impl Shampoo {
 
         let cfg = &self.cfg;
         let ctx = &self.ctx;
+        let scratch_pool = &self.scratch_pool;
         let hyper = self.base.hyper;
         let kind = self.base.kind;
         assert_eq!(self.base.states.len(), self.layers.len(), "optimizer not initialized");
@@ -97,19 +103,43 @@ impl Shampoo {
         crate::util::pool::parallel_for(n, threads, |i| {
             let mut item = work[i].lock().unwrap();
             let (layer, w, g, st) = &mut *item;
+            // Check an arena out of the pool (or start a fresh one on the
+            // very first steps); every temporary of the refresh + step
+            // pipeline below is served from it, so a warmed-up step does no
+            // heap allocation. Arena contents never influence results —
+            // every taken buffer is fully overwritten before use.
+            let mut scratch = scratch_pool
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .pop()
+                .unwrap_or_default();
             if update_gram {
-                layer.update_gram(g, cfg);
+                layer.update_gram(g, cfg, &mut scratch);
             }
             if update_roots {
-                layer.update_inv_roots(cfg, ctx);
+                layer.update_inv_roots(cfg, ctx, &mut scratch);
             }
             // Ĝ = D(L̂)·G·D(R̂)  (line 15), then grafting (Eq. 13).
-            let mut ghat = layer.precondition(g);
+            let mut ghat = scratch.take(g.rows(), g.cols());
+            layer.precondition_into(g, &mut ghat, &mut scratch);
             if cfg.grafting {
                 graft(g, &mut ghat);
             }
             BaseOptimizer::step_one(&hyper, kind, st, w, &ghat, lr_scale);
+            scratch.recycle(ghat);
+            scratch_pool.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
         });
+    }
+
+    /// Scratch-reuse telemetry: `(pooled arenas, Σ pool hits, Σ pool
+    /// misses)` across all parked arenas. In steady state the miss count is
+    /// constant step-over-step — the assertion behind the scratch-reuse
+    /// test in `tests/kernel_equivalence.rs`.
+    pub fn scratch_stats(&self) -> (usize, usize, usize) {
+        let pool = self.scratch_pool.lock().unwrap_or_else(|e| e.into_inner());
+        let hits = pool.iter().map(|a| a.hits()).sum();
+        let misses = pool.iter().map(|a| a.misses()).sum();
+        (pool.len(), hits, misses)
     }
 
     /// Persistent optimizer-state bytes: Shampoo preconditioner storage
@@ -348,13 +378,14 @@ mod tests {
         let mut base = sgd_base();
         base.init(shapes.len());
         let mut pb = params0.clone();
+        let mut scratch = ScratchArena::new();
         for k in 1..=6u64 {
             for i in 0..shapes.len() {
                 if k % cfg.t1 == 0 {
-                    layers[i].update_gram(&grads[i], &cfg);
+                    layers[i].update_gram(&grads[i], &cfg, &mut scratch);
                 }
                 if k % cfg.t2 == 0 {
-                    layers[i].update_inv_roots(&cfg, &ctx);
+                    layers[i].update_inv_roots(&cfg, &ctx, &mut scratch);
                 }
                 let mut ghat = layers[i].precondition(&grads[i]);
                 if cfg.grafting {

@@ -15,8 +15,11 @@
 
 use super::blocking::Blocking;
 use super::config::ShampooConfig;
-use crate::linalg::schur_newton::inverse_pth_root;
-use crate::linalg::{matmul, matmul_tn, syrk, Matrix};
+use crate::linalg::schur_newton::inverse_pth_root_scratch;
+use crate::linalg::{
+    inverse_pth_root_eig_planned, matmul_into_planned, matmul_tn_into, syrk_into, Matrix,
+    ScratchArena,
+};
 use crate::quant::codec::{lookup, CodecBuilder, CodecCtx};
 use crate::quant::PrecondCodec;
 
@@ -83,29 +86,49 @@ impl BlockState {
 
     /// Absorb the fresh Gram statistic into a side codec:
     /// `L ← β·L_prev + (1−β)·gram`, then re-store in its representation
-    /// (Eq. (5) for VQ; the codec runs Eq. (7)–(11) for CQ).
-    fn update_side(side: &mut dyn PrecondCodec, gram: &Matrix, cfg: &ShampooConfig) {
-        let mut l_new = side.load();
+    /// (Eq. (5) for VQ; the codec runs Eq. (7)–(11) for CQ). All
+    /// temporaries come from the caller's arena — a warmed-up refresh
+    /// allocates nothing.
+    fn update_side(
+        side: &mut dyn PrecondCodec,
+        gram: &Matrix,
+        cfg: &ShampooConfig,
+        scratch: &mut ScratchArena,
+    ) {
+        let mut l_new = scratch.take(gram.rows(), gram.cols());
+        side.load_into(&mut l_new, scratch);
         l_new.ema(cfg.beta, gram);
         l_new.symmetrize();
-        side.store(&l_new);
+        side.store_into(&l_new, scratch);
+        scratch.recycle(l_new);
     }
 
-    fn update_gram(&mut self, g: &Matrix, cfg: &ShampooConfig) {
-        let gram_l = syrk(g); // G·Gᵀ
-        let gram_r = matmul_tn(g, g); // Gᵀ·G
-        Self::update_side(&mut *self.l, &gram_l, cfg);
-        Self::update_side(&mut *self.r, &gram_r, cfg);
+    fn update_gram(&mut self, g: &Matrix, cfg: &ShampooConfig, scratch: &mut ScratchArena) {
+        let mut gram_l = scratch.take(g.rows(), g.rows());
+        syrk_into(g, &mut gram_l); // G·Gᵀ
+        Self::update_side(&mut *self.l, &gram_l, cfg, scratch);
+        scratch.recycle(gram_l);
+        let mut gram_r = scratch.take(g.cols(), g.cols());
+        matmul_tn_into(g, g, &mut gram_r); // Gᵀ·G
+        Self::update_side(&mut *self.r, &gram_r, cfg, scratch);
+        scratch.recycle(gram_r);
     }
 
-    fn update_inv_roots(&mut self, cfg: &ShampooConfig, ctx: &CodecCtx) {
+    fn update_inv_roots(
+        &mut self,
+        cfg: &ShampooConfig,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+    ) {
         for (side, root, root_key, cache) in [
             (&self.l, &mut self.lhat, &mut self.lhat_key, &mut self.cache_lhat),
             (&self.r, &mut self.rhat, &mut self.rhat_key, &mut self.cache_rhat),
         ] {
-            let precond = side.load();
+            let dim = cache.rows();
+            let mut precond = scratch.take(dim, dim);
+            side.load_into(&mut precond, scratch);
             // Eq. (6)/(12): ridge λ_max·ε·I handled inside the iteration.
-            let (x, stats) = inverse_pth_root(&precond, &cfg.schur);
+            let (x, stats) = inverse_pth_root_scratch(&precond, &cfg.schur, scratch);
             // Direct (VQ) quantization can break positive-definiteness
             // (Tab. 9); Schur–Newton then diverges. Fall back to the exact
             // eigendecomposition route with eigenvalue clamping — defined
@@ -123,21 +146,27 @@ impl BlockState {
                 || stats.residual > 0.1
                 || crate::linalg::max_abs(&x) > root_bound
             {
-                let mut ridged = precond.clone();
+                // Exceptional path — allocation here is acceptable, but the
+                // ridged copy and the matmul plan still come from the arena.
+                scratch.recycle(x);
+                let mut ridged = scratch.take(dim, dim);
+                ridged.copy_from(&precond);
                 let lam = stats.lambda_max.max(0.0);
                 ridged.add_diag(lam * cfg.schur.eps);
                 // Clamp at λmax·1e-4 (not the ε ridge): quantization-created
                 // negative directions would otherwise get ~(1e-6)^{-1/4} ≈
                 // 30× amplification and swamp the true curvature signal.
-                crate::linalg::inverse_pth_root_eig(
+                let eig = inverse_pth_root_eig_planned(
                     &ridged,
                     cfg.schur.p as f64,
                     (lam * 1e-4).max(1e-10),
-                )
+                    scratch.plan(),
+                );
+                scratch.recycle(ridged);
+                eig
             } else {
                 x
             };
-            let dim = x.rows();
             let configured = cfg.root_codec_key();
             let quantize = configured != "f32" && dim * dim >= cfg.quant.min_quant_elems;
             let key = if quantize { configured } else { "f32" };
@@ -149,14 +178,19 @@ impl BlockState {
                 *root = (builder(key).root)(ctx);
                 *root_key = key;
             }
-            root.store(&x);
-            *cache = root.load();
+            root.store_into(&x, scratch);
+            root.load_into(cache, scratch);
+            scratch.recycle(x);
+            scratch.recycle(precond);
         }
     }
 
-    /// `Ĝ = D(L̂)·G·D(R̂)` (Algorithm 1 line 15).
-    fn precondition(&self, g: &Matrix) -> Matrix {
-        matmul(&matmul(&self.cache_lhat, g), &self.cache_rhat)
+    /// `Ĝ = D(L̂)·G·D(R̂)` (Algorithm 1 line 15), arena-backed.
+    fn precondition_into(&self, g: &Matrix, out: &mut Matrix, scratch: &mut ScratchArena) {
+        let mut tmp = scratch.take(self.rows, g.cols());
+        matmul_into_planned(&self.cache_lhat, g, &mut tmp, scratch.plan());
+        matmul_into_planned(&tmp, &self.cache_rhat, out, scratch.plan());
+        scratch.recycle(tmp);
     }
 
     fn size_bytes(&self) -> usize {
@@ -190,38 +224,60 @@ impl LayerState {
         LayerState { rows, cols, blocking, blocks, passthrough }
     }
 
-    pub fn update_gram(&mut self, g: &Matrix, cfg: &ShampooConfig) {
+    pub fn update_gram(&mut self, g: &Matrix, cfg: &ShampooConfig, scratch: &mut ScratchArena) {
         if self.passthrough {
             return;
         }
         for (spec, state) in self.blocking.blocks.iter().zip(self.blocks.iter_mut()) {
-            let gb = g.block(spec.r0, spec.c0, spec.rows, spec.cols);
-            state.update_gram(&gb, cfg);
+            let mut gb = scratch.take(spec.rows, spec.cols);
+            g.block_into(spec.r0, spec.c0, &mut gb);
+            state.update_gram(&gb, cfg, scratch);
+            scratch.recycle(gb);
         }
     }
 
-    pub fn update_inv_roots(&mut self, cfg: &ShampooConfig, ctx: &CodecCtx) {
+    pub fn update_inv_roots(
+        &mut self,
+        cfg: &ShampooConfig,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+    ) {
         if self.passthrough {
             return;
         }
         for state in self.blocks.iter_mut() {
-            state.update_inv_roots(cfg, ctx);
+            state.update_inv_roots(cfg, ctx, scratch);
         }
     }
 
+    /// Allocating convenience wrapper over [`Self::precondition_into`].
     pub fn precondition(&self, g: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        self.precondition_into(g, &mut out, &mut ScratchArena::new());
+        out
+    }
+
+    /// Precondition into a caller-owned buffer; every per-block temporary
+    /// comes from the arena (the per-step hot path of `Shampoo::step`).
+    /// `out` is fully overwritten (the block specs tile the layer).
+    pub fn precondition_into(&self, g: &Matrix, out: &mut Matrix, scratch: &mut ScratchArena) {
         if self.passthrough {
-            return g.clone();
+            out.copy_from(g);
+            return;
         }
         if self.blocking.is_trivial() {
-            return self.blocks[0].precondition(g);
+            self.blocks[0].precondition_into(g, out, scratch);
+            return;
         }
-        let mut out = Matrix::zeros(self.rows, self.cols);
         for (spec, state) in self.blocking.blocks.iter().zip(self.blocks.iter()) {
-            let gb = g.block(spec.r0, spec.c0, spec.rows, spec.cols);
-            out.set_block(spec.r0, spec.c0, &state.precondition(&gb));
+            let mut gb = scratch.take(spec.rows, spec.cols);
+            g.block_into(spec.r0, spec.c0, &mut gb);
+            let mut ob = scratch.take(spec.rows, spec.cols);
+            state.precondition_into(&gb, &mut ob, scratch);
+            out.set_block(spec.r0, spec.c0, &ob);
+            scratch.recycle(ob);
+            scratch.recycle(gb);
         }
-        out
     }
 
     pub fn size_bytes(&self) -> usize {
@@ -243,7 +299,7 @@ impl LayerState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::matmul_nt;
+    use crate::linalg::{matmul_nt, syrk};
     use crate::quant::{BlockQuantizer, QuantConfig};
     use crate::shampoo::ShampooVariant;
     use crate::util::rng::Rng;
@@ -269,10 +325,11 @@ mod tests {
         let ctx = ctx(&c);
         let mut rng = Rng::new(1);
         let mut side = side_codec(12, &c, &ctx);
+        let mut scratch = ScratchArena::new();
         assert_eq!(side.key(), "cq4-ef");
         for _ in 0..5 {
             let g = Matrix::randn(12, 16, 1.0, &mut rng);
-            BlockState::update_side(&mut *side, &syrk(&g), &c);
+            BlockState::update_side(&mut *side, &syrk(&g), &c, &mut scratch);
             let l = side.load();
             // PSD check via eigensolver.
             let (vals, _) = crate::linalg::eig_sym(&l, 1e-10, 100);
@@ -348,10 +405,11 @@ mod tests {
         let cctx = ctx(&c);
         let mut rng = Rng::new(2);
         let mut layer = LayerState::new(20, 12, &c, &cctx);
+        let mut scratch = ScratchArena::new();
         assert_eq!(layer.blocks.len(), 3 * 2);
         let g = Matrix::randn(20, 12, 1.0, &mut rng);
-        layer.update_gram(&g, &c);
-        layer.update_inv_roots(&c, &cctx);
+        layer.update_gram(&g, &c, &mut scratch);
+        layer.update_inv_roots(&c, &cctx, &mut scratch);
         let ghat = layer.precondition(&g);
         assert_eq!((ghat.rows(), ghat.cols()), (20, 12));
         assert!(!ghat.has_non_finite());
@@ -376,9 +434,10 @@ mod tests {
         let cctx = ctx(&c);
         let mut rng = Rng::new(3);
         let mut block = BlockState::new(10, 10, &c, &cctx);
+        let mut scratch = ScratchArena::new();
         let g = Matrix::randn(10, 10, 1.0, &mut rng);
-        block.update_gram(&g, &c);
-        block.update_inv_roots(&c, &cctx);
+        block.update_gram(&g, &c, &mut scratch);
+        block.update_inv_roots(&c, &cctx, &mut scratch);
         assert_eq!(block.lhat.key(), "vq4");
         assert!(block.cache_lhat.max_abs_diff(&block.lhat.load()) < 1e-7);
         assert!(block.cache_rhat.max_abs_diff(&block.rhat.load()) < 1e-7);
@@ -393,7 +452,7 @@ mod tests {
         let mut side = side_codec(6, &c, &cctx);
         let mut bad = Matrix::zeros(6, 6);
         bad[(0, 0)] = f32::NAN;
-        BlockState::update_side(&mut *side, &bad, &c);
+        BlockState::update_side(&mut *side, &bad, &c, &mut ScratchArena::new());
         let l = side.load();
         assert!(!l.has_non_finite(), "reset must clear NaNs");
     }
@@ -404,10 +463,11 @@ mod tests {
         let cctx = ctx(&c);
         let mut rng = Rng::new(4);
         let mut layer = LayerState::new(32, 32, &c, &cctx);
+        let mut scratch = ScratchArena::new();
         assert_eq!(layer.blocks[0].l.key(), "bw8");
         let g = Matrix::randn(32, 32, 1.0, &mut rng);
-        layer.update_gram(&g, &c);
-        layer.update_inv_roots(&c, &cctx);
+        layer.update_gram(&g, &c, &mut scratch);
+        layer.update_inv_roots(&c, &cctx, &mut scratch);
         assert!(!layer.precondition(&g).has_non_finite());
         // 8-bit codes: each side/root ≈ n² bytes + scales + diag, far below
         // the 4·n² f32 payload and roughly twice the 4-bit payload.

@@ -1,0 +1,293 @@
+//! Kernel-equivalence suite: every fused/parallel hot-path kernel of the
+//! perf pass is pinned against its scalar reference.
+//!
+//! * fused block-wise quantize/dequantize (streamed nibble packing, boundary
+//!   -table encode, per-block dequant tables) vs the scalar
+//!   `CodeStore::get`/`set` + midpoint-encode reference — **bit-exact**;
+//! * parallel quantize/dequantize vs single-threaded — **bit-identical**;
+//! * the fused joint triangular store vs masked-matrix reference — exact;
+//! * blocked right-looking Cholesky vs the naive kernel — ≤1e-5 relative
+//!   Frobenius on random SPD, divisible and non-divisible orders;
+//! * the steady-state Shampoo refresh pipeline — zero scratch-pool misses
+//!   after warm-up (the allocation-free store/load/root contract).
+
+use quartz::linalg::{
+    cholesky, cholesky_naive, fro_norm, relative_error, syrk, Matrix, CHOLESKY_BLOCKED_MIN,
+};
+use quartz::optim::BaseOptimizer;
+use quartz::quant::{BlockQuantizer, CodeStore, Mapping, QuantConfig, QuantizedMatrix};
+use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+use quartz::util::rng::Rng;
+
+/// The pre-fusion scalar quantizer: per-block absmax, midpoint-scan encode,
+/// one `CodeStore::set` per element. The fused kernel must reproduce its
+/// codes and scales bit-for-bit.
+fn reference_quantize(q: &BlockQuantizer, x: &Matrix) -> QuantizedMatrix {
+    let (m, n) = (x.rows(), x.cols());
+    let b = q.cfg.block.max(1);
+    let bm = m.div_ceil(b);
+    let bn = n.div_ceil(b);
+    let mut scales = vec![0.0f32; bm * bn];
+    let mut codes = CodeStore::zeros(m * n, q.cfg.bits);
+    let cb = q.codebook();
+    let zero_code = cb.encode_scalar(0.0);
+    for bi in 0..bm {
+        for bj in 0..bn {
+            let (r0, c0) = (bi * b, bj * b);
+            let (r1, c1) = ((r0 + b).min(m), (c0 + b).min(n));
+            let mut amax = 0.0f32;
+            for i in r0..r1 {
+                for &v in &x.row(i)[c0..c1] {
+                    amax = amax.max(v.abs());
+                }
+            }
+            scales[bi * bn + bj] = amax;
+            if amax == 0.0 {
+                for i in r0..r1 {
+                    for j in c0..c1 {
+                        codes.set(i * n + j, zero_code);
+                    }
+                }
+                continue;
+            }
+            let inv = 1.0 / amax;
+            for i in r0..r1 {
+                let row = x.row(i);
+                for j in c0..c1 {
+                    codes.set(i * n + j, cb.encode_scalar(row[j] * inv));
+                }
+            }
+        }
+    }
+    QuantizedMatrix {
+        rows: m,
+        cols: n,
+        block: b,
+        bits: q.cfg.bits,
+        mapping: q.cfg.mapping,
+        codes,
+        scales,
+    }
+}
+
+/// The pre-fusion scalar dequantizer: `scale · decode(get(i·n+j))`.
+fn reference_dequantize(q: &BlockQuantizer, qm: &QuantizedMatrix) -> Matrix {
+    let (m, n, b) = (qm.rows, qm.cols, qm.block);
+    let bn = n.div_ceil(b);
+    let cb = q.codebook();
+    Matrix::from_fn(m, n, |i, j| {
+        qm.scales[(i / b) * bn + j / b] * cb.decode(qm.codes.get(i * n + j))
+    })
+}
+
+fn quantizer(bits: u32, block: usize, mapping: Mapping) -> BlockQuantizer {
+    BlockQuantizer::new(QuantConfig { bits, block, mapping, min_quant_elems: 0 })
+}
+
+const SHAPES: [(usize, usize); 6] = [(1, 1), (5, 3), (16, 16), (33, 17), (64, 63), (7, 129)];
+
+#[test]
+fn fused_quantize_is_bit_exact_vs_scalar_reference() {
+    let mut rng = Rng::new(1);
+    for &(m, n) in &SHAPES {
+        for block in [1usize, 7, 8, 64] {
+            for (bits, mapping) in
+                [(4u32, Mapping::Linear2), (4, Mapping::Linear), (8, Mapping::Linear2)]
+            {
+                let q = quantizer(bits, block, mapping);
+                let x = Matrix::randn(m, n, 1.0, &mut rng);
+                let fused = q.quantize(&x);
+                let want = reference_quantize(&q, &x);
+                assert_eq!(fused.scales, want.scales, "{m}x{n} b={block} bits={bits}");
+                assert_eq!(fused.codes, want.codes, "{m}x{n} b={block} bits={bits}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_quantize_handles_zero_blocks_and_outliers() {
+    // All-zero blocks (zero scale) and single-block outliers exercise the
+    // zero_code fill path and block isolation.
+    let q = quantizer(4, 8, Mapping::Linear2);
+    let mut x = Matrix::zeros(24, 24);
+    x[(0, 0)] = 1e6;
+    x[(17, 3)] = -2.5;
+    let fused = q.quantize(&x);
+    let want = reference_quantize(&q, &x);
+    assert_eq!(fused.scales, want.scales);
+    assert_eq!(fused.codes, want.codes);
+    assert_eq!(q.dequantize(&fused), reference_dequantize(&q, &want));
+}
+
+#[test]
+fn fused_dequantize_is_bit_exact_vs_scalar_reference() {
+    let mut rng = Rng::new(2);
+    for &(m, n) in &SHAPES {
+        for (bits, block) in [(4u32, 8usize), (4, 7), (8, 16)] {
+            let q = quantizer(bits, block, Mapping::Linear2);
+            let x = Matrix::randn(m, n, 2.0, &mut rng);
+            let qm = q.quantize(&x);
+            let mut fused = Matrix::zeros(m, n);
+            q.dequantize_into(&qm, &mut fused);
+            let want = reference_dequantize(&q, &qm);
+            assert_eq!(fused, want, "{m}x{n} bits={bits} block={block}");
+        }
+    }
+}
+
+#[test]
+fn parallel_quantize_is_bit_identical_to_sequential() {
+    let mut rng = Rng::new(3);
+    // Odd column counts make rows start mid-byte — the even-aligned
+    // chunking guard is exactly what keeps the parallel result identical.
+    for &(m, n) in &[(33usize, 17usize), (64, 63), (128, 129), (96, 96)] {
+        for bits in [4u32, 8] {
+            let q = quantizer(bits, 16, Mapping::Linear2);
+            let x = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut seq = q.quantize(&x); // shell
+            let mut par = q.quantize(&x);
+            q.quantize_into_threaded(&x, &mut seq, 1);
+            for threads in [2usize, 3, 8] {
+                q.quantize_into_threaded(&x, &mut par, threads);
+                assert_eq!(par.scales, seq.scales, "{m}x{n} t={threads} bits={bits}");
+                assert_eq!(par.codes, seq.codes, "{m}x{n} t={threads} bits={bits}");
+            }
+
+            let mut out_seq = Matrix::zeros(m, n);
+            let mut out_par = Matrix::zeros(m, n);
+            q.dequantize_into_threaded(&seq, &mut out_seq, 1);
+            for threads in [2usize, 5, 8] {
+                q.dequantize_into_threaded(&seq, &mut out_par, threads);
+                assert_eq!(out_par, out_seq, "{m}x{n} t={threads} bits={bits}");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantize_into_reuses_buffers_and_matches_fresh() {
+    let mut rng = Rng::new(4);
+    let q = quantizer(4, 8, Mapping::Linear2);
+    // Warm a shell on a larger shape, then reuse it for smaller/equal ones:
+    // stale codes, scales and metadata must be fully overwritten.
+    let mut shell = q.quantize(&Matrix::randn(64, 63, 1.0, &mut rng));
+    for &(m, n) in &[(64usize, 63usize), (33, 17), (16, 16)] {
+        let x = Matrix::randn(m, n, 1.0, &mut rng);
+        q.quantize_into(&x, &mut shell);
+        let fresh = q.quantize(&x);
+        assert_eq!(shell.scales, fresh.scales, "{m}x{n}");
+        assert_eq!(shell.codes, fresh.codes, "{m}x{n}");
+        assert_eq!((shell.rows, shell.cols, shell.block), (m, n, 8));
+        assert_eq!(q.dequantize(&shell), q.dequantize(&fresh));
+    }
+}
+
+#[test]
+fn tri_store_matches_masked_matrix_reference() {
+    // The fused joint store must equal the unfused recipe: quantize the
+    // masked triangles with the scalar reference, dequantize, re-mask.
+    use quartz::quant::TriJointStore;
+    let mut rng = Rng::new(5);
+    for n in [9usize, 17, 33] {
+        for block in [4usize, 8, 64] {
+            let q = quantizer(4, block, Mapping::Linear2);
+            let c = Matrix::from_fn(n, n, |i, j| {
+                if i > j {
+                    rng.normal_f32(1.0)
+                } else if i == j {
+                    2.0 + (i as f32) * 0.1
+                } else {
+                    0.0
+                }
+            });
+            let e = Matrix::from_fn(n, n, |i, j| if i > j { rng.normal_f32(0.1) } else { 0.0 });
+            let store = TriJointStore::store(&c, &e, &q);
+            let (cl, el) = store.load(&q);
+
+            let mask = |x: &Matrix, keep_diag: Option<&Matrix>| {
+                let deq = reference_dequantize(&q, &reference_quantize(&q, x));
+                Matrix::from_fn(n, n, |i, j| {
+                    if i > j {
+                        deq[(i, j)]
+                    } else if i == j {
+                        keep_diag.map(|d| d[(i, i)]).unwrap_or(0.0)
+                    } else {
+                        0.0
+                    }
+                })
+            };
+            let c_off = Matrix::from_fn(n, n, |i, j| if i > j { c[(i, j)] } else { 0.0 });
+            let e_off = Matrix::from_fn(n, n, |i, j| if i > j { e[(i, j)] } else { 0.0 });
+            assert_eq!(cl, mask(&c_off, Some(&c)), "C n={n} block={block}");
+            assert_eq!(el, mask(&e_off, None), "E n={n} block={block}");
+        }
+    }
+}
+
+#[test]
+fn blocked_cholesky_matches_naive_within_1e5() {
+    let mut rng = Rng::new(6);
+    // Orders straddling the crossover, panel-divisible and not.
+    for n in [CHOLESKY_BLOCKED_MIN, 127, 160, 257] {
+        for trial in 0..2 {
+            let g = Matrix::randn(n, n + 16, 1.0, &mut rng);
+            let mut a = syrk(&g);
+            a.add_diag(1.0);
+            let fast = cholesky(&a).expect("blocked factor");
+            let slow = cholesky_naive(&a).expect("naive factor");
+            let rel = relative_error(&slow, &fast);
+            assert!(
+                rel < 1e-5,
+                "n={n} trial={trial}: blocked deviates from naive, rel Frobenius {rel}"
+            );
+            // And it is a genuine factor of A.
+            let recon = quartz::linalg::matmul_nt(&fast, &fast);
+            let err = relative_error(&a, &recon);
+            assert!(err < 1e-4, "n={n}: reconstruction error {err}");
+        }
+    }
+    // Sanity on the metric itself.
+    assert!(fro_norm(&Matrix::eye(4)) > 1.0);
+}
+
+#[test]
+fn steady_state_refresh_reuses_scratch() {
+    // The acceptance contract: once warmed up, a refresh step's
+    // store/load/root pipeline performs zero scratch-pool misses — every
+    // matrix temporary is a reused buffer. One layer ⇒ one worker ⇒ one
+    // arena, so the stats are deterministic.
+    let cfg = ShampooConfig {
+        t1: 1,
+        t2: 1,
+        variant: ShampooVariant::Cq4 { error_feedback: true },
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let mut sh = Shampoo::new(BaseOptimizer::sgd(0.05, 0.0), cfg, &[(48, 32)]);
+    let mut rng = Rng::new(7);
+    let mut params = vec![Matrix::randn(48, 32, 0.5, &mut rng)];
+    let mut step = |sh: &mut Shampoo, k: u64, rng: &mut Rng| {
+        let grads = vec![Matrix::randn(48, 32, 0.5, rng)];
+        sh.step(&mut params, &grads, k, 1.0);
+    };
+    // Warm-up: first refresh swaps root codecs f32→vq4 and sizes buffers.
+    step(&mut sh, 1, &mut rng);
+    step(&mut sh, 2, &mut rng);
+    let (arenas, _, misses) = sh.scratch_stats();
+    assert_eq!(arenas, 1, "single layer must use a single arena");
+    for k in 3..=10u64 {
+        step(&mut sh, k, &mut rng);
+    }
+    let (arenas2, hits2, misses2) = sh.scratch_stats();
+    assert_eq!(arenas2, 1);
+    assert_eq!(
+        misses2,
+        misses,
+        "steady-state refresh allocated scratch (misses {misses} → {misses2})"
+    );
+    assert!(hits2 > 0, "refresh pipeline must actually draw from the pool");
+    for p in &params {
+        assert!(!p.has_non_finite());
+    }
+}

@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Bench regression comparison (ROADMAP item "wire regression comparison"):
+# diff two BENCH_quartz.json records and flag every benchmark whose mean
+# time regressed by more than THRESHOLD_PCT percent (default 20 — i.e. a
+# >20% throughput drop on that kernel).
+#
+# Usage: scripts/bench_regression.sh BASELINE.json CURRENT.json [threshold_pct]
+#
+# Advisory by default: regressions are printed (and surfaced as GitHub
+# warning annotations when running in Actions) but the exit code stays 0,
+# because the CI smoke runs on shared runners whose noise floor is well
+# above a rigorous measurement. Set REGRESSION_STRICT=1 to turn flagged
+# regressions into a non-zero exit.
+#
+# Records are the JSONL objects util::bench emits, assembled by
+# scripts/harvest_bench.sh — the parser below relies on that exact shape
+# ("name":"...","mean_ns":N), not on a general JSON grammar.
+set -euo pipefail
+
+BASE="${1:?usage: bench_regression.sh BASELINE.json CURRENT.json [threshold_pct]}"
+CUR="${2:?usage: bench_regression.sh BASELINE.json CURRENT.json [threshold_pct]}"
+THRESH="${3:-20}"
+
+if [[ ! -f "$BASE" ]]; then
+  echo "bench_regression: no baseline at $BASE — first run, nothing to compare"
+  exit 0
+fi
+if [[ ! -f "$CUR" ]]; then
+  echo "bench_regression: current record $CUR missing" >&2
+  exit 1
+fi
+
+extract() {
+  grep -o '"name":"[^"]*","mean_ns":[0-9.]*' "$1" \
+    | sed 's/"name":"\([^"]*\)","mean_ns":\([0-9.]*\)/\1 \2/' \
+    | sort -k1,1
+}
+
+join <(extract "$BASE") <(extract "$CUR") | awk -v thresh="$THRESH" '
+  BEGIN {
+    regressions = 0; improvements = 0; compared = 0;
+    printf "%-52s %12s %12s %9s\n", "benchmark", "base ns", "current ns", "delta";
+  }
+  {
+    name = $1; base = $2 + 0; cur = $3 + 0;
+    if (base <= 0) next;
+    compared++;
+    pct = (cur / base - 1) * 100;
+    flag = "";
+    if (pct > thresh)       { flag = "  << REGRESSION"; regressions++; }
+    else if (pct < -thresh) { flag = "  (faster)";      improvements++; }
+    if (flag != "" )
+      printf "%-52s %12.0f %12.0f %+8.1f%%%s\n", name, base, cur, pct, flag;
+    if (pct > thresh && ENVIRON["GITHUB_ACTIONS"] == "true")
+      printf "::warning::bench regression: %s %.0fns -> %.0fns (%+.1f%%)\n", name, base, cur, pct;
+  }
+  END {
+    printf "compared %d benchmarks: %d regressed >%s%%, %d sped up >%s%%\n",
+           compared, regressions, thresh, improvements, thresh;
+    if (compared == 0) print "bench_regression: WARNING — no overlapping benchmark names";
+    exit (ENVIRON["REGRESSION_STRICT"] == "1" && regressions > 0) ? 1 : 0;
+  }
+'
