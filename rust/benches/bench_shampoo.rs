@@ -80,4 +80,47 @@ fn main() {
         }
         black_box(&p);
     });
+
+    // ---- End-to-end Shampoo::step at a realistic layer mix, per refresh
+    // policy (the ROADMAP's step-wall-clock trajectory item). The mix is
+    // transformer-ish — tall/wide projections plus square attention-style
+    // blocks — so staggering has real units to spread. Mean step time is
+    // amortized cost; the p99/p50 gap and the printed spike metrics
+    // (max units/step, worst refresh ms) are the latency-flattening
+    // evidence: `every-n` concentrates refresh work, `staggered` bounds it
+    // at ⌈units/T₂⌉ per step. Quick mode shrinks the mix (CI smoke); full
+    // runs use the larger shapes.
+    let quick = std::env::var("QUARTZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (mix, max_order): (Vec<(usize, usize)>, usize) = if quick {
+        (vec![(256, 64), (64, 256), (128, 128), (128, 128)], 64)
+    } else {
+        (vec![(1024, 256), (256, 1024), (512, 512), (512, 512)], 256)
+    };
+    let (t1, t2) = (5u64, 20u64);
+    let mut rng = Rng::new(5);
+    let mix_params: Vec<Matrix> =
+        mix.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+    let mix_grads: Vec<Matrix> =
+        mix.iter().map(|&(m, n)| Matrix::randn(m, n, 0.1, &mut rng)).collect();
+    for policy in ["every-n", "staggered", "staleness"] {
+        let cfg = ShampooConfig {
+            variant: ShampooVariant::Cq4 { error_feedback: true },
+            t1,
+            t2,
+            max_order,
+            refresh_policy: policy,
+            quant: quartz::quant::QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 5e-4), cfg, &mix);
+        let mut p = mix_params.clone();
+        let mut k = 1u64;
+        b.bench(&format!("step_mix/{policy}"), || {
+            sh.step(&mut p, &mix_grads, k, 1.0);
+            k += 1;
+            black_box(&p);
+        });
+        let s = sh.refresh_stats();
+        println!("  step_mix/{policy}: units {} | {}", sh.unit_count(), s.summary());
+    }
 }

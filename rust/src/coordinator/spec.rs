@@ -7,7 +7,7 @@ use crate::data::synthetic::ClusterSpec;
 use crate::data::tokens::CorpusSpec;
 use crate::optim::optimizer::Hyper;
 use crate::optim::{BaseOptimizer, LrSchedule, OptimizerKind};
-use crate::shampoo::{ShampooConfig, ShampooVariant};
+use crate::shampoo::{scheduler, ShampooConfig, ShampooVariant};
 use crate::train::{registry, OptimizerStack};
 use crate::util::error::{Context, Result};
 use crate::util::toml::{TomlDoc, TomlTable};
@@ -195,6 +195,9 @@ impl ExperimentSpec {
     /// base = "sgdm"
     /// shampoo = "cq-ef"      # any train::registry key: 32bit | vq | cq |
     ///                        # cq-ef | bw8 | none | registered additions
+    /// refresh_policy = "staggered"  # any shampoo::scheduler key:
+    ///                               # every-n | staggered | staleness | …
+    /// refresh_budget = 4            # staleness per-step unit budget (0 = auto)
     /// ```
     pub fn from_toml(text: &str) -> Result<ExperimentSpec> {
         let doc = TomlDoc::parse(text)?;
@@ -257,6 +260,23 @@ impl ExperimentSpec {
                     }
                     if let Some(mo) = t.get("max_order").and_then(|v| v.as_i64()) {
                         cfg.max_order = mo as usize;
+                    }
+                    // Refresh-scheduler selection mirrors the codec
+                    // registry: any key in `shampoo::scheduler` (built-in
+                    // or registered at runtime) is accepted; the stored
+                    // key is the registry's canonical &'static str.
+                    if let Some(rp) = t.get("refresh_policy").and_then(|v| v.as_str()) {
+                        let b = scheduler::lookup(rp).with_context(|| {
+                            format!("runs[{i}]: unknown refresh policy '{rp}'")
+                        })?;
+                        cfg.refresh_policy = b.key;
+                    }
+                    if let Some(rb) = t.get("refresh_budget").and_then(|v| v.as_i64()) {
+                        crate::ensure!(
+                            rb >= 0,
+                            "runs[{i}]: refresh_budget must be >= 0, got {rb}"
+                        );
+                        cfg.refresh_budget = rb as usize;
                     }
                     Some(cfg)
                 }
@@ -389,6 +409,26 @@ base = "adamw"
         }
         assert!(OptimizerSpec::from_names("lion", "cq-ef").is_err());
         assert!(OptimizerSpec::from_names("sgdm", "5bit").is_err());
+    }
+
+    #[test]
+    fn toml_selects_refresh_policy() {
+        let text = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"cq-ef\"\n\
+                    refresh_policy = \"staggered\"\nrefresh_budget = 3\n";
+        let spec = ExperimentSpec::from_toml(text).unwrap();
+        let sh = spec.runs[0].optimizer.shampoo.as_ref().unwrap();
+        assert_eq!(sh.refresh_policy, "staggered");
+        assert_eq!(sh.refresh_budget, 3);
+        // Default stays the classic bit-identical policy.
+        let plain = ExperimentSpec::from_toml("\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\n")
+            .unwrap();
+        assert_eq!(plain.runs[0].optimizer.shampoo.as_ref().unwrap().refresh_policy, "every-n");
+        // Unknown policies are rejected at parse time.
+        let bad = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\nrefresh_policy = \"nope\"\n";
+        assert!(ExperimentSpec::from_toml(bad).is_err());
+        // A negative budget must error, not wrap into a huge usize.
+        let neg = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\nrefresh_budget = -1\n";
+        assert!(ExperimentSpec::from_toml(neg).is_err());
     }
 
     #[test]

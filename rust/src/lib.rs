@@ -25,12 +25,12 @@
 //! | [`linalg`] | dense f32 matrices, blocked matmul, blocked + naive Cholesky, Schur–Newton inverse p-th root, Jacobi eigensolver, power iteration, the [`linalg::ScratchArena`] buffer pool behind the allocation-free refresh path |
 //! | [`quant`] | codebook mappings, block-wise quantizers (4/8-bit), off-diagonal quantization, the Fig. 2 joint triangular store, error feedback, and the open [`quant::codec`] registry |
 //! | [`optim`] | the [`optim::Optimizer`] trait; SGD(M), Adam(W), RMSProp, grafting, LR schedules |
-//! | [`shampoo`] | 32-bit Shampoo (Alg. 2) and quantized Shampoo VQ / CQ / CQ+EF (Alg. 1) / 8-bit, all storing state through `PrecondCodec` trait objects; max-order blocking; parallel per-layer stepping |
+//! | [`shampoo`] | 32-bit Shampoo (Alg. 2) and quantized Shampoo VQ / CQ / CQ+EF (Alg. 1) / 8-bit, all storing state through `PrecondCodec` trait objects; balanced max-order blocking; the [`shampoo::scheduler`] refresh engine (string-keyed `every-n` / `staggered` / `staleness` policies over `(layer, block, side)` units + work-queue executor) |
 //! | [`data`] | seeded synthetic datasets: gaussian-cluster classification, patch images, Markov token corpus |
 //! | [`models`] | model/artifact specs and deterministic parameter initialization mirroring `model.py` |
 //! | [`runtime`] | PJRT CPU client, HLO-text loading, executable cache, literal helpers |
 //! | [`train`] | training loop over AOT artifacts, [`train::OptimizerStack`] + string-keyed [`train::registry`], eval, curve logging |
-//! | [`metrics`] | exact optimizer-state memory accountant, timers |
+//! | [`metrics`] | exact optimizer-state memory accountant, timers, refresh-scheduler telemetry |
 //! | [`coordinator`] | experiment specs, multi-worker scheduler, result registry |
 //! | [`report`] | paper-style table renderer, figure series dumps |
 //!

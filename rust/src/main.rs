@@ -102,7 +102,8 @@ fn print_help() {
          \x20 table  --id <tab1..tab10|mem-breakdown|all> [--quick] [--out DIR]\n\
          \x20 figure --id <fig1|fig3|fig4|all> [--quick] [--out DIR]\n\
          \x20 train  --model NAME [--base sgdm] [--shampoo KEY]\n\
-         \x20        [--steps N] [--lm] [--seed N]\n\
+         \x20        [--refresh-policy every-n|staggered|staleness]\n\
+         \x20        [--refresh-budget N] [--steps N] [--lm] [--seed N]\n\
          \x20 run    --config FILE.toml [--out DIR]\n\
          \x20 quant-demo\n\
          \x20 codecs                               # registered optimizer/codec keys\n\
@@ -112,6 +113,11 @@ fn print_help() {
     for key in quartz::train::registry::stack_keys() {
         let b = quartz::train::registry::lookup(key).unwrap();
         println!("  {key:<8} {}", b.summary);
+    }
+    println!("\nrefresh policies (--refresh-policy / TOML `refresh_policy =`):");
+    for key in quartz::shampoo::scheduler::scheduler_keys() {
+        let b = quartz::shampoo::scheduler::lookup(key).unwrap();
+        println!("  {key:<10} {}", b.summary);
     }
 }
 
@@ -126,6 +132,12 @@ fn cmd_codecs() -> Result<()> {
     let mut t = Table::new("preconditioner codecs (quant::codec)", &["key", "summary"]);
     for key in quartz::quant::codec::codec_keys() {
         let b = quartz::quant::codec::lookup(key).unwrap();
+        t.row(vec![key.to_string(), b.summary.to_string()]);
+    }
+    t.print();
+    let mut t = Table::new("refresh policies (shampoo::scheduler)", &["key", "summary"]);
+    for key in quartz::shampoo::scheduler::scheduler_keys() {
+        let b = quartz::shampoo::scheduler::lookup(key).unwrap();
         t.row(vec![key.to_string(), b.summary.to_string()]);
     }
     t.print();
@@ -158,6 +170,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.t1 = scaled.t1;
         cfg.t2 = scaled.t2;
         cfg.max_order = scaled.max_order;
+        // Refresh-scheduler selection (`quartz codecs` lists the keys).
+        if let Some(rp) = args.get("refresh-policy") {
+            let b = quartz::shampoo::scheduler::lookup(rp)
+                .with_context(|| format!("unknown refresh policy '{rp}'"))?;
+            cfg.refresh_policy = b.key;
+        }
+        if let Some(rb) = args.get("refresh-budget") {
+            cfg.refresh_budget = rb.parse()?;
+        }
     }
     let workload = if args.has("lm") || model.starts_with("lm_") {
         Workload::Tokens(CorpusSpec { seed, ..Default::default() })

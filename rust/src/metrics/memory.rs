@@ -8,7 +8,7 @@
 //! `size_bytes()` of live optimizer states (no drift allowed).
 
 use crate::optim::OptimizerKind;
-use crate::shampoo::{Blocking, ShampooConfig, ShampooVariant};
+use crate::shampoo::{Blocking, ShampooConfig, ShampooVariant, UnitMeta};
 
 /// Byte accountant for a model (list of parameter shapes).
 #[derive(Clone, Debug)]
@@ -43,9 +43,14 @@ impl MemoryModel {
                     .blocks
                     .iter()
                     .map(|b| {
+                        // Four codec stores plus the refresh scheduler's
+                        // per-unit bookkeeping (two units per block) —
+                        // policy-invariant, so this model holds under
+                        // every registered refresh policy.
                         side_bytes(b.rows, cfg) + side_bytes(b.cols, cfg)
                             + root_bytes(b.rows, cfg)
                             + root_bytes(b.cols, cfg)
+                            + 2 * UnitMeta::BYTES
                     })
                     .sum()
             })
@@ -237,9 +242,42 @@ mod tests {
         let shapes = [(16, 16)]; // 256-elem preconditioners < 4096 → f32
         let cfg = ShampooConfig { variant: ShampooVariant::Vq4, ..Default::default() };
         let mm = MemoryModel::new(&shapes);
-        assert_eq!(
-            mm.shampoo_bytes(&cfg),
-            4 * 16 * 16 * 4, // L, R, L̂, R̂ all f32
-        );
+        // L, R, L̂, R̂ all f32, plus the scheduler's two per-block units.
+        assert_eq!(mm.shampoo_bytes(&cfg), 4 * 16 * 16 * 4 + 2 * UnitMeta::BYTES);
+    }
+
+    /// The scheduler's per-block metadata is persistent state: the model
+    /// must count it and stay byte-exact against the live optimizer under
+    /// EVERY refresh policy (metadata is policy-invariant by design), on a
+    /// layer set that includes a multi-block layer.
+    #[test]
+    fn scheduler_metadata_is_counted_under_each_policy() {
+        let shapes = [(120, 100), (64, 48), (33, 1)]; // multi-block + vector
+        for policy in ["every-n", "staggered", "staleness"] {
+            let cfg = ShampooConfig {
+                variant: ShampooVariant::Cq4 { error_feedback: true },
+                t1: 1,
+                t2: 2,
+                refresh_policy: policy,
+                quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+                max_order: 96,
+                ..Default::default()
+            };
+            let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), cfg, &shapes);
+            let mut rng = Rng::new(31);
+            let mut params: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+            for k in 1..=4u64 {
+                sh.step(&mut params, &grads, k, 1.0);
+            }
+            let predicted = MemoryModel::new(&shapes).shampoo_bytes(&cfg);
+            assert_eq!(
+                predicted,
+                sh.shampoo_state_bytes(),
+                "policy '{policy}': modeled vs measured bytes"
+            );
+        }
     }
 }

@@ -1,10 +1,13 @@
 //! Measurement: the optimizer-state memory accountant behind the paper's
-//! peak-memory columns, plus wall-clock timers and task metrics.
+//! peak-memory columns, wall-clock timers, task metrics, and the
+//! refresh-scheduler telemetry.
 
 pub mod memory;
-pub mod timer;
+pub mod refresh;
 pub mod scoring;
+pub mod timer;
 
 pub use memory::MemoryModel;
+pub use refresh::RefreshStats;
 pub use scoring::{accuracy, cross_entropy, perplexity_from_nll};
 pub use timer::Stopwatch;

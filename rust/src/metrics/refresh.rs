@@ -1,0 +1,117 @@
+//! Refresh-scheduler telemetry: per-step refresh-unit counts and refresh
+//! busy time, so the latency-spike flattening of `shampoo::scheduler`
+//! policies is *measurable*, not asserted.
+//!
+//! `Shampoo` records one sample per step; the end-to-end step benches and
+//! the scheduler test suite read the aggregate. `max_root_units` is the
+//! spike metric: `every-n` concentrates all units in one step, `staggered`
+//! bounds it by ⌈units/T₂⌉.
+
+/// Aggregate refresh telemetry over an optimizer's lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct RefreshStats {
+    /// Steps recorded.
+    pub steps: u64,
+    /// Total Gram-EMA units executed.
+    pub gram_units: u64,
+    /// Total inverse-root units executed.
+    pub root_units: u64,
+    /// Largest per-step Gram unit count (spike height, cheap half).
+    pub max_gram_units: usize,
+    /// Largest per-step root unit count (spike height, expensive half).
+    pub max_root_units: usize,
+    /// Last step's counts (budget assertions).
+    pub last_gram_units: usize,
+    pub last_root_units: usize,
+    /// Refresh-task **busy time** (summed across workers), total and worst
+    /// step. Equals wall-clock when one worker runs; with concurrent
+    /// workers it is an upper bound on the spike's latency contribution —
+    /// still the right comparator between policies, since total refresh
+    /// work is schedule-invariant.
+    pub refresh_secs: f64,
+    pub max_refresh_secs: f64,
+    /// Wall-clock of whole steps (refresh + precondition + apply).
+    pub step_secs: f64,
+}
+
+impl RefreshStats {
+    pub fn new() -> RefreshStats {
+        RefreshStats::default()
+    }
+
+    /// Record one step's plan execution.
+    pub fn record(&mut self, gram_units: usize, root_units: usize, refresh_ns: u64, step_ns: u64) {
+        self.steps += 1;
+        self.gram_units += gram_units as u64;
+        self.root_units += root_units as u64;
+        self.max_gram_units = self.max_gram_units.max(gram_units);
+        self.max_root_units = self.max_root_units.max(root_units);
+        self.last_gram_units = gram_units;
+        self.last_root_units = root_units;
+        let rs = refresh_ns as f64 / 1e9;
+        self.refresh_secs += rs;
+        self.max_refresh_secs = self.max_refresh_secs.max(rs);
+        self.step_secs += step_ns as f64 / 1e9;
+    }
+
+    /// Mean root units per step — spread policies keep this equal to the
+    /// every-n mean while shrinking [`Self::max_root_units`].
+    pub fn mean_root_units(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.root_units as f64 / self.steps as f64
+    }
+
+    /// Refresh busy time over step wall-clock. Clamped to 1.0 — summed
+    /// busy time can exceed wall-clock when refresh tasks run concurrently.
+    pub fn refresh_fraction(&self) -> f64 {
+        if self.step_secs <= 0.0 {
+            return 0.0;
+        }
+        (self.refresh_secs / self.step_secs).min(1.0)
+    }
+
+    /// One-line human summary (bench output).
+    pub fn summary(&self) -> String {
+        format!(
+            "steps {} | units/step mean {:.2} max {} (gram max {}) | \
+             refresh busy {:.1}% of step, worst {:.3} ms",
+            self.steps,
+            self.mean_root_units(),
+            self.max_root_units,
+            self.max_gram_units,
+            100.0 * self.refresh_fraction(),
+            self.max_refresh_secs * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_totals_and_spikes() {
+        let mut s = RefreshStats::new();
+        s.record(4, 0, 0, 1_000);
+        s.record(0, 6, 500, 1_000);
+        s.record(2, 2, 250, 1_000);
+        assert_eq!(s.steps, 3);
+        assert_eq!(s.gram_units, 6);
+        assert_eq!(s.root_units, 8);
+        assert_eq!(s.max_gram_units, 4);
+        assert_eq!(s.max_root_units, 6);
+        assert_eq!(s.last_root_units, 2);
+        assert!((s.mean_root_units() - 8.0 / 3.0).abs() < 1e-12);
+        assert!(s.refresh_fraction() > 0.0 && s.refresh_fraction() < 1.0);
+    }
+
+    #[test]
+    fn empty_stats_are_well_defined() {
+        let s = RefreshStats::new();
+        assert_eq!(s.mean_root_units(), 0.0);
+        assert_eq!(s.refresh_fraction(), 0.0);
+        assert!(s.summary().contains("steps 0"));
+    }
+}

@@ -4,7 +4,9 @@
 //!
 //! A parameter of shape `m×n` is tiled into sub-blocks of at most
 //! `max_order` per side; each sub-block keeps its own `(L, R)` pair. This
-//! caps the O(d³) root cost and bounds preconditioner memory.
+//! caps the O(d³) root cost and bounds preconditioner memory. Each dimension
+//! is ceil-divided into equal-width strips (±1), so blocks are balanced —
+//! important now that blocks are the refresh scheduler's work units.
 
 /// One sub-block of a parameter matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,20 +26,39 @@ pub struct Blocking {
     pub blocks: Vec<BlockSpec>,
 }
 
+/// Ceil-divide `dim` into `⌈dim/cap⌉` strips of near-equal width (the first
+/// `dim % k` strips are one wider). Returns `(offset, width)` per strip.
+///
+/// Balanced strips avoid the degenerate remainder of greedy `cap`-sized
+/// tiling — 130 at cap 64 yields 44/43/43, not 64/64/2 — so every block's
+/// preconditioner does comparable work and no refresh unit is a sliver.
+fn strips(dim: usize, cap: usize) -> Vec<(usize, usize)> {
+    if dim == 0 {
+        return Vec::new();
+    }
+    let k = dim.div_ceil(cap);
+    let base = dim / k;
+    let extra = dim % k;
+    let mut out = Vec::with_capacity(k);
+    let mut at = 0;
+    for i in 0..k {
+        let w = base + usize::from(i < extra);
+        out.push((at, w));
+        at += w;
+    }
+    out
+}
+
 impl Blocking {
     pub fn new(m: usize, n: usize, max_order: usize) -> Blocking {
         let cap = max_order.max(1);
-        let mut blocks = Vec::new();
-        let mut r0 = 0;
-        while r0 < m {
-            let rows = cap.min(m - r0);
-            let mut c0 = 0;
-            while c0 < n {
-                let cols = cap.min(n - c0);
+        let row_strips = strips(m, cap);
+        let col_strips = strips(n, cap);
+        let mut blocks = Vec::with_capacity(row_strips.len() * col_strips.len());
+        for &(r0, rows) in &row_strips {
+            for &(c0, cols) in &col_strips {
                 blocks.push(BlockSpec { r0, c0, rows, cols });
-                c0 += cols;
             }
-            r0 += rows;
         }
         Blocking { m, n, max_order: cap, blocks }
     }
@@ -84,7 +105,25 @@ mod tests {
     #[test]
     fn block_count() {
         let b = Blocking::new(130, 70, 64);
-        // rows: 64+64+2 → 3 strips; cols: 64+6 → 2 strips
+        // rows: 44+43+43 → 3 strips; cols: 35+35 → 2 strips
         assert_eq!(b.num_blocks(), 6);
+        assert_eq!(b.blocks[0], BlockSpec { r0: 0, c0: 0, rows: 44, cols: 35 });
+        assert_eq!(b.blocks[5], BlockSpec { r0: 87, c0: 35, rows: 43, cols: 35 });
+    }
+
+    #[test]
+    fn strips_are_balanced() {
+        // No strip differs from another by more than one element, and no
+        // degenerate remainder strip survives (the old greedy tiling gave
+        // 130 @ 64 → 64+64+2).
+        for (dim, cap) in [(130, 64), (70, 64), (1200, 1200), (1201, 1200), (300, 7)] {
+            let s = strips(dim, cap);
+            let min = s.iter().map(|&(_, w)| w).min().unwrap();
+            let max = s.iter().map(|&(_, w)| w).max().unwrap();
+            assert!(max <= cap, "({dim},{cap}) strip {max} over cap");
+            assert!(max - min <= 1, "({dim},{cap}) unbalanced: {min}..{max}");
+            assert_eq!(s.iter().map(|&(_, w)| w).sum::<usize>(), dim);
+            assert_eq!(s.len(), dim.div_ceil(cap));
+        }
     }
 }

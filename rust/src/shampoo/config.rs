@@ -108,6 +108,15 @@ pub struct ShampooConfig {
     pub side_codec: Option<&'static str>,
     /// Override the inverse-root codec likewise.
     pub root_codec: Option<&'static str>,
+    /// Refresh-scheduler policy key, resolved in `shampoo::scheduler`
+    /// (`"every-n"` reproduces the classic `k % T1`/`k % T2` behavior
+    /// bit-for-bit; `"staggered"`/`"staleness"` spread the work; any
+    /// runtime-registered key works — same open-world contract as the
+    /// codec registry).
+    pub refresh_policy: &'static str,
+    /// Per-step root-refresh unit budget for budgeted policies
+    /// (`"staleness"`). 0 = automatic: ⌈units/T₂⌉, the staggered rate.
+    pub refresh_budget: usize,
 }
 
 impl ShampooConfig {
@@ -159,6 +168,8 @@ impl Default for ShampooConfig {
             schur: SchurNewtonConfig::default(),
             side_codec: None,
             root_codec: None,
+            refresh_policy: "every-n",
+            refresh_budget: 0,
         }
     }
 }
@@ -226,6 +237,19 @@ mod tests {
                     "{v:?}: codec '{key}' not registered"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn default_refresh_policy_is_classic_and_registered() {
+        let c = ShampooConfig::default();
+        assert_eq!(c.refresh_policy, "every-n");
+        assert_eq!(c.refresh_budget, 0);
+        for key in ["every-n", "staggered", "staleness"] {
+            assert!(
+                crate::shampoo::scheduler::lookup(key).is_some(),
+                "refresh policy '{key}' not registered"
+            );
         }
     }
 

@@ -6,28 +6,36 @@
 //!   Alg. 1), and 8-bit block-wise — plus `side_codec`/`root_codec`
 //!   overrides that accept ANY key registered in `quant::codec`.
 //! * [`blocking`] — layer-wise max-order blocking (App. C.3: large dims are
-//!   split so each preconditioner stays below a cap).
+//!   split so each preconditioner stays below a cap), with balanced strips
+//!   so refresh units do comparable work.
 //! * [`state`] — per-block storage behind `PrecondCodec` trait objects,
-//!   with exact byte accounting.
-//! * [`Shampoo`] — the driver: Gram EMA every `T1` steps, inverse-4th-roots
-//!   every `T2` steps, preconditioned + grafted gradient into the base
-//!   optimizer every step — with the per-layer loop fanned out over the
-//!   `util::pool` scoped-thread helper (layers are independent).
+//!   with exact byte accounting and per-unit refresh metadata.
+//! * [`scheduler`] — the refresh-scheduler engine: a [`RefreshScheduler`]
+//!   policy decides per step which `(layer, block, side)` units recompute
+//!   their Gram EMA / inverse root (`every-n` | `staggered` | `staleness` |
+//!   registered keys), and a work-queue executor runs them on the
+//!   `util::pool` workers while untouched layers precondition-and-apply.
+//! * [`Shampoo`] — the driver: plan → execute-refresh → apply each step,
+//!   with the classic behavior (Gram EMA every `T1` steps, inverse roots
+//!   every `T2`) reproduced bit-for-bit by the default `every-n` policy.
 
 pub mod blocking;
 pub mod config;
+pub mod scheduler;
 pub mod state;
 
 pub use blocking::Blocking;
 pub use config::{ShampooConfig, ShampooVariant};
-pub use state::LayerState;
+pub use scheduler::{RefreshPlan, RefreshScheduler, UnitId, UnitInfo};
+pub use state::{LayerState, Side, UnitMeta};
 
 use crate::linalg::{Matrix, ScratchArena};
-use crate::optim::optimizer::ParamState;
-use crate::optim::{graft, BaseOptimizer, Optimizer};
+use crate::metrics::RefreshStats;
+use crate::optim::{BaseOptimizer, Optimizer};
 use crate::quant::codec::CodecCtx;
 use crate::quant::BlockQuantizer;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Shampoo wrapping a first-order base optimizer `F` (Algorithm 1).
 pub struct Shampoo {
@@ -35,8 +43,20 @@ pub struct Shampoo {
     pub cfg: ShampooConfig,
     pub layers: Vec<LayerState>,
     ctx: CodecCtx,
+    /// The refresh policy (chosen by `cfg.refresh_policy`).
+    sched: Box<dyn RefreshScheduler>,
+    /// Unit table: flat `(layer, block, side)` addressing, `[L, R]` per
+    /// block — the executor relies on this pairing.
+    units: Vec<UnitId>,
+    /// Reused per-step buffers (scheduler input snapshot, decision, and
+    /// the executor's grouped task list).
+    infos: Vec<UnitInfo>,
+    plan: RefreshPlan,
+    tasks: Vec<scheduler::Task>,
+    /// Per-step refresh telemetry (unit counts, wall-clock spikes).
+    stats: RefreshStats,
     /// Worker-checked-out scratch arenas: each step worker pops one, runs
-    /// its layers' store/load/root pipeline out of it, and returns it. The
+    /// its tasks' store/load/root pipeline out of it, and returns it. The
     /// pool grows to the peak concurrent worker count and then every
     /// steady-state step is allocation-free (see `scratch_stats`).
     scratch_pool: Mutex<Vec<ScratchArena>>,
@@ -48,87 +68,117 @@ impl Shampoo {
         base.init(shapes.len());
         let quantizer = Arc::new(BlockQuantizer::new(cfg.quant));
         let ctx = CodecCtx::new(cfg.eps, cfg.beta_e, quantizer);
-        let layers = shapes
+        let layers: Vec<LayerState> = shapes
             .iter()
             .map(|&(m, n)| LayerState::new(m, n, &cfg, &ctx))
             .collect();
-        Shampoo { base, cfg, layers, ctx, scratch_pool: Mutex::new(Vec::new()) }
+        let mut units = Vec::new();
+        for (li, layer) in layers.iter().enumerate() {
+            for bi in 0..layer.blocks.len() {
+                for side in Side::BOTH {
+                    units.push(UnitId { layer: li as u32, block: bi as u32, side });
+                }
+            }
+        }
+        let sched = scheduler::build_for(&cfg);
+        Shampoo {
+            base,
+            cfg,
+            layers,
+            ctx,
+            sched,
+            units,
+            infos: Vec::new(),
+            plan: RefreshPlan::default(),
+            tasks: Vec::new(),
+            stats: RefreshStats::new(),
+            scratch_pool: Mutex::new(Vec::new()),
+        }
     }
 
-    /// One optimization step (Algorithm 1 lines 2–16).
+    /// One optimization step (Algorithm 1 lines 2–16), in three phases:
     ///
-    /// `step` is 1-based (the paper's `k`); preconditioner states update when
-    /// `k % T1 == 0`, inverse roots when `k % T2 == 0`.
+    /// 1. **Plan** — the configured [`RefreshScheduler`] picks this step's
+    ///    refresh units from their metadata (`step` is 1-based, the paper's
+    ///    `k`; the default `every-n` policy refreshes all units at
+    ///    `k % T1 == 0` / `k % T2 == 0`, exactly the classic behavior).
+    /// 2. **Execute refresh** — scheduled units fan out over the scoped
+    ///    thread pool with per-worker scratch arenas.
+    /// 3. **Apply** — every layer's precondition + graft + base update;
+    ///    layers without scheduled units proceed immediately, refreshed
+    ///    layers apply the moment their last unit lands.
     ///
-    /// Layers are mutually independent (disjoint state, disjoint parameter /
-    /// momentum buffers), so the per-layer work — Gram EMA, root refresh,
-    /// preconditioning, base update — runs on the scoped-thread pool. Per
-    /// layer the math is identical to the sequential loop, so trajectories
-    /// are bit-for-bit deterministic regardless of thread count.
+    /// Units and layers are mutually independent (disjoint state, disjoint
+    /// parameter/momentum buffers) and per unit the math is identical to
+    /// the sequential loop, so trajectories are bit-for-bit deterministic
+    /// regardless of thread count.
     pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], step: u64, lr_scale: f32) {
         assert_eq!(params.len(), self.layers.len());
         assert_eq!(grads.len(), self.layers.len());
-        let update_gram = step % self.cfg.t1 == 0;
-        let update_roots = step % self.cfg.t2 == 0;
-
-        let cfg = &self.cfg;
-        let ctx = &self.ctx;
-        let scratch_pool = &self.scratch_pool;
-        let hyper = self.base.hyper;
-        let kind = self.base.kind;
         assert_eq!(self.base.states.len(), self.layers.len(), "optimizer not initialized");
 
-        let n = params.len();
-        // Disjoint per-layer work items; the Mutex hands each scoped worker
-        // exclusive &mut access to exactly one layer's state.
-        let work: Vec<Mutex<(&mut LayerState, &mut Matrix, &Matrix, &mut ParamState)>> = self
-            .layers
-            .iter_mut()
-            .zip(params.iter_mut())
-            .zip(grads.iter())
-            .zip(self.base.states.iter_mut())
-            .map(|(((layer, w), g), st)| Mutex::new((layer, w, g, st)))
-            .collect();
-        // Fan out only when this step does refresh work (Gram EMA /
-        // Cholesky / Schur–Newton dominate there); the common in-between
-        // step is two small matmuls per layer — thread spawn/join would
-        // cost more than it saves, and the blocked matmul already
-        // parallelizes internally for large layers. threads == 1 makes
-        // `parallel_for` run inline with zero spawns.
-        let threads = if update_gram || update_roots {
-            crate::util::pool::default_threads().min(n.max(1))
-        } else {
-            1
+        let t0 = Instant::now();
+        // Phase 1: snapshot unit metadata and let the policy decide.
+        self.infos.clear();
+        for &id in &self.units {
+            let meta = self.layers[id.layer as usize].unit_meta(id.block as usize, id.side);
+            self.infos.push(UnitInfo { id, meta });
+        }
+        self.plan.reset(self.units.len());
+        self.sched.plan(step, &self.infos, &self.cfg, &mut self.plan);
+
+        // Phases 2+3: the work-queue executor.
+        let sc = scheduler::StepCtx {
+            cfg: &self.cfg,
+            ctx: &self.ctx,
+            hyper: self.base.hyper,
+            kind: self.base.kind,
+            lr_scale,
+            step,
         };
-        crate::util::pool::parallel_for(n, threads, |i| {
-            let mut item = work[i].lock().unwrap();
-            let (layer, w, g, st) = &mut *item;
-            // Check an arena out of the pool (or start a fresh one on the
-            // very first steps); every temporary of the refresh + step
-            // pipeline below is served from it, so a warmed-up step does no
-            // heap allocation. Arena contents never influence results —
-            // every taken buffer is fully overwritten before use.
-            let mut scratch = scratch_pool
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .pop()
-                .unwrap_or_default();
-            if update_gram {
-                layer.update_gram(g, cfg, &mut scratch);
-            }
-            if update_roots {
-                layer.update_inv_roots(cfg, ctx, &mut scratch);
-            }
-            // Ĝ = D(L̂)·G·D(R̂)  (line 15), then grafting (Eq. 13).
-            let mut ghat = scratch.take(g.rows(), g.cols());
-            layer.precondition_into(g, &mut ghat, &mut scratch);
-            if cfg.grafting {
-                graft(g, &mut ghat);
-            }
-            BaseOptimizer::step_one(&hyper, kind, st, w, &ghat, lr_scale);
-            scratch.recycle(ghat);
-            scratch_pool.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
-        });
+        let refresh_ns = scheduler::execute_step(
+            &mut self.layers,
+            params,
+            grads,
+            &mut self.base.states,
+            &self.plan,
+            &self.units,
+            &mut self.tasks,
+            &self.scratch_pool,
+            &sc,
+        );
+        self.stats.record(
+            self.plan.gram_units(),
+            self.plan.root_units(),
+            refresh_ns,
+            t0.elapsed().as_nanos() as u64,
+        );
+    }
+
+    /// Refresh telemetry accumulated over all steps so far.
+    pub fn refresh_stats(&self) -> &RefreshStats {
+        &self.stats
+    }
+
+    /// The active refresh policy's registry key.
+    pub fn refresh_policy(&self) -> &'static str {
+        self.sched.key()
+    }
+
+    /// Total refresh units (2 per non-passthrough block).
+    pub fn unit_count(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Snapshot of every unit's address + refresh bookkeeping (coverage and
+    /// starvation tests; telemetry).
+    pub fn unit_metas(&self) -> Vec<(UnitId, UnitMeta)> {
+        self.units
+            .iter()
+            .map(|&id| {
+                (id, self.layers[id.layer as usize].unit_meta(id.block as usize, id.side))
+            })
+            .collect()
     }
 
     /// Scratch-reuse telemetry: `(pooled arenas, Σ pool hits, Σ pool
@@ -197,6 +247,10 @@ impl Optimizer for Shampoo {
             let root = self.cfg.root_codec_key();
             label.push_str(&format!(" [codecs {side}/{root}]"));
         }
+        // Likewise a non-classic refresh schedule changes trajectories.
+        if self.cfg.refresh_policy != "every-n" {
+            label.push_str(&format!(" [refresh {}]", self.cfg.refresh_policy));
+        }
         label
     }
 }
@@ -206,7 +260,7 @@ mod tests {
     use super::*;
     use crate::linalg::kron::vec_cols;
     use crate::linalg::{eig_sym, fro_norm, kron, matmul, matmul_nt, matmul_tn};
-    use crate::optim::OptimizerKind;
+    use crate::optim::{graft, OptimizerKind};
     use crate::util::rng::Rng;
 
     fn sgd_base() -> BaseOptimizer {
@@ -460,6 +514,50 @@ mod tests {
         opt.step(&mut params, &grads, 1, 1.0);
         assert!(!params[0].has_non_finite());
         assert!(opt.state_bytes() > 0);
+    }
+
+    #[test]
+    fn refresh_stats_track_every_n_spikes() {
+        let cfg = ShampooConfig {
+            t1: 2,
+            t2: 4,
+            variant: ShampooVariant::Full32,
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(sgd_base(), cfg, &[(8, 8), (8, 8)]);
+        assert_eq!(sh.unit_count(), 4);
+        assert_eq!(sh.refresh_policy(), "every-n");
+        let mut rng = Rng::new(17);
+        let mut params = vec![
+            Matrix::randn(8, 8, 0.5, &mut rng),
+            Matrix::randn(8, 8, 0.5, &mut rng),
+        ];
+        let grads = vec![Matrix::randn(8, 8, 0.5, &mut rng), Matrix::randn(8, 8, 0.5, &mut rng)];
+        for k in 1..=8u64 {
+            sh.step(&mut params, &grads, k, 1.0);
+        }
+        let s = sh.refresh_stats();
+        assert_eq!(s.steps, 8);
+        // Gram at k ∈ {2,4,6,8}, roots at k ∈ {4,8} — all 4 units each time.
+        assert_eq!(s.gram_units, 16);
+        assert_eq!(s.root_units, 8);
+        assert_eq!(s.max_root_units, 4, "every-n concentrates all units in one step");
+        assert_eq!(s.last_root_units, 4);
+        // Every unit's bookkeeping reflects the classic cadence.
+        for (id, meta) in sh.unit_metas() {
+            assert_eq!(meta.last_gram, 8, "{id:?}");
+            assert_eq!(meta.last_root, 8, "{id:?}");
+            assert_eq!(meta.refreshes, 2, "{id:?}");
+        }
+    }
+
+    #[test]
+    fn non_default_policy_is_surfaced_in_name() {
+        let cfg = ShampooConfig { refresh_policy: "staggered", ..Default::default() };
+        let sh = Shampoo::new(sgd_base(), cfg, &[(8, 8)]);
+        assert!(Optimizer::name(&sh).contains("[refresh staggered]"));
+        let sh2 = Shampoo::new(sgd_base(), ShampooConfig::default(), &[(8, 8)]);
+        assert!(!Optimizer::name(&sh2).contains("refresh"));
     }
 
     #[test]

@@ -1,0 +1,751 @@
+//! Refresh-scheduler engine: *which* preconditioner refresh work runs at
+//! *which* step is a policy, decoupled from the step path.
+//!
+//! The paper amortizes its expensive operations — Gram-root recomputation,
+//! Cholesky factorization, 4-bit re-quantization with error feedback — by
+//! refreshing preconditioners only every `T1`/`T2` steps (App. C.3; delayed
+//! preconditioner computation is already the wall-clock key in Gupta et al.,
+//! arXiv 1802.09568, and 4-bit Shampoo, arXiv 2405.18144). Refreshing
+//! **all** blocks of **all** layers in the same step produces latency
+//! spikes; this module makes the decision per **refresh unit** —
+//! a `(layer, block, side)` triple — so policies can spread the work.
+//!
+//! * [`RefreshScheduler`] — the policy trait: fill a [`RefreshPlan`] per
+//!   step from per-unit [`UnitMeta`] bookkeeping.
+//! * Built-ins: [`EveryN`] (bit-identical reproduction of the classic
+//!   `k % T` behavior), [`Staggered`] (round-robin spreading, per-step
+//!   unit count ≤ ⌈units/T⌉), [`Staleness`] (staleness × pending-update
+//!   priority under a hard per-step budget).
+//! * A string-keyed registry mirroring `quant::codec` — `register` /
+//!   [`lookup`] / [`scheduler_keys`]; `ShampooConfig::refresh_policy`
+//!   selects by key from the CLI / TOML specs.
+//! * [`execute_step`] — the work-queue executor: scheduled units run on the
+//!   `util::pool` scoped workers with per-worker `ScratchArena`s while the
+//!   cheap precondition-and-apply path proceeds over the remaining layers
+//!   (a layer applies the moment its last pending unit lands).
+
+use super::blocking::BlockSpec;
+use super::config::ShampooConfig;
+use super::state::{BlockState, LayerState, Side, UnitMeta};
+use crate::linalg::{Matrix, ScratchArena};
+use crate::optim::optimizer::{Hyper, ParamState};
+use crate::optim::{graft, BaseOptimizer, OptimizerKind};
+use crate::quant::codec::CodecCtx;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Address of one refresh unit: one Kronecker factor of one block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UnitId {
+    pub layer: u32,
+    pub block: u32,
+    pub side: Side,
+}
+
+/// Scheduler-visible snapshot of one unit (address + bookkeeping).
+#[derive(Clone, Copy, Debug)]
+pub struct UnitInfo {
+    pub id: UnitId,
+    pub meta: UnitMeta,
+}
+
+/// The per-step decision: which units run a Gram EMA update and which
+/// recompute their inverse root. Buffers are reused across steps.
+#[derive(Clone, Debug, Default)]
+pub struct RefreshPlan {
+    flags: Vec<u8>,
+}
+
+impl RefreshPlan {
+    pub const GRAM: u8 = 1;
+    pub const ROOT: u8 = 2;
+
+    /// Clear and size for `units` (all units unscheduled).
+    pub fn reset(&mut self, units: usize) {
+        self.flags.clear();
+        self.flags.resize(units, 0);
+    }
+
+    pub fn mark_gram(&mut self, unit: usize) {
+        self.flags[unit] |= Self::GRAM;
+    }
+
+    pub fn mark_root(&mut self, unit: usize) {
+        self.flags[unit] |= Self::ROOT;
+    }
+
+    pub fn flags(&self, unit: usize) -> u8 {
+        self.flags[unit]
+    }
+
+    pub fn len(&self) -> usize {
+        self.flags.len()
+    }
+
+    /// Units scheduled for a Gram update this step.
+    pub fn gram_units(&self) -> usize {
+        self.flags.iter().filter(|&&f| f & Self::GRAM != 0).count()
+    }
+
+    /// Units scheduled for a root recomputation this step.
+    pub fn root_units(&self) -> usize {
+        self.flags.iter().filter(|&&f| f & Self::ROOT != 0).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flags.iter().all(|&f| f == 0)
+    }
+}
+
+/// A refresh policy: decides, per step, which units refresh.
+///
+/// `plan` arrives reset to `units.len()`; implementations mark units. The
+/// same scheduler instance lives for the whole optimizer lifetime, so
+/// policies may keep internal buffers — but all *decision-relevant* state
+/// must come from `UnitMeta` (it is the persistent, byte-accounted record).
+pub trait RefreshScheduler: Send {
+    /// Registry key (also the config-file spelling).
+    fn key(&self) -> &'static str;
+
+    /// Fill `plan` for 1-based `step`.
+    fn plan(&mut self, step: u64, units: &[UnitInfo], cfg: &ShampooConfig, plan: &mut RefreshPlan);
+}
+
+/// The `Staleness` per-step root budget: explicit `cfg.refresh_budget`, or
+/// ⌈units/T₂⌉ (the `Staggered` rate — the smallest budget that keeps every
+/// unit refreshable once per interval).
+pub fn effective_budget(cfg: &ShampooConfig, units: usize) -> usize {
+    if cfg.refresh_budget > 0 {
+        return cfg.refresh_budget;
+    }
+    units.div_ceil(cfg.t2.max(1) as usize).max(1)
+}
+
+/// Classic interval refresh: every unit's Gram updates at `k % T1 == 0`,
+/// every unit's root at `k % T2 == 0` — bit-identical to the pre-scheduler
+/// `Shampoo::step` (the determinism fixtures pin this).
+pub struct EveryN;
+
+impl RefreshScheduler for EveryN {
+    fn key(&self) -> &'static str {
+        "every-n"
+    }
+
+    fn plan(&mut self, step: u64, units: &[UnitInfo], cfg: &ShampooConfig, plan: &mut RefreshPlan) {
+        if step % cfg.t1 == 0 {
+            for u in 0..units.len() {
+                plan.mark_gram(u);
+            }
+        }
+        if step % cfg.t2 == 0 {
+            for u in 0..units.len() {
+                plan.mark_root(u);
+            }
+        }
+    }
+}
+
+/// Warm-start guard for spreading policies: a root refresh before a unit's
+/// first Gram update would factor the `ε·I` init into a `~ε^{-1/4}·I`
+/// preconditioner — a ~1000× update blow-up with grafting off. Schedule a
+/// just-in-time Gram update for such units (the executor always runs gram
+/// before root within a block), so the first root sees real curvature.
+/// `every-n` deliberately does NOT use this: it must stay bit-identical to
+/// the classic schedule. Custom policies are encouraged to call it.
+pub fn guard_first_root(units: &[UnitInfo], plan: &mut RefreshPlan) {
+    for (u, info) in units.iter().enumerate() {
+        if plan.flags(u) & RefreshPlan::ROOT != 0 && info.meta.last_gram == 0 {
+            plan.mark_gram(u);
+        }
+    }
+}
+
+/// Round-robin staggering: unit `i` of `n` refreshes at interval offset
+/// `⌊i·T/n⌋`, so every unit refreshes exactly once per interval and no step
+/// runs more than ⌈n/T⌉ units — the latency-spike flattener.
+pub struct Staggered;
+
+impl RefreshScheduler for Staggered {
+    fn key(&self) -> &'static str {
+        "staggered"
+    }
+
+    fn plan(&mut self, step: u64, units: &[UnitInfo], cfg: &ShampooConfig, plan: &mut RefreshPlan) {
+        let n = units.len() as u64;
+        for i in 0..units.len() {
+            let iu = i as u64;
+            if step % cfg.t1 == iu * cfg.t1 / n {
+                plan.mark_gram(i);
+            }
+            if step % cfg.t2 == iu * cfg.t2 / n {
+                plan.mark_root(i);
+            }
+        }
+        guard_first_root(units, plan);
+    }
+}
+
+/// Priority refresh: roots are recomputed for the units where they are most
+/// stale, weighted by the Gram-update magnitude absorbed since the last
+/// refresh, under a hard per-step budget ([`effective_budget`]). Units
+/// overdue a full `T2` interval jump to a forced tier (ordered by staleness)
+/// so nothing starves: with the default budget the worst case is bounded by
+/// `2·T2`. Gram updates keep the classic global `T1` cadence — they are the
+/// cheap half, and a synchronized EMA keeps `pending_norm` comparable
+/// across units.
+pub struct Staleness {
+    /// Reused sort buffer: `(forced, staleness, score, unit)`.
+    order: Vec<(bool, u64, f64, usize)>,
+}
+
+impl Staleness {
+    pub fn new() -> Staleness {
+        Staleness { order: Vec::new() }
+    }
+}
+
+impl Default for Staleness {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RefreshScheduler for Staleness {
+    fn key(&self) -> &'static str {
+        "staleness"
+    }
+
+    fn plan(&mut self, step: u64, units: &[UnitInfo], cfg: &ShampooConfig, plan: &mut RefreshPlan) {
+        if step % cfg.t1 == 0 {
+            for u in 0..units.len() {
+                plan.mark_gram(u);
+            }
+        }
+        if units.is_empty() {
+            return;
+        }
+        let budget = effective_budget(cfg, units.len());
+        self.order.clear();
+        for (i, u) in units.iter().enumerate() {
+            let stale = step.saturating_sub(u.meta.last_root);
+            // A NaN gradient leaves pending_norm non-finite until this
+            // unit's next root refresh; map it to +∞ so the poisoned unit
+            // refreshes first (the refresh resets pending_norm and the
+            // codec's reset path self-heals) and the sort comparator never
+            // sees a NaN.
+            let pending = u.meta.pending_norm as f64;
+            let score = if pending.is_finite() {
+                stale as f64 * (1.0 + pending.max(0.0))
+            } else {
+                f64::INFINITY
+            };
+            self.order.push((stale >= cfg.t2, stale, score, i));
+        }
+        // Forced tier first (most stale leading), then by score; unit index
+        // breaks ties so the plan is deterministic. `total_cmp` (not
+        // partial_cmp-with-fallback) keeps this a genuine total order —
+        // sort_unstable_by panics on inconsistent comparators since 1.81.
+        self.order.sort_unstable_by(|a, b| {
+            b.0.cmp(&a.0)
+                .then(if a.0 && b.0 { b.1.cmp(&a.1) } else { b.2.total_cmp(&a.2) })
+                .then(a.3.cmp(&b.3))
+        });
+        for &(_, _, _, unit) in self.order.iter().take(budget) {
+            plan.mark_root(unit);
+        }
+        guard_first_root(units, plan);
+    }
+}
+
+/// One registry entry (mirrors `quant::codec::CodecBuilder`).
+#[derive(Clone, Copy)]
+pub struct SchedulerBuilder {
+    /// Canonical key (the `refresh_policy` config spelling).
+    pub key: &'static str,
+    /// One-line description for CLI/docs listings.
+    pub summary: &'static str,
+    /// Build a fresh scheduler for one optimizer instance.
+    pub build: fn(&ShampooConfig) -> Box<dyn RefreshScheduler>,
+}
+
+fn build_every_n(_cfg: &ShampooConfig) -> Box<dyn RefreshScheduler> {
+    Box::new(EveryN)
+}
+
+fn build_staggered(_cfg: &ShampooConfig) -> Box<dyn RefreshScheduler> {
+    Box::new(Staggered)
+}
+
+fn build_staleness(_cfg: &ShampooConfig) -> Box<dyn RefreshScheduler> {
+    Box::new(Staleness::new())
+}
+
+fn builtin_schedulers() -> Vec<SchedulerBuilder> {
+    vec![
+        SchedulerBuilder {
+            key: "every-n",
+            summary: "all units at k % T1 / k % T2 (classic, bit-identical)",
+            build: build_every_n,
+        },
+        SchedulerBuilder {
+            key: "staggered",
+            summary: "round-robin spread, ≤ ⌈units/T⌉ per step (flat latency)",
+            build: build_staggered,
+        },
+        SchedulerBuilder {
+            key: "staleness",
+            summary: "staleness × pending-norm priority under a per-step budget",
+            build: build_staleness,
+        },
+    ]
+}
+
+fn registry() -> &'static Mutex<Vec<SchedulerBuilder>> {
+    static REGISTRY: OnceLock<Mutex<Vec<SchedulerBuilder>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(builtin_schedulers()))
+}
+
+/// Register a policy under a new key. Returns `false` (unchanged registry)
+/// if the key is taken.
+pub fn register(builder: SchedulerBuilder) -> bool {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    if reg.iter().any(|b| b.key == builder.key) {
+        return false;
+    }
+    reg.push(builder);
+    true
+}
+
+/// Look up a policy builder by key.
+pub fn lookup(key: &str) -> Option<SchedulerBuilder> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().find(|b| b.key == key).copied()
+}
+
+/// All registered keys, built-ins first.
+pub fn scheduler_keys() -> Vec<&'static str> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().map(|b| b.key).collect()
+}
+
+/// Build the configured policy, panicking with the key on an unknown one —
+/// configs can reference runtime-registered policies, so this is a runtime
+/// binding by design (same contract as the codec registry).
+pub(crate) fn build_for(cfg: &ShampooConfig) -> Box<dyn RefreshScheduler> {
+    let b = lookup(cfg.refresh_policy)
+        .unwrap_or_else(|| panic!("refresh policy '{}' is not registered", cfg.refresh_policy));
+    (b.build)(cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Work-queue executor
+// ---------------------------------------------------------------------------
+
+/// Per-step context threaded to every worker.
+pub(crate) struct StepCtx<'a> {
+    pub cfg: &'a ShampooConfig,
+    pub ctx: &'a CodecCtx,
+    pub hyper: Hyper,
+    pub kind: OptimizerKind,
+    pub lr_scale: f32,
+    pub step: u64,
+}
+
+/// One layer's shared-state view for the step: blocks behind per-block
+/// mutexes (refresh units lock exactly one), the apply-side mutable state,
+/// and the count of refresh tasks gating the apply.
+struct LayerRun<'a> {
+    rows: usize,
+    cols: usize,
+    passthrough: bool,
+    trivial: bool,
+    specs: &'a [BlockSpec],
+    grad: &'a Matrix,
+    blocks: Vec<Mutex<&'a mut BlockState>>,
+    apply: Mutex<(&'a mut Matrix, &'a mut ParamState)>,
+    pending: AtomicUsize,
+}
+
+/// One work-queue item.
+#[derive(Clone, Copy)]
+pub(crate) enum Task {
+    /// Run the scheduled sides of one block (`fl`/`fr` are
+    /// [`RefreshPlan`] flag bytes for the L/R units).
+    Refresh { layer: usize, block: usize, fl: u8, fr: u8 },
+    /// Precondition-and-apply a layer with no scheduled refresh work.
+    Apply { layer: usize },
+}
+
+/// Execute one planned step: scheduled refresh units fan out over the
+/// scoped-thread pool (per-worker arenas from `scratch_pool`), and each
+/// layer's precondition-and-apply runs as soon as its refresh work is done
+/// — immediately for untouched layers, inline after the last unit
+/// otherwise. Per unit and per layer the math is identical to the
+/// sequential loop, so trajectories are bit-for-bit deterministic
+/// regardless of thread count. Returns the nanoseconds of refresh-task
+/// busy time, summed across workers (the spike metric; equals wall-clock
+/// at one worker, an upper bound on spike latency otherwise).
+///
+/// `tasks` is a caller-owned reused buffer (cleared here). The per-layer
+/// views (`runs` and their block mutexes) hold per-call borrows and are
+/// rebuilt each step — O(layers + blocks) small allocations, the same
+/// order as the pre-scheduler per-layer work list; all *matrix* buffers
+/// come from the arenas.
+pub(crate) fn execute_step(
+    layers: &mut [LayerState],
+    params: &mut [Matrix],
+    grads: &[Matrix],
+    states: &mut [ParamState],
+    plan: &RefreshPlan,
+    units: &[UnitId],
+    tasks: &mut Vec<Task>,
+    scratch_pool: &Mutex<Vec<ScratchArena>>,
+    sc: &StepCtx<'_>,
+) -> u64 {
+    debug_assert_eq!(plan.len(), units.len());
+
+    // Fast path: no refresh work this step. Precondition-and-apply
+    // sequentially through the public per-layer path — no mutex views, no
+    // task list, no thread spawns (the pre-scheduler threads == 1 path).
+    // The common in-between step is two small matmuls per layer; the
+    // blocked matmul already parallelizes internally for large layers.
+    if plan.is_empty() {
+        let mut scratch = scratch_pool
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default();
+        let it = layers
+            .iter_mut()
+            .zip(params.iter_mut())
+            .zip(grads.iter())
+            .zip(states.iter_mut());
+        for (((layer, w), g), st) in it {
+            let mut ghat = scratch.take(g.rows(), g.cols());
+            layer.precondition_into(g, &mut ghat, &mut scratch);
+            if sc.cfg.grafting {
+                graft(g, &mut ghat);
+            }
+            BaseOptimizer::step_one(&sc.hyper, sc.kind, st, w, &ghat, sc.lr_scale);
+            scratch.recycle(ghat);
+        }
+        scratch_pool.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
+        return 0;
+    }
+
+    let runs: Vec<LayerRun> = layers
+        .iter_mut()
+        .zip(params.iter_mut())
+        .zip(grads.iter())
+        .zip(states.iter_mut())
+        .map(|(((layer, w), g), st)| {
+            // Disjoint field borrows: specs are read-only, blocks are the
+            // per-unit mutable state behind the mutexes.
+            let LayerState { rows, cols, blocking, blocks, passthrough } = layer;
+            let blocking: &super::blocking::Blocking = blocking;
+            LayerRun {
+                rows: *rows,
+                cols: *cols,
+                passthrough: *passthrough,
+                trivial: blocking.is_trivial(),
+                specs: &blocking.blocks,
+                grad: g,
+                blocks: blocks.iter_mut().map(Mutex::new).collect(),
+                apply: Mutex::new((w, st)),
+                pending: AtomicUsize::new(0),
+            }
+        })
+        .collect();
+
+    // Group the plan's units into per-block refresh tasks (units are laid
+    // out [L, R] per block, so unit 2b/2b+1 address block-table entry b).
+    tasks.clear();
+    for b in 0..units.len() / 2 {
+        let (fl, fr) = (plan.flags(2 * b), plan.flags(2 * b + 1));
+        if (fl | fr) != 0 {
+            let id = units[2 * b];
+            debug_assert_eq!(id.side, Side::L);
+            let (layer, block) = (id.layer as usize, id.block as usize);
+            tasks.push(Task::Refresh { layer, block, fl, fr });
+            runs[layer].pending.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    debug_assert!(!tasks.is_empty(), "non-empty plan must produce refresh tasks");
+    for (i, run) in runs.iter().enumerate() {
+        if run.pending.load(Ordering::Relaxed) == 0 {
+            tasks.push(Task::Apply { layer: i });
+        }
+    }
+
+    // This step does refresh work (the fast path handled the empty plan),
+    // so fan out: Gram EMA / Cholesky / Schur–Newton dominate and the
+    // per-block tasks are chunky enough to amortize the scoped spawns.
+    let threads = crate::util::pool::default_threads().min(tasks.len().max(1));
+
+    let refresh_ns = AtomicU64::new(0);
+    let tasks = &*tasks;
+    let runs = &runs;
+    let refresh_ns_ref = &refresh_ns;
+    crate::util::pool::parallel_for(tasks.len(), threads, |ti| {
+        // Check an arena out of the pool (or start a fresh one on the very
+        // first steps); every matrix temporary of the refresh + apply
+        // pipeline is served from it, so a warmed-up step allocates no
+        // matrix buffers. Arena contents never influence results — every
+        // taken buffer is fully overwritten before use.
+        let mut scratch = scratch_pool
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default();
+        match tasks[ti] {
+            Task::Refresh { layer, block, fl, fr } => {
+                let run = &runs[layer];
+                let t0 = Instant::now();
+                {
+                    let mut bs = run.blocks[block].lock().unwrap();
+                    let spec = &run.specs[block];
+                    if (fl | fr) & RefreshPlan::GRAM != 0 {
+                        let mut gb = scratch.take(spec.rows, spec.cols);
+                        run.grad.block_into(spec.r0, spec.c0, &mut gb);
+                        if fl & RefreshPlan::GRAM != 0 {
+                            bs.gram_unit(Side::L, &gb, sc.step, sc.cfg, &mut scratch);
+                        }
+                        if fr & RefreshPlan::GRAM != 0 {
+                            bs.gram_unit(Side::R, &gb, sc.step, sc.cfg, &mut scratch);
+                        }
+                        scratch.recycle(gb);
+                    }
+                    if fl & RefreshPlan::ROOT != 0 {
+                        bs.root_unit(Side::L, sc.step, sc.cfg, sc.ctx, &mut scratch);
+                    }
+                    if fr & RefreshPlan::ROOT != 0 {
+                        bs.root_unit(Side::R, sc.step, sc.cfg, sc.ctx, &mut scratch);
+                    }
+                }
+                refresh_ns_ref.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                // Last pending unit of the layer → this worker applies it.
+                if run.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    apply_layer(run, sc, &mut scratch);
+                }
+            }
+            Task::Apply { layer } => apply_layer(&runs[layer], sc, &mut scratch),
+        }
+        scratch_pool.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
+    });
+    refresh_ns.into_inner()
+}
+
+/// `Ĝ = D(L̂)·G·D(R̂)` (line 15), grafting (Eq. 13), base-optimizer update —
+/// the apply phase of a refresh step, reading the (possibly just-refreshed)
+/// root caches. Runs exactly once per layer per step.
+///
+/// This mirrors `LayerState::precondition_into` (the reference
+/// implementation, used by the no-refresh fast path and the oracle tests)
+/// with per-block mutex access instead of a plain borrow — the mutexes are
+/// uncontended here because a layer only applies after its refresh units
+/// completed. The every-n bit-identity suite exercises all three branches
+/// (passthrough / trivial / blocked) against the reference; keep the two
+/// in lockstep.
+fn apply_layer(run: &LayerRun<'_>, sc: &StepCtx<'_>, scratch: &mut ScratchArena) {
+    let mut guard = run.apply.lock().unwrap();
+    let (w, st) = &mut *guard;
+    let g = run.grad;
+    let mut ghat = scratch.take(run.rows, run.cols);
+    if run.passthrough {
+        ghat.copy_from(g);
+    } else if run.trivial {
+        let bs = run.blocks[0].lock().unwrap();
+        bs.precondition_into(g, &mut ghat, scratch);
+    } else {
+        for (spec, blk) in run.specs.iter().zip(run.blocks.iter()) {
+            let mut gb = scratch.take(spec.rows, spec.cols);
+            g.block_into(spec.r0, spec.c0, &mut gb);
+            let mut ob = scratch.take(spec.rows, spec.cols);
+            let bs = blk.lock().unwrap();
+            bs.precondition_into(&gb, &mut ob, scratch);
+            drop(bs);
+            ghat.set_block(spec.r0, spec.c0, &ob);
+            scratch.recycle(ob);
+            scratch.recycle(gb);
+        }
+    }
+    if sc.cfg.grafting {
+        graft(g, &mut ghat);
+    }
+    BaseOptimizer::step_one(&sc.hyper, sc.kind, st, w, &ghat, sc.lr_scale);
+    scratch.recycle(ghat);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn infos(n: usize) -> Vec<UnitInfo> {
+        (0..n)
+            .map(|i| UnitInfo {
+                id: UnitId {
+                    layer: 0,
+                    block: (i / 2) as u32,
+                    side: if i % 2 == 0 { Side::L } else { Side::R },
+                },
+                meta: UnitMeta::default(),
+            })
+            .collect()
+    }
+
+    fn cfg(t1: u64, t2: u64) -> ShampooConfig {
+        ShampooConfig { t1, t2, ..Default::default() }
+    }
+
+    #[test]
+    fn every_n_marks_all_on_boundaries_only() {
+        let units = infos(6);
+        let c = cfg(2, 4);
+        let mut s = EveryN;
+        let mut plan = RefreshPlan::default();
+        for step in 1..=8u64 {
+            plan.reset(units.len());
+            s.plan(step, &units, &c, &mut plan);
+            let want_gram = if step % 2 == 0 { 6 } else { 0 };
+            let want_root = if step % 4 == 0 { 6 } else { 0 };
+            assert_eq!(plan.gram_units(), want_gram, "step {step}");
+            assert_eq!(plan.root_units(), want_root, "step {step}");
+        }
+    }
+
+    #[test]
+    fn staggered_bounds_per_step_and_covers_interval() {
+        for (n, t2) in [(6usize, 4u64), (32, 8), (3, 9), (16, 16), (5, 1)] {
+            let units = infos(n);
+            let c = cfg(1, t2);
+            let mut s = Staggered;
+            let mut plan = RefreshPlan::default();
+            let mut per_unit = vec![0usize; n];
+            let mut max_step = 0usize;
+            for step in 1..=t2 {
+                plan.reset(n);
+                s.plan(step, &units, &c, &mut plan);
+                let mut this = 0;
+                for u in 0..n {
+                    if plan.flags(u) & RefreshPlan::ROOT != 0 {
+                        per_unit[u] += 1;
+                        this += 1;
+                    }
+                }
+                max_step = max_step.max(this);
+            }
+            assert!(
+                per_unit.iter().all(|&c| c == 1),
+                "n={n} t2={t2}: coverage {per_unit:?}"
+            );
+            assert!(
+                max_step <= n.div_ceil(t2 as usize),
+                "n={n} t2={t2}: max/step {max_step}"
+            );
+        }
+    }
+
+    #[test]
+    fn staleness_respects_budget_and_prefers_stale_units() {
+        let mut units = infos(8);
+        let c = cfg(1, 4); // auto budget = ⌈8/4⌉ = 2
+        // Unit 5 is much more stale than the rest.
+        for (i, u) in units.iter_mut().enumerate() {
+            u.meta.last_root = if i == 5 { 1 } else { 90 };
+            u.meta.pending_norm = 1.0;
+        }
+        let mut s = Staleness::new();
+        let mut plan = RefreshPlan::default();
+        plan.reset(units.len());
+        s.plan(100, &units, &c, &mut plan);
+        assert_eq!(plan.root_units(), 2);
+        assert!(plan.flags(5) & RefreshPlan::ROOT != 0, "most-stale unit must be chosen");
+    }
+
+    #[test]
+    fn staleness_pending_norm_breaks_ties() {
+        let mut units = infos(4);
+        let c = ShampooConfig { t1: 1, t2: 4, refresh_budget: 1, ..Default::default() };
+        for (i, u) in units.iter_mut().enumerate() {
+            u.meta.last_root = 10; // equal staleness, below the forced tier
+            u.meta.pending_norm = i as f32;
+        }
+        let mut s = Staleness::new();
+        let mut plan = RefreshPlan::default();
+        plan.reset(units.len());
+        s.plan(12, &units, &c, &mut plan);
+        assert_eq!(plan.root_units(), 1);
+        assert!(plan.flags(3) & RefreshPlan::ROOT != 0, "largest pending norm wins ties");
+    }
+
+    #[test]
+    fn staleness_survives_nan_pending_norm_and_heals_it_first() {
+        // A NaN gradient poisons pending_norm until the unit's next root
+        // refresh; the comparator must stay a total order (no sort panic)
+        // and the poisoned unit must be refreshed first so it self-heals.
+        let mut units = infos(6);
+        let c = ShampooConfig { t1: 1, t2: 4, refresh_budget: 2, ..Default::default() };
+        for (i, u) in units.iter_mut().enumerate() {
+            u.meta.last_root = 10;
+            u.meta.pending_norm = if i == 4 { f32::NAN } else { i as f32 };
+        }
+        let mut s = Staleness::new();
+        let mut plan = RefreshPlan::default();
+        plan.reset(units.len());
+        s.plan(12, &units, &c, &mut plan);
+        assert_eq!(plan.root_units(), 2);
+        assert!(plan.flags(4) & RefreshPlan::ROOT != 0, "NaN unit must refresh first");
+    }
+
+    #[test]
+    fn spreading_policies_never_root_refresh_without_gram_data() {
+        // Before a unit's first Gram update, its side codec holds the ε·I
+        // init; factoring that into a root would give ~ε^{-1/4}·I. The
+        // spreading policies must pair such roots with a just-in-time Gram
+        // update (the executor runs gram before root within a block).
+        let units = infos(4); // all last_gram == 0
+        let c = cfg(100, 2); // roots fire long before the first T1 boundary
+        let mut plan = RefreshPlan::default();
+        for mut s in [
+            Box::new(Staggered) as Box<dyn RefreshScheduler>,
+            Box::new(Staleness::new()),
+        ] {
+            plan.reset(units.len());
+            s.plan(1, &units, &c, &mut plan);
+            assert!(plan.root_units() > 0, "{}: fixture must schedule roots", s.key());
+            for u in 0..units.len() {
+                if plan.flags(u) & RefreshPlan::ROOT != 0 {
+                    assert!(
+                        plan.flags(u) & RefreshPlan::GRAM != 0,
+                        "{}: unit {u} would root-refresh the ε·I init",
+                        s.key()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn effective_budget_defaults_to_staggered_rate() {
+        assert_eq!(effective_budget(&cfg(1, 4), 8), 2);
+        assert_eq!(effective_budget(&cfg(1, 100), 8), 1);
+        assert_eq!(
+            effective_budget(&ShampooConfig { refresh_budget: 5, ..cfg(1, 4) }, 8),
+            5
+        );
+    }
+
+    #[test]
+    fn registry_has_builtins_and_accepts_custom_keys() {
+        for key in ["every-n", "staggered", "staleness"] {
+            let b = lookup(key).unwrap_or_else(|| panic!("builtin '{key}' missing"));
+            assert_eq!(b.key, key);
+        }
+        assert!(lookup("no-such-policy").is_none());
+        // Built-in keys cannot be shadowed.
+        let b = lookup("every-n").unwrap();
+        assert!(!register(b));
+        assert!(scheduler_keys().starts_with(&["every-n", "staggered", "staleness"]));
+    }
+}

@@ -1,27 +1,73 @@
 //! Per-layer preconditioner state, stored behind [`PrecondCodec`] trait
 //! objects.
 //!
-//! Each parameter is tiled by [`Blocking`]; each block keeps an `(L, R)`
-//! pair plus the inverse-4th-roots `(L̂, R̂)`, each slot a boxed codec chosen
-//! by the config's codec keys (f32 / vq4 / cq4 / cq4-ef / bw8 / any
-//! registered key — see `quant::codec`). Dequantized roots are cached
-//! between `T2` refreshes — the codec is the persistent store, the cache is
-//! transient scratch that never diverges from `D(L̂)` because `L̂` only
-//! changes at refresh time.
+//! Each parameter is tiled by [`Blocking`]; each block keeps two
+//! [`SideState`]s (the `L` and `R` Kronecker factors), each holding a Gram
+//! codec, an inverse-root codec, a dequantized root cache, and the
+//! [`UnitMeta`] refresh bookkeeping. A `(layer, block, side)` triple is one
+//! **refresh unit** — the granularity at which `shampoo::scheduler` policies
+//! decide what to recompute each step. Dequantized roots are cached between
+//! refreshes — the codec is the persistent store, the cache is transient
+//! scratch that never diverges from `D(L̂)` because `L̂` only changes at
+//! refresh time.
 //!
-//! The EMA/refresh *schedule* lives here; everything representation-specific
-//! (Cholesky factorization, error feedback, bit packing) lives inside the
-//! codecs.
+//! The refresh *schedule* lives in `shampoo::scheduler`; the unit-level
+//! *mechanics* (Gram EMA re-store, root recomputation) live here; everything
+//! representation-specific (Cholesky factorization, error feedback, bit
+//! packing) lives inside the codecs.
 
 use super::blocking::Blocking;
 use super::config::ShampooConfig;
 use crate::linalg::schur_newton::inverse_pth_root_scratch;
 use crate::linalg::{
-    inverse_pth_root_eig_planned, matmul_into_planned, matmul_tn_into, syrk_into, Matrix,
+    inner, inverse_pth_root_eig_planned, matmul_into_planned, matmul_tn_into, syrk_into, Matrix,
     ScratchArena,
 };
 use crate::quant::codec::{lookup, CodecBuilder, CodecCtx};
 use crate::quant::PrecondCodec;
+
+/// Which Kronecker factor of a block a refresh unit addresses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Side {
+    /// The row-space factor `L` (`G·Gᵀ` statistics, `L̂ = L^{-1/4}`).
+    L,
+    /// The column-space factor `R` (`Gᵀ·G` statistics, `R̂ = R^{-1/4}`).
+    R,
+}
+
+impl Side {
+    pub const BOTH: [Side; 2] = [Side::L, Side::R];
+
+    pub fn index(self) -> usize {
+        match self {
+            Side::L => 0,
+            Side::R => 1,
+        }
+    }
+}
+
+/// Per-unit refresh bookkeeping the scheduler decides from.
+///
+/// These bytes are persistent optimizer state and are counted in
+/// `size_bytes()` / `MemoryModel::shampoo_bytes` ([`UnitMeta::BYTES`] per
+/// unit, two units per block) — the memory-model parity tests pin this.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct UnitMeta {
+    /// Step of the last Gram EMA update for this unit (0 = never).
+    pub last_gram: u64,
+    /// Step of the last inverse-root recomputation (0 = never).
+    pub last_root: u64,
+    /// Accumulated `‖G_block‖²_F` absorbed into the Gram side since the last
+    /// root refresh — the `Staleness` policy's update-magnitude weight.
+    pub pending_norm: f32,
+    /// Total root refreshes of this unit (coverage-counter tests).
+    pub refreshes: u32,
+}
+
+impl UnitMeta {
+    /// Exact byte footprint: two `u64` steps + `f32` norm + `u32` counter.
+    pub const BYTES: usize = 8 + 8 + 4 + 4;
+}
 
 /// Resolve a codec builder, falling back to a panic that names the key —
 /// a config can reference registered-at-runtime codecs, so this is a
@@ -47,23 +93,135 @@ fn side_codec(dim: usize, cfg: &ShampooConfig, ctx: &CodecCtx) -> Box<dyn Precon
     codec
 }
 
-/// State of one sub-block of one parameter.
+/// Absorb a fresh Gram statistic into a side codec:
+/// `L ← β·L_prev + (1−β)·gram`, then re-store in its representation
+/// (Eq. (5) for VQ; the codec runs Eq. (7)–(11) for CQ). All temporaries
+/// come from the caller's arena — a warmed-up refresh allocates nothing.
+fn update_side(
+    side: &mut dyn PrecondCodec,
+    gram: &Matrix,
+    cfg: &ShampooConfig,
+    scratch: &mut ScratchArena,
+) {
+    let mut l_new = scratch.take(gram.rows(), gram.cols());
+    side.load_into(&mut l_new, scratch);
+    l_new.ema(cfg.beta, gram);
+    l_new.symmetrize();
+    side.store_into(&l_new, scratch);
+    scratch.recycle(l_new);
+}
+
+/// One Kronecker factor of one block: Gram codec + root codec + root cache
+/// + refresh metadata. This is the state behind ONE refresh unit.
+#[derive(Clone, Debug)]
+pub struct SideState {
+    dim: usize,
+    gram: Box<dyn PrecondCodec>,
+    root: Box<dyn PrecondCodec>,
+    /// Builder key the root slot was created from ("f32" until the first
+    /// refresh) — compared against the configured key so the SAME codec
+    /// instance is reused across refreshes once it matches.
+    root_key: &'static str,
+    /// Dequantized root cache (refreshed whenever `root` changes).
+    cache: Matrix,
+    /// Refresh bookkeeping (scheduler input; counted in `size_bytes`).
+    pub meta: UnitMeta,
+}
+
+impl SideState {
+    fn new(dim: usize, cfg: &ShampooConfig, ctx: &CodecCtx) -> SideState {
+        SideState {
+            dim,
+            gram: side_codec(dim, cfg, ctx),
+            // Algorithm 1: L̂₀ = I, R̂₀ = I (f32 until the first refresh
+            // replaces the slot with the variant's root codec).
+            root: f32_with(&Matrix::eye(dim), ctx),
+            root_key: "f32",
+            cache: Matrix::eye(dim),
+            meta: UnitMeta::default(),
+        }
+    }
+
+    fn update_gram(&mut self, gram: &Matrix, cfg: &ShampooConfig, scratch: &mut ScratchArena) {
+        update_side(&mut *self.gram, gram, cfg, scratch);
+    }
+
+    fn update_root(&mut self, cfg: &ShampooConfig, ctx: &CodecCtx, scratch: &mut ScratchArena) {
+        let dim = self.dim;
+        let mut precond = scratch.take(dim, dim);
+        self.gram.load_into(&mut precond, scratch);
+        // Eq. (6)/(12): ridge λ_max·ε·I handled inside the iteration.
+        let (x, stats) = inverse_pth_root_scratch(&precond, &cfg.schur, scratch);
+        // Direct (VQ) quantization can break positive-definiteness
+        // (Tab. 9); Schur–Newton then diverges. Fall back to the exact
+        // eigendecomposition route with eigenvalue clamping — defined
+        // for indefinite inputs, so VQ stays *functional but degraded*,
+        // matching the paper's observed behavior.
+        // The true root satisfies ‖X‖_max ≤ (λmin + ridge)^{-1/4}; a
+        // quantization-created negative eigendirection can pass through
+        // zero during the iteration, leaving M ≈ I (small residual)
+        // while X accumulated an enormous finite factor — bound the
+        // magnitude.
+        let lam0 = stats.lambda_max.max(0.0);
+        let root_bound = 10.0 * ((lam0 * cfg.schur.eps).max(1e-10) as f64).powf(-0.25) as f32;
+        let x = if x.has_non_finite()
+            || !stats.residual.is_finite()
+            || stats.residual > 0.1
+            || crate::linalg::max_abs(&x) > root_bound
+        {
+            // Exceptional path — allocation here is acceptable, but the
+            // ridged copy and the matmul plan still come from the arena.
+            scratch.recycle(x);
+            let mut ridged = scratch.take(dim, dim);
+            ridged.copy_from(&precond);
+            let lam = stats.lambda_max.max(0.0);
+            ridged.add_diag(lam * cfg.schur.eps);
+            // Clamp at λmax·1e-4 (not the ε ridge): quantization-created
+            // negative directions would otherwise get ~(1e-6)^{-1/4} ≈
+            // 30× amplification and swamp the true curvature signal.
+            let eig = inverse_pth_root_eig_planned(
+                &ridged,
+                cfg.schur.p as f64,
+                (lam * 1e-4).max(1e-10),
+                scratch.plan(),
+            );
+            scratch.recycle(ridged);
+            eig
+        } else {
+            x
+        };
+        let configured = cfg.root_codec_key();
+        let quantize = configured != "f32" && dim * dim >= cfg.quant.min_quant_elems;
+        let key = if quantize { configured } else { "f32" };
+        // Slots start f32 (L̂₀ = I exactly) and switch representation at
+        // the first refresh; after that the SAME codec instance is
+        // reused so stateful root codecs (e.g. EF-based ones reached
+        // via `root_codec` overrides) keep their state across refreshes.
+        if self.root_key != key {
+            self.root = (builder(key).root)(ctx);
+            self.root_key = key;
+        }
+        self.root.store_into(&x, scratch);
+        self.root.load_into(&mut self.cache, scratch);
+        scratch.recycle(x);
+        scratch.recycle(precond);
+    }
+
+    pub(crate) fn cache(&self) -> &Matrix {
+        &self.cache
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.gram.size_bytes() + self.root.size_bytes() + UnitMeta::BYTES
+    }
+}
+
+/// State of one sub-block of one parameter: `L` and `R` [`SideState`]s.
 #[derive(Clone, Debug)]
 pub struct BlockState {
     pub rows: usize,
     pub cols: usize,
-    l: Box<dyn PrecondCodec>,
-    r: Box<dyn PrecondCodec>,
-    lhat: Box<dyn PrecondCodec>,
-    rhat: Box<dyn PrecondCodec>,
-    /// Builder keys the root slots were created from ("f32" until the
-    /// first refresh) — compared against the configured key so the SAME
-    /// codec instance is reused across refreshes once it matches.
-    lhat_key: &'static str,
-    rhat_key: &'static str,
-    /// Dequantized root caches (refreshed whenever `lhat`/`rhat` change).
-    cache_lhat: Matrix,
-    cache_rhat: Matrix,
+    sides: [SideState; 2],
 }
 
 impl BlockState {
@@ -71,46 +229,68 @@ impl BlockState {
         BlockState {
             rows,
             cols,
-            l: side_codec(rows, cfg, ctx),
-            r: side_codec(cols, cfg, ctx),
-            // Algorithm 1: L̂₀ = I, R̂₀ = I (f32 until the first refresh
-            // replaces the slot with the variant's root codec).
-            lhat: f32_with(&Matrix::eye(rows), ctx),
-            rhat: f32_with(&Matrix::eye(cols), ctx),
-            lhat_key: "f32",
-            rhat_key: "f32",
-            cache_lhat: Matrix::eye(rows),
-            cache_rhat: Matrix::eye(cols),
+            sides: [SideState::new(rows, cfg, ctx), SideState::new(cols, cfg, ctx)],
         }
     }
 
-    /// Absorb the fresh Gram statistic into a side codec:
-    /// `L ← β·L_prev + (1−β)·gram`, then re-store in its representation
-    /// (Eq. (5) for VQ; the codec runs Eq. (7)–(11) for CQ). All
-    /// temporaries come from the caller's arena — a warmed-up refresh
-    /// allocates nothing.
-    fn update_side(
-        side: &mut dyn PrecondCodec,
-        gram: &Matrix,
+    pub(crate) fn side(&self, s: Side) -> &SideState {
+        &self.sides[s.index()]
+    }
+
+    /// One refresh unit's Gram EMA update: extract nothing — `gb` is the
+    /// already-extracted gradient block. Records `last_gram` and accumulates
+    /// the pending-update norm the `Staleness` policy weighs.
+    pub(crate) fn gram_unit(
+        &mut self,
+        side: Side,
+        gb: &Matrix,
+        step: u64,
         cfg: &ShampooConfig,
         scratch: &mut ScratchArena,
     ) {
-        let mut l_new = scratch.take(gram.rows(), gram.cols());
-        side.load_into(&mut l_new, scratch);
-        l_new.ema(cfg.beta, gram);
-        l_new.symmetrize();
-        side.store_into(&l_new, scratch);
-        scratch.recycle(l_new);
+        let dim = match side {
+            Side::L => gb.rows(),
+            Side::R => gb.cols(),
+        };
+        let mut gram = scratch.take(dim, dim);
+        match side {
+            Side::L => syrk_into(gb, &mut gram), // G·Gᵀ
+            Side::R => matmul_tn_into(gb, gb, &mut gram), // Gᵀ·G
+        }
+        let s = &mut self.sides[side.index()];
+        s.update_gram(&gram, cfg, scratch);
+        s.meta.last_gram = step;
+        s.meta.pending_norm += inner(gb, gb) as f32;
+        scratch.recycle(gram);
     }
 
+    /// One refresh unit's inverse-root recomputation; resets the pending
+    /// norm and bumps the coverage counter.
+    pub(crate) fn root_unit(
+        &mut self,
+        side: Side,
+        step: u64,
+        cfg: &ShampooConfig,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+    ) {
+        let s = &mut self.sides[side.index()];
+        s.update_root(cfg, ctx, scratch);
+        s.meta.last_root = step;
+        s.meta.pending_norm = 0.0;
+        s.meta.refreshes += 1;
+    }
+
+    /// Whole-block Gram update (both sides, `L` then `R`) — the legacy
+    /// sequential entry the `EveryN` oracle tests drive.
     fn update_gram(&mut self, g: &Matrix, cfg: &ShampooConfig, scratch: &mut ScratchArena) {
         let mut gram_l = scratch.take(g.rows(), g.rows());
         syrk_into(g, &mut gram_l); // G·Gᵀ
-        Self::update_side(&mut *self.l, &gram_l, cfg, scratch);
+        self.sides[0].update_gram(&gram_l, cfg, scratch);
         scratch.recycle(gram_l);
         let mut gram_r = scratch.take(g.cols(), g.cols());
         matmul_tn_into(g, g, &mut gram_r); // Gᵀ·G
-        Self::update_side(&mut *self.r, &gram_r, cfg, scratch);
+        self.sides[1].update_gram(&gram_r, cfg, scratch);
         scratch.recycle(gram_r);
     }
 
@@ -120,81 +300,26 @@ impl BlockState {
         ctx: &CodecCtx,
         scratch: &mut ScratchArena,
     ) {
-        for (side, root, root_key, cache) in [
-            (&self.l, &mut self.lhat, &mut self.lhat_key, &mut self.cache_lhat),
-            (&self.r, &mut self.rhat, &mut self.rhat_key, &mut self.cache_rhat),
-        ] {
-            let dim = cache.rows();
-            let mut precond = scratch.take(dim, dim);
-            side.load_into(&mut precond, scratch);
-            // Eq. (6)/(12): ridge λ_max·ε·I handled inside the iteration.
-            let (x, stats) = inverse_pth_root_scratch(&precond, &cfg.schur, scratch);
-            // Direct (VQ) quantization can break positive-definiteness
-            // (Tab. 9); Schur–Newton then diverges. Fall back to the exact
-            // eigendecomposition route with eigenvalue clamping — defined
-            // for indefinite inputs, so VQ stays *functional but degraded*,
-            // matching the paper's observed behavior.
-            // The true root satisfies ‖X‖_max ≤ (λmin + ridge)^{-1/4}; a
-            // quantization-created negative eigendirection can pass through
-            // zero during the iteration, leaving M ≈ I (small residual)
-            // while X accumulated an enormous finite factor — bound the
-            // magnitude.
-            let lam0 = stats.lambda_max.max(0.0);
-            let root_bound = 10.0 * ((lam0 * cfg.schur.eps).max(1e-10) as f64).powf(-0.25) as f32;
-            let x = if x.has_non_finite()
-                || !stats.residual.is_finite()
-                || stats.residual > 0.1
-                || crate::linalg::max_abs(&x) > root_bound
-            {
-                // Exceptional path — allocation here is acceptable, but the
-                // ridged copy and the matmul plan still come from the arena.
-                scratch.recycle(x);
-                let mut ridged = scratch.take(dim, dim);
-                ridged.copy_from(&precond);
-                let lam = stats.lambda_max.max(0.0);
-                ridged.add_diag(lam * cfg.schur.eps);
-                // Clamp at λmax·1e-4 (not the ε ridge): quantization-created
-                // negative directions would otherwise get ~(1e-6)^{-1/4} ≈
-                // 30× amplification and swamp the true curvature signal.
-                let eig = inverse_pth_root_eig_planned(
-                    &ridged,
-                    cfg.schur.p as f64,
-                    (lam * 1e-4).max(1e-10),
-                    scratch.plan(),
-                );
-                scratch.recycle(ridged);
-                eig
-            } else {
-                x
-            };
-            let configured = cfg.root_codec_key();
-            let quantize = configured != "f32" && dim * dim >= cfg.quant.min_quant_elems;
-            let key = if quantize { configured } else { "f32" };
-            // Slots start f32 (L̂₀ = I exactly) and switch representation at
-            // the first refresh; after that the SAME codec instance is
-            // reused so stateful root codecs (e.g. EF-based ones reached
-            // via `root_codec` overrides) keep their state across refreshes.
-            if *root_key != key {
-                *root = (builder(key).root)(ctx);
-                *root_key = key;
-            }
-            root.store_into(&x, scratch);
-            root.load_into(cache, scratch);
-            scratch.recycle(x);
-            scratch.recycle(precond);
+        for side in &mut self.sides {
+            side.update_root(cfg, ctx, scratch);
         }
     }
 
     /// `Ĝ = D(L̂)·G·D(R̂)` (Algorithm 1 line 15), arena-backed.
-    fn precondition_into(&self, g: &Matrix, out: &mut Matrix, scratch: &mut ScratchArena) {
+    pub(crate) fn precondition_into(
+        &self,
+        g: &Matrix,
+        out: &mut Matrix,
+        scratch: &mut ScratchArena,
+    ) {
         let mut tmp = scratch.take(self.rows, g.cols());
-        matmul_into_planned(&self.cache_lhat, g, &mut tmp, scratch.plan());
-        matmul_into_planned(&tmp, &self.cache_rhat, out, scratch.plan());
+        matmul_into_planned(self.sides[0].cache(), g, &mut tmp, scratch.plan());
+        matmul_into_planned(&tmp, self.sides[1].cache(), out, scratch.plan());
         scratch.recycle(tmp);
     }
 
     fn size_bytes(&self) -> usize {
-        self.l.size_bytes() + self.r.size_bytes() + self.lhat.size_bytes() + self.rhat.size_bytes()
+        self.sides[0].size_bytes() + self.sides[1].size_bytes()
     }
 }
 
@@ -222,6 +347,17 @@ impl LayerState {
                 .collect()
         };
         LayerState { rows, cols, blocking, blocks, passthrough }
+    }
+
+    /// Refresh units in this layer (two per block; passthrough layers have
+    /// none) — the scheduler's unit-addressing contract.
+    pub fn unit_count(&self) -> usize {
+        self.blocks.len() * 2
+    }
+
+    /// Refresh bookkeeping of one unit (test/telemetry surface).
+    pub fn unit_meta(&self, block: usize, side: Side) -> UnitMeta {
+        self.blocks[block].side(side).meta
     }
 
     pub fn update_gram(&mut self, g: &Matrix, cfg: &ShampooConfig, scratch: &mut ScratchArena) {
@@ -287,12 +423,15 @@ impl LayerState {
     pub fn dequant_inv_roots(&self) -> Vec<(Matrix, Matrix)> {
         self.blocks
             .iter()
-            .map(|b| (b.cache_lhat.clone(), b.cache_rhat.clone()))
+            .map(|b| (b.sides[0].cache.clone(), b.sides[1].cache.clone()))
             .collect()
     }
 
     pub fn reconstructed_preconditioners(&self) -> Vec<(Matrix, Matrix)> {
-        self.blocks.iter().map(|b| (b.l.load(), b.r.load())).collect()
+        self.blocks
+            .iter()
+            .map(|b| (b.sides[0].gram.load(), b.sides[1].gram.load()))
+            .collect()
     }
 }
 
@@ -329,7 +468,7 @@ mod tests {
         assert_eq!(side.key(), "cq4-ef");
         for _ in 0..5 {
             let g = Matrix::randn(12, 16, 1.0, &mut rng);
-            BlockState::update_side(&mut *side, &syrk(&g), &c, &mut scratch);
+            update_side(&mut *side, &syrk(&g), &c, &mut scratch);
             let l = side.load();
             // PSD check via eigensolver.
             let (vals, _) = crate::linalg::eig_sym(&l, 1e-10, 100);
@@ -407,6 +546,7 @@ mod tests {
         let mut layer = LayerState::new(20, 12, &c, &cctx);
         let mut scratch = ScratchArena::new();
         assert_eq!(layer.blocks.len(), 3 * 2);
+        assert_eq!(layer.unit_count(), 12);
         let g = Matrix::randn(20, 12, 1.0, &mut rng);
         layer.update_gram(&g, &c, &mut scratch);
         layer.update_inv_roots(&c, &cctx, &mut scratch);
@@ -422,10 +562,10 @@ mod tests {
         let cctx = ctx(&c);
         // 32×32 preconditioners are 1024 < 4096 elems → stay f32.
         let layer = LayerState::new(32, 32, &c, &cctx);
-        assert_eq!(layer.blocks[0].l.key(), "f32");
+        assert_eq!(layer.blocks[0].side(Side::L).gram.key(), "f32");
         // 128×128 → 16384 ≥ 4096 → quantized.
         let layer2 = LayerState::new(128, 128, &c, &cctx);
-        assert_eq!(layer2.blocks[0].l.key(), "vq4");
+        assert_eq!(layer2.blocks[0].side(Side::L).gram.key(), "vq4");
     }
 
     #[test]
@@ -438,9 +578,61 @@ mod tests {
         let g = Matrix::randn(10, 10, 1.0, &mut rng);
         block.update_gram(&g, &c, &mut scratch);
         block.update_inv_roots(&c, &cctx, &mut scratch);
-        assert_eq!(block.lhat.key(), "vq4");
-        assert!(block.cache_lhat.max_abs_diff(&block.lhat.load()) < 1e-7);
-        assert!(block.cache_rhat.max_abs_diff(&block.rhat.load()) < 1e-7);
+        assert_eq!(block.side(Side::L).root.key(), "vq4");
+        for s in Side::BOTH {
+            let side = block.side(s);
+            assert!(side.cache.max_abs_diff(&side.root.load()) < 1e-7);
+        }
+    }
+
+    #[test]
+    fn unit_level_refresh_matches_whole_block_path() {
+        // Driving the two sides through the scheduler's unit API produces
+        // bit-identical state to the legacy whole-block calls.
+        let c = cfg(ShampooVariant::Cq4 { error_feedback: true });
+        let cctx = ctx(&c);
+        let mut rng = Rng::new(21);
+        let mut a = BlockState::new(12, 8, &c, &cctx);
+        let mut b = BlockState::new(12, 8, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        for step in 1..=4u64 {
+            let g = Matrix::randn(12, 8, 0.5, &mut rng);
+            a.update_gram(&g, &c, &mut scratch);
+            a.update_inv_roots(&c, &cctx, &mut scratch);
+            b.gram_unit(Side::L, &g, step, &c, &mut scratch);
+            b.gram_unit(Side::R, &g, step, &c, &mut scratch);
+            b.root_unit(Side::L, step, &c, &cctx, &mut scratch);
+            b.root_unit(Side::R, step, &c, &cctx, &mut scratch);
+            for s in Side::BOTH {
+                assert_eq!(a.side(s).cache.max_abs_diff(&b.side(s).cache), 0.0);
+            }
+        }
+        // Unit path also recorded its bookkeeping.
+        let meta = b.side(Side::L).meta;
+        assert_eq!(meta.last_gram, 4);
+        assert_eq!(meta.last_root, 4);
+        assert_eq!(meta.refreshes, 4);
+        assert_eq!(meta.pending_norm, 0.0);
+        // The legacy path leaves metadata untouched (oracle usage).
+        assert_eq!(a.side(Side::L).meta, UnitMeta::default());
+    }
+
+    #[test]
+    fn pending_norm_accumulates_between_root_refreshes() {
+        let c = cfg(ShampooVariant::Full32);
+        let cctx = ctx(&c);
+        let mut rng = Rng::new(22);
+        let mut block = BlockState::new(6, 6, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        let g = Matrix::randn(6, 6, 1.0, &mut rng);
+        let g2 = inner(&g, &g) as f32;
+        block.gram_unit(Side::L, &g, 1, &c, &mut scratch);
+        block.gram_unit(Side::L, &g, 2, &c, &mut scratch);
+        let meta = block.side(Side::L).meta;
+        assert!((meta.pending_norm - 2.0 * g2).abs() < 1e-3 * g2.abs());
+        block.root_unit(Side::L, 3, &c, &cctx, &mut scratch);
+        assert_eq!(block.side(Side::L).meta.pending_norm, 0.0);
+        assert_eq!(block.side(Side::L).meta.last_root, 3);
     }
 
     #[test]
@@ -452,7 +644,7 @@ mod tests {
         let mut side = side_codec(6, &c, &cctx);
         let mut bad = Matrix::zeros(6, 6);
         bad[(0, 0)] = f32::NAN;
-        BlockState::update_side(&mut *side, &bad, &c, &mut ScratchArena::new());
+        update_side(&mut *side, &bad, &c, &mut ScratchArena::new());
         let l = side.load();
         assert!(!l.has_non_finite(), "reset must clear NaNs");
     }
@@ -464,7 +656,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let mut layer = LayerState::new(32, 32, &c, &cctx);
         let mut scratch = ScratchArena::new();
-        assert_eq!(layer.blocks[0].l.key(), "bw8");
+        assert_eq!(layer.blocks[0].side(Side::L).gram.key(), "bw8");
         let g = Matrix::randn(32, 32, 1.0, &mut rng);
         layer.update_gram(&g, &c, &mut scratch);
         layer.update_inv_roots(&c, &cctx, &mut scratch);
@@ -483,6 +675,6 @@ mod tests {
         c.side_codec = Some("bw8");
         let cctx = ctx(&c);
         let layer = LayerState::new(16, 16, &c, &cctx);
-        assert_eq!(layer.blocks[0].l.key(), "bw8");
+        assert_eq!(layer.blocks[0].side(Side::L).gram.key(), "bw8");
     }
 }

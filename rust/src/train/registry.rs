@@ -181,4 +181,26 @@ mod tests {
         let b = lookup("cq-ef").unwrap();
         assert!(!register(b));
     }
+
+    #[test]
+    fn refresh_policy_flows_through_keyed_builders() {
+        // `cfg.refresh_policy` rides the same pass-through as intervals and
+        // codec overrides: every keyed Shampoo builder honors it, and the
+        // stack label surfaces the non-default schedule.
+        let cfg = ShampooConfig {
+            t1: 1,
+            t2: 2,
+            max_order: 16,
+            refresh_policy: "staggered",
+            ..Default::default()
+        };
+        for key in ["32bit", "vq", "cq", "cq-ef", "bw8"] {
+            let stack = build(key, BaseOptimizer::sgd(0.1, 0.0), &cfg, &[(8, 8)]).unwrap();
+            assert!(
+                stack.label().contains("[refresh staggered]"),
+                "key '{key}': {}",
+                stack.label()
+            );
+        }
+    }
 }

@@ -1,0 +1,272 @@
+//! Refresh-scheduler correctness: the `every-n` policy reproduces the
+//! pre-scheduler step path bit-for-bit, `staggered` gives exact once-per-
+//! interval coverage under the ⌈units/T⌉ per-step bound, `staleness` honors
+//! its budget without starving any unit, and runtime-registered policies
+//! drive `Shampoo` through the same string-keyed path as the built-ins.
+
+use quartz::linalg::{Matrix, ScratchArena};
+use quartz::optim::{graft, BaseOptimizer};
+use quartz::quant::{BlockQuantizer, CodecCtx, QuantConfig};
+use quartz::shampoo::scheduler::{
+    self, RefreshPlan, RefreshScheduler, SchedulerBuilder, UnitInfo,
+};
+use quartz::shampoo::{LayerState, Shampoo, ShampooConfig, ShampooVariant};
+use quartz::util::rng::Rng;
+use std::sync::Arc;
+
+fn sgd_base() -> BaseOptimizer {
+    BaseOptimizer::sgd(0.05, 0.0)
+}
+
+/// Deterministic per-step gradients for a shape set.
+fn grads_at(shapes: &[(usize, usize)], k: u64, seed: u64) -> Vec<Matrix> {
+    let mut rng = Rng::new(seed ^ (k * 0x9E37_79B9));
+    shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.4, &mut rng)).collect()
+}
+
+/// With `refresh_policy = "every-n"`, parameter trajectories are
+/// bit-identical to the pre-refactor `Shampoo::step`: all units' Gram EMAs
+/// at `k % T1 == 0`, all units' roots at `k % T2 == 0`, precondition after.
+/// The oracle below IS that seed behavior, hand-written over the public
+/// per-layer operations — including blocked and passthrough layers.
+#[test]
+fn every_n_is_bit_identical_to_the_sequential_seed_oracle() {
+    let cfg = ShampooConfig {
+        t1: 2,
+        t2: 3,
+        max_order: 8, // (20,12) → 3×2 block grid
+        variant: ShampooVariant::Cq4 { error_feedback: true },
+        refresh_policy: "every-n",
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let shapes = [(12usize, 8usize), (8, 8), (20, 12), (5, 1)];
+    let mut rng = Rng::new(3);
+    let params0: Vec<Matrix> =
+        shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+
+    // Scheduler-driven optimizer.
+    let mut sh = Shampoo::new(sgd_base(), cfg, &shapes);
+    let mut pa = params0.clone();
+    for k in 1..=9u64 {
+        let grads = grads_at(&shapes, k, 42);
+        sh.step(&mut pa, &grads, k, 1.0);
+    }
+
+    // Sequential oracle (pre-refactor step semantics).
+    let ctx = CodecCtx::new(cfg.eps, cfg.beta_e, Arc::new(BlockQuantizer::new(cfg.quant)));
+    let mut layers: Vec<LayerState> =
+        shapes.iter().map(|&(m, n)| LayerState::new(m, n, &cfg, &ctx)).collect();
+    let mut base = sgd_base();
+    base.init(shapes.len());
+    let mut pb = params0.clone();
+    let mut scratch = ScratchArena::new();
+    for k in 1..=9u64 {
+        let grads = grads_at(&shapes, k, 42);
+        for i in 0..shapes.len() {
+            if k % cfg.t1 == 0 {
+                layers[i].update_gram(&grads[i], &cfg, &mut scratch);
+            }
+            if k % cfg.t2 == 0 {
+                layers[i].update_inv_roots(&cfg, &ctx, &mut scratch);
+            }
+            let mut ghat = layers[i].precondition(&grads[i]);
+            if cfg.grafting {
+                graft(&grads[i], &mut ghat);
+            }
+            base.step_param(i, &mut pb[i], &ghat, 1.0);
+        }
+    }
+
+    for (i, (a, b)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(
+            a.max_abs_diff(b),
+            0.0,
+            "layer {i}: every-n must match the sequential seed oracle bit-for-bit"
+        );
+    }
+}
+
+/// `staggered` refreshes every unit exactly once per `T2` interval (and
+/// every Gram side once per `T1` interval) — the coverage-counter contract.
+#[test]
+fn staggered_refreshes_every_unit_exactly_once_per_interval() {
+    let cfg = ShampooConfig {
+        t1: 2,
+        t2: 4,
+        max_order: 8, // 16×16 → 2×2 blocks → 8 units
+        variant: ShampooVariant::Full32,
+        refresh_policy: "staggered",
+        ..Default::default()
+    };
+    let shapes = [(16usize, 16usize)];
+    let mut sh = Shampoo::new(sgd_base(), cfg, &shapes);
+    assert_eq!(sh.unit_count(), 8);
+    let mut params: Vec<Matrix> = {
+        let mut rng = Rng::new(5);
+        shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect()
+    };
+    for interval in 1..=3u64 {
+        for k in (interval - 1) * 4 + 1..=interval * 4 {
+            let grads = grads_at(&shapes, k, 7);
+            sh.step(&mut params, &grads, k, 1.0);
+        }
+        for (id, meta) in sh.unit_metas() {
+            assert_eq!(
+                meta.refreshes,
+                interval as u32,
+                "{id:?}: must refresh exactly once per interval"
+            );
+        }
+    }
+    // The spread never exceeds ⌈units/T₂⌉ per step (here 8/4 = 2), while
+    // the total work equals the every-n schedule's (one refresh per unit
+    // per interval).
+    let stats = sh.refresh_stats();
+    assert_eq!(stats.max_root_units, 2);
+    assert_eq!(stats.root_units, 3 * 8);
+    assert!(!params[0].has_non_finite());
+}
+
+/// `staleness` never exceeds its per-step budget and never lets a unit go
+/// unrefreshed for more than `2 × T2` steps.
+#[test]
+fn staleness_respects_budget_and_never_starves() {
+    let cfg = ShampooConfig {
+        t1: 1,
+        t2: 4,
+        max_order: 8, // (16,16) → 4 blocks, (16,8) → 2 blocks ⇒ 12 units
+        variant: ShampooVariant::Full32,
+        refresh_policy: "staleness",
+        ..Default::default()
+    };
+    let shapes = [(16usize, 16usize), (16, 8)];
+    let mut sh = Shampoo::new(sgd_base(), cfg, &shapes);
+    assert_eq!(sh.unit_count(), 12);
+    let budget = scheduler::effective_budget(&cfg, sh.unit_count());
+    assert_eq!(budget, 3);
+    let mut params: Vec<Matrix> = {
+        let mut rng = Rng::new(9);
+        shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect()
+    };
+    for k in 1..=24u64 {
+        let grads = grads_at(&shapes, k, 11);
+        sh.step(&mut params, &grads, k, 1.0);
+        let stats = sh.refresh_stats();
+        assert!(
+            stats.last_root_units <= budget,
+            "step {k}: {} root units over budget {budget}",
+            stats.last_root_units
+        );
+        for (id, meta) in sh.unit_metas() {
+            let stale = k - meta.last_root.min(k);
+            assert!(
+                stale <= 2 * cfg.t2,
+                "step {k}: unit {id:?} starved for {stale} steps (limit {})",
+                2 * cfg.t2
+            );
+        }
+    }
+    assert_eq!(sh.refresh_stats().max_root_units, budget);
+    assert!(!params[0].has_non_finite());
+}
+
+/// Acceptance criterion on the (scaled) bench layer mix: with `staggered`,
+/// the max per-step refresh-unit count is ≤ ⌈total_units / refresh_every⌉,
+/// while `every-n` concentrates ALL units in single steps — the latency
+/// spike the scheduler exists to flatten. Total work is identical.
+#[test]
+fn staggered_bounds_per_step_units_on_the_bench_layer_mix() {
+    // Transformer-ish mix (4096×1024 / 1024×4096 / 512×512×n scaled 1/16,
+    // matching bench_shampoo's `step_mix` shapes at max_order 64).
+    let shapes = [(256usize, 64usize), (64, 256), (128, 128), (128, 128)];
+    let t2 = 8u64;
+    let run = |policy: &'static str| {
+        let cfg = ShampooConfig {
+            t1: 4,
+            t2,
+            max_order: 64,
+            variant: ShampooVariant::Full32,
+            refresh_policy: policy,
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(sgd_base(), cfg, &shapes);
+        let mut params: Vec<Matrix> = {
+            let mut rng = Rng::new(13);
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect()
+        };
+        for k in 1..=2 * t2 {
+            let grads = grads_at(&shapes, k, 17);
+            sh.step(&mut params, &grads, k, 1.0);
+        }
+        let stats = sh.refresh_stats().clone();
+        (sh.unit_count(), stats)
+    };
+
+    let (units, every_n) = run("every-n");
+    assert_eq!(units, 32);
+    let bound = (units as u64).div_ceil(t2) as usize;
+    let (_, staggered) = run("staggered");
+
+    assert_eq!(every_n.max_root_units, units, "every-n refreshes everything at once");
+    assert!(
+        staggered.max_root_units <= bound,
+        "staggered spike {} exceeds ⌈units/T₂⌉ = {bound}",
+        staggered.max_root_units
+    );
+    // Same amortized work, flatter profile.
+    assert_eq!(every_n.root_units, staggered.root_units);
+}
+
+/// A runtime-registered policy drives `Shampoo` exactly like the built-ins:
+/// the string-keyed open world of the codec/stack registries, for refresh
+/// scheduling. A policy that never refreshes must leave Shampoo acting as
+/// its base optimizer.
+#[test]
+fn runtime_registered_policy_reaches_shampoo_by_key() {
+    struct Never;
+    impl RefreshScheduler for Never {
+        fn key(&self) -> &'static str {
+            "never"
+        }
+        fn plan(&mut self, _: u64, _: &[UnitInfo], _: &ShampooConfig, _: &mut RefreshPlan) {}
+    }
+    fn build_never(_: &ShampooConfig) -> Box<dyn RefreshScheduler> {
+        Box::new(Never)
+    }
+    scheduler::register(SchedulerBuilder {
+        key: "never",
+        summary: "test-only: refresh nothing, ever",
+        build: build_never,
+    });
+
+    let cfg = ShampooConfig {
+        t1: 1,
+        t2: 1,
+        grafting: false,
+        variant: ShampooVariant::Full32,
+        refresh_policy: "never",
+        ..Default::default()
+    };
+    let shapes = [(6usize, 6usize)];
+    let mut sh = Shampoo::new(sgd_base(), cfg, &shapes);
+    let mut rng = Rng::new(19);
+    let w0 = Matrix::randn(6, 6, 1.0, &mut rng);
+    let mut w_sh = w0.clone();
+    let mut base = sgd_base();
+    base.init(1);
+    let mut w_base = w0.clone();
+    for k in 1..=20u64 {
+        let g = grads_at(&shapes, k, 23).remove(0);
+        sh.step(std::slice::from_mut(&mut w_sh), std::slice::from_ref(&g), k, 1.0);
+        base.step_param(0, &mut w_base, &g, 1.0);
+    }
+    assert_eq!(
+        w_sh.max_abs_diff(&w_base),
+        0.0,
+        "a never-refresh policy must leave Shampoo == base optimizer"
+    );
+    let stats = sh.refresh_stats();
+    assert_eq!(stats.root_units + stats.gram_units, 0);
+    assert_eq!(sh.refresh_policy(), "never");
+}

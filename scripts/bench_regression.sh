@@ -14,7 +14,11 @@
 #
 # Records are the JSONL objects util::bench emits, assembled by
 # scripts/harvest_bench.sh — the parser below relies on that exact shape
-# ("name":"...","mean_ns":N), not on a general JSON grammar.
+# ("name":"...","mean_ns":N), not on a general JSON grammar. Besides the
+# kernel/codec records this covers the end-to-end optimizer records
+# (step_mix/<refresh-policy> and step_*/<variant> from bench_shampoo), so
+# refresh-scheduler and step-path slowdowns surface through the same
+# advisory CI gate.
 set -euo pipefail
 
 BASE="${1:?usage: bench_regression.sh BASELINE.json CURRENT.json [threshold_pct]}"

@@ -5,7 +5,13 @@
 #
 # `cargo bench` runs every [[bench]] target, including bench_codecs — the
 # per-codec quantize/dequantize throughput at orders 512/1024 whose records
-# (codec_store/*, codec_load/*) seed the codec regression trajectory.
+# (codec_store/*, codec_load/*) seed the codec regression trajectory — and
+# bench_shampoo's end-to-end step records: step_precondition_only/*,
+# step_with_gram_update/*, step_full_refresh/* per variant, plus the
+# refresh-scheduler step benches at the transformer-ish layer mix
+# (step_mix/every-n, step_mix/staggered, step_mix/staleness), which feed
+# scripts/bench_regression.sh so a policy-level slowdown is flagged like
+# any kernel regression.
 #
 # Usage: scripts/harvest_bench.sh [output.json]
 #
