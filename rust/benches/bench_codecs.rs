@@ -6,7 +6,10 @@
 //! drives (arena-backed, zero steady-state allocation).
 //!
 //! Runs over the registry, so a newly registered codec is benchmarked with
-//! zero changes here. Records land in `BENCH_quartz.json` via the
+//! zero changes here — the `ec4`/`f16`/`cq-r1` family entered this bench
+//! the moment it registered (`ec4`'s store is eigendecomposition-bound; the
+//! Jacobi sweep budget in `quant::ec4` is what keeps the large orders
+//! tractable). Records land in `BENCH_quartz.json` via the
 //! `QUARTZ_BENCH_JSON` hook (see `scripts/harvest_bench.sh`), seeding the
 //! codec-throughput regression trajectory that
 //! `scripts/bench_regression.sh` diffs run-over-run.

@@ -123,4 +123,42 @@ fn main() {
         let s = sh.refresh_stats();
         println!("  step_mix/{policy}: units {} | {}", sh.unit_count(), s.summary());
     }
+
+    // ---- The codec-family stack keys (ec4 / f16 / cq-r1 today) at the
+    // same layer mix, under the staggered spreader (their refresh units are
+    // the expensive part — ec4 eigendecomposes per refresh — so the
+    // spreading policy is the realistic deployment). The (side, root)
+    // pairs come from the registry's declarative codec metadata, so a
+    // future family key is benched the moment it registers. Records land
+    // in BENCH_quartz.json next to step_mix/<policy>, putting the codecs
+    // under the advisory regression gate from day one.
+    let family: Vec<(&str, &str, &str)> = quartz::train::registry::stack_keys()
+        .into_iter()
+        .filter_map(|key| {
+            let (side, root) = quartz::train::registry::lookup(key)?.codecs?;
+            Some((key, side, root))
+        })
+        .collect();
+    for (label, side, root) in family {
+        let cfg = ShampooConfig {
+            t1,
+            t2,
+            max_order,
+            refresh_policy: "staggered",
+            side_codec: Some(side),
+            root_codec: Some(root),
+            quant: quartz::quant::QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 5e-4), cfg, &mix);
+        let mut p = mix_params.clone();
+        let mut k = 1u64;
+        b.bench(&format!("step_mix_codec/{label}"), || {
+            sh.step(&mut p, &mix_grads, k, 1.0);
+            k += 1;
+            black_box(&p);
+        });
+        let s = sh.refresh_stats();
+        println!("  step_mix_codec/{label}: units {} | {}", sh.unit_count(), s.summary());
+    }
 }

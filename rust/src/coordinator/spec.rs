@@ -88,11 +88,19 @@ impl OptimizerSpec {
                     let cfg = ShampooConfig { variant, ..Default::default() };
                     return Ok(OptimizerSpec::with_shampoo(base, hyper, cfg));
                 }
-                crate::ensure!(
-                    registry::lookup(s).is_some(),
-                    "unknown shampoo variant or stack key '{s}'"
-                );
-                let mut spec = OptimizerSpec::with_shampoo(base, hyper, ShampooConfig::default());
+                let Some(builder) = registry::lookup(s) else {
+                    bail!("unknown shampoo variant or stack key '{s}'");
+                };
+                let mut cfg = ShampooConfig::default();
+                // Keys with declarative codec metadata (ec4/f16/cq-r1) get
+                // their overrides on the SPEC's config, so the memory model
+                // prices — and labels name — what will actually run, not the
+                // placeholder variant.
+                if let Some((side, root)) = builder.codecs {
+                    cfg.side_codec = Some(side);
+                    cfg.root_codec = Some(root);
+                }
+                let mut spec = OptimizerSpec::with_shampoo(base, hyper, cfg);
                 spec.stack = Some(s.to_string());
                 Ok(spec)
             }
@@ -122,14 +130,28 @@ impl OptimizerSpec {
 
     /// Row label matching the paper's tables (same composition as
     /// `Optimizer::name`, usable before the stack is materialized — OOM
-    /// rows are labeled without ever building the optimizer). For
-    /// runtime-registered keys the key itself names the row.
+    /// rows are labeled without ever building the optimizer). Stack keys
+    /// carrying codec metadata label by their codecs, exactly like the
+    /// built stack's `Optimizer::name`, so spec rows and runtime rows
+    /// always join; metadata-less runtime-registered keys label by key.
     pub fn label(&self) -> String {
+        let base = self.base.name().to_uppercase();
         if let Some(key) = &self.stack {
-            return format!("{} + {} Shampoo", self.base.name().to_uppercase(), key);
+            if let Some(cfg) = &self.shampoo {
+                match (cfg.side_codec, cfg.root_codec) {
+                    (Some(side), Some(root)) if side == root => {
+                        return format!("{base} + {side} Shampoo");
+                    }
+                    (Some(side), Some(root)) => {
+                        return format!("{base} + {side}/{root} Shampoo");
+                    }
+                    _ => {}
+                }
+            }
+            return format!("{base} + {key} Shampoo");
         }
         match &self.shampoo {
-            None => self.base.name().to_uppercase(),
+            None => base,
             Some(cfg) => cfg.variant.stack_label(self.base),
         }
     }
@@ -194,7 +216,8 @@ impl ExperimentSpec {
     /// model = "res_mlp_c32"
     /// base = "sgdm"
     /// shampoo = "cq-ef"      # any train::registry key: 32bit | vq | cq |
-    ///                        # cq-ef | bw8 | none | registered additions
+    ///                        # cq-ef | bw8 | ec4 | f16 | cq-r1 | none |
+    ///                        # registered additions
     /// refresh_policy = "staggered"  # any shampoo::scheduler key:
     ///                               # every-n | staggered | staleness | …
     /// refresh_budget = 4            # staleness per-step unit budget (0 = auto)
@@ -232,6 +255,7 @@ impl ExperimentSpec {
                 hyper.lr = lr as f32;
             }
             let mut stack = None;
+            let mut stack_codecs = None;
             let shampoo = match t.get("shampoo").and_then(|v| v.as_str()) {
                 None | Some("none") => None,
                 Some(s) => {
@@ -240,15 +264,22 @@ impl ExperimentSpec {
                     let variant = match ShampooVariant::parse(s) {
                         Some(v) => v,
                         None => {
-                            crate::ensure!(
-                                registry::lookup(s).is_some(),
-                                "runs[{i}]: unknown shampoo variant or stack key '{s}'"
-                            );
+                            let Some(builder) = registry::lookup(s) else {
+                                bail!("runs[{i}]: unknown shampoo variant or stack key '{s}'");
+                            };
                             stack = Some(s.to_string());
+                            // Declarative codec metadata (ec4/f16/cq-r1):
+                            // carried onto the run config below so modeled
+                            // bytes and labels match what runs.
+                            stack_codecs = builder.codecs;
                             ShampooVariant::default_for_custom()
                         }
                     };
                     let mut cfg = ShampooConfig { variant, ..Default::default() };
+                    if let Some((side, root)) = stack_codecs {
+                        cfg.side_codec = Some(side);
+                        cfg.root_codec = Some(root);
+                    }
                     if let Some(t1) = t.get("t1").and_then(|v| v.as_i64()) {
                         cfg.t1 = t1 as u64;
                     }
@@ -440,6 +471,45 @@ base = "adamw"
     }
 
     #[test]
+    fn toml_and_cli_names_reach_the_codec_family_keys() {
+        // `ec4`/`f16`/`cq-r1` resolve as stack keys (no ShampooVariant arm)
+        // from both entry points: TOML specs (with interval overrides
+        // applied) and the `--shampoo` path through `from_names`. Spec
+        // resolution must copy the keys' registry codec metadata onto the
+        // run config, so the memory model prices the actual representation
+        // (an `f16` run costs 2 B/elem, not the placeholder variant's
+        // nibbles) and labels name what runs.
+        for (key, side, root) in
+            [("ec4", "ec4", "ec4"), ("f16", "f16", "f16"), ("cq-r1", "cq-r1", "vq4")]
+        {
+            let text = format!("\n[[runs]]\nmodel = \"m\"\nshampoo = \"{key}\"\nt1 = 9\n");
+            let spec = ExperimentSpec::from_toml(&text).unwrap();
+            let opt = &spec.runs[0].optimizer;
+            assert_eq!(opt.stack_key(), key);
+            let sh = opt.shampoo.as_ref().unwrap();
+            assert_eq!(sh.t1, 9);
+            assert_eq!(sh.side_codec, Some(side), "TOML spec must carry codec metadata");
+            assert_eq!(sh.root_codec, Some(root));
+            assert!(opt.label().contains(key), "{}", opt.label());
+
+            let named = OptimizerSpec::from_names("sgdm", key).unwrap();
+            assert_eq!(named.stack_key(), key);
+            let cfg = named.shampoo.as_ref().unwrap();
+            assert_eq!(cfg.side_codec, Some(side));
+            assert_eq!(cfg.root_codec, Some(root));
+            // Spec label (pre-build) and Optimizer::name (post-build) agree
+            // exactly — PR 2's single-naming-source invariant: runner rows
+            // and trainer rows for the same run always join.
+            let stack = named.build(&[(8, 8)]);
+            assert_eq!(named.label(), stack.label(), "key '{key}'");
+        }
+        let named = OptimizerSpec::from_names("sgdm", "f16").unwrap();
+        assert_eq!(named.label(), "SGDM + f16 Shampoo");
+        let named = OptimizerSpec::from_names("sgdm", "cq-r1").unwrap();
+        assert_eq!(named.label(), "SGDM + cq-r1/vq4 Shampoo");
+    }
+
+    #[test]
     fn runtime_registered_stack_reaches_specs_and_toml() {
         use crate::optim::BaseOptimizer;
         use crate::shampoo::Shampoo;
@@ -456,6 +526,7 @@ base = "adamw"
             key: "custom-vq",
             summary: "test-only registered stack",
             build: build_custom,
+            codecs: None,
         });
 
         // from_names resolves the registered key…

@@ -8,20 +8,60 @@
 use super::matmul::{matmul_into_planned, MatmulPlan};
 use super::matrix::Matrix;
 
+/// Reusable f64 workspace for [`eig_sym_with`].
+///
+/// The Jacobi iteration keeps two `n×n` f64 grids (the rotating copy of `A`
+/// and the accumulated eigenvector product) plus the sort permutation.
+/// Callers that decompose in a loop — the `ec4` codec re-factors a
+/// preconditioner at every refresh — reuse one `EigWork` (per worker
+/// thread, NOT per state slot: at `16n²` bytes it would dwarf a quantized
+/// slot's persistent state) so the steady state does not reallocate per
+/// call.
+#[derive(Clone, Debug, Default)]
+pub struct EigWork {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    pairs: Vec<(f64, usize)>,
+}
+
 /// Eigen-decomposition of symmetric `a`: returns `(eigenvalues, V)` where
 /// columns of `V` are the corresponding orthonormal eigenvectors
 /// (`A = V·diag(λ)·Vᵀ`). Eigenvalues are sorted ascending.
 pub fn eig_sym(a: &Matrix, tol: f64, max_sweeps: usize) -> (Vec<f32>, Matrix) {
+    let mut work = EigWork::default();
+    let mut vals = Vec::new();
+    let mut vecs = Matrix::zeros(a.rows(), a.cols());
+    eig_sym_with(a, tol, max_sweeps, &mut work, &mut vals, &mut vecs);
+    (vals, vecs)
+}
+
+/// [`eig_sym`] writing into caller-owned outputs, with all f64 temporaries
+/// drawn from `work` — the allocation-free variant the `ec4` codec drives
+/// at every refresh. `vecs` must be `n×n` (fully overwritten); `vals` is
+/// cleared and refilled with the ascending eigenvalues.
+pub fn eig_sym_with(
+    a: &Matrix,
+    tol: f64,
+    max_sweeps: usize,
+    work: &mut EigWork,
+    vals: &mut Vec<f32>,
+    vecs: &mut Matrix,
+) {
     assert!(a.is_square());
     let n = a.rows();
+    assert_eq!((vecs.rows(), vecs.cols()), (n, n), "vecs must be n×n");
     // Work in f64 for orthogonality quality.
-    let mut m: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
-    let mut v: Vec<f64> = vec![0.0; n * n];
+    let m = &mut work.m;
+    m.clear();
+    m.extend(a.data().iter().map(|&x| x as f64));
+    let v = &mut work.v;
+    v.clear();
+    v.resize(n * n, 0.0);
     for i in 0..n {
         v[i * n + i] = 1.0;
     }
 
-    let off = |m: &Vec<f64>| -> f64 {
+    let off = |m: &[f64]| -> f64 {
         let mut s = 0.0;
         for i in 0..n {
             for j in (i + 1)..n {
@@ -33,7 +73,7 @@ pub fn eig_sym(a: &Matrix, tol: f64, max_sweeps: usize) -> (Vec<f32>, Matrix) {
 
     let scale = m.iter().map(|x| x.abs()).fold(0.0f64, f64::max).max(1e-300);
     for _sweep in 0..max_sweeps {
-        if off(&m) <= tol * scale * n as f64 {
+        if off(m) <= tol * scale * n as f64 {
             break;
         }
         for p in 0..n {
@@ -72,16 +112,17 @@ pub fn eig_sym(a: &Matrix, tol: f64, max_sweeps: usize) -> (Vec<f32>, Matrix) {
     }
 
     // Extract + sort ascending.
-    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    let pairs = &mut work.pairs;
+    pairs.clear();
+    pairs.extend((0..n).map(|i| (m[i * n + i], i)));
     pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let vals: Vec<f32> = pairs.iter().map(|&(l, _)| l as f32).collect();
-    let mut vecs = Matrix::zeros(n, n);
+    vals.clear();
+    vals.extend(pairs.iter().map(|&(l, _)| l as f32));
     for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
         for r in 0..n {
             vecs[(r, new_col)] = v[r * n + old_col] as f32;
         }
     }
-    (vals, vecs)
 }
 
 /// Exact `A^{-1/p}` via eigendecomposition: `V·diag(λ^{-1/p})·Vᵀ`.
@@ -168,6 +209,22 @@ mod tests {
         let (_, v) = eig_sym(&a, 1e-12, 100);
         let vtv = matmul(&v.transpose(), &v);
         assert!(vtv.max_abs_diff(&Matrix::eye(8)) < 1e-4);
+    }
+
+    #[test]
+    fn eig_sym_with_matches_allocating_path_and_reuses_buffers() {
+        let mut rng = Rng::new(5);
+        let mut work = EigWork::default();
+        let mut vals = Vec::new();
+        let mut vecs = Matrix::zeros(9, 9);
+        for trial in 0..3 {
+            let g = Matrix::randn(9, 12, 1.0, &mut rng);
+            let a = syrk(&g);
+            let (want_vals, want_vecs) = eig_sym(&a, 1e-12, 100);
+            eig_sym_with(&a, 1e-12, 100, &mut work, &mut vals, &mut vecs);
+            assert_eq!(vals, want_vals, "trial {trial}");
+            assert_eq!(vecs.max_abs_diff(&want_vecs), 0.0, "trial {trial}");
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub use cholesky::{
     cholesky, cholesky_into, cholesky_jittered, cholesky_jittered_into, cholesky_naive,
     CHOLESKY_BLOCKED_MIN,
 };
-pub use eigen::{eig_sym, inverse_pth_root_eig, inverse_pth_root_eig_planned};
+pub use eigen::{eig_sym, eig_sym_with, inverse_pth_root_eig, inverse_pth_root_eig_planned, EigWork};
 pub use kron::kron;
 pub use matmul::{
     matmul, matmul_into, matmul_into_planned, matmul_nt, matmul_nt_into, matmul_tn,

@@ -121,26 +121,12 @@ fn print_help() {
     }
 }
 
-/// List every registered optimizer stack and preconditioner codec.
+/// List the three registries — optimizer stacks, preconditioner codecs
+/// (with bytes-per-element at a reference order), refresh policies — under
+/// grouped headers. Rendering lives in `report::codecs` so the output is
+/// snapshot-tested.
 fn cmd_codecs() -> Result<()> {
-    let mut t = Table::new("optimizer stacks (train::registry)", &["key", "summary"]);
-    for key in quartz::train::registry::stack_keys() {
-        let b = quartz::train::registry::lookup(key).unwrap();
-        t.row(vec![key.to_string(), b.summary.to_string()]);
-    }
-    t.print();
-    let mut t = Table::new("preconditioner codecs (quant::codec)", &["key", "summary"]);
-    for key in quartz::quant::codec::codec_keys() {
-        let b = quartz::quant::codec::lookup(key).unwrap();
-        t.row(vec![key.to_string(), b.summary.to_string()]);
-    }
-    t.print();
-    let mut t = Table::new("refresh policies (shampoo::scheduler)", &["key", "summary"]);
-    for key in quartz::shampoo::scheduler::scheduler_keys() {
-        let b = quartz::shampoo::scheduler::lookup(key).unwrap();
-        t.row(vec![key.to_string(), b.summary.to_string()]);
-    }
-    t.print();
+    println!("{}", quartz::report::codecs::codec_listing());
     Ok(())
 }
 

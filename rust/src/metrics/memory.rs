@@ -8,7 +8,7 @@
 //! `size_bytes()` of live optimizer states (no drift allowed).
 
 use crate::optim::OptimizerKind;
-use crate::shampoo::{Blocking, ShampooConfig, ShampooVariant, UnitMeta};
+use crate::shampoo::{Blocking, ShampooConfig, UnitMeta};
 
 /// Byte accountant for a model (list of parameter shapes).
 #[derive(Clone, Debug)]
@@ -69,52 +69,65 @@ fn n_scales(dim: usize, block: usize) -> usize {
     b * b
 }
 
-/// Bytes of one Gram-side store (`L` or `R`) of order `dim`.
-fn side_bytes(dim: usize, cfg: &ShampooConfig) -> usize {
-    let f32_full = dim * dim * 4;
-    let quantized = dim * dim >= cfg.quant.min_quant_elems;
-    match cfg.variant {
-        ShampooVariant::Full32 => f32_full,
-        _ if !quantized => f32_full,
-        ShampooVariant::Vq4 if cfg.vq_quantize_diag => {
-            // Tab. 2 "Original": codes + scales, no f32 diagonal
-            (dim * dim).div_ceil(2) + n_scales(dim, cfg.quant.block) * 4
-        }
-        ShampooVariant::Vq4 => {
-            // off-diag 4-bit codes (full grid) + scales + f32 diagonal
-            (dim * dim).div_ceil(2) + n_scales(dim, cfg.quant.block) * 4 + dim * 4
-        }
-        ShampooVariant::Cq4 { error_feedback: true } => {
-            // Fig. 2 joint store: one full nibble grid + diag + 2 scale sets
-            (dim * dim).div_ceil(2) + dim * 4 + 2 * n_scales(dim, cfg.quant.block) * 4
-        }
-        ShampooVariant::Cq4 { error_feedback: false } => {
-            // lower-triangle nibbles only + diag + 1 scale set
-            ((dim * (dim + 1)) / 2).div_ceil(2) + dim * 4 + n_scales(dim, cfg.quant.block) * 4
-        }
-        ShampooVariant::Bw8 => {
-            // one byte per off-diag code + scales + f32 diagonal
-            dim * dim + n_scales(dim, cfg.quant.block) * 4 + dim * 4
-        }
+/// Closed-form bytes of one `dim×dim` slot stored under a **side**
+/// constructor of codec `key`. This mirrors `quant::codec` exactly, keyed
+/// on the registry string rather than on `ShampooVariant` — so the model
+/// prices `side_codec`/`root_codec` overrides and the `ec4`/`f16`/`cq-r1`
+/// family through the same formulas as the variant-derived keys, and the
+/// parity tests below pin each one against a *live* optimizer's measured
+/// `size_bytes()`. Unknown (runtime-registered) keys are approximated with
+/// the `cq4-ef` footprint — the same convention
+/// `ShampooVariant::default_for_custom` uses.
+fn codec_side_bytes(key: &str, dim: usize, cfg: &ShampooConfig) -> usize {
+    let scales = n_scales(dim, cfg.quant.block) * 4;
+    match key {
+        "f32" => dim * dim * 4,
+        // dense IEEE half: two bytes per element, no side-bands
+        "f16" => dim * dim * 2,
+        // off-diag 4-bit codes (full grid) + scales + f32 diagonal
+        "vq4" => (dim * dim).div_ceil(2) + scales + dim * 4,
+        // Tab. 2 "Original": codes + scales, no f32 diagonal
+        "vq4-full" => (dim * dim).div_ceil(2) + scales,
+        // lower-triangle nibbles only + diag + 1 scale set
+        "cq4" => ((dim * (dim + 1)) / 2).div_ceil(2) + dim * 4 + scales,
+        // Fig. 2 joint store: one full nibble grid + diag + 2 scale sets
+        "cq4-ef" => (dim * dim).div_ceil(2) + dim * 4 + 2 * scales,
+        // cq4 payload + the per-row f32 scale vector
+        "cq-r1" => codec_side_bytes("cq4", dim, cfg) + dim * 4,
+        // one byte per off-diag code + scales + f32 diagonal
+        "bw8" => dim * dim + scales + dim * 4,
+        // 4-bit eigenvector grid + scales + f32 eigenvalue vector
+        "ec4" => (dim * dim).div_ceil(2) + scales + dim * 4,
+        _ => codec_side_bytes("cq4-ef", dim, cfg),
     }
+}
+
+/// Like [`codec_side_bytes`] for a **root** constructor: the Cholesky-family
+/// builders keep off-diagonally quantized roots (Sec. 4.2: roots are applied
+/// every step and never factored), so their root slots price as `vq4`.
+fn codec_root_bytes(key: &str, dim: usize, cfg: &ShampooConfig) -> usize {
+    match key {
+        "cq4" | "cq4-ef" | "cq-r1" => codec_side_bytes("vq4", dim, cfg),
+        _ => codec_side_bytes(key, dim, cfg),
+    }
+}
+
+/// Bytes of one Gram-side store (`L` or `R`) of order `dim`, honoring the
+/// small-tensor exemption exactly like `shampoo::state`.
+fn side_bytes(dim: usize, cfg: &ShampooConfig) -> usize {
+    if dim * dim < cfg.quant.min_quant_elems {
+        return dim * dim * 4;
+    }
+    codec_side_bytes(cfg.side_codec_key(), dim, cfg)
 }
 
 /// Bytes of one inverse-root store (`L̂` or `R̂`) of order `dim`.
 fn root_bytes(dim: usize, cfg: &ShampooConfig) -> usize {
-    let f32_full = dim * dim * 4;
-    let quantized = dim * dim >= cfg.quant.min_quant_elems;
-    match cfg.variant {
-        ShampooVariant::Full32 => f32_full,
-        _ if !quantized => f32_full,
-        // 8-bit roots: one byte per off-diag code + scales + diagonal.
-        ShampooVariant::Bw8 => dim * dim + n_scales(dim, cfg.quant.block) * 4 + dim * 4,
-        // All 4-bit variants quantize the roots off-diagonally (Sec. 4.2:
-        // roots are NOT Cholesky-factored — they're used every step).
-        ShampooVariant::Vq4 if cfg.vq_quantize_diag => {
-            (dim * dim).div_ceil(2) + n_scales(dim, cfg.quant.block) * 4
-        }
-        _ => (dim * dim).div_ceil(2) + n_scales(dim, cfg.quant.block) * 4 + dim * 4,
+    let key = cfg.root_codec_key();
+    if key == "f32" || dim * dim < cfg.quant.min_quant_elems {
+        return dim * dim * 4;
     }
+    codec_root_bytes(key, dim, cfg)
 }
 
 #[cfg(test)]
@@ -123,7 +136,7 @@ mod tests {
     use crate::linalg::Matrix;
     use crate::optim::BaseOptimizer;
     use crate::quant::QuantConfig;
-    use crate::shampoo::Shampoo;
+    use crate::shampoo::{Shampoo, ShampooVariant};
     use crate::util::rng::Rng;
 
     fn run_one_step(variant: ShampooVariant, shapes: &[(usize, usize)]) -> (usize, ShampooConfig) {
@@ -160,6 +173,41 @@ mod tests {
             let (measured, cfg) = run_one_step(variant, &shapes);
             let predicted = MemoryModel::new(&shapes).shampoo_bytes(&cfg);
             assert_eq!(predicted, measured, "variant {variant:?}");
+        }
+    }
+
+    /// The `ec4`/`f16`/`cq-r1` family has no `ShampooVariant` arm — it runs
+    /// through `side_codec`/`root_codec` overrides — and the key-based model
+    /// must stay byte-exact against the live optimizer there too. The
+    /// pairings come from the registry's codec metadata, so a future family
+    /// key joins this parity gate automatically.
+    #[test]
+    fn model_matches_measured_bytes_for_codec_override_families() {
+        let shapes = [(64, 48), (33, 1), (120, 100)];
+        let family: Vec<(&str, &str)> = crate::train::registry::stack_keys()
+            .into_iter()
+            .filter_map(|key| crate::train::registry::lookup(key)?.codecs)
+            .collect();
+        assert!(family.len() >= 3, "ec4/f16/cq-r1 must declare codec metadata");
+        for (side, root) in family {
+            let cfg = ShampooConfig {
+                t1: 1,
+                t2: 1,
+                side_codec: Some(side),
+                root_codec: Some(root),
+                quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+                max_order: 96,
+                ..Default::default()
+            };
+            let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), cfg, &shapes);
+            let mut rng = Rng::new(17);
+            let mut params: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+            sh.step(&mut params, &grads, 1, 1.0);
+            let predicted = MemoryModel::new(&shapes).shampoo_bytes(&cfg);
+            assert_eq!(predicted, sh.shampoo_state_bytes(), "codecs {side}/{root}");
         }
     }
 

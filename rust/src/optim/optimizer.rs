@@ -10,6 +10,21 @@ use crate::linalg::Matrix;
 /// coordinator, and examples program exclusively against this trait (boxed
 /// inside `train::OptimizerStack`), so new optimizers plug in without
 /// touching any of them.
+///
+/// ```
+/// use quartz::optim::{BaseOptimizer, Optimizer};
+/// use quartz::linalg::Matrix;
+///
+/// let mut opt = BaseOptimizer::sgd(0.5, 0.0);
+/// opt.init(1);
+/// let mut params = vec![Matrix::eye(2)];
+/// let grads = vec![Matrix::eye(2)];
+/// opt.step(&mut params, &grads, 1, 1.0);
+/// // One SGD step at lr 0.5 against an identity gradient: 1 − 0.5 = 0.5.
+/// assert!((params[0][(0, 0)] - 0.5).abs() < 1e-6);
+/// assert_eq!(opt.name(), "SGD");
+/// assert_eq!(opt.state_bytes(), 0, "plain SGD keeps no state");
+/// ```
 pub trait Optimizer: Send {
     /// Allocate per-parameter state for `n_params` parameters. Optimizers
     /// built with shapes up-front may make this a no-op.

@@ -16,14 +16,42 @@
 //! | `cq4`      | 4-bit quantized Cholesky factor                  | §4.2   |
 //! | `cq4-ef`   | `cq4` + error feedback in the upper triangle     | §4.3   |
 //! | `bw8`      | 8-bit block-wise, f32 diagonal                   | —      |
+//! | `ec4`      | eigenvalue-corrected 4-bit eigenfactors          | [^ec]  |
+//! | `f16`      | dense IEEE half precision                        | —      |
+//! | `cq-r1`    | `cq4` + per-row f32 scale correction             | [^r1]  |
+//!
+//! [^ec]: *4-bit Shampoo* (arXiv 2405.18144), see [`crate::quant::ec4`].
+//!
+//! [^r1]: rank-1 correction in the spirit of arXiv 2309.01507, see
+//! [`crate::quant::cq_r1`].
 //!
 //! The set is *open*: [`register`] adds a codec at runtime, and everything
 //! above the quant layer (Shampoo state, TOML specs, the memory accountant's
 //! callers, the codec benches and the codec-generic test suite) resolves
 //! codecs through [`lookup`] by string key. Adding a representation is one
-//! `impl PrecondCodec` plus one `register` call — no enum arms to edit.
+//! `impl PrecondCodec` plus one `register` call — no enum arms to edit
+//! (`docs/ARCHITECTURE.md` walks through the full recipe):
+//!
+//! ```
+//! use quartz::quant::codec::lookup;
+//! use quartz::quant::{BlockQuantizer, CodecCtx, QuantConfig};
+//! use quartz::linalg::Matrix;
+//! use std::sync::Arc;
+//!
+//! let q = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
+//! let ctx = CodecCtx::new(1e-6, 0.95, Arc::new(q));
+//! // Every registered key resolves to side/root constructors…
+//! let builder = lookup("cq4-ef").expect("built-in");
+//! let mut side = (builder.side)(&ctx);
+//! // …and round-trips a preconditioner within its representation error.
+//! side.init(8, 1e-6);
+//! assert!(side.load().max_abs_diff(&Matrix::eye_scaled(8, 1e-6)) < 1e-6);
+//! ```
 
 use super::blockwise::{BlockQuantizer, QuantConfig, QuantizedMatrix};
+use super::cq_r1::CholeskyR1Codec;
+use super::ec4::Ec4Codec;
+use super::half::F16Codec;
 use super::offdiag::{dequantize_offdiag, quantize_offdiag, OffDiagQuantized};
 use super::tri_store::TriJointStore;
 use crate::linalg::{cholesky_jittered_into, matmul_nt_into, Matrix, ScratchArena};
@@ -412,10 +440,13 @@ impl PrecondCodec for CholeskyCodec {
 /// every step (Sec. 4.2).
 #[derive(Clone, Copy)]
 pub struct CodecBuilder {
+    /// Registry key (the `side_codec`/`root_codec` config spelling).
     pub key: &'static str,
     /// One-line description for docs/CLI listings.
     pub summary: &'static str,
+    /// Constructor for a Gram-side slot (`L`/`R`).
     pub side: fn(&CodecCtx) -> Box<dyn PrecondCodec>,
+    /// Constructor for an inverse-root slot (`L̂`/`R̂`).
     pub root: fn(&CodecCtx) -> Box<dyn PrecondCodec>,
 }
 
@@ -461,6 +492,18 @@ fn bw8_ctor(ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
     Box::new(OffDiagCodec::new("bw8", eight_bit(ctx)))
 }
 
+fn ec4_ctor(ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::new(Ec4Codec::new(ctx))
+}
+
+fn f16_ctor(_ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::<F16Codec>::default()
+}
+
+fn cq_r1_ctor(ctx: &CodecCtx) -> Box<dyn PrecondCodec> {
+    Box::new(CholeskyR1Codec::new(ctx))
+}
+
 fn builtin_codecs() -> Vec<CodecBuilder> {
     vec![
         CodecBuilder {
@@ -498,6 +541,27 @@ fn builtin_codecs() -> Vec<CodecBuilder> {
             summary: "8-bit block-wise, f32 diagonal",
             side: bw8_ctor,
             root: bw8_ctor,
+        },
+        CodecBuilder {
+            key: "ec4",
+            summary: "eigenvalue-corrected 4-bit eigenfactors (arXiv 2405.18144)",
+            side: ec4_ctor,
+            root: ec4_ctor,
+        },
+        CodecBuilder {
+            key: "f16",
+            summary: "dense IEEE half precision (software conversion)",
+            side: f16_ctor,
+            root: f16_ctor,
+        },
+        CodecBuilder {
+            // Like `cq4`, the factored representation is for the sides;
+            // roots stay off-diagonal-quantized (they are applied every
+            // step — Sec. 4.2's argument is unchanged by the row scales).
+            key: "cq-r1",
+            summary: "4-bit Cholesky + per-row f32 scale correction",
+            side: cq_r1_ctor,
+            root: vq4_ctor,
         },
     ]
 }
@@ -542,7 +606,7 @@ mod tests {
 
     #[test]
     fn builtins_are_registered() {
-        for key in ["f32", "vq4", "vq4-full", "cq4", "cq4-ef", "bw8"] {
+        for key in ["f32", "vq4", "vq4-full", "cq4", "cq4-ef", "bw8", "ec4", "f16", "cq-r1"] {
             let b = lookup(key).unwrap_or_else(|| panic!("missing builtin '{key}'"));
             assert_eq!(b.key, key);
         }
@@ -636,7 +700,7 @@ mod tests {
             s.add_diag(0.5);
             s
         };
-        for key in ["f32", "vq4", "vq4-full", "cq4", "cq4-ef", "bw8"] {
+        for key in ["f32", "vq4", "vq4-full", "cq4", "cq4-ef", "bw8", "ec4", "f16", "cq-r1"] {
             let b = lookup(key).unwrap();
             let mut codec = (b.side)(&ctx);
             let mut arena = ScratchArena::new();
@@ -655,7 +719,7 @@ mod tests {
     #[test]
     fn only_ef_codec_exposes_error_state() {
         let ctx = ctx();
-        for key in ["f32", "vq4", "vq4-full", "cq4", "bw8"] {
+        for key in ["f32", "vq4", "vq4-full", "cq4", "bw8", "ec4", "f16", "cq-r1"] {
             let mut c = (lookup(key).unwrap().side)(&ctx);
             c.init(8, 1e-6);
             assert!(c.error_state().is_none(), "{key} must not carry EF state");

@@ -1,0 +1,198 @@
+//! Cholesky quantization with a rank-1 row-scale correction — the `cq-r1`
+//! codec.
+//!
+//! Layered on the plain 4-bit Cholesky scheme (Sec. 4.2): `store` factors
+//! the incoming PSD matrix, packs the factor into the Fig. 2 triangular
+//! buffer exactly like `cq4`, and additionally keeps a **per-row f32 scale
+//! vector** `s` — the least-squares fit `s_i = ⟨C_i, D(C̄)_i⟩ / ‖D(C̄)_i‖²`
+//! over each stored row. `load` folds the scales back in and reconstructs
+//! `(S·D(C̄))·(S·D(C̄))ᵀ` with `S = diag(s)` — a diagonal congruence, so the
+//! PSD-by-construction guarantee of the Cholesky family is untouched. Per
+//! row the fitted scale can only tighten the factor error (it minimizes it
+//! over a scalar; `s ≡ 1` recovers `cq4` exactly), at a cost of `4n` bytes —
+//! the same side-band order as the f32 diagonal already stored.
+//!
+//! This is the blockwise analogue of the rank-1 corrections in *Memory
+//! Efficient Optimizers with 4-bit States* (arXiv 2309.01507), applied to
+//! the factor rather than to raw optimizer moments.
+
+use super::blockwise::BlockQuantizer;
+use super::codec::{CodecCtx, PrecondCodec};
+use super::tri_store::TriJointStore;
+use crate::linalg::{cholesky_jittered_into, matmul_nt_into, Matrix, ScratchArena};
+use std::sync::Arc;
+
+/// 4-bit Cholesky factor + per-row f32 scale correction (`cq-r1` key).
+#[derive(Clone, Debug)]
+pub struct CholeskyR1Codec {
+    eps: f32,
+    q: Arc<BlockQuantizer>,
+    s: Option<TriJointStore>,
+    /// Per-row least-squares scales, refreshed at every `store`.
+    row_scale: Vec<f32>,
+}
+
+impl CholeskyR1Codec {
+    pub fn new(ctx: &CodecCtx) -> CholeskyR1Codec {
+        CholeskyR1Codec {
+            eps: ctx.eps,
+            q: Arc::clone(&ctx.quantizer),
+            s: None,
+            row_scale: Vec::new(),
+        }
+    }
+}
+
+impl PrecondCodec for CholeskyR1Codec {
+    fn key(&self) -> &'static str {
+        "cq-r1"
+    }
+
+    /// `C₀ = √ε·I` with unit scales — bit-identical to the `cq4` initial
+    /// state plus a neutral correction.
+    fn init(&mut self, dim: usize, eps: f32) {
+        self.eps = eps;
+        self.s = Some(TriJointStore::init(dim, eps, &self.q));
+        self.row_scale.clear();
+        self.row_scale.resize(dim, 1.0);
+    }
+
+    fn store(&mut self, x: &Matrix) {
+        self.store_into(x, &mut ScratchArena::new());
+    }
+
+    fn load(&self) -> Matrix {
+        let n = self.s.as_ref().expect("CholeskyR1Codec::load before store").n;
+        let mut out = Matrix::zeros(n, n);
+        self.load_into(&mut out, &mut ScratchArena::new());
+        out
+    }
+
+    /// Factor → pack (factor quantized once, like the fused `cq4` path) →
+    /// read `D(C̄)` back from the packed codes → fit the row scales.
+    fn store_into(&mut self, x: &Matrix, scratch: &mut ScratchArena) {
+        let n = x.rows();
+        let mut c = scratch.take(n, n);
+        if cholesky_jittered_into(x, self.eps, 12, &mut c).is_err() {
+            // Same reset contract as CholeskyCodec: a pathological Gram
+            // falls back to the initial factor.
+            c.set_eye_scaled(self.eps.sqrt());
+        }
+        let store = self.s.get_or_insert_with(TriJointStore::empty);
+        store.store_c_into(&c, &self.q);
+        store.store_e_zero(&self.q);
+        let mut d = scratch.take(n, n);
+        store.load_c_into(&self.q, &mut d);
+        self.row_scale.clear();
+        for i in 0..n {
+            let (crow, drow) = (c.row(i), d.row(i));
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            // Lower triangle incl. diagonal (the diagonal is stored exactly,
+            // pulling the fit toward 1 as the off-diag error vanishes).
+            for j in 0..=i {
+                num += crow[j] as f64 * drow[j] as f64;
+                den += drow[j] as f64 * drow[j] as f64;
+            }
+            let s = if den > 0.0 { (num / den) as f32 } else { 1.0 };
+            self.row_scale.push(if s.is_finite() { s } else { 1.0 });
+        }
+        scratch.recycle(d);
+        scratch.recycle(c);
+    }
+
+    /// `(S·D(C̄))·(S·D(C̄))ᵀ` into `out`, factor staged in the arena.
+    fn load_into(&self, out: &mut Matrix, scratch: &mut ScratchArena) {
+        let store = self.s.as_ref().expect("CholeskyR1Codec::load before store");
+        let mut c = scratch.take(store.n, store.n);
+        store.load_c_into(&self.q, &mut c);
+        for i in 0..store.n {
+            let s = self.row_scale[i];
+            for v in c.row_mut(i).iter_mut() {
+                *v *= s;
+            }
+        }
+        matmul_nt_into(&c, &c, out);
+        scratch.recycle(c);
+    }
+
+    /// The `cq4` triangular payload (lower-tri nibbles + f32 diagonal + one
+    /// scale set) plus the `4n`-byte row-scale vector.
+    fn size_bytes(&self) -> usize {
+        self.s.as_ref().map(|s| s.size_bytes_cq_only()).unwrap_or(0) + self.row_scale.len() * 4
+    }
+
+    fn clone_box(&self) -> Box<dyn PrecondCodec> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eig_sym;
+    use crate::quant::QuantConfig;
+    use crate::util::rng::Rng;
+
+    fn ctx() -> CodecCtx {
+        let q = BlockQuantizer::new(QuantConfig {
+            min_quant_elems: 0,
+            block: 16,
+            ..Default::default()
+        });
+        CodecCtx::new(1e-6, 0.95, Arc::new(q))
+    }
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let g = Matrix::randn(n, n + 4, 1.0, &mut rng);
+        let mut a = crate::linalg::syrk(&g);
+        a.add_diag(0.5);
+        a
+    }
+
+    #[test]
+    fn row_scales_never_hurt_the_factor_fit() {
+        // Per row the LS scale minimizes ‖s·D_i − C_i‖ over s, so the scaled
+        // factor is at least as close as the raw cq4 factor row-by-row.
+        let ctx = ctx();
+        let a = spd(24, 1);
+        let mut r1 = CholeskyR1Codec::new(&ctx);
+        r1.store(&a);
+        let mut plain = crate::quant::codec::CholeskyCodec::new(false, &ctx);
+        plain.store(&a);
+        let e_r1 = crate::linalg::relative_error(&a, &r1.load());
+        let e_cq = crate::linalg::relative_error(&a, &plain.load());
+        assert!(e_r1 <= e_cq * 1.05 + 1e-6, "cq-r1 {e_r1} must track ≤ cq4 {e_cq}");
+    }
+
+    #[test]
+    fn reconstruction_stays_psd() {
+        let ctx = ctx();
+        let mut c = CholeskyR1Codec::new(&ctx);
+        c.store(&spd(16, 2));
+        let (vals, _) = eig_sym(&c.load(), 1e-10, 100);
+        assert!(vals[0] >= -1e-6, "diagonal congruence keeps PSD, λmin={}", vals[0]);
+    }
+
+    #[test]
+    fn size_adds_one_f32_per_row_over_cq4() {
+        let ctx = ctx();
+        let a = spd(32, 3);
+        let mut r1 = CholeskyR1Codec::new(&ctx);
+        r1.store(&a);
+        let mut plain = crate::quant::codec::CholeskyCodec::new(false, &ctx);
+        plain.store(&a);
+        assert_eq!(r1.size_bytes(), plain.size_bytes() + 32 * 4);
+    }
+
+    #[test]
+    fn pathological_input_resets() {
+        let ctx = ctx();
+        let mut c = CholeskyR1Codec::new(&ctx);
+        let mut bad = Matrix::zeros(6, 6);
+        bad[(0, 0)] = f32::NAN;
+        c.store(&bad);
+        assert!(!c.load().has_non_finite());
+    }
+}

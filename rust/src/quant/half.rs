@@ -1,0 +1,98 @@
+//! Dense IEEE-754 half-precision preconditioner storage — the `f16` codec.
+//!
+//! The memory/accuracy midpoint between dense f32 (Algorithm 2) and the
+//! 4-bit families: exactly 2 bytes per element, no block scales, no
+//! diagonal side-band, and a ~`2⁻¹¹` relative round-trip error that is two
+//! orders of magnitude below 4-bit quantization noise. Conversion is the
+//! software routine in [`crate::quant::mapping`] (the crate is
+//! dependency-free), including gradual underflow so `ε·I` initial states
+//! survive the trip.
+
+use super::codec::PrecondCodec;
+use super::mapping::{f16_to_f32, f32_to_f16};
+use crate::linalg::{Matrix, ScratchArena};
+
+/// Half-precision storage of one preconditioner matrix (`f16` registry key).
+#[derive(Clone, Debug, Default)]
+pub struct F16Codec {
+    rows: usize,
+    cols: usize,
+    data: Vec<u16>,
+}
+
+impl PrecondCodec for F16Codec {
+    fn key(&self) -> &'static str {
+        "f16"
+    }
+
+    fn store(&mut self, x: &Matrix) {
+        self.store_into(x, &mut ScratchArena::new());
+    }
+
+    fn load(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        self.load_into(&mut out, &mut ScratchArena::new());
+        out
+    }
+
+    fn store_into(&mut self, x: &Matrix, _scratch: &mut ScratchArena) {
+        self.rows = x.rows();
+        self.cols = x.cols();
+        self.data.clear();
+        self.data.extend(x.data().iter().map(|&v| f32_to_f16(v)));
+    }
+
+    fn load_into(&self, out: &mut Matrix, _scratch: &mut ScratchArena) {
+        assert!(!self.data.is_empty(), "F16Codec::load before store");
+        assert_eq!((out.rows(), out.cols()), (self.rows, self.cols));
+        for (slot, &h) in out.data_mut().iter_mut().zip(self.data.iter()) {
+            *slot = f16_to_f32(h);
+        }
+    }
+
+    /// Exactly 2 bytes per element — no scales, no f32 side-band.
+    fn size_bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+
+    fn clone_box(&self) -> Box<dyn PrecondCodec> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_is_half_precision_accurate() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(12, 12, 3.0, &mut rng);
+        let mut c = F16Codec::default();
+        c.store(&x);
+        let back = c.load();
+        for i in 0..12 {
+            for j in 0..12 {
+                let (a, b) = (x[(i, j)], back[(i, j)]);
+                assert!((a - b).abs() <= a.abs() / 2048.0 + 1e-24, "({i},{j}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn size_is_two_bytes_per_element() {
+        let mut c = F16Codec::default();
+        assert_eq!(c.size_bytes(), 0);
+        c.store(&Matrix::zeros(17, 17));
+        assert_eq!(c.size_bytes(), 17 * 17 * 2);
+    }
+
+    #[test]
+    fn init_survives_subnormal_epsilon() {
+        let mut c = F16Codec::default();
+        c.init(8, 1e-6);
+        let back = c.load();
+        assert!(back.max_abs_diff(&Matrix::eye_scaled(8, 1e-6)) < 1e-7);
+    }
+}

@@ -177,6 +177,68 @@ impl Codebook {
     }
 }
 
+// ------------------------------------------------- IEEE-754 half (f16) ----
+
+/// Convert an `f32` to IEEE-754 binary16 bits (software conversion — the
+/// crate is dependency-free, so the `f16` codec cannot lean on a `half`
+/// crate). Round-to-nearest-even, with gradual underflow into subnormals
+/// (preconditioner ε values like `1e-6` sit below the smallest normal half,
+/// `6.1e-5`, and must survive the trip), overflow to ±∞ above `65504`, and
+/// NaN payloads preserved as quiet NaNs.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // ±∞ stays ±∞; any NaN becomes a quiet NaN.
+        let payload: u16 = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | payload;
+    }
+    // Rebias: f32 bias 127 → f16 bias 15.
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±∞
+    }
+    if e <= 0 {
+        // Subnormal half (unit 2⁻²⁴), or zero below half the smallest one.
+        if e < -10 {
+            return sign;
+        }
+        let m = man | 0x0080_0000; // restore the implicit leading 1
+        let shift = (14 - e) as u32; // 14..=24
+        let kept = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (kept & 1) == 1);
+        // A mantissa carry rolls into exponent 1 — still a valid half.
+        return sign | (kept + round_up as u32) as u16;
+    }
+    // Normal: drop 13 mantissa bits, round to nearest even. A carry out of
+    // the mantissa propagates into the exponent (and into ∞ at the top).
+    let kept = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (kept & 1) == 1);
+    sign | (kept + round_up as u32) as u16
+}
+
+/// Convert IEEE-754 binary16 bits back to `f32` (exact — every half value
+/// is representable in single precision).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // Subnormal: value = man · 2⁻²⁴ (exact in f32).
+        let v = man as f32 * (1.0 / 16_777_216.0);
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp as u32 + 127 - 15) << 23) | (man << 13))
+}
+
 /// Map a finite f32 to a u32 preserving total order (sign-magnitude →
 /// biased representation; the classic IEEE-754 radix trick).
 #[inline]
@@ -313,6 +375,53 @@ mod tests {
             let cb = Codebook::new(m, 4);
             assert_eq!(cb.decode(cb.encode(0.0)), 0.0, "{}", m.name());
         }
+    }
+
+    #[test]
+    fn f16_exact_values_roundtrip_exactly() {
+        // Powers of two, small integers, and k/65536 grids are exact halves.
+        let near_tenth = 6553.0 / 65536.0; // 0.0999755859375, exact in f16
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1024.0, 65504.0, near_tenth] {
+            assert_eq!(f16_to_f32(f32_to_f16(x)), x, "x={x}");
+        }
+        // Signed zero keeps its sign bit.
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+    }
+
+    #[test]
+    fn f16_roundtrip_error_within_half_ulp() {
+        // Normals: relative error ≤ 2⁻¹¹ (half an ulp of a 10-bit mantissa).
+        for i in 0..4000 {
+            let x = -8.0 + 16.0 * i as f32 / 3999.0;
+            let back = f16_to_f32(f32_to_f16(x));
+            assert!((back - x).abs() <= x.abs() * (1.0 / 2048.0) + 1e-24, "x={x} back={back}");
+        }
+    }
+
+    #[test]
+    fn f16_subnormals_cover_epsilon_range() {
+        // ε = 1e-6 (the paper's stability constant) is far below the
+        // smallest normal half (≈6.1e-5) — gradual underflow must keep it.
+        let eps = 1e-6f32;
+        let back = f16_to_f32(f32_to_f16(eps));
+        assert!((back - eps).abs() <= 0.5 / 16_777_216.0, "eps survives as subnormal: {back}");
+        // Smallest subnormal and the underflow-to-zero threshold.
+        let tiny = 1.0 / 16_777_216.0; // 2⁻²⁴
+        assert_eq!(f16_to_f32(f32_to_f16(tiny)), tiny);
+        assert_eq!(f16_to_f32(f32_to_f16(tiny * 0.25)), 0.0);
+    }
+
+    #[test]
+    fn f16_overflow_and_specials() {
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e6)), f32::NEG_INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // 65504 is the largest finite half; the next f32 above the midpoint
+        // to 65536 must overflow.
+        assert_eq!(f16_to_f32(f32_to_f16(65504.0)), 65504.0);
+        assert_eq!(f16_to_f32(f32_to_f16(65521.0)), f32::INFINITY);
     }
 
     #[test]

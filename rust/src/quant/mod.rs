@@ -2,7 +2,8 @@
 //! preconditioner-codec API.
 //!
 //! * [`mapping`] — the codebooks: **linear-2** (Eq. 4, the paper's choice),
-//!   plain linear, and dynamic-exponent mappings, at any bit width.
+//!   plain linear, and dynamic-exponent mappings, at any bit width; plus the
+//!   software IEEE-754 half conversions behind the `f16` codec.
 //! * [`blockwise`] — B×B block-wise absmax quantization (Sec. 3.2) with
 //!   packed 4-bit (or byte-per-code 8-bit) storage.
 //! * [`offdiag`] — off-diagonal quantization keeping the diagonal in f32
@@ -11,11 +12,18 @@
 //!   in the lower triangle, quantized EF error state in the upper triangle
 //!   of the same packed buffer.
 //! * [`error_feedback`] — the EMA error-state update of Eq. (11).
+//! * [`ec4`] — eigenvalue-corrected 4-bit eigenfactor storage
+//!   (arXiv 2405.18144).
+//! * [`half`] — dense half-precision storage (`f16` key), the
+//!   memory/accuracy midpoint.
+//! * [`cq_r1`] — Cholesky quantization with a per-row rank-1 scale
+//!   correction.
 //! * [`codec`] — the [`PrecondCodec`] trait + string-keyed registry that
 //!   every preconditioner representation (f32 / vq4 / vq4-full / cq4 /
-//!   cq4-ef / bw8 / user-registered) plugs into. The Shampoo state layer
-//!   stores all of `L`, `R`, `L̂`, `R̂` behind this trait; see the README's
-//!   "add your own codec" walkthrough.
+//!   cq4-ef / bw8 / ec4 / f16 / cq-r1 / user-registered) plugs into. The
+//!   Shampoo state layer stores all of `L`, `R`, `L̂`, `R̂` behind this
+//!   trait; see `docs/ARCHITECTURE.md` for the add-your-own-codec
+//!   walkthrough.
 
 pub mod mapping;
 pub mod blockwise;
@@ -24,11 +32,17 @@ pub mod offdiag;
 pub mod tri_store;
 pub mod error_feedback;
 pub mod codec;
+pub mod ec4;
+pub mod half;
+pub mod cq_r1;
 
 pub use blockwise::{BlockQuantizer, CodeStore, QuantConfig, QuantizedMatrix};
 pub use codec::{CodecBuilder, CodecCtx, PrecondCodec};
+pub use cq_r1::CholeskyR1Codec;
+pub use ec4::Ec4Codec;
 pub use error_feedback::ErrorFeedback;
-pub use mapping::Mapping;
+pub use half::F16Codec;
+pub use mapping::{f16_to_f32, f32_to_f16, Mapping};
 pub use offdiag::{dequantize_offdiag, quantize_offdiag, OffDiagQuantized};
 pub use packed::{NibbleReader, NibbleWriter, PackedNibbles};
 pub use tri_store::TriJointStore;

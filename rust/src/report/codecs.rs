@@ -1,0 +1,70 @@
+//! The `quartz codecs` listing.
+//!
+//! Renders the three open registries under separate headers — optimizer
+//! stacks (`train::registry`), preconditioner codecs (`quant::codec`), and
+//! refresh policies (`shampoo::scheduler`) — and prices every codec's
+//! **bytes per element** at a reference preconditioner order, side and root
+//! constructors separately (they differ for the Cholesky family). Lives in
+//! the library (not `main.rs`) so the CLI output is snapshot-tested in
+//! `tests/cli_codecs.rs`.
+
+use crate::quant::codec;
+use crate::quant::{BlockQuantizer, CodecCtx, PrecondCodec, QuantConfig};
+use crate::report::table::Table;
+use crate::shampoo::scheduler;
+use crate::train::registry;
+use std::sync::Arc;
+
+/// Preconditioner order the bytes-per-element column is priced at. Large
+/// enough that block scales amortize like they do in real layers, small
+/// enough that building every registered codec stays instant.
+pub const REFERENCE_ORDER: usize = 256;
+
+/// Physical bytes per element of one `REFERENCE_ORDER`-sized slot held by
+/// `ctor`, measured on a live codec in its initial (`ε·I`) state — byte
+/// counts are shape-dependent only, so this equals the steady-state cost.
+fn bytes_per_elem(ctor: fn(&CodecCtx) -> Box<dyn PrecondCodec>, ctx: &CodecCtx) -> f64 {
+    let mut c = ctor(ctx);
+    c.init(REFERENCE_ORDER, 1e-6);
+    c.size_bytes() as f64 / (REFERENCE_ORDER * REFERENCE_ORDER) as f64
+}
+
+/// Render the full `quartz codecs` listing (three grouped tables).
+pub fn codec_listing() -> String {
+    let mut out = String::new();
+
+    let mut t = Table::new("optimizer stacks (train::registry)", &["key", "summary"]);
+    for key in registry::stack_keys() {
+        let b = registry::lookup(key).unwrap();
+        t.row(vec![key.to_string(), b.summary.to_string()]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // The experiment-default quantizer (b=4, B=64, linear-2) with the
+    // small-tensor exemption off, so the reference order actually quantizes.
+    let q = BlockQuantizer::new(QuantConfig { min_quant_elems: 0, ..Default::default() });
+    let ctx = CodecCtx::new(1e-6, 0.95, Arc::new(q));
+    let title =
+        format!("preconditioner codecs (quant::codec) — bytes/elem at order {REFERENCE_ORDER}");
+    let mut t = Table::new(&title, &["key", "side B/elem", "root B/elem", "summary"]);
+    for key in codec::codec_keys() {
+        let b = codec::lookup(key).unwrap();
+        t.row(vec![
+            key.to_string(),
+            format!("{:.3}", bytes_per_elem(b.side, &ctx)),
+            format!("{:.3}", bytes_per_elem(b.root, &ctx)),
+            b.summary.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    let mut t = Table::new("refresh policies (shampoo::scheduler)", &["key", "summary"]);
+    for key in scheduler::scheduler_keys() {
+        let b = scheduler::lookup(key).unwrap();
+        t.row(vec![key.to_string(), b.summary.to_string()]);
+    }
+    out.push_str(&t.render());
+    out
+}

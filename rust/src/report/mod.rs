@@ -1,5 +1,7 @@
-//! Paper-style table rendering + figure series export.
+//! Paper-style table rendering + figure series export, and the grouped
+//! `quartz codecs` registry listing.
 
+pub mod codecs;
 pub mod table;
 
 pub use table::Table;

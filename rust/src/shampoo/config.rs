@@ -103,8 +103,11 @@ pub struct ShampooConfig {
     pub vq_quantize_diag: bool,
     /// Schur–Newton settings for the inverse 4th root.
     pub schur: SchurNewtonConfig,
-    /// Override the Gram-side codec with ANY registered key (e.g. one added
-    /// via `quant::codec::register`). `None` = derive from `variant`.
+    /// Override the Gram-side codec with ANY registered key — built-ins
+    /// outside the variant set (`"ec4"`, `"f16"`, `"cq-r1"`) or one added
+    /// via `quant::codec::register`. `None` = derive from `variant`. The
+    /// `train::registry` keys of the same names are sugar for these
+    /// overrides.
     pub side_codec: Option<&'static str>,
     /// Override the inverse-root codec likewise.
     pub root_codec: Option<&'static str>,
@@ -250,6 +253,15 @@ mod tests {
                 crate::shampoo::scheduler::lookup(key).is_some(),
                 "refresh policy '{key}' not registered"
             );
+        }
+    }
+
+    #[test]
+    fn codec_family_override_keys_are_registered() {
+        // The keys the ec4/f16/cq-r1 stack builders route through must
+        // resolve in the codec registry (side AND root spellings).
+        for key in ["ec4", "f16", "cq-r1", "vq4"] {
+            assert!(crate::quant::codec::lookup(key).is_some(), "codec '{key}' not registered");
         }
     }
 

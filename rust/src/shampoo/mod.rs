@@ -239,14 +239,25 @@ impl Optimizer for Shampoo {
     }
 
     fn name(&self) -> String {
-        let mut label = self.cfg.variant.stack_label(self.base.kind);
-        // Codec overrides change what actually runs — surface them so table
-        // rows never attribute an override's results to the base variant.
-        if self.cfg.side_codec.is_some() || self.cfg.root_codec.is_some() {
-            let side = self.cfg.side_codec_key();
-            let root = self.cfg.root_codec_key();
-            label.push_str(&format!(" [codecs {side}/{root}]"));
-        }
+        let base = self.base.kind.name().to_uppercase();
+        // Codec overrides change what actually runs — rows must never
+        // attribute an override's results to the base variant. With BOTH
+        // slots overridden (the ec4/f16/cq-r1 stack keys) the variant
+        // contributes nothing, so the codecs ARE the name; with a partial
+        // override the variant still picks the other slot and the override
+        // rides as a suffix.
+        let mut label = match (self.cfg.side_codec, self.cfg.root_codec) {
+            (Some(side), Some(root)) if side == root => format!("{base} + {side} Shampoo"),
+            (Some(side), Some(root)) => format!("{base} + {side}/{root} Shampoo"),
+            (None, None) => self.cfg.variant.stack_label(self.base.kind),
+            _ => {
+                let side = self.cfg.side_codec_key();
+                let root = self.cfg.root_codec_key();
+                let mut l = self.cfg.variant.stack_label(self.base.kind);
+                l.push_str(&format!(" [codecs {side}/{root}]"));
+                l
+            }
+        };
         // Likewise a non-classic refresh schedule changes trajectories.
         if self.cfg.refresh_policy != "every-n" {
             label.push_str(&format!(" [refresh {}]", self.cfg.refresh_policy));

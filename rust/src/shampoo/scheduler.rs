@@ -38,15 +38,20 @@ use std::time::Instant;
 /// Address of one refresh unit: one Kronecker factor of one block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct UnitId {
+    /// Index into the optimizer's layer list.
     pub layer: u32,
+    /// Block index within the layer's [`super::Blocking`] tiling.
     pub block: u32,
+    /// Which Kronecker factor (`L` or `R`) of that block.
     pub side: Side,
 }
 
 /// Scheduler-visible snapshot of one unit (address + bookkeeping).
 #[derive(Clone, Copy, Debug)]
 pub struct UnitInfo {
+    /// The unit's `(layer, block, side)` address.
     pub id: UnitId,
+    /// Persistent refresh bookkeeping (last-refresh steps, pending norm).
     pub meta: UnitMeta,
 }
 
@@ -58,7 +63,9 @@ pub struct RefreshPlan {
 }
 
 impl RefreshPlan {
+    /// Flag bit: the unit absorbs a fresh Gram EMA update this step.
     pub const GRAM: u8 = 1;
+    /// Flag bit: the unit recomputes its inverse root this step.
     pub const ROOT: u8 = 2;
 
     /// Clear and size for `units` (all units unscheduled).
@@ -67,18 +74,22 @@ impl RefreshPlan {
         self.flags.resize(units, 0);
     }
 
+    /// Schedule unit `unit` for a Gram EMA update.
     pub fn mark_gram(&mut self, unit: usize) {
         self.flags[unit] |= Self::GRAM;
     }
 
+    /// Schedule unit `unit` for an inverse-root recomputation.
     pub fn mark_root(&mut self, unit: usize) {
         self.flags[unit] |= Self::ROOT;
     }
 
+    /// The [`Self::GRAM`]`/`[`Self::ROOT`] flag bits of unit `unit`.
     pub fn flags(&self, unit: usize) -> u8 {
         self.flags[unit]
     }
 
+    /// Number of addressable units (the size passed to [`Self::reset`]).
     pub fn len(&self) -> usize {
         self.flags.len()
     }
@@ -93,6 +104,8 @@ impl RefreshPlan {
         self.flags.iter().filter(|&&f| f & Self::ROOT != 0).count()
     }
 
+    /// `true` when no unit is scheduled this step (the executor then takes
+    /// the mutex-free sequential fast path).
     pub fn is_empty(&self) -> bool {
         self.flags.iter().all(|&f| f == 0)
     }
@@ -318,6 +331,16 @@ pub fn register(builder: SchedulerBuilder) -> bool {
 }
 
 /// Look up a policy builder by key.
+///
+/// ```
+/// use quartz::shampoo::scheduler::{lookup, scheduler_keys};
+///
+/// let b = lookup("staggered").expect("built-in policy");
+/// assert_eq!(b.key, "staggered");
+/// assert!(lookup("no-such-policy").is_none());
+/// // Built-ins come first in the key listing.
+/// assert_eq!(scheduler_keys()[..3].to_vec(), vec!["every-n", "staggered", "staleness"]);
+/// ```
 pub fn lookup(key: &str) -> Option<SchedulerBuilder> {
     let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
     reg.iter().find(|b| b.key == key).copied()

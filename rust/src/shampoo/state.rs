@@ -668,6 +668,33 @@ mod tests {
     }
 
     #[test]
+    fn codec_family_overrides_drive_a_blocked_layer() {
+        // The ec4/f16/cq-r1 family reaches the state layer purely through
+        // codec overrides (no variant arm): a blocked layer must construct,
+        // refresh, and precondition finitely under each pairing, with the
+        // root slot switching from its f32 init to the configured codec at
+        // the first refresh.
+        for (side, root) in [("ec4", "ec4"), ("f16", "f16"), ("cq-r1", "vq4")] {
+            let mut c = cfg(ShampooVariant::Full32);
+            c.side_codec = Some(side);
+            c.root_codec = Some(root);
+            c.max_order = 8;
+            let cctx = ctx(&c);
+            let mut layer = LayerState::new(20, 12, &c, &cctx);
+            let mut scratch = ScratchArena::new();
+            assert_eq!(layer.blocks[0].side(Side::L).gram.key(), side);
+            assert_eq!(layer.blocks[0].side(Side::L).root.key(), "f32", "pre-refresh init");
+            let mut rng = Rng::new(33);
+            let g = Matrix::randn(20, 12, 1.0, &mut rng);
+            layer.update_gram(&g, &c, &mut scratch);
+            layer.update_inv_roots(&c, &cctx, &mut scratch);
+            assert_eq!(layer.blocks[0].side(Side::L).root.key(), root, "post-refresh");
+            let ghat = layer.precondition(&g);
+            assert!(!ghat.has_non_finite(), "codecs {side}/{root}");
+        }
+    }
+
+    #[test]
     fn codec_override_reaches_unregistered_variants() {
         // A config can route sides through any registered codec without a
         // matching ShampooVariant arm — the open-world path.

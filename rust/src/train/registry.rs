@@ -1,15 +1,38 @@
 //! String-keyed optimizer-stack registry.
 //!
 //! Maps a variant key (`"none"`, `"32bit"`, `"vq"`, `"cq"`, `"cq-ef"`,
-//! `"bw8"`, or anything added via [`register`]) to a builder producing an
-//! [`OptimizerStack`] for a model's parameter shapes. Coordinator specs,
-//! the CLI, and the examples all construct optimizers through [`build`], so
-//! a variant registered at startup is immediately reachable from TOML specs
-//! and `--shampoo` flags without touching any construction site.
+//! `"bw8"`, `"ec4"`, `"f16"`, `"cq-r1"`, or anything added via [`register`])
+//! to a builder producing an [`OptimizerStack`] for a model's parameter
+//! shapes. Coordinator specs, the CLI, and the examples all construct
+//! optimizers through [`build`], so a variant registered at startup is
+//! immediately reachable from TOML specs and `--shampoo` flags without
+//! touching any construction site.
 //!
 //! Aliases (`"cqef"`, `"ours"`, `"full32"`, …) are resolved through
 //! [`ShampooVariant::parse`] — the registry itself stores only canonical
-//! keys.
+//! keys. The `ec4` / `f16` / `cq-r1` entries have **no** `ShampooVariant`
+//! arm at all: their builders route sides and roots through
+//! `quant::codec` registry keys, the open-world path any runtime-registered
+//! codec can take.
+//!
+//! ```
+//! use quartz::optim::BaseOptimizer;
+//! use quartz::shampoo::ShampooConfig;
+//!
+//! // Any registered key (built-in, alias, or runtime-registered) builds:
+//! let cfg = ShampooConfig { t1: 1, t2: 1, max_order: 16, ..Default::default() };
+//! for key in ["cq-ef", "ours", "ec4", "f16", "cq-r1"] {
+//!     let stack = quartz::train::registry::build(
+//!         key,
+//!         BaseOptimizer::sgd(0.1, 0.0),
+//!         &cfg,
+//!         &[(8, 8)],
+//!     )
+//!     .expect("registered key");
+//!     assert!(stack.label().contains("Shampoo"));
+//! }
+//! assert!(quartz::train::registry::lookup("no-such-key").is_none());
+//! ```
 
 use crate::optim::BaseOptimizer;
 use crate::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
@@ -26,7 +49,20 @@ pub struct StackBuilder {
     /// Build the stack. `cfg` carries intervals/quantizer settings; builders
     /// for a fixed variant override `cfg.variant` with their own.
     pub build: fn(BaseOptimizer, &ShampooConfig, &[(usize, usize)]) -> OptimizerStack,
+    /// Declarative `(side_codec, root_codec)` overrides this builder applies
+    /// (`None` = codecs derive from `cfg.variant`). This is the ONE source
+    /// of the codec-family mapping: spec resolution copies it onto the run's
+    /// `ShampooConfig` so the memory model prices — and labels name —
+    /// exactly what will run.
+    pub codecs: Option<(&'static str, &'static str)>,
 }
+
+/// The codec-family `(side, root)` pairings — shared by the build fns and
+/// the registry metadata so they cannot drift.
+const EC4_CODECS: (&str, &str) = ("ec4", "ec4");
+const F16_CODECS: (&str, &str) = ("f16", "f16");
+/// Factored sides + off-diagonal 4-bit roots, mirroring `cq`/`cq-ef`.
+const CQ_R1_CODECS: (&str, &str) = ("cq-r1", "vq4");
 
 fn build_none(
     base: BaseOptimizer,
@@ -66,37 +102,89 @@ fn build_bw8(b: BaseOptimizer, c: &ShampooConfig, s: &[(usize, usize)]) -> Optim
     with_variant(ShampooVariant::Bw8, b, c, s)
 }
 
+/// Build a Shampoo stack that routes sides/roots through explicit codec
+/// registry keys (the open-world path — no `ShampooVariant` arm exists for
+/// these representations; `Optimizer::name` names the codecs instead of the
+/// dead variant). Spec resolution applies the same pair up-front, so this
+/// is a no-op overwrite on spec-built runs and the safety net for direct
+/// `registry::build` callers.
+fn with_codecs(
+    (side, root): (&'static str, &'static str),
+    base: BaseOptimizer,
+    cfg: &ShampooConfig,
+    shapes: &[(usize, usize)],
+) -> OptimizerStack {
+    let cfg = ShampooConfig { side_codec: Some(side), root_codec: Some(root), ..*cfg };
+    OptimizerStack::shampoo(Shampoo::new(base, cfg, shapes))
+}
+
+fn build_ec4(b: BaseOptimizer, c: &ShampooConfig, s: &[(usize, usize)]) -> OptimizerStack {
+    with_codecs(EC4_CODECS, b, c, s)
+}
+
+fn build_f16(b: BaseOptimizer, c: &ShampooConfig, s: &[(usize, usize)]) -> OptimizerStack {
+    with_codecs(F16_CODECS, b, c, s)
+}
+
+fn build_cq_r1(b: BaseOptimizer, c: &ShampooConfig, s: &[(usize, usize)]) -> OptimizerStack {
+    with_codecs(CQ_R1_CODECS, b, c, s)
+}
+
 fn builtin_stacks() -> Vec<StackBuilder> {
     vec![
         StackBuilder {
             key: "none",
             summary: "base optimizer alone (no preconditioning)",
             build: build_none,
+            codecs: None,
         },
         StackBuilder {
             key: "32bit",
             summary: "f32 Shampoo (Algorithm 2)",
             build: build_full32,
+            codecs: None,
         },
         StackBuilder {
             key: "vq",
             summary: "4-bit Shampoo, vanilla quantization (Sec. 4.1)",
             build: build_vq,
+            codecs: None,
         },
         StackBuilder {
             key: "cq",
             summary: "4-bit Shampoo, Cholesky quantization (Sec. 4.2)",
             build: build_cq,
+            codecs: None,
         },
         StackBuilder {
             key: "cq-ef",
             summary: "4-bit Shampoo, CQ + error feedback (Alg. 1, ours)",
             build: build_cq_ef,
+            codecs: None,
         },
         StackBuilder {
             key: "bw8",
             summary: "8-bit Shampoo, block-wise quantization",
             build: build_bw8,
+            codecs: None,
+        },
+        StackBuilder {
+            key: "ec4",
+            summary: "4-bit Shampoo, eigenvalue-corrected (arXiv 2405.18144)",
+            build: build_ec4,
+            codecs: Some(EC4_CODECS),
+        },
+        StackBuilder {
+            key: "f16",
+            summary: "half-precision Shampoo (memory/accuracy midpoint)",
+            build: build_f16,
+            codecs: Some(F16_CODECS),
+        },
+        StackBuilder {
+            key: "cq-r1",
+            summary: "4-bit Cholesky Shampoo + per-row scale correction",
+            build: build_cq_r1,
+            codecs: Some(CQ_R1_CODECS),
         },
     ]
 }
@@ -180,6 +268,25 @@ mod tests {
     fn builtin_stack_keys_cannot_be_shadowed() {
         let b = lookup("cq-ef").unwrap();
         assert!(!register(b));
+    }
+
+    #[test]
+    fn codec_family_keys_build_and_name_their_codecs() {
+        // `ec4`/`f16`/`cq-r1` have no ShampooVariant arm: the builders set
+        // both codec overrides, so the stack name is the codecs themselves —
+        // never the placeholder variant's representation.
+        let cfg = ShampooConfig { t1: 1, t2: 1, max_order: 16, ..Default::default() };
+        for (key, want) in [
+            ("ec4", "SGD + ec4 Shampoo"),
+            ("f16", "SGD + f16 Shampoo"),
+            ("cq-r1", "SGD + cq-r1/vq4 Shampoo"),
+        ] {
+            let stack = build(key, BaseOptimizer::sgd(0.1, 0.0), &cfg, &[(8, 8)]).unwrap();
+            assert_eq!(stack.label(), want, "key '{key}'");
+            // The mapping is declarative registry metadata (the one source
+            // spec resolution and the parity tests read).
+            assert!(lookup(key).unwrap().codecs.is_some(), "key '{key}' must declare codecs");
+        }
     }
 
     #[test]

@@ -1,0 +1,77 @@
+//! Snapshot test for the `quartz codecs` CLI listing (`report::codecs`).
+//!
+//! Runs in its own test binary so the registries hold exactly the built-ins
+//! (other integration suites register test-only codecs/stacks in *their*
+//! processes). Pins the grouped section structure, every built-in key, and
+//! the bytes-per-element column values at the reference order — the same
+//! closed-form byte costs the memory model and the codec-generic property
+//! suite assert, so a formula drift fails three independent gates.
+
+use quartz::report::codecs::{codec_listing, REFERENCE_ORDER};
+
+fn row_for<'a>(out: &'a str, section_start: usize, key: &str) -> &'a str {
+    out[section_start..]
+        .lines()
+        .find(|l| {
+            let cells: Vec<&str> = l.split('|').map(str::trim).collect();
+            cells.len() > 1 && cells[1] == key
+        })
+        .unwrap_or_else(|| panic!("no row for key '{key}'"))
+}
+
+#[test]
+fn listing_groups_sections_in_order() {
+    let out = codec_listing();
+    let stacks = out.find("== optimizer stacks (train::registry) ==").expect("stacks header");
+    let codecs = out
+        .find("== preconditioner codecs (quant::codec) — bytes/elem at order 256 ==")
+        .expect("codecs header");
+    let policies =
+        out.find("== refresh policies (shampoo::scheduler) ==").expect("policies header");
+    assert!(stacks < codecs && codecs < policies, "sections must be grouped in order");
+    assert_eq!(REFERENCE_ORDER, 256, "snapshot below prices order 256");
+}
+
+#[test]
+fn listing_contains_every_builtin_key() {
+    let out = codec_listing();
+    let stacks = out.find("== optimizer stacks").unwrap();
+    let codecs = out.find("== preconditioner codecs").unwrap();
+    let policies = out.find("== refresh policies").unwrap();
+    for key in ["none", "32bit", "vq", "cq", "cq-ef", "bw8", "ec4", "f16", "cq-r1"] {
+        let row = row_for(&out, stacks, key);
+        assert!(out[stacks..codecs].contains(row), "stack '{key}' outside its section");
+    }
+    for key in ["f32", "vq4", "vq4-full", "cq4", "cq4-ef", "bw8", "ec4", "f16", "cq-r1"] {
+        let row = row_for(&out, codecs, key);
+        assert!(out[codecs..policies].contains(row), "codec '{key}' outside its section");
+    }
+    for key in ["every-n", "staggered", "staleness"] {
+        row_for(&out, policies, key);
+    }
+}
+
+/// The bytes-per-element snapshot at order 256, block 64 (the experiment
+/// default): codes + block scales + f32 side-bands, per codec, side and
+/// root constructors separately.
+#[test]
+fn listing_bytes_per_element_snapshot() {
+    let out = codec_listing();
+    let codecs = out.find("== preconditioner codecs").unwrap();
+    for (key, side, root) in [
+        ("f32", "4.000", "4.000"),
+        ("vq4", "0.517", "0.517"),
+        ("vq4-full", "0.501", "0.501"),
+        ("cq4", "0.268", "0.517"),
+        ("cq4-ef", "0.518", "0.517"),
+        ("bw8", "1.017", "1.017"),
+        ("ec4", "0.517", "0.517"),
+        ("f16", "2.000", "2.000"),
+        ("cq-r1", "0.283", "0.517"),
+    ] {
+        let row = row_for(&out, codecs, key);
+        let cells: Vec<&str> = row.split('|').map(str::trim).collect();
+        assert_eq!(cells[2], side, "side B/elem for '{key}' in {row:?}");
+        assert_eq!(cells[3], root, "root B/elem for '{key}' in {row:?}");
+    }
+}

@@ -154,6 +154,12 @@ fn codec_size_bytes_exactness() {
             ("cq4", ((n * (n + 1)) / 2).div_ceil(2) + n * 4 + scales),
             ("cq4-ef", (n * n).div_ceil(2) + n * 4 + 2 * scales),
             ("bw8", n * n + scales + n * 4),
+            // 4-bit eigenvector grid + scales + f32 eigenvalue vector.
+            ("ec4", (n * n).div_ceil(2) + scales + n * 4),
+            // Two bytes per element, no side-bands.
+            ("f16", n * n * 2),
+            // The cq4 triangular payload + the per-row f32 scale vector.
+            ("cq-r1", ((n * (n + 1)) / 2).div_ceil(2) + n * 4 + scales + n * 4),
         ];
         for &(key, want) in expected {
             let mut codec = (lookup(key).unwrap().side)(&ctx);
@@ -195,6 +201,102 @@ fn codec_ef_state_preserved_and_effective() {
         err_ef < err_plain,
         "EF time-average must beat plain CQ: ef={err_ef:.4} plain={err_plain:.4}"
     );
+}
+
+/// The `ec4` spectral-fidelity claim (arXiv 2405.18144): storing an exact
+/// inverse 4-th root through the eigenvalue-corrected codec reconstructs a
+/// matrix whose eigenvalues track `inverse_pth_root_eig`'s **relatively,
+/// per mode** (the reconstruction is congruent to `ŨᵀŨ` through `Λ^½`, so
+/// Ostrowski bounds every mode by the multiplicative factor `‖ŨᵀŨ − I‖`) —
+/// and it stays PSD, which a raw 4-bit round-trip does not guarantee.
+#[test]
+fn ec4_reconstructed_root_spectrum_matches_exact_root() {
+    use quartz::linalg::inverse_pth_root_eig;
+
+    let ctx = codec_ctx();
+    let mut rng = Rng::new(11);
+    for trial in 0..3 {
+        let a = synthetic_pd(32, 1e-1, 1e1, &mut rng);
+        let exact = inverse_pth_root_eig(&a, 4.0, 1e-12);
+        let (want, _) = eig_sym(&exact, 1e-12, 100);
+
+        let mut codec = (lookup("ec4").unwrap().root)(&ctx);
+        codec.store(&exact);
+        let back = codec.load();
+        let (got, _) = eig_sym(&back, 1e-12, 100);
+
+        assert!(got[0] >= -1e-5, "trial {trial}: PSD reconstruction, λmin={}", got[0]);
+        for (j, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() <= 0.35 * w.abs() + 1e-4,
+                "trial {trial}, mode {j}: reconstructed λ {g} vs exact {w}"
+            );
+        }
+    }
+}
+
+/// EF interaction across the new family: none of `ec4`/`f16`/`cq-r1` keeps
+/// an error state (their corrections are recomputed per store, not
+/// accumulated), so the state layer must see `None` — the EF contract is
+/// exclusive to `cq4-ef`.
+#[test]
+fn codec_family_has_no_hidden_ef_state() {
+    let ctx = codec_ctx();
+    let a = spd(24, 9);
+    for key in ["ec4", "f16", "cq-r1"] {
+        let b = lookup(key).unwrap();
+        for ctor in [b.side, b.root] {
+            let mut codec = ctor(&ctx);
+            codec.init(24, 1e-6);
+            codec.store(&a);
+            assert!(codec.error_state().is_none(), "{key}: unexpected EF state");
+        }
+    }
+}
+
+/// Every new codec key drives a full Shampoo run under every registered
+/// refresh-scheduler policy (the PR 4 engine): plan → unit-level refresh →
+/// precondition stays finite, and the preconditioner state is non-trivial.
+/// The `(side, root)` pairs come from the registry's codec metadata, so a
+/// future family key is crossed with every policy automatically.
+#[test]
+fn codec_family_runs_under_every_refresh_policy() {
+    use quartz::optim::BaseOptimizer;
+    use quartz::shampoo::{Shampoo, ShampooConfig};
+    use quartz::train::registry;
+
+    let family: Vec<(&str, &str)> = registry::stack_keys()
+        .into_iter()
+        .filter_map(|key| registry::lookup(key)?.codecs)
+        .collect();
+    assert!(family.len() >= 3, "ec4/f16/cq-r1 must declare codec metadata");
+    for (side, root) in family {
+        for policy in ["every-n", "staggered", "staleness"] {
+            let cfg = ShampooConfig {
+                t1: 1,
+                t2: 2,
+                side_codec: Some(side),
+                root_codec: Some(root),
+                refresh_policy: policy,
+                quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+                ..Default::default()
+            };
+            let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), cfg, &[(12, 8), (9, 1)]);
+            let mut rng = Rng::new(13);
+            let mut params =
+                vec![Matrix::randn(12, 8, 0.5, &mut rng), Matrix::randn(9, 1, 0.5, &mut rng)];
+            let grads =
+                vec![Matrix::randn(12, 8, 0.5, &mut rng), Matrix::randn(9, 1, 0.5, &mut rng)];
+            for k in 1..=6 {
+                sh.step(&mut params, &grads, k, 1.0);
+            }
+            assert!(
+                params.iter().all(|p| !p.has_non_finite()),
+                "codecs {side}/{root} under '{policy}' produced non-finite parameters"
+            );
+            assert!(sh.shampoo_state_bytes() > 0);
+        }
+    }
 }
 
 /// `init` always reconstructs ≈ ε·I, and a second `init` resets state.

@@ -135,8 +135,19 @@ fn registry_constructs_every_stack_by_key() {
         // stack's preconditioner bytes exactly (the paper's headline claim
         // survives the trait refactor byte-for-byte).
         if key != "none" {
-            let variant = ShampooVariant::parse(key).unwrap();
-            let model_cfg = ShampooConfig { variant, ..cfg };
+            let model_cfg = match ShampooVariant::parse(key) {
+                Some(variant) => ShampooConfig { variant, ..cfg },
+                // The ec4/f16/cq-r1 family has no variant arm: its builders
+                // declare their (side, root) overrides as registry metadata
+                // — the same single source spec resolution reads — and the
+                // key-based model prices those overrides directly.
+                None => {
+                    let (side, root) = registry::lookup(key)
+                        .and_then(|b| b.codecs)
+                        .expect("variant-less stack key must declare codec metadata");
+                    ShampooConfig { side_codec: Some(side), root_codec: Some(root), ..cfg }
+                }
+            };
             let predicted = MemoryModel::new(&shapes).shampoo_bytes(&model_cfg);
             let measured = stack.state_bytes(); // sgd base holds no state
             assert_eq!(predicted, measured, "{key}: modeled vs measured bytes");
