@@ -25,9 +25,26 @@ fn spd(n: usize, rng: &mut Rng) -> Matrix {
     }
 }
 
+/// Textbook i-k-j triple loop, single-threaded — the reference the packed
+/// GEMM tier's speedup is measured against (`gemm/*` vs `gemm_naive/*`).
+fn naive_matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    out.data_mut().fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let x = a[(i, p)];
+            let (brow, orow) = (b.row(p), out.row_mut(i));
+            for j in 0..n {
+                orow[j] += x * brow[j];
+            }
+        }
+    }
+}
+
 fn main() {
     let mut b = Bencher::new();
     let mut rng = Rng::new(2);
+    let quick = std::env::var("QUARTZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
 
     for n in [64usize, 128, 256] {
         let x = Matrix::randn(n, n, 1.0, &mut rng);
@@ -48,6 +65,36 @@ fn main() {
         });
     }
 
+    // Packed-panel GEMM tier at gradient/model orders. `gemm_naive/*` is
+    // the single-threaded triple-loop reference the tier's speedup is read
+    // against (the PR gate: ≥3× at order 1024); orders 2048/4096 are full
+    // GEMM trajectory points and stay out of quick mode, like the large
+    // Cholesky and codec orders.
+    let gemm_orders: &[usize] =
+        if quick { &[256, 512, 1024] } else { &[256, 512, 1024, 2048, 4096] };
+    for &n in gemm_orders {
+        let x = Matrix::randn(n, n, 1.0, &mut rng);
+        let y = Matrix::randn(n, n, 1.0, &mut rng);
+        let mut out = Matrix::zeros(n, n);
+        let mut plan = MatmulPlan::new();
+        let flops = (2 * n * n * n) as f64;
+        b.bench_with_units(&format!("gemm/{n}x{n}"), Some((flops, "FLOP")), || {
+            matmul_into_planned(&x, &y, &mut out, &mut plan);
+            black_box(&out);
+        });
+    }
+    let naive_orders: &[usize] = if quick { &[256] } else { &[256, 512, 1024] };
+    for &n in naive_orders {
+        let x = Matrix::randn(n, n, 1.0, &mut rng);
+        let y = Matrix::randn(n, n, 1.0, &mut rng);
+        let mut out = Matrix::zeros(n, n);
+        let flops = (2 * n * n * n) as f64;
+        b.bench_with_units(&format!("gemm_naive/{n}x{n}"), Some((flops, "FLOP")), || {
+            naive_matmul_into(&x, &y, &mut out);
+            black_box(&out);
+        });
+    }
+
     // Naive reference kernel (the small-n path) vs the blocked
     // right-looking factorization at preconditioner orders. The naive loop
     // is O(n³) scalar, so it stops at 512; the blocked kernel carries the
@@ -62,7 +109,6 @@ fn main() {
     // Order 2048 stays out of quick mode (same gate as bench_codecs): a
     // single blocked factorization there is ~2.9 GFLOP and would dominate
     // the CI smoke budget.
-    let quick = std::env::var("QUARTZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let blocked_orders: &[usize] =
         if quick { &[128, 256, 512, 1024] } else { &[128, 256, 512, 1024, 2048] };
     for &n in blocked_orders {

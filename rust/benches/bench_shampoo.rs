@@ -124,6 +124,39 @@ fn main() {
         println!("  step_mix/{policy}: units {} | {}", sh.unit_count(), s.summary());
     }
 
+    // ---- Large-model mix (full mode only): order-4096 gradients with
+    // max_order-512 preconditioners. Every gram update and precondition
+    // apply here is a 512×4096-class product, so this is the step-level
+    // view of the packed-panel GEMM tier at model scale — the order-4096
+    // point the codec/matmul benches record, seen through `Shampoo::step`.
+    if !quick {
+        let large: Vec<(usize, usize)> = vec![(4096, 512), (512, 4096)];
+        let mut rng = Rng::new(9);
+        let large_params: Vec<Matrix> =
+            large.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+        let large_grads: Vec<Matrix> =
+            large.iter().map(|&(m, n)| Matrix::randn(m, n, 0.1, &mut rng)).collect();
+        let cfg = ShampooConfig {
+            variant: ShampooVariant::Cq4 { error_feedback: true },
+            t1,
+            t2,
+            max_order: 512,
+            refresh_policy: "staggered",
+            quant: quartz::quant::QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 5e-4), cfg, &large);
+        let mut p = large_params.clone();
+        let mut k = 1u64;
+        b.bench("step_mix_large/staggered", || {
+            sh.step(&mut p, &large_grads, k, 1.0);
+            k += 1;
+            black_box(&p);
+        });
+        let s = sh.refresh_stats();
+        println!("  step_mix_large/staggered: units {} | {}", sh.unit_count(), s.summary());
+    }
+
     // ---- The codec-family stack keys (ec4 / f16 / cq-r1 today) at the
     // same layer mix, under the staggered spreader (their refresh units are
     // the expensive part — ec4 eigendecomposes per refresh — so the

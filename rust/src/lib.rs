@@ -22,7 +22,7 @@
 //! | module | contents |
 //! |---|---|
 //! | [`util`] | RNG, stats, JSON/TOML parsers, thread pool, bench + property-test harnesses |
-//! | [`linalg`] | dense f32 matrices, blocked matmul, blocked + naive Cholesky, Schur–Newton inverse p-th root, Jacobi eigensolver, power iteration, the [`linalg::ScratchArena`] buffer pool behind the allocation-free refresh path |
+//! | [`linalg`] | dense f32 matrices, the packed-panel microkernel GEMM tier ([`linalg::gemm`] — AVX2/scalar, all matmul/syrk entry points route through it), blocked + naive Cholesky, Schur–Newton inverse p-th root, Jacobi eigensolver, power iteration, the [`linalg::ScratchArena`] buffer pool behind the allocation-free refresh path |
 //! | [`quant`] | codebook mappings, block-wise quantizers (4/8-bit), off-diagonal quantization, the Fig. 2 joint triangular store, error feedback, and the open [`quant::codec`] registry |
 //! | [`optim`] | the [`optim::Optimizer`] trait; SGD(M), Adam(W), RMSProp, grafting, LR schedules |
 //! | [`shampoo`] | 32-bit Shampoo (Alg. 2) and quantized Shampoo VQ / CQ / CQ+EF (Alg. 1) / 8-bit, all storing state through `PrecondCodec` trait objects; balanced max-order blocking; the [`shampoo::scheduler`] refresh engine (string-keyed `every-n` / `staggered` / `staleness` policies over `(layer, block, side)` units + work-queue executor) |

@@ -7,9 +7,10 @@
 //!   [`CHOLESKY_BLOCKED_MIN`] where pass overhead beats cache wins.
 //! * a blocked **right-looking** factorization (panel factor + triangular
 //!   panel solve + rank-`PANEL` trailing update, the `syrk`-shaped O(n³)
-//!   part parallelized over trailing rows with the in-tree pool). This is
-//!   what every preconditioner-order factorization (512/1024/2048 blocks)
-//!   goes through.
+//!   part routed through the packed-panel GEMM tier's lower-triangle
+//!   subtract kernel — see `linalg::gemm`). This is what every
+//!   preconditioner-order factorization (512/1024/2048 blocks) goes
+//!   through.
 //!
 //! [`cholesky`] dispatches on order; the crossover ([`CHOLESKY_BLOCKED_MIN`])
 //! was picked where the blocked kernel's trailing update has enough rows to
@@ -19,13 +20,14 @@
 //! (≤1e-5 relative Frobenius on random SPD, divisible and non-divisible
 //! orders).
 //!
-//! [`cholesky_into`]/[`cholesky_jittered_into`] are the allocation-free
-//! variants the refresh hot path uses (factor into a caller/arena-owned
-//! buffer; see `linalg::ScratchArena`).
+//! [`cholesky_into`]/[`cholesky_jittered_into_planned`] are the
+//! allocation-free variants the refresh hot path uses (factor into a
+//! caller/arena-owned buffer, pack into an arena-owned plan; see
+//! `linalg::ScratchArena`).
 
-use super::matmul::{dot, SendPtr};
+use super::gemm::{self, MatmulPlan};
 use super::matrix::Matrix;
-use crate::util::pool::{default_threads, parallel_for};
+use crate::util::pool::default_threads;
 use std::fmt;
 
 /// Panel width of the blocked right-looking factorization.
@@ -84,7 +86,8 @@ pub fn cholesky_into(a: &Matrix, out: &mut Matrix) -> Result<(), CholeskyError> 
     }
     assert_eq!((out.rows(), out.cols()), (a.rows(), a.cols()), "output shape mismatch");
     out.copy_from(a);
-    factor_in_place(out)?;
+    let mut plan = MatmulPlan::new();
+    factor_in_place(out, &mut plan)?;
     zero_strict_upper(out);
     Ok(())
 }
@@ -102,11 +105,11 @@ pub fn cholesky_naive(a: &Matrix) -> Result<Matrix, CholeskyError> {
     Ok(l)
 }
 
-fn factor_in_place(l: &mut Matrix) -> Result<(), CholeskyError> {
+fn factor_in_place(l: &mut Matrix, plan: &mut MatmulPlan) -> Result<(), CholeskyError> {
     if l.rows() < CHOLESKY_BLOCKED_MIN {
         factor_naive_in_place(l)
     } else {
-        factor_blocked_in_place(l)
+        factor_blocked_in_place(l, plan)
     }
 }
 
@@ -160,11 +163,15 @@ fn factor_naive_in_place(l: &mut Matrix) -> Result<(), CholeskyError> {
 /// Per panel `[k0, k1)`: (1) factor the diagonal block (scalar, f64
 /// accumulation — prior panels' contributions were already subtracted by
 /// their trailing updates); (2) triangular-solve the panel rows below it;
-/// (3) rank-`k1−k0` trailing update `A22 −= L21·L21ᵀ`, parallel over
-/// trailing rows with the vectorized contiguous [`dot`]. Passes 1–2 are
+/// (3) rank-`k1−k0` trailing update `A22 −= L21·L21ᵀ` on the lower
+/// triangle, through the packed-panel GEMM tier's strided subtract kernel
+/// (`gemm::syrk_sub_lower_raw`; one panel is a single KC slab, so the
+/// accumulation order is thread-count-independent). Passes 1–2 are
 /// O(n²·PANEL) and run sequentially with full finite/PD checks; pass 3 is
-/// the O(n³) bulk.
-fn factor_blocked_in_place(l: &mut Matrix) -> Result<(), CholeskyError> {
+/// the O(n³) bulk. The caller-owned `plan` holds the packing buffers —
+/// one pair, reused by every panel of the factorization (and across
+/// factorizations when the arena plan is threaded through).
+fn factor_blocked_in_place(l: &mut Matrix, plan: &mut MatmulPlan) -> Result<(), CholeskyError> {
     let n = l.rows();
     let mut k0 = 0usize;
     while k0 < n {
@@ -230,22 +237,21 @@ fn factor_blocked_in_place(l: &mut Matrix) -> Result<(), CholeskyError> {
             } else {
                 default_threads()
             };
-            let base = SendPtr(l.data_mut().as_mut_ptr());
-            parallel_for(trailing, threads, |r| {
-                let i = k1 + r;
-                let p = base.get();
-                // Safety: each task writes only row i's columns [k1, i] and
-                // reads panel columns [k0, k1) of rows ≤ i — ranges other
-                // tasks never write in this pass.
-                let pi = unsafe { std::slice::from_raw_parts(p.add(i * n + k0), pw) };
-                let row_i =
-                    unsafe { std::slice::from_raw_parts_mut(p.add(i * n + k1), i + 1 - k1) };
-                for (jj, cell) in row_i.iter_mut().enumerate() {
-                    let j = k1 + jj;
-                    let pj = unsafe { std::slice::from_raw_parts(p.add(j * n + k0), pw) };
-                    *cell -= dot(pi, pj);
-                }
-            });
+            let base = l.data_mut().as_mut_ptr();
+            // Safety: the written window (rows ≥ k1, cols ≥ k1) and the
+            // read window L21 (rows ≥ k1, cols [k0, k1)) are disjoint
+            // column ranges of the same rows of `l`.
+            unsafe {
+                gemm::syrk_sub_lower_raw(
+                    base.add(k1 * n + k1),
+                    base.add(k1 * n + k0) as *const f32,
+                    n,
+                    trailing,
+                    pw,
+                    threads,
+                    plan,
+                );
+            }
         }
 
         k0 = k1;
@@ -274,6 +280,20 @@ pub fn cholesky_jittered_into(
     max_tries: u32,
     out: &mut Matrix,
 ) -> Result<f32, CholeskyError> {
+    let mut plan = MatmulPlan::new();
+    cholesky_jittered_into_planned(a, eps, max_tries, out, &mut plan)
+}
+
+/// [`cholesky_jittered_into`] with a caller-owned GEMM plan for the
+/// trailing-update packing buffers — the fully allocation-free variant the
+/// codec refresh path uses (pass `ScratchArena::plan`).
+pub fn cholesky_jittered_into_planned(
+    a: &Matrix,
+    eps: f32,
+    max_tries: u32,
+    out: &mut Matrix,
+    plan: &mut MatmulPlan,
+) -> Result<f32, CholeskyError> {
     if !a.is_square() {
         return Err(CholeskyError::NotSquare(a.rows(), a.cols()));
     }
@@ -283,7 +303,7 @@ pub fn cholesky_jittered_into(
     for _ in 0..max_tries {
         out.copy_from(a);
         out.add_diag(jitter);
-        match factor_in_place(out) {
+        match factor_in_place(out, plan) {
             Ok(()) => {
                 zero_strict_upper(out);
                 return Ok(jitter);

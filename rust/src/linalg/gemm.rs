@@ -1,0 +1,818 @@
+//! Packed-panel microkernel GEMM — the crate's raw-speed tier.
+//!
+//! Every dense product in the optimizer funnels into this module through the
+//! `linalg::matmul` entry points: the Gram accumulations (`GᵀG`, `G·Gᵀ`),
+//! the blocked Cholesky trailing update, the Schur–Newton and eigensolver
+//! iterations, and the `L̂·G·R̂` preconditioning itself. The design is the
+//! classic GotoBLAS/BLIS decomposition, dependency-free and in pure Rust:
+//!
+//! ```text
+//! for pc in (0..k).step_by(KC)          ← sequential (fixes summation order)
+//!   pack A[:, pc..pc+kc]   → MR-row panels, k-major, zero-padded
+//!   for jc in (0..n).step_by(NC)        ← parallel_for over jc slabs
+//!     pack B[pc.., jc..jc+nc] → NR-col panels, k-major, zero-padded
+//!     for ic in (0..m).step_by(MC)      ← L2-resident stripe of packed A
+//!       for jr in (jc..).step_by(NR)    ← one packed-B panel (L1)
+//!         for ir in (ic..).step_by(MR)  ← one packed-A panel (registers)
+//!           microkernel: MR×NR tile += Σ_kc a-panel ⊗ b-panel
+//! ```
+//!
+//! The microkernel computes a full `MR×NR = 6×16` register tile (twelve
+//! 8-lane accumulators on AVX2) from two k-major panels; partial edge tiles
+//! are handled by zero-padding the packs and copying back only the valid
+//! `mr×nr` window, so the kernel itself has no edge cases. Two kernels are
+//! compiled: a portable scalar one (fallback on non-x86 targets *and* the
+//! correctness oracle the tests pin against) and an AVX2+FMA one selected
+//! at runtime via `is_x86_feature_detected!` — no `-C target-cpu` flags or
+//! external BLAS needed.
+//!
+//! ## Determinism contract
+//!
+//! The summation order of every `C[i][j]` is fixed by the sequential `pc`
+//! (KC-slab) loop alone; the parallel grain is `jc` column slabs, which
+//! partition C disjointly. Parallel and sequential runs are therefore
+//! **bit-identical** for a given microkernel. `Avx2` and `Scalar` differ
+//! only in rounding (FMA contraction, 8-lane sub-sums) and are pinned to
+//! ≤1e-5 relative Frobenius by `tests/kernel_equivalence.rs`.
+//!
+//! ## Scratch ownership
+//!
+//! Packing buffers live in a [`MatmulPlan`] (usually the one owned by
+//! `linalg::ScratchArena`): after warm-up they are reused verbatim, so the
+//! steady-state refresh pipeline performs zero GEMM allocations —
+//! observable via [`MatmulPlan::grows`] and asserted by the scratch-reuse
+//! suite.
+//!
+//! ```
+//! use quartz::linalg::gemm::{gemm_with, Microkernel};
+//! use quartz::linalg::{MatmulPlan, Matrix};
+//!
+//! // 2×3 · 3×2 against the hand-computed product (exact in f32).
+//! let a = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+//! let b = Matrix::from_rows(&[&[7.0, 8.0], &[9.0, 10.0], &[11.0, 12.0]]);
+//! let mut c = Matrix::zeros(2, 2);
+//! let mut plan = MatmulPlan::new();
+//! gemm_with(&a, false, &b, false, &mut c, &mut plan, Microkernel::Scalar, 1);
+//! assert_eq!(c, Matrix::from_rows(&[&[58.0, 64.0], &[139.0, 154.0]]));
+//! ```
+
+use super::matmul::SendPtr;
+use super::matrix::Matrix;
+use crate::util::pool::{default_threads, parallel_for};
+use std::sync::OnceLock;
+
+/// Microkernel tile rows (register-blocking factor over C rows).
+pub const MR: usize = 6;
+/// Microkernel tile columns: two 8-lane vectors on AVX2.
+pub const NR: usize = 16;
+/// L2 stripe height of packed A; a multiple of [`MR`].
+pub const MC: usize = 96;
+/// Depth of one packed slab pair (the sequential accumulation step).
+pub const KC: usize = 240;
+/// Width of one packed-B slab — the parallel grain; a multiple of [`NR`].
+pub const NC: usize = 192;
+
+/// Products with any dimension below this skip packing entirely.
+pub const GEMM_SMALL_DIM: usize = 8;
+/// Products with fewer total FLOPs than this (`2mnk`) skip packing.
+pub const GEMM_SMALL_FLOP: usize = 1 << 16;
+/// FLOP threshold below which the driver stays single-threaded.
+const PAR_FLOP_THRESHOLD: usize = 1 << 20;
+
+/// Which compiled microkernel drives the packed tier.
+///
+/// `Scalar` is always available and is the oracle the SIMD path is tested
+/// against; `Avx2` requires runtime AVX2+FMA support (see
+/// [`avx2_available`]) and falls back to `Scalar` on other architectures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Microkernel {
+    /// Portable scalar kernel (fallback and correctness oracle).
+    Scalar,
+    /// AVX2+FMA register-tiled kernel, selected at runtime on x86_64.
+    Avx2,
+}
+
+/// Whether the running CPU supports the AVX2+FMA microkernel.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The microkernel the auto-dispatching entry points use (detected once).
+pub fn active_microkernel() -> Microkernel {
+    static DETECTED: OnceLock<Microkernel> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if avx2_available() {
+            Microkernel::Avx2
+        } else {
+            Microkernel::Scalar
+        }
+    })
+}
+
+/// Reusable packing scratch for repeated products (avoids reallocating the
+/// packed-panel buffers inside optimizer loops).
+///
+/// Plan-audit rule (hot-path discipline): `matmul`/`matmul_into` create a
+/// fresh plan per call, which is fine for one-off products but silently
+/// re-allocates inside loops. Anything called per refresh step — Shampoo's
+/// preconditioning, the Gram updates, the Schur–Newton iteration, the
+/// eigensolver fallback — must route through the `*_planned` entry points
+/// with a caller-owned plan (typically the one inside
+/// `linalg::ScratchArena`).
+#[derive(Debug, Default)]
+pub struct MatmulPlan {
+    packed_a: Vec<f32>,
+    packed_b: Vec<f32>,
+    grows: usize,
+}
+
+impl MatmulPlan {
+    pub fn new() -> Self {
+        MatmulPlan::default()
+    }
+
+    /// Number of times the packing buffers had to grow. Stable across steps
+    /// ⇔ the steady-state GEMM pipeline is allocation-free (the packing
+    /// half of the scratch-reuse invariant; buffer takes are tracked by
+    /// `ScratchArena::misses`).
+    pub fn grows(&self) -> usize {
+        self.grows
+    }
+
+    /// Grow (never shrink) the pack buffers to the given lengths.
+    fn ensure(&mut self, a_len: usize, b_len: usize) {
+        if self.packed_a.len() < a_len {
+            self.grows += 1;
+            self.packed_a.resize(a_len, 0.0);
+        }
+        if self.packed_b.len() < b_len {
+            self.grows += 1;
+            self.packed_b.resize(b_len, 0.0);
+        }
+    }
+}
+
+/// Read-only strided view: element `(i, j)` lives at `ptr[i·rs + j·cs]`.
+/// One shape serves N/T operands and submatrix windows (the Cholesky
+/// trailing block) without materializing transposes or copies.
+#[derive(Clone, Copy)]
+struct View {
+    ptr: *const f32,
+    rs: usize,
+    cs: usize,
+}
+
+// Safety: View only reads, and the driver's parallel tasks never write to
+// the viewed storage (operand/output disjointness is the caller contract).
+unsafe impl Sync for View {}
+
+impl View {
+    fn of(m: &Matrix, transposed: bool) -> View {
+        let ptr = m.data().as_ptr();
+        if transposed {
+            View { ptr, rs: 1, cs: m.cols() }
+        } else {
+            View { ptr, rs: m.cols(), cs: 1 }
+        }
+    }
+
+    /// # Safety
+    /// `(i, j)` must lie inside the viewed matrix.
+    #[inline(always)]
+    unsafe fn at(&self, i: usize, j: usize) -> f32 {
+        *self.ptr.add(i * self.rs + j * self.cs)
+    }
+}
+
+/// Read-only raw pointer that may cross the scoped-thread boundary (the
+/// `*const` sibling of `matmul::SendPtr`).
+struct SendConst<T>(*const T);
+unsafe impl<T> Sync for SendConst<T> {}
+impl<T> SendConst<T> {
+    #[inline]
+    fn get(&self) -> *const T {
+        self.0
+    }
+}
+
+/// How a computed tile lands in C.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Acc {
+    /// Overwrite (first KC slab of a plain product).
+    Set,
+    /// Accumulate (subsequent KC slabs).
+    Add,
+    /// Subtract (the Cholesky trailing update `A22 −= L21·L21ᵀ`).
+    Sub,
+}
+
+fn is_small(m: usize, n: usize, k: usize) -> bool {
+    m.min(n).min(k) < GEMM_SMALL_DIM || 2 * m * n * k < GEMM_SMALL_FLOP
+}
+
+fn auto_threads(flops: usize) -> usize {
+    if flops < PAR_FLOP_THRESHOLD {
+        1
+    } else {
+        default_threads()
+    }
+}
+
+fn op_shape(m: &Matrix, transposed: bool) -> (usize, usize) {
+    if transposed {
+        (m.cols(), m.rows())
+    } else {
+        (m.rows(), m.cols())
+    }
+}
+
+/// `C = op(A)·op(B)` through the packed-panel tier with an explicit
+/// microkernel and thread count — the entry point the equivalence tests and
+/// benches use to pin `Avx2` against `Scalar` and parallel against
+/// sequential. Unlike the auto-dispatching `matmul_*` wrappers it never
+/// takes the small-product shortcut, so edge tiles are exercised even on
+/// tiny shapes. `ta`/`tb` select `Aᵀ`/`Bᵀ`.
+pub fn gemm_with(
+    a: &Matrix,
+    ta: bool,
+    b: &Matrix,
+    tb: bool,
+    c: &mut Matrix,
+    plan: &mut MatmulPlan,
+    kernel: Microkernel,
+    threads: usize,
+) {
+    let (m, n, k) = checked_dims(a, ta, b, tb, c);
+    let (av, bv) = (View::of(a, ta), View::of(b, tb));
+    let cp = c.data_mut().as_mut_ptr();
+    // Safety: `c` is a distinct `&mut Matrix`, so the output window cannot
+    // overlap either operand's storage.
+    unsafe { driver(m, n, k, av, bv, cp, n, false, false, plan, kernel, threads) };
+}
+
+/// Lower-triangle SYRK `C[lower] = A·Aᵀ` through the packed tier with an
+/// explicit microkernel and thread count (test/bench entry point; see
+/// [`gemm_with`]). The strict upper triangle of `C` is left untouched.
+pub fn syrk_lower_with(
+    a: &Matrix,
+    c: &mut Matrix,
+    plan: &mut MatmulPlan,
+    kernel: Microkernel,
+    threads: usize,
+) {
+    let m = a.rows();
+    let k = a.cols();
+    assert_eq!((c.rows(), c.cols()), (m, m), "output shape mismatch");
+    let (av, bv) = (View::of(a, false), View::of(a, true));
+    let cp = c.data_mut().as_mut_ptr();
+    // Safety: `c` is a distinct `&mut Matrix` (no operand overlap).
+    unsafe { driver(m, m, k, av, bv, cp, m, true, false, plan, kernel, threads) };
+}
+
+/// Auto-dispatching `C = op(A)·op(B)` used by the public `matmul_*` entry
+/// points: small products take the plain loop, everything else the packed
+/// tier with the detected microkernel.
+pub(crate) fn gemm_into(
+    a: &Matrix,
+    ta: bool,
+    b: &Matrix,
+    tb: bool,
+    c: &mut Matrix,
+    plan: &mut MatmulPlan,
+) {
+    let (m, n, k) = checked_dims(a, ta, b, tb, c);
+    let (av, bv) = (View::of(a, ta), View::of(b, tb));
+    let cp = c.data_mut().as_mut_ptr();
+    // Safety: `c` is a distinct `&mut Matrix` (no operand overlap).
+    unsafe {
+        if is_small(m, n, k) {
+            small_kernel(m, n, k, av, bv, cp, n, false, Acc::Set);
+        } else {
+            let threads = auto_threads(2 * m * n * k);
+            driver(m, n, k, av, bv, cp, n, false, false, plan, active_microkernel(), threads);
+        }
+    }
+}
+
+/// Auto-dispatching lower-triangle SYRK used by the public `syrk*` entry
+/// points; the strict upper triangle of `C` is left untouched.
+pub(crate) fn syrk_lower(a: &Matrix, c: &mut Matrix, plan: &mut MatmulPlan) {
+    let m = a.rows();
+    let k = a.cols();
+    assert_eq!((c.rows(), c.cols()), (m, m), "output shape mismatch");
+    let (av, bv) = (View::of(a, false), View::of(a, true));
+    let cp = c.data_mut().as_mut_ptr();
+    // Safety: `c` is a distinct `&mut Matrix` (no operand overlap).
+    unsafe {
+        if is_small(m, m, k) {
+            small_kernel(m, m, k, av, bv, cp, m, true, Acc::Set);
+        } else {
+            let threads = auto_threads(m * m * k);
+            driver(m, m, k, av, bv, cp, m, true, false, plan, active_microkernel(), threads);
+        }
+    }
+}
+
+/// Trailing-update entry for the blocked Cholesky: `C −= A·Aᵀ` on the lower
+/// triangle only, where `C` (`m×m`) and `A` (`m×k`) are windows into one
+/// allocation with row stride `ld`.
+///
+/// # Safety
+/// `c` must point at an `m×m` window and `a` at an `m×k` window, both with
+/// row stride `ld ≥` their widths, and the two windows must be disjoint.
+pub(crate) unsafe fn syrk_sub_lower_raw(
+    c: *mut f32,
+    a: *const f32,
+    ld: usize,
+    m: usize,
+    k: usize,
+    threads: usize,
+    plan: &mut MatmulPlan,
+) {
+    let av = View { ptr: a, rs: ld, cs: 1 };
+    let bv = View { ptr: a, rs: 1, cs: ld };
+    if is_small(m, m, k) {
+        small_kernel(m, m, k, av, bv, c, ld, true, Acc::Sub);
+    } else {
+        driver(m, m, k, av, bv, c, ld, true, true, plan, active_microkernel(), threads);
+    }
+}
+
+fn checked_dims(a: &Matrix, ta: bool, b: &Matrix, tb: bool, c: &Matrix) -> (usize, usize, usize) {
+    let (m, ka) = op_shape(a, ta);
+    let (kb, n) = op_shape(b, tb);
+    assert_eq!(ka, kb, "inner dimension mismatch: {}x{} · {}x{}", m, ka, kb, n);
+    assert_eq!((c.rows(), c.cols()), (m, n), "output shape mismatch");
+    (m, n, ka)
+}
+
+/// The packed-panel driver. `lower` restricts writes to `j ≤ i`; `sub`
+/// subtracts the product from C instead of overwriting it.
+///
+/// # Safety
+/// `c` must point at an `m×n` window with row stride `ldc ≥ n` whose
+/// storage is disjoint from both operand views.
+unsafe fn driver(
+    m: usize,
+    n: usize,
+    k: usize,
+    av: View,
+    bv: View,
+    c: *mut f32,
+    ldc: usize,
+    lower: bool,
+    sub: bool,
+    plan: &mut MatmulPlan,
+    kernel: Microkernel,
+    threads: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // Empty accumulation: Set zero-fills, Sub leaves C unchanged.
+        small_kernel(m, n, k, av, bv, c, ldc, lower, if sub { Acc::Sub } else { Acc::Set });
+        return;
+    }
+    let kc_max = KC.min(k);
+    let jc_tasks = n.div_ceil(NC);
+    plan.ensure(m.div_ceil(MR) * MR * kc_max, jc_tasks * NC * kc_max);
+
+    let mut pc = 0usize;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        pack_a(av, m, pc, kc, &mut plan.packed_a);
+        let acc = if sub {
+            Acc::Sub
+        } else if pc == 0 {
+            Acc::Set
+        } else {
+            Acc::Add
+        };
+        let pa = SendConst(plan.packed_a.as_ptr());
+        let pb = SendPtr(plan.packed_b.as_mut_ptr());
+        let cp = SendPtr(c);
+        parallel_for(jc_tasks, threads, |jt| {
+            let col0 = jt * NC;
+            let nc = NC.min(n - col0);
+            // Safety: task jt owns packed-B slab jt and writes only columns
+            // [col0, col0+nc) of C — ranges disjoint across tasks.
+            unsafe {
+                let slab = pb.get().add(jt * NC * kc_max);
+                pack_b(bv, pc, kc, col0, nc, slab);
+                macro_panel(kernel, kc, m, col0, nc, pa.get(), slab, cp.get(), ldc, acc, lower);
+            }
+        });
+        pc += kc;
+    }
+}
+
+/// Pack `A[:, pc..pc+kc]` into MR-row panels, k-major, rows beyond `m`
+/// zero-padded: panel `p` holds rows `p·MR..` at `out[p·MR·kc + kk·MR + r]`.
+///
+/// # Safety
+/// The column range `[pc, pc+kc)` must lie inside the viewed matrix.
+unsafe fn pack_a(av: View, m: usize, pc: usize, kc: usize, out: &mut [f32]) {
+    for p in 0..m.div_ceil(MR) {
+        let r0 = p * MR;
+        let rows = MR.min(m - r0);
+        for kk in 0..kc {
+            let dst = &mut out[p * MR * kc + kk * MR..p * MR * kc + (kk + 1) * MR];
+            for (r, slot) in dst.iter_mut().enumerate() {
+                *slot = if r < rows { av.at(r0 + r, pc + kk) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack `B[pc..pc+kc, col0..col0+nc]` into NR-column panels, k-major,
+/// columns beyond the edge zero-padded.
+///
+/// # Safety
+/// The viewed ranges must be in bounds and `out` valid for
+/// `nc.div_ceil(NR)·NR·kc` writes.
+unsafe fn pack_b(bv: View, pc: usize, kc: usize, col0: usize, nc: usize, out: *mut f32) {
+    for q in 0..nc.div_ceil(NR) {
+        let c0 = col0 + q * NR;
+        let cols = NR.min(col0 + nc - c0);
+        for kk in 0..kc {
+            let dst = out.add(q * NR * kc + kk * NR);
+            for j in 0..NR {
+                *dst.add(j) = if j < cols { bv.at(pc + kk, c0 + j) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// One jc-slab's macro loops: MC stripes of packed A × NR panels of the
+/// packed-B slab, microkernel per tile, valid window copied back to C.
+///
+/// # Safety
+/// Same window contract as [`driver`]; `pa`/`pb` must hold the packed
+/// panels described by [`pack_a`]/[`pack_b`] for this slab.
+unsafe fn macro_panel(
+    kernel: Microkernel,
+    kc: usize,
+    m: usize,
+    col0: usize,
+    nc: usize,
+    pa: *const f32,
+    pb: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    acc: Acc,
+    lower: bool,
+) {
+    let mut ic = 0;
+    while ic < m {
+        let mc = MC.min(m - ic);
+        for q in 0..nc.div_ceil(NR) {
+            let j0 = col0 + q * NR;
+            let nr = NR.min(col0 + nc - j0);
+            let bpan = pb.add(q * NR * kc);
+            let mut ir = ic;
+            while ir < ic + mc {
+                let mr = MR.min(m - ir);
+                // Lower-only: skip tiles strictly above the diagonal.
+                if lower && j0 >= ir + mr {
+                    ir += MR;
+                    continue;
+                }
+                let apan = pa.add((ir / MR) * MR * kc);
+                let mut tile = [0.0f32; MR * NR];
+                run_kernel(kernel, kc, apan, bpan, &mut tile);
+                write_tile(c, ldc, ir, j0, mr, nr, &tile, acc, lower);
+                ir += MR;
+            }
+        }
+        ic += MC;
+    }
+}
+
+#[inline]
+unsafe fn run_kernel(
+    kernel: Microkernel,
+    kc: usize,
+    a: *const f32,
+    b: *const f32,
+    tile: &mut [f32; MR * NR],
+) {
+    match kernel {
+        Microkernel::Scalar => kernel_scalar(kc, a, b, tile),
+        #[cfg(target_arch = "x86_64")]
+        Microkernel::Avx2 => kernel_avx2(kc, a, b, tile),
+        #[cfg(not(target_arch = "x86_64"))]
+        Microkernel::Avx2 => kernel_scalar(kc, a, b, tile),
+    }
+}
+
+/// Portable microkernel: `tile[r][j] = Σ_kk apan[kk][r] · bpan[kk][j]` over
+/// one full (zero-padded) MR×NR tile. Fixed NR-wide inner loops
+/// auto-vectorize; this is also the oracle the AVX2 kernel is pinned to.
+///
+/// # Safety
+/// `a` must be valid for `kc·MR` reads and `b` for `kc·NR` reads.
+unsafe fn kernel_scalar(kc: usize, a: *const f32, b: *const f32, tile: &mut [f32; MR * NR]) {
+    for kk in 0..kc {
+        let ap = std::slice::from_raw_parts(a.add(kk * MR), MR);
+        let bp = std::slice::from_raw_parts(b.add(kk * NR), NR);
+        for (r, &avv) in ap.iter().enumerate() {
+            let row = &mut tile[r * NR..(r + 1) * NR];
+            for (t, &bvv) in row.iter_mut().zip(bp.iter()) {
+                *t += avv * bvv;
+            }
+        }
+    }
+}
+
+/// AVX2+FMA microkernel: 6 rows × two 8-lane vectors = 12 ymm accumulators
+/// (the classic Haswell sgemm shape), one FMA pair per packed A scalar.
+///
+/// # Safety
+/// Caller must ensure AVX2+FMA are available (see [`avx2_available`]);
+/// `a` must be valid for `kc·MR` reads and `b` for `kc·NR` reads.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn kernel_avx2(kc: usize, a: *const f32, b: *const f32, tile: &mut [f32; MR * NR]) {
+    use std::arch::x86_64::{
+        _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+    let mut acc = [_mm256_setzero_ps(); 2 * MR];
+    for kk in 0..kc {
+        let b0 = _mm256_loadu_ps(b.add(kk * NR));
+        let b1 = _mm256_loadu_ps(b.add(kk * NR + 8));
+        for r in 0..MR {
+            let avv = _mm256_set1_ps(*a.add(kk * MR + r));
+            acc[2 * r] = _mm256_fmadd_ps(avv, b0, acc[2 * r]);
+            acc[2 * r + 1] = _mm256_fmadd_ps(avv, b1, acc[2 * r + 1]);
+        }
+    }
+    for r in 0..MR {
+        _mm256_storeu_ps(tile.as_mut_ptr().add(r * NR), acc[2 * r]);
+        _mm256_storeu_ps(tile.as_mut_ptr().add(r * NR + 8), acc[2 * r + 1]);
+    }
+}
+
+/// Copy the valid `mr×nr` window of a computed tile into C (clipped to the
+/// lower triangle when `lower`).
+///
+/// # Safety
+/// Rows `[i0, i0+mr)` × columns `[j0, j0+nr)` must be in bounds of the `c`
+/// window with row stride `ldc`.
+unsafe fn write_tile(
+    c: *mut f32,
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+    tile: &[f32; MR * NR],
+    acc: Acc,
+    lower: bool,
+) {
+    for r in 0..mr {
+        let i = i0 + r;
+        let cols = if lower {
+            if i < j0 {
+                0
+            } else {
+                nr.min(i - j0 + 1)
+            }
+        } else {
+            nr
+        };
+        let dst = c.add(i * ldc + j0);
+        let src = &tile[r * NR..r * NR + cols];
+        match acc {
+            Acc::Set => {
+                for (j, &v) in src.iter().enumerate() {
+                    *dst.add(j) = v;
+                }
+            }
+            Acc::Add => {
+                for (j, &v) in src.iter().enumerate() {
+                    *dst.add(j) += v;
+                }
+            }
+            Acc::Sub => {
+                for (j, &v) in src.iter().enumerate() {
+                    *dst.add(j) -= v;
+                }
+            }
+        }
+    }
+}
+
+/// Plain triple loop for products too small to amortize packing (also the
+/// `k = 0` zero-fill path). Sequential, so trivially deterministic.
+///
+/// # Safety
+/// Same window contract as [`driver`].
+unsafe fn small_kernel(
+    m: usize,
+    n: usize,
+    k: usize,
+    av: View,
+    bv: View,
+    c: *mut f32,
+    ldc: usize,
+    lower: bool,
+    acc: Acc,
+) {
+    for i in 0..m {
+        let jmax = if lower { n.min(i + 1) } else { n };
+        let dst = c.add(i * ldc);
+        for j in 0..jmax {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += av.at(i, kk) * bv.at(kk, j);
+            }
+            match acc {
+                Acc::Set => *dst.add(j) = s,
+                Acc::Add => *dst.add(j) += s,
+                Acc::Sub => *dst.add(j) -= s,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::relative_error;
+    use crate::util::rng::Rng;
+
+    /// f64-accumulating reference product.
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] as f64 * b[(k, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    const SHAPES: [(usize, usize, usize); 7] = [
+        (1, 1, 1),
+        (5, 3, 2),
+        (6, 16, 240),
+        (7, 17, 241),
+        (64, 64, 64),
+        (97, 50, 193),
+        (130, 200, 70),
+    ];
+
+    #[test]
+    fn packed_tier_matches_naive_all_op_combos() {
+        let mut rng = Rng::new(11);
+        let mut plan = MatmulPlan::new();
+        for (m, n, k) in SHAPES {
+            for (ta, tb) in [(false, false), (true, false), (false, true), (true, true)] {
+                let (ar, ac) = if ta { (k, m) } else { (m, k) };
+                let (br, bc) = if tb { (n, k) } else { (k, n) };
+                let a = Matrix::randn(ar, ac, 1.0, &mut rng);
+                let b = Matrix::randn(br, bc, 1.0, &mut rng);
+                let ae = if ta { a.transpose() } else { a.clone() };
+                let be = if tb { b.transpose() } else { b.clone() };
+                let want = naive(&ae, &be);
+                let mut c = Matrix::zeros(m, n);
+                gemm_with(&a, ta, &b, tb, &mut c, &mut plan, Microkernel::Scalar, 1);
+                let rel = relative_error(&want, &c);
+                assert!(rel < 1e-5, "shape {m}x{n}x{k} ta={ta} tb={tb} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_kernel_matches_scalar_oracle() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Rng::new(12);
+        let mut plan = MatmulPlan::new();
+        for (m, n, k) in SHAPES {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut cs = Matrix::zeros(m, n);
+            let mut cv = Matrix::zeros(m, n);
+            gemm_with(&a, false, &b, false, &mut cs, &mut plan, Microkernel::Scalar, 1);
+            gemm_with(&a, false, &b, false, &mut cv, &mut plan, Microkernel::Avx2, 1);
+            let rel = relative_error(&cs, &cv);
+            assert!(rel < 1e-5, "shape {m}x{n}x{k} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_sequential() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::randn(150, 500, 1.0, &mut rng);
+        let b = Matrix::randn(500, 410, 1.0, &mut rng);
+        let mut plan = MatmulPlan::new();
+        let mut c1 = Matrix::zeros(150, 410);
+        gemm_with(&a, false, &b, false, &mut c1, &mut plan, Microkernel::Scalar, 1);
+        for threads in [2, 4, 7] {
+            let mut ct = Matrix::zeros(150, 410);
+            gemm_with(&a, false, &b, false, &mut ct, &mut plan, Microkernel::Scalar, threads);
+            assert_eq!(c1, ct, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn syrk_lower_leaves_upper_untouched() {
+        let mut rng = Rng::new(14);
+        let a = Matrix::randn(37, 29, 1.0, &mut rng);
+        let want = naive(&a, &a.transpose());
+        let mut c = Matrix::from_fn(37, 37, |_, _| 7.5);
+        let mut plan = MatmulPlan::new();
+        syrk_lower_with(&a, &mut c, &mut plan, Microkernel::Scalar, 1);
+        for i in 0..37 {
+            for j in 0..37 {
+                if j > i {
+                    assert_eq!(c[(i, j)], 7.5, "upper ({i},{j}) must be untouched");
+                } else {
+                    let d = (c[(i, j)] - want[(i, j)]).abs();
+                    assert!(d < 1e-3, "lower ({i},{j}) diff {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_sub_raw_subtracts_in_window() {
+        // C −= A·Aᵀ where C and A are windows of one buffer, as in the
+        // blocked Cholesky trailing update.
+        let mut rng = Rng::new(15);
+        let ld = 40;
+        let (m, k) = (24, 12);
+        let full = Matrix::randn(ld, ld, 1.0, &mut rng);
+        let mut buf = full.clone();
+        // A window at rows [16, 40), cols [0, 12); C at rows/cols [16, 40).
+        let mut a = Matrix::zeros(m, k);
+        for i in 0..m {
+            for j in 0..k {
+                a[(i, j)] = full[(16 + i, j)];
+            }
+        }
+        let prod = naive(&a, &a.transpose());
+        let base = buf.data_mut().as_mut_ptr();
+        let mut plan = MatmulPlan::new();
+        unsafe {
+            syrk_sub_lower_raw(base.add(16 * ld + 16), base.add(16 * ld), ld, m, k, 1, &mut plan);
+        }
+        for i in 0..ld {
+            for j in 0..ld {
+                let inside = i >= 16 && j >= 16 && j <= i;
+                let want = if inside {
+                    full[(i, j)] - prod[(i - 16, j - 16)]
+                } else {
+                    full[(i, j)]
+                };
+                let d = (buf[(i, j)] - want).abs();
+                assert!(d < 1e-4, "({i},{j}) diff {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reuse_does_not_regrow() {
+        let mut rng = Rng::new(16);
+        let a = Matrix::randn(100, 100, 1.0, &mut rng);
+        let b = Matrix::randn(100, 100, 1.0, &mut rng);
+        let mut c = Matrix::zeros(100, 100);
+        let mut plan = MatmulPlan::new();
+        gemm_with(&a, false, &b, false, &mut c, &mut plan, Microkernel::Scalar, 1);
+        let warm = plan.grows();
+        for _ in 0..5 {
+            gemm_with(&a, false, &b, false, &mut c, &mut plan, Microkernel::Scalar, 2);
+        }
+        // Smaller shapes fit in the warm buffers too.
+        let a2 = Matrix::randn(40, 60, 1.0, &mut rng);
+        let b2 = Matrix::randn(60, 30, 1.0, &mut rng);
+        let mut c2 = Matrix::zeros(40, 30);
+        gemm_with(&a2, false, &b2, false, &mut c2, &mut plan, Microkernel::Scalar, 1);
+        assert_eq!(plan.grows(), warm, "steady-state packing must not reallocate");
+    }
+
+    #[test]
+    fn zero_inner_dimension_zero_fills() {
+        let a = Matrix::zeros(4, 0);
+        let b = Matrix::zeros(0, 3);
+        let mut c = Matrix::from_fn(4, 3, |_, _| f32::NAN);
+        let mut plan = MatmulPlan::new();
+        gemm_with(&a, false, &b, false, &mut c, &mut plan, Microkernel::Scalar, 1);
+        assert_eq!(c, Matrix::zeros(4, 3));
+    }
+}

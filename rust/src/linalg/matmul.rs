@@ -1,41 +1,25 @@
-//! Cache-blocked, threaded matrix multiplication.
+//! Matrix-product entry points, routed through the packed-panel GEMM tier.
 //!
 //! The hot path of both Shampoo's preconditioner math (Gram updates,
-//! Schur–Newton iterations, `L̂·G·R̂`) and the profiled L3 benchmarks.
-//! Strategy: pack the B operand so the innermost loop is a contiguous
-//! dot-product (auto-vectorizes), block over rows, and parallelize row
-//! blocks with the in-tree pool.
+//! Schur–Newton iterations, `L̂·G·R̂`) and the profiled L3 benchmarks. The
+//! heavy lifting lives in [`linalg::gemm`](super::gemm): these wrappers
+//! keep the historical signatures (`matmul`, `matmul_tn_into`,
+//! `matmul_nt_into`, `syrk_into`) so every call site — blocked Cholesky,
+//! gram refresh, `eig_sym_with`, Schur–Newton — inherits the microkernel
+//! win without churn. Small products (below `gemm::GEMM_SMALL_DIM` /
+//! `gemm::GEMM_SMALL_FLOP`) skip packing and take a plain loop.
+//!
+//! Every `*_into` variant fully overwrites its output except
+//! [`syrk_lower_into`], which by contract writes only the lower triangle.
 
+use super::gemm;
 use super::matrix::Matrix;
-use crate::util::pool::parallel_for;
-/// Row-block size for the parallel outer loop.
-const ROW_BLOCK: usize = 32;
-/// Threshold (total FLOPs) below which we stay single-threaded.
-const PAR_FLOP_THRESHOLD: usize = 1 << 20;
 
-/// Reusable scratch for repeated products of the same shape (avoids
-/// reallocating the packed-B buffer inside optimizer loops).
-///
-/// Plan-audit rule (hot-path discipline): `matmul`/`matmul_into` create a
-/// fresh plan per call, which is fine for one-off products but silently
-/// re-allocates inside loops. Anything called per refresh step — Shampoo's
-/// preconditioning, the Schur–Newton iteration, the eigensolver fallback —
-/// must route through [`matmul_into_planned`] with a caller-owned plan
-/// (typically the one inside `linalg::ScratchArena`).
-#[derive(Debug, Default)]
-pub struct MatmulPlan {
-    packed_b: Vec<f32>,
-}
-
-impl MatmulPlan {
-    pub fn new() -> Self {
-        MatmulPlan { packed_b: Vec::new() }
-    }
-}
+pub use super::gemm::MatmulPlan;
 
 /// Raw pointer that may cross the scoped-thread boundary. Every user must
-/// write through disjoint index ranges per task (row blocks here; byte
-/// ranges in the quant kernels).
+/// write through disjoint index ranges per task (jc column slabs in the
+/// GEMM driver; byte ranges in the quant kernels).
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Sync for SendPtr<T> {}
 impl<T> SendPtr<T> {
@@ -49,6 +33,12 @@ impl<T> SendPtr<T> {
 }
 
 /// `C = A · B`.
+///
+/// ```
+/// use quartz::linalg::{matmul, Matrix};
+/// let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+/// assert_eq!(matmul(&a, &Matrix::eye(2)), a);
+/// ```
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(a.rows(), b.cols());
     matmul_into(a, b, &mut c);
@@ -61,52 +51,17 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     matmul_into_planned(a, b, c, &mut plan);
 }
 
-/// `C = A · B` with a caller-owned scratch plan.
+/// `C = A · B` with a caller-owned scratch plan (the hot-path variant; see
+/// the plan-audit rule on [`MatmulPlan`]).
 pub fn matmul_into_planned(a: &Matrix, b: &Matrix, c: &mut Matrix, plan: &mut MatmulPlan) {
-    let (m, k) = (a.rows(), a.cols());
-    let n = b.cols();
-    assert_eq!(b.rows(), k, "inner dimension mismatch: {}x{} · {}x{}", m, k, b.rows(), n);
-    assert_eq!((c.rows(), c.cols()), (m, n), "output shape mismatch");
-
-    // Pack B column-major (so each output column is a contiguous dot).
-    plan.packed_b.resize(k * n, 0.0);
-    for kk in 0..k {
-        let brow = b.row(kk);
-        for (j, &v) in brow.iter().enumerate() {
-            plan.packed_b[j * k + kk] = v;
-        }
-    }
-    let packed = &plan.packed_b;
-
-    let flops = 2 * m * n * k;
-    let blocks = m.div_ceil(ROW_BLOCK);
-    let threads = if flops < PAR_FLOP_THRESHOLD {
-        1
-    } else {
-        crate::util::pool::default_threads()
-    };
-
-    let c_ptr = SendPtr(c.data_mut().as_mut_ptr());
-    let a_ref = a;
-    parallel_for(blocks, threads, |blk| {
-        let r0 = blk * ROW_BLOCK;
-        let r1 = (r0 + ROW_BLOCK).min(m);
-        // Safety: each block writes a disjoint row range of C.
-        let base = c_ptr.get();
-        for i in r0..r1 {
-            let arow = a_ref.row(i);
-            let crow = unsafe { std::slice::from_raw_parts_mut(base.add(i * n), n) };
-            for (j, cv) in crow.iter_mut().enumerate() {
-                let bcol = &packed[j * k..(j + 1) * k];
-                *cv = dot(arow, bcol);
-            }
-        }
-    });
+    gemm::gemm_into(a, false, b, false, c, plan);
 }
 
 /// Contiguous dot product; unrolled by 8 for reliable auto-vectorization.
 /// (A 4×8 multi-accumulator variant was tried in the perf pass and measured
 /// *slower* on the shared single-vCPU testbed — see EXPERIMENTS.md §Perf.)
+/// Still the kernel of power iteration, `kron`, and the Cholesky panel
+/// passes; full products go through the packed GEMM tier instead.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -134,30 +89,16 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// `C = Aᵀ · B` into an existing output (`C` is fully overwritten).
 pub fn matmul_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    let (k, m) = (a.rows(), a.cols());
-    let n = b.cols();
-    assert_eq!(b.rows(), k);
-    assert_eq!((c.rows(), c.cols()), (m, n), "output shape mismatch");
-    c.data_mut().fill(0.0);
-    // C[i][j] = sum_kk A[kk][i] * B[kk][j]  — accumulate row-by-row (streams
-    // both operands contiguously).
-    for kk in 0..k {
-        let arow = a.row(kk);
-        let brow = b.row(kk);
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
-            }
-        }
-    }
+    let mut plan = MatmulPlan::new();
+    matmul_tn_into_planned(a, b, c, &mut plan);
 }
 
-/// `C = A · Bᵀ` (B is n×k): the `G·Gᵀ` shape with contiguous dots.
+/// `C = Aᵀ · B` with a caller-owned scratch plan.
+pub fn matmul_tn_into_planned(a: &Matrix, b: &Matrix, c: &mut Matrix, plan: &mut MatmulPlan) {
+    gemm::gemm_into(a, true, b, false, c, plan);
+}
+
+/// `C = A · Bᵀ` (B is n×k): the `G·Gᵀ` shape without materializing Bᵀ.
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(a.rows(), b.rows());
     matmul_nt_into(a, b, &mut c);
@@ -166,27 +107,17 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// `C = A · Bᵀ` into an existing output (`C` is fully overwritten).
 pub fn matmul_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    let (m, k) = (a.rows(), a.cols());
-    let n = b.rows();
-    assert_eq!(b.cols(), k);
-    assert_eq!((c.rows(), c.cols()), (m, n), "output shape mismatch");
-    let threads = if 2 * m * n * k < PAR_FLOP_THRESHOLD {
-        1
-    } else {
-        crate::util::pool::default_threads()
-    };
-    let c_ptr = SendPtr(c.data_mut().as_mut_ptr());
-    parallel_for(m, threads, |i| {
-        let arow = a.row(i);
-        let base = c_ptr.get();
-        let crow = unsafe { std::slice::from_raw_parts_mut(base.add(i * n), n) };
-        for (j, cv) in crow.iter_mut().enumerate() {
-            *cv = dot(arow, b.row(j));
-        }
-    });
+    let mut plan = MatmulPlan::new();
+    matmul_nt_into_planned(a, b, c, &mut plan);
 }
 
-/// Symmetric rank-k update `C = A · Aᵀ` exploiting symmetry (half the dots).
+/// `C = A · Bᵀ` with a caller-owned scratch plan.
+pub fn matmul_nt_into_planned(a: &Matrix, b: &Matrix, c: &mut Matrix, plan: &mut MatmulPlan) {
+    gemm::gemm_into(a, false, b, true, c, plan);
+}
+
+/// Symmetric rank-k update `C = A · Aᵀ` exploiting symmetry (the GEMM tier
+/// computes only the lower triangle; the upper is mirrored).
 pub fn syrk(a: &Matrix) -> Matrix {
     let m = a.rows();
     let mut c = Matrix::zeros(m, m);
@@ -196,25 +127,49 @@ pub fn syrk(a: &Matrix) -> Matrix {
 
 /// `C = A · Aᵀ` into an existing output (both triangles fully overwritten).
 pub fn syrk_into(a: &Matrix, c: &mut Matrix) {
-    let m = a.rows();
-    assert_eq!((c.rows(), c.cols()), (m, m), "output shape mismatch");
-    let threads = if m * m * a.cols() < PAR_FLOP_THRESHOLD {
-        1
-    } else {
-        crate::util::pool::default_threads()
-    };
-    let c_ptr = SendPtr(c.data_mut().as_mut_ptr());
-    parallel_for(m, threads, |i| {
-        let arow = a.row(i);
-        let base = c_ptr.get();
-        for j in 0..=i {
-            let v = dot(arow, a.row(j));
-            unsafe {
-                *base.add(i * m + j) = v;
-                *base.add(j * m + i) = v;
-            }
+    let mut plan = MatmulPlan::new();
+    syrk_into_planned(a, c, &mut plan);
+}
+
+/// `C = A · Aᵀ` with a caller-owned scratch plan (both triangles fully
+/// overwritten).
+pub fn syrk_into_planned(a: &Matrix, c: &mut Matrix, plan: &mut MatmulPlan) {
+    gemm::syrk_lower(a, c, plan);
+    mirror_lower_to_upper(c);
+}
+
+/// `C[lower] = A · Aᵀ`, writing **only** the lower triangle — the GEMM
+/// tier's native SYRK shape. The strict upper triangle of `C` is left
+/// untouched; use [`syrk_into`] when the full symmetric matrix is needed.
+///
+/// ```
+/// use quartz::linalg::{syrk_lower_into, Matrix};
+/// let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+/// let mut c = Matrix::from_fn(2, 2, |_, _| 9.0);
+/// syrk_lower_into(&a, &mut c);
+/// assert_eq!(c[(0, 0)], 5.0); // 1·1 + 2·2
+/// assert_eq!(c[(1, 0)], 11.0); // 3·1 + 4·2
+/// assert_eq!(c[(1, 1)], 25.0); // 3·3 + 4·4
+/// assert_eq!(c[(0, 1)], 9.0); // upper triangle untouched
+/// ```
+pub fn syrk_lower_into(a: &Matrix, c: &mut Matrix) {
+    let mut plan = MatmulPlan::new();
+    syrk_lower_into_planned(a, c, &mut plan);
+}
+
+/// [`syrk_lower_into`] with a caller-owned scratch plan.
+pub fn syrk_lower_into_planned(a: &Matrix, c: &mut Matrix, plan: &mut MatmulPlan) {
+    gemm::syrk_lower(a, c, plan);
+}
+
+fn mirror_lower_to_upper(c: &mut Matrix) {
+    let n = c.rows();
+    let d = c.data_mut();
+    for i in 0..n {
+        for j in 0..i {
+            d[j * n + i] = d[i * n + j];
         }
-    });
+    }
 }
 
 #[cfg(test)]
@@ -259,6 +214,19 @@ mod tests {
     }
 
     #[test]
+    fn packed_tier_shape_crosses_kc_boundary() {
+        // k > KC forces multiple packed slabs (the Acc::Set → Acc::Add
+        // hand-off); m, n land on partial edge tiles.
+        let mut rng = Rng::new(21);
+        let a = Matrix::randn(70, 500, 1.0, &mut rng);
+        let b = Matrix::randn(500, 55, 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        let want = naive(&a, &b);
+        let rel = crate::linalg::norms::relative_error(&want, &c);
+        assert!(rel < 1e-5, "rel={rel}");
+    }
+
+    #[test]
     fn tn_and_nt_variants() {
         let mut rng = Rng::new(3);
         let a = Matrix::randn(20, 12, 1.0, &mut rng);
@@ -272,11 +240,40 @@ mod tests {
     }
 
     #[test]
+    fn tn_and_nt_large_shapes_route_through_packed_tier() {
+        let mut rng = Rng::new(22);
+        let a = Matrix::randn(300, 90, 1.0, &mut rng);
+        let b = Matrix::randn(300, 110, 1.0, &mut rng);
+        let want_tn = naive(&a.transpose(), &b);
+        let got_tn = matmul_tn(&a, &b);
+        assert!(crate::linalg::norms::relative_error(&want_tn, &got_tn) < 1e-5);
+
+        let c = Matrix::randn(85, 90, 1.0, &mut rng);
+        let want_nt = naive(&a, &c.transpose());
+        let got_nt = matmul_nt(&a, &c);
+        assert!(crate::linalg::norms::relative_error(&want_nt, &got_nt) < 1e-5);
+    }
+
+    #[test]
     fn syrk_matches_naive() {
         let mut rng = Rng::new(4);
         let a = Matrix::randn(25, 40, 1.0, &mut rng);
         let want = naive(&a, &a.transpose());
         assert!(syrk(&a).max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn syrk_is_exactly_symmetric() {
+        // The mirror pass copies lower → upper, so symmetry is bit-exact
+        // (codecs that quantize one triangle rely on this).
+        let mut rng = Rng::new(23);
+        let a = Matrix::randn(120, 64, 1.0, &mut rng);
+        let c = syrk(&a);
+        for i in 0..120 {
+            for j in 0..i {
+                assert_eq!(c[(i, j)], c[(j, i)], "({i},{j})");
+            }
+        }
     }
 
     #[test]
@@ -298,5 +295,26 @@ mod tests {
         let mut c2 = Matrix::zeros(30, 10);
         matmul_into_planned(&a, &b, &mut c2, &mut plan);
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn one_plan_serves_mixed_shapes_and_ops() {
+        // The same arena plan is shared by NN/TN/NT/SYRK calls of different
+        // shapes inside one refresh step; answers must match fresh plans.
+        let mut rng = Rng::new(24);
+        let mut plan = MatmulPlan::new();
+        let a = Matrix::randn(64, 128, 1.0, &mut rng);
+        let b = Matrix::randn(128, 40, 1.0, &mut rng);
+        let mut c = Matrix::zeros(64, 40);
+        matmul_into_planned(&a, &b, &mut c, &mut plan);
+        assert_eq!(c, matmul(&a, &b));
+
+        let mut g = Matrix::zeros(128, 128);
+        matmul_tn_into_planned(&a, &a, &mut g, &mut plan);
+        assert_eq!(g, matmul_tn(&a, &a));
+
+        let mut s = Matrix::zeros(64, 64);
+        syrk_into_planned(&a, &mut s, &mut plan);
+        assert_eq!(s, syrk(&a));
     }
 }

@@ -1,14 +1,16 @@
 //! Dense f32 linear algebra substrate.
 //!
 //! Everything the Shampoo family needs, built from scratch for the offline
-//! environment: a row-major [`Matrix`] type, cache-blocked threaded matmul,
-//! Cholesky factorization, triangular solves, power iteration for λ_max,
-//! the Schur–Newton coupled iteration for inverse p-th roots (Guo & Higham
+//! environment: a row-major [`Matrix`] type, a packed-panel microkernel
+//! GEMM tier ([`gemm`]) behind the `matmul`/`syrk` entry points, Cholesky
+//! factorization, triangular solves, power iteration for λ_max, the
+//! Schur–Newton coupled iteration for inverse p-th roots (Guo & Higham
 //! 2006, the method the paper's Eq. (6)/(12) relies on), and a Jacobi
 //! symmetric eigensolver used as the exact oracle for tests and for the
 //! paper's spectral-error metrics (Tab. 1/10, Fig. 3).
 
 pub mod matrix;
+pub mod gemm;
 pub mod matmul;
 pub mod cholesky;
 pub mod triangular;
@@ -20,14 +22,16 @@ pub mod kron;
 pub mod scratch;
 
 pub use cholesky::{
-    cholesky, cholesky_into, cholesky_jittered, cholesky_jittered_into, cholesky_naive,
-    CHOLESKY_BLOCKED_MIN,
+    cholesky, cholesky_into, cholesky_jittered, cholesky_jittered_into,
+    cholesky_jittered_into_planned, cholesky_naive, CHOLESKY_BLOCKED_MIN,
 };
 pub use eigen::{eig_sym, eig_sym_with, inverse_pth_root_eig, inverse_pth_root_eig_planned, EigWork};
+pub use gemm::{avx2_available, Microkernel};
 pub use kron::kron;
 pub use matmul::{
-    matmul, matmul_into, matmul_into_planned, matmul_nt, matmul_nt_into, matmul_tn,
-    matmul_tn_into, syrk, syrk_into, MatmulPlan,
+    matmul, matmul_into, matmul_into_planned, matmul_nt, matmul_nt_into, matmul_nt_into_planned,
+    matmul_tn, matmul_tn_into, matmul_tn_into_planned, syrk, syrk_into, syrk_into_planned,
+    syrk_lower_into, syrk_lower_into_planned, MatmulPlan,
 };
 pub use matrix::Matrix;
 pub use norms::{
@@ -36,5 +40,5 @@ pub use norms::{
 };
 pub use power_iter::{lambda_max, lambda_max_with};
 pub use schur_newton::{inverse_pth_root, inverse_pth_root_scratch};
-pub use scratch::ScratchArena;
+pub use scratch::{ScratchArena, ScratchStats};
 pub use triangular::{solve_lower, solve_lower_transpose};

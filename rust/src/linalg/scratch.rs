@@ -12,15 +12,31 @@
 //! `kernel_equivalence` scratch-reuse suite via [`misses`](ScratchArena::misses).
 //!
 //! The arena also owns a [`MatmulPlan`], so every planned matmul issued
-//! through the same arena reuses one packed-B buffer (the "caller-owned
-//! plan" rule from the perf audit — see `linalg::matmul`).
+//! through the same arena reuses one pair of packed-panel buffers (the
+//! "caller-owned plan" rule from the perf audit — see `linalg::gemm`).
+//! [`stats`](ScratchArena::stats) snapshots all reuse counters at once,
+//! including the plan's buffer growths.
 //!
 //! The arena is deliberately *not* thread-safe: each worker of the parallel
 //! per-layer loop borrows its own arena from a pool (`shampoo::Shampoo`
 //! keeps a `Mutex<Vec<ScratchArena>>`), so takes/recycles never contend.
 
-use super::matmul::MatmulPlan;
+use super::gemm::MatmulPlan;
 use super::matrix::Matrix;
+
+/// Point-in-time snapshot of an arena's reuse counters (see
+/// [`ScratchArena::stats`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// Takes satisfied from the pool.
+    pub hits: usize,
+    /// Takes that had to allocate.
+    pub misses: usize,
+    /// Buffers currently parked in the pool.
+    pub pooled: usize,
+    /// Times the owned [`MatmulPlan`]'s packing buffers grew.
+    pub plan_grows: usize,
+}
 
 /// Pool of reusable f32 buffers + one shared matmul plan.
 ///
@@ -79,10 +95,24 @@ impl ScratchArena {
         self.pool.push(m.into_vec());
     }
 
-    /// The arena's matmul plan (packed-B scratch shared by every planned
-    /// matmul issued through this arena).
+    /// The arena's matmul plan (packed-panel GEMM scratch shared by every
+    /// planned matmul issued through this arena).
     pub fn plan(&mut self) -> &mut MatmulPlan {
         &mut self.plan
+    }
+
+    /// Snapshot of every reuse counter: pool hits/misses, parked buffers,
+    /// and how often the owned [`MatmulPlan`]'s packing buffers grew. In a
+    /// warmed-up steady state `misses` and `plan_grows` are both constant —
+    /// the allocation-free-refresh invariant asserted by the
+    /// `kernel_equivalence` scratch-reuse suite.
+    pub fn stats(&self) -> ScratchStats {
+        ScratchStats {
+            hits: self.hits,
+            misses: self.misses,
+            pooled: self.pool.len(),
+            plan_grows: self.plan.grows(),
+        }
     }
 
     /// Takes satisfied from the pool.
@@ -133,6 +163,19 @@ mod tests {
         }
         assert_eq!(a.misses(), baseline, "steady state must be allocation-free");
         assert!(a.hits() >= 20);
+    }
+
+    #[test]
+    fn stats_snapshot_tracks_all_counters() {
+        let mut a = ScratchArena::new();
+        let m = a.take(6, 6);
+        a.recycle(m);
+        let _ = a.take(6, 6);
+        let s = a.stats();
+        assert_eq!(s.hits, a.hits());
+        assert_eq!(s.misses, a.misses());
+        assert_eq!(s.pooled, a.pooled());
+        assert_eq!(s.plan_grows, 0, "no planned matmul issued yet");
     }
 
     #[test]

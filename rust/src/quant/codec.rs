@@ -54,7 +54,7 @@ use super::ec4::Ec4Codec;
 use super::half::F16Codec;
 use super::offdiag::{dequantize_offdiag, quantize_offdiag, OffDiagQuantized};
 use super::tri_store::TriJointStore;
-use crate::linalg::{cholesky_jittered_into, matmul_nt_into, Matrix, ScratchArena};
+use crate::linalg::{cholesky_jittered_into_planned, matmul_nt_into_planned, Matrix, ScratchArena};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// Shared context handed to codec constructors: the numerical-stability
@@ -357,7 +357,7 @@ impl PrecondCodec for CholeskyCodec {
         let mut c = scratch.take(n, n);
         // Eq. (7): C = Cholesky(L + εI); escalating jitter guards
         // quantization-induced PSD violations.
-        if cholesky_jittered_into(x, self.eps, 12, &mut c).is_err() {
+        if cholesky_jittered_into_planned(x, self.eps, 12, &mut c, scratch.plan()).is_err() {
             // Pathological input (e.g. non-finite gradient blew up the
             // Gram). Reset to the initial factor — the EMA will rebuild
             // state over the next T1 windows.
@@ -407,7 +407,7 @@ impl PrecondCodec for CholeskyCodec {
         let store = self.s.as_ref().expect("CholeskyCodec::load before store");
         let mut c = scratch.take(store.n, store.n);
         store.load_c_into(&self.q, &mut c);
-        matmul_nt_into(&c, &c, out);
+        matmul_nt_into_planned(&c, &c, out, scratch.plan());
         scratch.recycle(c);
     }
 

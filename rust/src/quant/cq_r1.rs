@@ -19,7 +19,7 @@
 use super::blockwise::BlockQuantizer;
 use super::codec::{CodecCtx, PrecondCodec};
 use super::tri_store::TriJointStore;
-use crate::linalg::{cholesky_jittered_into, matmul_nt_into, Matrix, ScratchArena};
+use crate::linalg::{cholesky_jittered_into_planned, matmul_nt_into_planned, Matrix, ScratchArena};
 use std::sync::Arc;
 
 /// 4-bit Cholesky factor + per-row f32 scale correction (`cq-r1` key).
@@ -73,7 +73,7 @@ impl PrecondCodec for CholeskyR1Codec {
     fn store_into(&mut self, x: &Matrix, scratch: &mut ScratchArena) {
         let n = x.rows();
         let mut c = scratch.take(n, n);
-        if cholesky_jittered_into(x, self.eps, 12, &mut c).is_err() {
+        if cholesky_jittered_into_planned(x, self.eps, 12, &mut c, scratch.plan()).is_err() {
             // Same reset contract as CholeskyCodec: a pathological Gram
             // falls back to the initial factor.
             c.set_eye_scaled(self.eps.sqrt());
@@ -112,7 +112,7 @@ impl PrecondCodec for CholeskyR1Codec {
                 *v *= s;
             }
         }
-        matmul_nt_into(&c, &c, out);
+        matmul_nt_into_planned(&c, &c, out, scratch.plan());
         scratch.recycle(c);
     }
 

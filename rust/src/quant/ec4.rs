@@ -21,7 +21,7 @@
 
 use super::blockwise::{BlockQuantizer, QuantizedMatrix};
 use super::codec::{CodecCtx, PrecondCodec};
-use crate::linalg::{eig_sym_with, matmul_nt_into, EigWork, Matrix, ScratchArena};
+use crate::linalg::{eig_sym_with, matmul_nt_into_planned, EigWork, Matrix, ScratchArena};
 use std::cell::RefCell;
 use std::sync::Arc;
 
@@ -149,7 +149,7 @@ impl PrecondCodec for Ec4Codec {
                 dst[j] = src[j] * wr[j];
             }
         }
-        matmul_nt_into(&scaled, &v, out);
+        matmul_nt_into_planned(&scaled, &v, out, scratch.plan());
         scratch.recycle(scaled);
         scratch.recycle(w);
         scratch.recycle(v);

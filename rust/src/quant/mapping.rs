@@ -110,8 +110,15 @@ impl Codebook {
         cb
     }
 
-    /// Nearest-level index for normalized `x` (clamped to [−1, 1]).
-    /// Branchless boundary count; bit-identical to [`Self::encode_scalar`].
+    /// Nearest-level index for normalized `x` (clamped to [−1, 1]) — the
+    /// argmin of Eq. (3).
+    ///
+    /// One branchless pass counts the boundary-table entries strictly
+    /// below `x`; since `bounds[k]` is the largest f32 that still encodes
+    /// to level ≤ k, that count IS the nearest level, and the result is
+    /// bit-identical to [`Self::encode_scalar`]'s midpoint scan +
+    /// tie-break by construction (the table is built by bit-level binary
+    /// search against it).
     #[inline]
     pub fn encode(&self, x: f32) -> u8 {
         let x = x.clamp(-1.0, 1.0);

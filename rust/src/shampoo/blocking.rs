@@ -50,6 +50,14 @@ fn strips(dim: usize, cap: usize) -> Vec<(usize, usize)> {
 }
 
 impl Blocking {
+    /// Tile an `m×n` parameter with side cap `max_order` (clamped to ≥ 1).
+    ///
+    /// Each dimension is ceil-divided into `⌈dim/cap⌉` near-equal strips
+    /// (the first `dim mod k` strips one wider): 130 at cap 64 blocks as
+    /// 44/43/43, never the greedy 64/64/2. The row × column strip cross
+    /// product becomes row-major [`BlockSpec`]s, so every block's
+    /// preconditioner — and therefore every refresh-scheduler unit — does
+    /// comparable work.
     pub fn new(m: usize, n: usize, max_order: usize) -> Blocking {
         let cap = max_order.max(1);
         let row_strips = strips(m, cap);

@@ -182,14 +182,17 @@ impl Shampoo {
     }
 
     /// Scratch-reuse telemetry: `(pooled arenas, Σ pool hits, Σ pool
-    /// misses)` across all parked arenas. In steady state the miss count is
-    /// constant step-over-step — the assertion behind the scratch-reuse
-    /// test in `tests/kernel_equivalence.rs`.
-    pub fn scratch_stats(&self) -> (usize, usize, usize) {
+    /// misses, Σ GEMM-plan buffer grows)` across all parked arenas. In
+    /// steady state both the miss count and the plan-grow count are
+    /// constant step-over-step — matrix takes *and* the GEMM tier's packing
+    /// buffers are allocation-free. This is the assertion behind the
+    /// scratch-reuse test in `tests/kernel_equivalence.rs`.
+    pub fn scratch_stats(&self) -> (usize, usize, usize, usize) {
         let pool = self.scratch_pool.lock().unwrap_or_else(|e| e.into_inner());
         let hits = pool.iter().map(|a| a.hits()).sum();
         let misses = pool.iter().map(|a| a.misses()).sum();
-        (pool.len(), hits, misses)
+        let grows = pool.iter().map(|a| a.stats().plan_grows).sum();
+        (pool.len(), hits, misses, grows)
     }
 
     /// Persistent optimizer-state bytes: Shampoo preconditioner storage

@@ -20,8 +20,8 @@ use super::blocking::Blocking;
 use super::config::ShampooConfig;
 use crate::linalg::schur_newton::inverse_pth_root_scratch;
 use crate::linalg::{
-    inner, inverse_pth_root_eig_planned, matmul_into_planned, matmul_tn_into, syrk_into, Matrix,
-    ScratchArena,
+    inner, inverse_pth_root_eig_planned, matmul_into_planned, matmul_tn_into_planned,
+    syrk_into_planned, Matrix, ScratchArena,
 };
 use crate::quant::codec::{lookup, CodecBuilder, CodecCtx};
 use crate::quant::PrecondCodec;
@@ -254,8 +254,8 @@ impl BlockState {
         };
         let mut gram = scratch.take(dim, dim);
         match side {
-            Side::L => syrk_into(gb, &mut gram), // G·Gᵀ
-            Side::R => matmul_tn_into(gb, gb, &mut gram), // Gᵀ·G
+            Side::L => syrk_into_planned(gb, &mut gram, scratch.plan()), // G·Gᵀ
+            Side::R => matmul_tn_into_planned(gb, gb, &mut gram, scratch.plan()), // Gᵀ·G
         }
         let s = &mut self.sides[side.index()];
         s.update_gram(&gram, cfg, scratch);
@@ -285,11 +285,11 @@ impl BlockState {
     /// sequential entry the `EveryN` oracle tests drive.
     fn update_gram(&mut self, g: &Matrix, cfg: &ShampooConfig, scratch: &mut ScratchArena) {
         let mut gram_l = scratch.take(g.rows(), g.rows());
-        syrk_into(g, &mut gram_l); // G·Gᵀ
+        syrk_into_planned(g, &mut gram_l, scratch.plan()); // G·Gᵀ
         self.sides[0].update_gram(&gram_l, cfg, scratch);
         scratch.recycle(gram_l);
         let mut gram_r = scratch.take(g.cols(), g.cols());
-        matmul_tn_into(g, g, &mut gram_r); // Gᵀ·G
+        matmul_tn_into_planned(g, g, &mut gram_r, scratch.plan()); // Gᵀ·G
         self.sides[1].update_gram(&gram_r, cfg, scratch);
         scratch.recycle(gram_r);
     }

@@ -8,11 +8,18 @@
 //! * the fused joint triangular store vs masked-matrix reference — exact;
 //! * blocked right-looking Cholesky vs the naive kernel — ≤1e-5 relative
 //!   Frobenius on random SPD, divisible and non-divisible orders;
+//! * the packed-panel GEMM tier: AVX2 vs scalar microkernel ≤1e-5 relative
+//!   Frobenius across rectangular/odd/non-tile-multiple shapes and all
+//!   N/T operand combos, SYRK writing only the lower triangle, and
+//!   parallel-vs-sequential **bit-identity**;
 //! * the steady-state Shampoo refresh pipeline — zero scratch-pool misses
-//!   after warm-up (the allocation-free store/load/root contract).
+//!   *and* zero GEMM packing-buffer growths after warm-up (the
+//!   allocation-free store/load/root contract).
 
+use quartz::linalg::gemm::{avx2_available, gemm_with, syrk_lower_with, Microkernel};
 use quartz::linalg::{
-    cholesky, cholesky_naive, fro_norm, relative_error, syrk, Matrix, CHOLESKY_BLOCKED_MIN,
+    cholesky, cholesky_naive, fro_norm, relative_error, syrk, syrk_lower_into, Matrix, MatmulPlan,
+    CHOLESKY_BLOCKED_MIN,
 };
 use quartz::optim::BaseOptimizer;
 use quartz::quant::{BlockQuantizer, CodeStore, Mapping, QuantConfig, QuantizedMatrix};
@@ -274,20 +281,132 @@ fn steady_state_refresh_reuses_scratch() {
     // Warm-up: first refresh swaps root codecs f32→vq4 and sizes buffers.
     step(&mut sh, 1, &mut rng);
     step(&mut sh, 2, &mut rng);
-    let (arenas, _, misses) = sh.scratch_stats();
+    let (arenas, _, misses, grows) = sh.scratch_stats();
     assert_eq!(arenas, 1, "single layer must use a single arena");
     for k in 3..=10u64 {
         step(&mut sh, k, &mut rng);
     }
-    let (arenas2, hits2, misses2) = sh.scratch_stats();
+    let (arenas2, hits2, misses2, grows2) = sh.scratch_stats();
     assert_eq!(arenas2, 1);
     assert_eq!(
         misses2,
         misses,
         "steady-state refresh allocated scratch (misses {misses} → {misses2})"
     );
+    assert_eq!(
+        grows2, grows,
+        "steady-state refresh regrew GEMM packing buffers ({grows} → {grows2})"
+    );
     assert!(hits2 > 0, "refresh pipeline must actually draw from the pool");
     for p in &params {
         assert!(!p.has_non_finite());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed-panel GEMM tier
+// ---------------------------------------------------------------------------
+
+/// Shapes chosen to stress every packing edge: below the small-dispatch
+/// floor, exact register-tile multiples, one-past-a-tile odd sizes, shapes
+/// crossing the `KC` slab boundary, and tall/wide rectangles.
+const GEMM_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (5, 3, 2),
+    (6, 16, 240),
+    (7, 17, 241),
+    (64, 64, 64),
+    (97, 50, 193),
+    (130, 200, 70),
+];
+
+fn naive_gemm(a: &Matrix, ta: bool, b: &Matrix, tb: bool) -> Matrix {
+    let (m, k) = if ta { (a.cols(), a.rows()) } else { (a.rows(), a.cols()) };
+    let n = if tb { b.rows() } else { b.cols() };
+    Matrix::from_fn(m, n, |i, j| {
+        let mut acc = 0.0f32;
+        for p in 0..k {
+            let x = if ta { a[(p, i)] } else { a[(i, p)] };
+            let y = if tb { b[(j, p)] } else { b[(p, j)] };
+            acc += x * y;
+        }
+        acc
+    })
+}
+
+#[test]
+fn avx2_gemm_matches_scalar_oracle_within_1e5() {
+    if !avx2_available() {
+        eprintln!("avx2+fma unavailable; skipping AVX2-vs-scalar equivalence");
+        return;
+    }
+    let mut rng = Rng::new(40);
+    for &(m, n, k) in GEMM_SHAPES {
+        for (ta, tb) in [(false, false), (true, false), (false, true), (true, true)] {
+            let (ar, ac) = if ta { (k, m) } else { (m, k) };
+            let (br, bc) = if tb { (n, k) } else { (k, n) };
+            let a = Matrix::randn(ar, ac, 1.0, &mut rng);
+            let b = Matrix::randn(br, bc, 1.0, &mut rng);
+            let mut plan = MatmulPlan::new();
+            let mut fast = Matrix::zeros(m, n);
+            let mut slow = Matrix::zeros(m, n);
+            gemm_with(&a, ta, &b, tb, &mut fast, &mut plan, Microkernel::Avx2, 1);
+            gemm_with(&a, ta, &b, tb, &mut slow, &mut plan, Microkernel::Scalar, 1);
+            let rel = relative_error(&slow, &fast);
+            assert!(
+                rel < 1e-5,
+                "{m}x{n}x{k} ta={ta} tb={tb}: AVX2 vs scalar rel Frobenius {rel}"
+            );
+            // And the scalar kernel against the textbook triple loop.
+            let oracle = naive_gemm(&a, ta, &b, tb);
+            let rel = relative_error(&oracle, &slow);
+            assert!(rel < 1e-5, "{m}x{n}x{k} ta={ta} tb={tb}: scalar vs naive rel {rel}");
+        }
+    }
+}
+
+#[test]
+fn gemm_parallel_is_bit_identical_to_sequential() {
+    let mut rng = Rng::new(41);
+    let a = Matrix::randn(150, 500, 1.0, &mut rng);
+    let b = Matrix::randn(500, 410, 1.0, &mut rng);
+    for kernel in [Microkernel::Scalar, Microkernel::Avx2] {
+        if kernel == Microkernel::Avx2 && !avx2_available() {
+            continue;
+        }
+        let mut plan = MatmulPlan::new();
+        let mut seq = Matrix::zeros(150, 410);
+        gemm_with(&a, false, &b, false, &mut seq, &mut plan, kernel, 1);
+        for threads in [2, 4, 7] {
+            let mut par = Matrix::zeros(150, 410);
+            gemm_with(&a, false, &b, false, &mut par, &mut plan, kernel, threads);
+            assert_eq!(seq, par, "{kernel:?} with {threads} threads is not bit-identical");
+        }
+    }
+}
+
+#[test]
+fn syrk_writes_only_the_lower_triangle() {
+    let mut rng = Rng::new(42);
+    let a = Matrix::randn(37, 29, 1.0, &mut rng);
+    // Via the public routing entry point…
+    let mut c = Matrix::from_fn(37, 37, |_, _| 7.5);
+    syrk_lower_into(&a, &mut c);
+    // …and via the tier directly with an explicit kernel.
+    let mut plan = MatmulPlan::new();
+    let mut c2 = Matrix::from_fn(37, 37, |_, _| 7.5);
+    syrk_lower_with(&a, &mut c2, &mut plan, Microkernel::Scalar, 1);
+    let full = naive_gemm(&a, false, &a, true);
+    for i in 0..37 {
+        for j in 0..37 {
+            if j > i {
+                assert_eq!(c[(i, j)], 7.5, "upper ({i},{j}) clobbered by syrk_lower_into");
+                assert_eq!(c2[(i, j)], 7.5, "upper ({i},{j}) clobbered by syrk_lower_with");
+            } else {
+                let want = full[(i, j)];
+                assert!((c[(i, j)] - want).abs() <= 1e-4 * want.abs().max(1.0));
+                assert!((c2[(i, j)] - want).abs() <= 1e-4 * want.abs().max(1.0));
+            }
+        }
     }
 }

@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Measure the bench smoke suite's run-over-run noise floor.
+#
+# Runs scripts/harvest_bench.sh TWICE back-to-back on the same machine and
+# same code, joins the two records by benchmark name, and summarizes the
+# absolute per-benchmark mean-time deltas. Since nothing changed between
+# the runs, every delta is pure measurement noise — the p95 of their
+# absolute values is the floor below which a regression gate cannot
+# distinguish signal from scheduler jitter.
+#
+# Usage: scripts/bench_noise.sh [output.json]   (default .bench-noise.json)
+#
+# Output shape (consumed by the CI bench-smoke job to decide whether the
+# >THRESHOLD_PCT gate in bench_regression.sh may run strict):
+#   {"suite":"quartz","mode":"quick","compared":N,
+#    "noise_floor_pct":P95_ABS_DELTA,"max_pct":MAX_ABS_DELTA}
+#
+# The parser mirrors bench_regression.sh: it keys on the exact
+# ("name":"...","mean_ns":N) shape util::bench emits, not a general JSON
+# grammar. See docs/PERFORMANCE.md, "Reading the bench trajectory".
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+OUT="${1:-.bench-noise.json}"
+RUN_A="$(mktemp)"
+RUN_B="$(mktemp)"
+trap 'rm -f "$RUN_A" "$RUN_B"' EXIT
+
+echo "bench_noise: first smoke run"
+scripts/harvest_bench.sh "$RUN_A" > /dev/null
+echo "bench_noise: second smoke run"
+scripts/harvest_bench.sh "$RUN_B" > /dev/null
+
+extract() {
+  grep -o '"name":"[^"]*","mean_ns":[0-9.]*' "$1" \
+    | sed 's/"name":"\([^"]*\)","mean_ns":\([0-9.]*\)/\1 \2/' \
+    | sort -k1,1
+}
+
+# Absolute percent deltas, sorted ascending (so p95/max are positional).
+DELTAS="$(join <(extract "$RUN_A") <(extract "$RUN_B") \
+  | awk '{ a = $2 + 0; b = $3 + 0;
+           if (a > 0) { d = (b / a - 1) * 100; if (d < 0) d = -d; print d } }' \
+  | sort -g)"
+
+if [[ -z "$DELTAS" ]]; then
+  echo "bench_noise: no overlapping benchmark records between the two runs" >&2
+  exit 1
+fi
+
+read -r COMPARED FLOOR MAX <<EOF
+$(printf '%s\n' "$DELTAS" | awk '
+  { v[n++] = $1 + 0 }
+  END {
+    i = int(0.95 * (n - 1));
+    printf "%d %.3f %.3f\n", n, v[i], v[n - 1];
+  }')
+EOF
+
+printf '{"suite":"quartz","mode":"quick","compared":%s,"noise_floor_pct":%s,"max_pct":%s}\n' \
+  "$COMPARED" "$FLOOR" "$MAX" > "$OUT"
+echo "bench_noise: $COMPARED benchmarks, p95 |delta| ${FLOOR}%, max ${MAX}% -> $OUT"

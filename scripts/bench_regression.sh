@@ -10,7 +10,12 @@
 # warning annotations when running in Actions) but the exit code stays 0,
 # because the CI smoke runs on shared runners whose noise floor is well
 # above a rigorous measurement. Set REGRESSION_STRICT=1 to turn flagged
-# regressions into a non-zero exit.
+# regressions into a non-zero exit. STRICT_FILTER (an awk ERE, default
+# '.*') narrows which benchmark names can fail the run: regressions
+# outside the filter are still printed and annotated, but stay advisory.
+# CI measures the runner's actual noise floor first (scripts/bench_noise.sh)
+# and only arms the strict gate for kernels whose floor supports it — see
+# docs/PERFORMANCE.md, "Reading the bench trajectory".
 #
 # Records are the JSONL objects util::bench emits, assembled by
 # scripts/harvest_bench.sh — the parser below relies on that exact shape
@@ -42,7 +47,10 @@ extract() {
 
 join <(extract "$BASE") <(extract "$CUR") | awk -v thresh="$THRESH" '
   BEGIN {
-    regressions = 0; improvements = 0; compared = 0;
+    regressions = 0; hard = 0; improvements = 0; compared = 0;
+    strict = (ENVIRON["REGRESSION_STRICT"] == "1");
+    filter = ENVIRON["STRICT_FILTER"];
+    if (filter == "") filter = ".*";
     printf "%-52s %12s %12s %9s\n", "benchmark", "base ns", "current ns", "delta";
   }
   {
@@ -51,8 +59,12 @@ join <(extract "$BASE") <(extract "$CUR") | awk -v thresh="$THRESH" '
     compared++;
     pct = (cur / base - 1) * 100;
     flag = "";
-    if (pct > thresh)       { flag = "  << REGRESSION"; regressions++; }
-    else if (pct < -thresh) { flag = "  (faster)";      improvements++; }
+    if (pct > thresh) {
+      regressions++;
+      flag = "  << REGRESSION";
+      if (name ~ filter) { hard++; if (strict) flag = flag " (gated)"; }
+    }
+    else if (pct < -thresh) { flag = "  (faster)"; improvements++; }
     if (flag != "" )
       printf "%-52s %12.0f %12.0f %+8.1f%%%s\n", name, base, cur, pct, flag;
     if (pct > thresh && ENVIRON["GITHUB_ACTIONS"] == "true")
@@ -62,6 +74,6 @@ join <(extract "$BASE") <(extract "$CUR") | awk -v thresh="$THRESH" '
     printf "compared %d benchmarks: %d regressed >%s%%, %d sped up >%s%%\n",
            compared, regressions, thresh, improvements, thresh;
     if (compared == 0) print "bench_regression: WARNING — no overlapping benchmark names";
-    exit (ENVIRON["REGRESSION_STRICT"] == "1" && regressions > 0) ? 1 : 0;
+    exit (ENVIRON["REGRESSION_STRICT"] == "1" && hard > 0) ? 1 : 0;
   }
 '
