@@ -36,6 +36,7 @@ fn main() -> quartz::util::error::Result<()> {
         eval_every: 0,
         log_every: 50,
         seed: 21,
+        ..Default::default()
     };
 
     let adamw = || BaseOptimizer::adamw(1e-3, 0.9, 0.999, 1e-8, 5e-2);

@@ -54,6 +54,7 @@ fn main() -> quartz::util::error::Result<()> {
         eval_every: (steps / 8).max(1),
         log_every: (steps / 40).max(1),
         seed: 99,
+        ..Default::default()
     };
 
     let adamw = || {

@@ -45,6 +45,7 @@ fn main() -> quartz::util::error::Result<()> {
         eval_every: 100,
         log_every: 25,
         seed: 7,
+        ..Default::default()
     };
     let m = train_classifier(&rt, &model, &data, opt, &train_cfg)?;
 

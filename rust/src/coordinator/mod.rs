@@ -4,11 +4,14 @@
 //! so the coordinator is the framework glue a real training system needs:
 //! a declarative run grid (every paper table is one), a panic-isolated
 //! worker pool where each worker owns its own PJRT client, a memory-budget
-//! gate (reproducing Tab. 6's "Out of GPU Memory" row), and result
-//! aggregation for the report layer.
+//! gate (reproducing Tab. 6's "Out of GPU Memory" row), the resumable job
+//! queue ([`queue`]: periodic checkpointing, streaming JSONL metrics,
+//! crash/kill recovery), and result aggregation for the report layer.
 
 pub mod spec;
 pub mod runner;
+pub mod queue;
 
-pub use runner::{run_all, RunOutcome};
+pub use queue::{resume_queue, run_queue, MetricsLog};
+pub use runner::{run_all, run_all_logged, RunOutcome};
 pub use spec::{ExperimentSpec, OptimizerSpec, RunSpec, Workload};

@@ -1,0 +1,305 @@
+//! The multi-run job service: many [`RunSpec`]s over the shared worker
+//! pool with periodic checkpointing, a streaming JSONL metrics log, and
+//! crash/kill resume.
+//!
+//! A queue is a directory:
+//!
+//! ```text
+//! <dir>/queue.toml      the spec, pinned on first run (resume re-reads it)
+//! <dir>/metrics.jsonl   append-only event stream (queue_start / run_start /
+//!                       run_end), one JSON object per line
+//! <dir>/runs/<id>/      per-run checkpoints (step-NNNNNNNN.ckpt)
+//! ```
+//!
+//! Re-entering the same directory is idempotent: runs whose `run_end`
+//! event is already on the stream are returned from the log without
+//! re-executing; interrupted runs resume from their newest valid
+//! checkpoint (a truncated or corrupt tail checkpoint fails its CRC and
+//! the scan falls back to the previous one); a torn final line on the
+//! metrics stream — the other crash artifact — fails to parse and is
+//! ignored. So `quartz resume <dir>` after a SIGKILL finishes exactly the
+//! work that was left.
+
+use super::runner::{run_all_logged, RunOutcome};
+use super::spec::{ExperimentSpec, RunSpec};
+use crate::train::RunMetrics;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// An append-only, line-buffered JSONL event stream shared by the worker
+/// pool (interior `Mutex` keeps concurrent lines whole).
+pub struct MetricsLog {
+    file: Mutex<fs::File>,
+}
+
+impl MetricsLog {
+    /// Open the stream at `path` for appending, creating parent
+    /// directories as needed.
+    pub fn open(path: &Path) -> Result<MetricsLog> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening metrics log {}", path.display()))?;
+        Ok(MetricsLog { file: Mutex::new(file) })
+    }
+
+    /// Append one event line. IO failures go to stderr and are swallowed —
+    /// a full disk must not take down the runs themselves.
+    pub fn event(&self, obj: Json) {
+        let line = obj.to_string();
+        let mut f = self.file.lock().unwrap();
+        if let Err(e) = writeln!(f, "{line}") {
+            eprintln!("metrics log write failed: {e}");
+        }
+    }
+
+    pub(crate) fn run_start(&self, spec: &RunSpec) {
+        self.event(obj(vec![
+            ("event", s("run_start")),
+            ("id", s(&spec.id)),
+            ("model", s(&spec.model)),
+            ("optimizer", s(&spec.optimizer.label())),
+            ("steps", num(spec.steps as f64)),
+            ("seed", num(spec.seed as f64)),
+            ("ts", num(now_secs())),
+        ]));
+    }
+
+    pub(crate) fn run_end(&self, o: &RunOutcome) {
+        let outcome = if o.error.is_some() {
+            "error"
+        } else if o.metrics.is_some() {
+            "ok"
+        } else {
+            "oom"
+        };
+        let mut fields = vec![
+            ("event", s("run_end")),
+            ("id", s(&o.id)),
+            ("model", s(&o.model)),
+            ("optimizer", s(&o.optimizer)),
+            ("outcome", s(outcome)),
+            ("wall_secs", num(o.wall_secs)),
+            ("modeled_bytes", num(o.modeled_bytes as f64)),
+            ("ts", num(now_secs())),
+        ];
+        if let Some(m) = &o.metrics {
+            fields.push(("final_metric", num(m.final_metric)));
+            fields.push(("state_bytes", num(m.state_bytes as f64)));
+            fields.push(("opt_secs", num(m.opt_secs)));
+            fields.push(("train_wall_secs", num(m.wall_secs)));
+        }
+        if let Some(e) = &o.error {
+            fields.push(("error", s(e)));
+        }
+        self.event(obj(fields));
+    }
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// JSON has no non-finite numbers; map them to null rather than emitting
+/// a line the parser (and every resume pass) would reject.
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn now_secs() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+/// Filesystem-safe per-run directory name: the sanitized id plus a short
+/// hash of the exact id, so ids that sanitize identically cannot share a
+/// checkpoint directory.
+fn run_dir_name(id: &str) -> String {
+    let safe: String = id
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') { c } else { '-' })
+        .collect();
+    format!("{safe}-{:08x}", crate::persist::spec_hash(id) as u32)
+}
+
+/// Outcomes a previous pass over this queue already recorded as finished
+/// (`ok` or `oom`), keyed by run id. `error` runs are retried, not
+/// cached. Curves are not replayed from the log — only the summary fields
+/// a table needs.
+fn completed_runs(path: &Path) -> BTreeMap<String, RunOutcome> {
+    let Ok(text) = fs::read_to_string(path) else {
+        return BTreeMap::new();
+    };
+    let mut done = BTreeMap::new();
+    for line in text.lines() {
+        // A torn tail line (crash mid-append) fails to parse and is
+        // skipped; every complete line before it still counts.
+        let Ok(j) = Json::parse(line) else { continue };
+        if j.get("event").and_then(|v| v.as_str()) != Some("run_end") {
+            continue;
+        }
+        let Some(id) = j.get("id").and_then(|v| v.as_str()) else { continue };
+        let outcome = j.get("outcome").and_then(|v| v.as_str()).unwrap_or("");
+        if outcome != "ok" && outcome != "oom" {
+            continue;
+        }
+        let optimizer = j.get("optimizer").and_then(|v| v.as_str()).unwrap_or("").to_string();
+        let model = j.get("model").and_then(|v| v.as_str()).unwrap_or("").to_string();
+        let metrics = (outcome == "ok").then(|| RunMetrics {
+            model: model.clone(),
+            optimizer: optimizer.clone(),
+            loss_curve: Vec::new(),
+            eval_curve: Vec::new(),
+            final_metric: j.get("final_metric").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            state_bytes: j.get("state_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+            wall_secs: j.get("train_wall_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            opt_secs: j.get("opt_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        });
+        done.insert(
+            id.to_string(),
+            RunOutcome {
+                id: id.to_string(),
+                model,
+                optimizer,
+                modeled_bytes: j.get("modeled_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+                metrics,
+                error: None,
+                wall_secs: 0.0,
+            },
+        );
+    }
+    done
+}
+
+/// Run (or re-enter) an experiment spec as a resumable job queue rooted
+/// at `dir`. `checkpoint_every > 0` overrides the spec's own interval.
+/// Run ids must be unique within the spec (they are `model/label`, so two
+/// literally identical `[[runs]]` entries would alias).
+pub fn run_queue(spec_text: &str, dir: &Path, checkpoint_every: u64) -> Result<Vec<RunOutcome>> {
+    let exp = ExperimentSpec::from_toml(spec_text).context("parsing queue spec")?;
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let pinned = dir.join("queue.toml");
+    if !pinned.exists() {
+        fs::write(&pinned, spec_text)
+            .with_context(|| format!("writing {}", pinned.display()))?;
+    }
+    let done = completed_runs(&dir.join("metrics.jsonl"));
+    let log = MetricsLog::open(&dir.join("metrics.jsonl"))?;
+
+    let mut slots: Vec<Option<RunOutcome>> = vec![None; exp.runs.len()];
+    let mut pending: Vec<(usize, RunSpec)> = Vec::new();
+    for (i, run) in exp.runs.iter().enumerate() {
+        if let Some(prev) = done.get(&run.id) {
+            slots[i] = Some(prev.clone());
+            continue;
+        }
+        let mut run = run.clone();
+        if checkpoint_every > 0 {
+            run.checkpoint_every = checkpoint_every;
+        }
+        run.out_dir = Some(dir.join("runs").join(run_dir_name(&run.id)));
+        pending.push((i, run));
+    }
+    log.event(obj(vec![
+        ("event", s("queue_start")),
+        ("name", s(&exp.name)),
+        ("total", num(exp.runs.len() as f64)),
+        ("cached", num((exp.runs.len() - pending.len()) as f64)),
+        ("ts", num(now_secs())),
+    ]));
+
+    let specs: Vec<RunSpec> = pending.iter().map(|(_, r)| r.clone()).collect();
+    let fresh = run_all_logged(&specs, exp.workers, Some(&log));
+    for ((i, _), outcome) in pending.into_iter().zip(fresh) {
+        slots[i] = Some(outcome);
+    }
+    Ok(slots.into_iter().map(|o| o.expect("every queue slot filled")).collect())
+}
+
+/// Resume a queue directory created by [`run_queue`]: re-reads the pinned
+/// `dir/queue.toml` and re-enters the queue — finished runs come back
+/// from the metrics stream, interrupted ones restart from their newest
+/// valid checkpoint and train only the remaining steps.
+pub fn resume_queue(dir: &Path, checkpoint_every: u64) -> Result<Vec<RunOutcome>> {
+    let pinned = dir.join("queue.toml");
+    let text = fs::read_to_string(&pinned).with_context(|| {
+        format!("no queue to resume at {} (missing queue.toml)", dir.display())
+    })?;
+    run_queue(&text, dir, checkpoint_every)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = "\nname = \"q\"\nsteps = 30\nworkers = 2\ncheckpoint_every = 10\n\n\
+                        [workload]\nkind = \"synthetic\"\nshapes = [12, 6, 6, 6]\n\n\
+                        [[runs]]\nmodel = \"syn\"\nbase = \"sgdm\"\n\n\
+                        [[runs]]\nmodel = \"syn\"\nbase = \"sgdm\"\nshampoo = \"cq-ef\"\n";
+
+    #[test]
+    fn queue_streams_metrics_and_skips_completed_runs_on_resume() {
+        let dir = std::env::temp_dir().join(format!("quartz-queue-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+
+        let out = run_queue(SPEC, &dir, 0).unwrap();
+        assert_eq!(out.len(), 2);
+        for o in &out {
+            assert!(o.metrics.is_some(), "{}: {:?}", o.id, o.error);
+            assert!(o.wall_secs > 0.0);
+        }
+        // Checkpoints landed under per-run directories.
+        assert!(dir.join("runs").read_dir().unwrap().count() == 2);
+        // The stream is valid JSONL with one run_end per run.
+        let text = fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        for line in text.lines() {
+            Json::parse(line).unwrap();
+        }
+        let ends = text.lines().filter(|l| l.contains("\"run_end\"")).count();
+        assert_eq!(ends, 2);
+        assert!(text.contains("\"queue_start\""));
+        assert!(text.contains("\"run_start\""));
+        assert!(text.contains("\"wall_secs\""));
+
+        // Re-entering the queue executes nothing: outcomes come back from
+        // the stream and no new run_end events are appended.
+        let out2 = resume_queue(&dir, 0).unwrap();
+        assert_eq!(out2.len(), 2);
+        for (a, b) in out.iter().zip(out2.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.metrics.as_ref().unwrap().final_metric,
+                b.metrics.as_ref().unwrap().final_metric
+            );
+        }
+        let text2 = fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        let ends2 = text2.lines().filter(|l| l.contains("\"run_end\"")).count();
+        assert_eq!(ends2, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_without_queue_dir_errors() {
+        let dir = std::env::temp_dir().join("quartz-queue-absent");
+        let err = format!("{:#}", resume_queue(&dir, 0).unwrap_err());
+        assert!(err.contains("queue.toml"), "{err}");
+    }
+}

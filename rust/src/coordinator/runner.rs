@@ -2,15 +2,20 @@
 //! owns its own PJRT client (the client is `Rc`-backed and must not cross
 //! threads).
 
+use super::queue::MetricsLog;
 use super::spec::{RunSpec, Workload};
 use crate::data::images::ImageDataset;
 use crate::data::synthetic::ClusterDataset;
 use crate::data::tokens::TokenCorpus;
 use crate::metrics::MemoryModel;
+use crate::persist;
 use crate::runtime::Runtime;
-use crate::train::{train_classifier, train_lm, ClassifierData, RunMetrics, TrainConfig};
+use crate::train::{
+    train_classifier, train_lm, train_synthetic, ClassifierData, RunMetrics, TrainConfig,
+};
 use crate::util::pool::{JobResult, Pool};
 use std::path::PathBuf;
+use std::time::Instant;
 
 /// Result of one scheduled run.
 #[derive(Clone, Debug)]
@@ -24,6 +29,10 @@ pub struct RunOutcome {
     pub metrics: Option<RunMetrics>,
     /// Populated when the run failed (panic or error).
     pub error: Option<String>,
+    /// Wall-clock seconds this scheduling attempt took, as measured by the
+    /// scheduler (includes resume-restore time; 0 when the worker panicked
+    /// or the outcome was reloaded from a previous queue pass).
+    pub wall_secs: f64,
 }
 
 impl RunOutcome {
@@ -54,8 +63,53 @@ fn thread_runtime(dir: &PathBuf) -> crate::util::error::Result<std::rc::Rc<Runti
     })
 }
 
+/// The [`TrainConfig`] a run spec resolves to, checkpointing included.
+fn train_config(spec: &RunSpec) -> TrainConfig {
+    TrainConfig {
+        steps: spec.steps,
+        schedule: spec.schedule,
+        eval_every: spec.eval_every,
+        log_every: spec.log_every,
+        seed: spec.seed,
+        checkpoint_every: spec.checkpoint_every,
+        checkpoint_dir: spec.out_dir.clone(),
+        spec_hash: persist::spec_hash(&spec.identity()),
+    }
+}
+
 /// Execute one run in the current thread (reuses the thread's Runtime).
+/// Synthetic workloads run entirely in rust — no PJRT client, no
+/// artifacts — so the queue service and CI smoke work on any machine.
 pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> crate::util::error::Result<RunOutcome> {
+    if let Workload::Synthetic(ss) = &spec.workload {
+        let mm = MemoryModel::new(&ss.shapes);
+        let modeled = mm.total_bytes(spec.optimizer.base, spec.optimizer.shampoo.as_ref());
+        if let Some(budget) = spec.memory_budget {
+            if modeled > budget {
+                return Ok(RunOutcome {
+                    id: spec.id.clone(),
+                    model: spec.model.clone(),
+                    optimizer: spec.optimizer.label(),
+                    modeled_bytes: modeled,
+                    metrics: None,
+                    error: None,
+                    wall_secs: 0.0,
+                });
+            }
+        }
+        let opt = spec.optimizer.build(&ss.shapes);
+        let metrics = train_synthetic(ss, opt, &train_config(spec))?;
+        return Ok(RunOutcome {
+            id: spec.id.clone(),
+            model: spec.model.clone(),
+            optimizer: spec.optimizer.label(),
+            modeled_bytes: modeled,
+            metrics: Some(metrics),
+            error: None,
+            wall_secs: 0.0,
+        });
+    }
+
     let rt = thread_runtime(artifact_dir)?;
     let model = rt
         .manifest
@@ -80,18 +134,13 @@ pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> crate::util::error::Re
                 modeled_bytes: modeled,
                 metrics: None,
                 error: None,
+                wall_secs: 0.0,
             });
         }
     }
 
     let opt = spec.optimizer.build(&model.shapes());
-    let cfg = TrainConfig {
-        steps: spec.steps,
-        schedule: spec.schedule,
-        eval_every: spec.eval_every,
-        log_every: spec.log_every,
-        seed: spec.seed,
-    };
+    let cfg = train_config(spec);
 
     let metrics = match &spec.workload {
         Workload::Cluster(cs) => {
@@ -108,6 +157,7 @@ pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> crate::util::error::Re
             let corpus = TokenCorpus::generate(ts);
             train_lm(&rt, &model, &corpus, opt, &cfg)?
         }
+        Workload::Synthetic(_) => unreachable!("handled before the runtime opens"),
     };
 
     Ok(RunOutcome {
@@ -117,11 +167,37 @@ pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> crate::util::error::Re
         modeled_bytes: modeled,
         metrics: Some(metrics),
         error: None,
+        wall_secs: 0.0,
     })
+}
+
+fn failed_outcome(spec: &RunSpec, error: String) -> RunOutcome {
+    RunOutcome {
+        id: spec.id.clone(),
+        model: spec.model.clone(),
+        optimizer: spec.optimizer.label(),
+        modeled_bytes: 0,
+        metrics: None,
+        error: Some(error),
+        wall_secs: 0.0,
+    }
 }
 
 /// Execute all runs over `workers` threads; failures are isolated per run.
 pub fn run_all(specs: &[RunSpec], workers: usize) -> Vec<RunOutcome> {
+    run_all_logged(specs, workers, None)
+}
+
+/// [`run_all`] with a live JSONL metrics stream: every run emits a
+/// `run_start` event when a worker picks it up and a `run_end` event —
+/// wall-clock seconds, outcome, final metric — when it finishes, so an
+/// external watcher (or a later `resume`) sees per-run progress without
+/// waiting for the whole grid.
+pub fn run_all_logged(
+    specs: &[RunSpec],
+    workers: usize,
+    log: Option<&MetricsLog>,
+) -> Vec<RunOutcome> {
     let dir = Runtime::artifact_dir();
     let pool = Pool::new(workers.max(1));
     let jobs: Vec<_> = specs
@@ -129,16 +205,20 @@ pub fn run_all(specs: &[RunSpec], workers: usize) -> Vec<RunOutcome> {
         .cloned()
         .map(|spec| {
             let dir = dir.clone();
-            move || match run_one(&dir, &spec) {
-                Ok(outcome) => outcome,
-                Err(e) => RunOutcome {
-                    id: spec.id.clone(),
-                    model: spec.model.clone(),
-                    optimizer: spec.optimizer.label(),
-                    modeled_bytes: 0,
-                    metrics: None,
-                    error: Some(format!("{e:#}")),
-                },
+            move || {
+                if let Some(log) = log {
+                    log.run_start(&spec);
+                }
+                let t0 = Instant::now();
+                let mut outcome = match run_one(&dir, &spec) {
+                    Ok(outcome) => outcome,
+                    Err(e) => failed_outcome(&spec, format!("{e:#}")),
+                };
+                outcome.wall_secs = t0.elapsed().as_secs_f64();
+                if let Some(log) = log {
+                    log.run_end(&outcome);
+                }
+                outcome
             }
         })
         .collect();
@@ -147,14 +227,13 @@ pub fn run_all(specs: &[RunSpec], workers: usize) -> Vec<RunOutcome> {
         .zip(specs.iter())
         .map(|(res, spec)| match res {
             JobResult::Ok(outcome) => outcome,
-            JobResult::Panicked(msg) => RunOutcome {
-                id: spec.id.clone(),
-                model: spec.model.clone(),
-                optimizer: spec.optimizer.label(),
-                modeled_bytes: 0,
-                metrics: None,
-                error: Some(format!("worker panicked: {msg}")),
-            },
+            JobResult::Panicked(msg) => {
+                let outcome = failed_outcome(spec, format!("worker panicked: {msg}"));
+                if let Some(log) = log {
+                    log.run_end(&outcome);
+                }
+                outcome
+            }
         })
         .collect()
 }

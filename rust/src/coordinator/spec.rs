@@ -8,9 +8,10 @@ use crate::data::tokens::CorpusSpec;
 use crate::optim::optimizer::Hyper;
 use crate::optim::{BaseOptimizer, LrSchedule, OptimizerKind};
 use crate::shampoo::{scheduler, ShampooConfig, ShampooVariant};
-use crate::train::{registry, OptimizerStack};
+use crate::train::{registry, OptimizerStack, SyntheticSpec};
 use crate::util::error::{Context, Result};
 use crate::util::toml::{TomlDoc, TomlTable};
+use std::path::PathBuf;
 
 /// What data the run trains on.
 #[derive(Clone, Debug)]
@@ -18,6 +19,9 @@ pub enum Workload {
     Cluster(ClusterSpec),
     Image(ImageSpec),
     Tokens(CorpusSpec),
+    /// The artifact-free noisy quadratic ([`crate::train::synthetic`]) —
+    /// runs without a PJRT runtime; the model name is ignored.
+    Synthetic(SyntheticSpec),
 }
 
 /// Base optimizer + optional Shampoo wrapper.
@@ -172,6 +176,11 @@ pub struct RunSpec {
     /// Optional memory ceiling in bytes: if the *modeled* optimizer state
     /// exceeds it the run is reported as OOM without executing (Tab. 6).
     pub memory_budget: Option<usize>,
+    /// Checkpoint every N steps (0 = never). Needs `out_dir`.
+    pub checkpoint_every: u64,
+    /// Per-run output directory: checkpoints land here, and training
+    /// resumes from the newest valid one found here.
+    pub out_dir: Option<PathBuf>,
 }
 
 impl RunSpec {
@@ -187,7 +196,25 @@ impl RunSpec {
             eval_every: 0,
             log_every: 10,
             memory_budget: None,
+            checkpoint_every: 0,
+            out_dir: None,
         }
+    }
+
+    /// The spec-identity string hashed into every checkpoint header
+    /// ([`crate::persist::spec_hash`]): anything that changes the training
+    /// trajectory — model, optimizer stack, step count, seed — changes the
+    /// hash, so a resume against a drifted spec restarts instead of
+    /// restoring incompatible state.
+    pub fn identity(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}",
+            self.id,
+            self.model,
+            self.optimizer.label(),
+            self.steps,
+            self.seed
+        )
     }
 }
 
@@ -208,9 +235,13 @@ impl ExperimentSpec {
     /// workers = 4
     ///
     /// [workload]
-    /// kind = "cluster"       # or "tokens"
+    /// kind = "cluster"       # or "image" | "tokens" | "synthetic"
     /// classes = 32
     /// dim = 64
+    /// # synthetic runs take a flat even-length dims list instead:
+    /// #   shapes = [16, 8, 8, 8, 4, 1]   # layers (16x8), (8x8), (4x1)
+    /// #   noise = 0.05
+    /// #   pace_ms = 0
     ///
     /// [[runs]]
     /// model = "res_mlp_c32"
@@ -233,6 +264,8 @@ impl ExperimentSpec {
         let steps = doc.root.get("steps").and_then(|v| v.as_i64()).unwrap_or(300) as u64;
         let seed = doc.root.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
         let workers = doc.root.get("workers").and_then(|v| v.as_i64()).unwrap_or(4) as usize;
+        let checkpoint_every =
+            doc.root.get("checkpoint_every").and_then(|v| v.as_i64()).unwrap_or(0).max(0) as u64;
 
         let wl_table = doc.tables.get("workload");
         let workload = parse_workload(wl_table, seed)?;
@@ -315,6 +348,7 @@ impl ExperimentSpec {
             let opt = OptimizerSpec { base, hyper, shampoo, stack };
             let mut run = RunSpec::new(&model, workload.clone(), opt, steps);
             run.seed = seed;
+            run.checkpoint_every = checkpoint_every;
             runs.push(run);
         }
         Ok(ExperimentSpec { name, runs, workers })
@@ -369,6 +403,25 @@ fn parse_workload(t: Option<&TomlTable>, seed: u64) -> Result<Workload> {
             }
             Ok(Workload::Tokens(spec))
         }
+        "synthetic" => {
+            let mut spec = SyntheticSpec::default();
+            if let Some(arr) = t.get("shapes").and_then(|v| v.as_arr()) {
+                let dims: Vec<usize> =
+                    arr.iter().filter_map(|v| v.as_i64()).map(|d| d.max(1) as usize).collect();
+                crate::ensure!(
+                    dims.len() == arr.len() && !dims.is_empty() && dims.len() % 2 == 0,
+                    "synthetic shapes must be a flat, even-length list of integer dims"
+                );
+                spec.shapes = dims.chunks_exact(2).map(|p| (p[0], p[1])).collect();
+            }
+            if let Some(v) = t.get("noise").and_then(|v| v.as_f64()) {
+                spec.noise = v as f32;
+            }
+            if let Some(v) = t.get("pace_ms").and_then(|v| v.as_i64()) {
+                spec.pace_ms = v.max(0) as u64;
+            }
+            Ok(Workload::Synthetic(spec))
+        }
         other => bail!("unknown workload kind '{other}'"),
     }
 }
@@ -412,6 +465,28 @@ base = "adamw"
             Workload::Cluster(c) => assert_eq!(c.classes, 16),
             _ => panic!("wrong workload"),
         }
+    }
+
+    #[test]
+    fn parses_synthetic_workload() {
+        let text = "\ncheckpoint_every = 25\n\n[workload]\nkind = \"synthetic\"\n\
+                    shapes = [16, 8, 8, 8]\nnoise = 0.1\n\n[[runs]]\nmodel = \"synthetic\"\n\
+                    shampoo = \"cq-ef\"\n";
+        let spec = ExperimentSpec::from_toml(text).unwrap();
+        match &spec.runs[0].workload {
+            Workload::Synthetic(s) => {
+                assert_eq!(s.shapes, vec![(16, 8), (8, 8)]);
+                assert_eq!(s.noise, 0.1);
+            }
+            _ => panic!("wrong workload"),
+        }
+        assert_eq!(spec.runs[0].checkpoint_every, 25);
+        // Identity strings key checkpoints: distinct runs must differ.
+        assert!(spec.runs[0].identity().contains("synthetic"));
+        // Odd-length shape lists are rejected.
+        let bad =
+            "\n[workload]\nkind = \"synthetic\"\nshapes = [16, 8, 8]\n\n[[runs]]\nmodel = \"m\"\n";
+        assert!(ExperimentSpec::from_toml(bad).is_err());
     }
 
     #[test]

@@ -31,7 +31,8 @@
 //! | [`runtime`] | PJRT CPU client, HLO-text loading, executable cache, literal helpers |
 //! | [`train`] | training loop over AOT artifacts, [`train::OptimizerStack`] + string-keyed [`train::registry`], eval, curve logging |
 //! | [`metrics`] | exact optimizer-state memory accountant, timers, refresh-scheduler telemetry |
-//! | [`coordinator`] | experiment specs, multi-worker scheduler, result registry |
+//! | [`persist`] | versioned CRC-checked checkpoint container, full-run snapshots, bit-identical resume |
+//! | [`coordinator`] | experiment specs, multi-worker job queue (checkpointing, JSONL metrics, crash resume), result registry |
 //! | [`report`] | paper-style table renderer, figure series dumps |
 //!
 //! ## Quickstart
@@ -78,6 +79,7 @@ pub mod models;
 pub mod runtime;
 pub mod train;
 pub mod metrics;
+pub mod persist;
 pub mod coordinator;
 pub mod report;
 pub mod analysis;

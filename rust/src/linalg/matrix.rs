@@ -241,6 +241,30 @@ impl Matrix {
     pub fn size_bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
     }
+
+    /// Serialize for checkpointing: shape header + raw IEEE-754 bits, so a
+    /// restored matrix is bit-identical to the saved one (NaNs included).
+    pub fn write_bytes(&self, w: &mut crate::util::bytes::ByteWriter) {
+        w.put_u64(self.rows as u64);
+        w.put_u64(self.cols as u64);
+        w.put_f32s(&self.data);
+    }
+
+    /// Inverse of [`Matrix::write_bytes`]; errors on truncated input or a
+    /// shape/payload mismatch.
+    pub fn read_bytes(
+        r: &mut crate::util::bytes::ByteReader<'_>,
+    ) -> crate::util::error::Result<Matrix> {
+        let rows = r.get_len()?;
+        let cols = r.get_len()?;
+        let data = r.get_f32s()?;
+        crate::ensure!(
+            data.len() == rows * cols,
+            "matrix payload {} elems, want {rows}x{cols}",
+            data.len()
+        );
+        Ok(Matrix { rows, cols, data })
+    }
 }
 
 impl Index<(usize, usize)> for Matrix {

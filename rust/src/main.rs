@@ -7,13 +7,16 @@
 //! quartz figure --id fig3 [--quick] [--out runs]     # reproduce a figure
 //! quartz train  --model res_mlp_c32 --base sgdm --shampoo cq-ef --steps 400
 //! quartz run    --config examples/experiment.toml    # user-defined grid
+//! quartz queue  specs.toml --out DIR                 # resumable job queue
+//! quartz resume DIR                                  # continue a queue dir
 //! quartz quant-demo                                  # Fig. 2 joint store demo
 //! quartz list                                        # artifacts + models
 //! ```
 
 use quartz::analysis::{figures, tables};
 use quartz::bail;
-use quartz::coordinator::runner::run_all;
+use quartz::coordinator::queue::{resume_queue, run_queue, MetricsLog};
+use quartz::coordinator::runner::{run_all, run_all_logged, RunOutcome};
 use quartz::coordinator::spec::{ExperimentSpec, OptimizerSpec, RunSpec, Workload};
 use quartz::data::synthetic::ClusterSpec;
 use quartz::data::tokens::CorpusSpec;
@@ -31,12 +34,15 @@ use std::path::PathBuf;
 struct Args {
     flags: HashMap<String, String>,
     bools: Vec<String>,
+    /// Bare operands in order (`quartz resume <dir>`, `quartz queue <file>`).
+    positionals: Vec<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Args {
         let mut flags = HashMap::new();
         let mut bools = Vec::new();
+        let mut positionals = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -49,10 +55,11 @@ impl Args {
                     i += 1;
                 }
             } else {
+                positionals.push(a.clone());
                 i += 1;
             }
         }
-        Args { flags, bools }
+        Args { flags, bools, positionals }
     }
 
     fn get(&self, name: &str) -> Option<&str> {
@@ -61,6 +68,10 @@ impl Args {
 
     fn has(&self, name: &str) -> bool {
         self.bools.iter().any(|b| b == name)
+    }
+
+    fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
     }
 
     fn out_dir(&self) -> PathBuf {
@@ -77,6 +88,8 @@ fn main() {
         "figure" => cmd_figure(&args),
         "train" => cmd_train(&args),
         "run" => cmd_run(&args),
+        "queue" => cmd_queue(&args),
+        "resume" => cmd_resume(&args),
         "quant-demo" => cmd_quant_demo(),
         "codecs" => cmd_codecs(),
         "list" => cmd_list(),
@@ -105,6 +118,10 @@ fn print_help() {
          \x20        [--refresh-policy every-n|staggered|staleness]\n\
          \x20        [--refresh-budget N] [--steps N] [--lm] [--seed N]\n\
          \x20 run    --config FILE.toml [--out DIR]\n\
+         \x20 queue  FILE.toml [--out DIR] [--checkpoint-every N]\n\
+         \x20        # resumable job queue: checkpoints + metrics.jsonl in DIR\n\
+         \x20 resume DIR [--checkpoint-every N]\n\
+         \x20        # continue a killed/crashed queue from its checkpoints\n\
          \x20 quant-demo\n\
          \x20 codecs                               # registered optimizer/codec keys\n\
          \x20 list"
@@ -205,17 +222,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
-    let path = args.get("config").context("--config required")?;
-    let text = std::fs::read_to_string(path)?;
-    let spec = ExperimentSpec::from_toml(&text)?;
-    println!("experiment '{}': {} runs on {} workers", spec.name, spec.runs.len(), spec.workers);
-    let outcomes = run_all(&spec.runs, spec.workers);
-    let mut t = Table::new(
-        &format!("experiment '{}'", spec.name),
-        &["Run", "Metric", "Opt-State", "Wall (s)"],
-    );
-    for o in &outcomes {
+fn outcome_table(title: &str, outcomes: &[RunOutcome]) -> Table {
+    let mut t = Table::new(title, &["Run", "Metric", "Opt-State", "Wall (s)"]);
+    for o in outcomes {
         let (metric, bytes, wall) = match (&o.metrics, &o.error) {
             (Some(m), _) => (
                 format!("{:.4}", m.final_metric),
@@ -230,9 +239,49 @@ fn cmd_run(args: &Args) -> Result<()> {
         };
         t.row(vec![o.id.clone(), metric, bytes, wall]);
     }
-    t.print();
+    t
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args.get("config").context("--config required")?;
+    let text = std::fs::read_to_string(path)?;
+    let spec = ExperimentSpec::from_toml(&text)?;
+    println!("experiment '{}': {} runs on {} workers", spec.name, spec.runs.len(), spec.workers);
     std::fs::create_dir_all(args.out_dir())?;
+    // Stream per-run wall-clock + outcome events alongside the final table.
+    let log = MetricsLog::open(&args.out_dir().join(format!("{}.jsonl", spec.name)))?;
+    let outcomes = run_all_logged(&spec.runs, spec.workers, Some(&log));
+    let t = outcome_table(&format!("experiment '{}'", spec.name), &outcomes);
+    t.print();
     t.save_csv(&args.out_dir().join(format!("{}.csv", spec.name)))?;
+    Ok(())
+}
+
+fn cmd_queue(args: &Args) -> Result<()> {
+    let path = args
+        .positional(0)
+        .or_else(|| args.get("config"))
+        .context("usage: quartz queue FILE.toml [--out DIR] [--checkpoint-every N]")?
+        .to_string();
+    let text = std::fs::read_to_string(&path)?;
+    let dir = PathBuf::from(args.get("out").unwrap_or("runs/queue"));
+    let every: u64 = args.get("checkpoint-every").unwrap_or("0").parse()?;
+    println!("queue '{path}' -> {} (metrics.jsonl, runs/<id>/*.ckpt)", dir.display());
+    let outcomes = run_queue(&text, &dir, every)?;
+    outcome_table(&format!("queue {}", dir.display()), &outcomes).print();
+    Ok(())
+}
+
+fn cmd_resume(args: &Args) -> Result<()> {
+    let dir = args
+        .positional(0)
+        .or_else(|| args.get("dir"))
+        .map(PathBuf::from)
+        .context("usage: quartz resume DIR [--checkpoint-every N]")?;
+    let every: u64 = args.get("checkpoint-every").unwrap_or("0").parse()?;
+    println!("resuming queue {}…", dir.display());
+    let outcomes = resume_queue(&dir, every)?;
+    outcome_table(&format!("queue {}", dir.display()), &outcomes).print();
     Ok(())
 }
 

@@ -3,6 +3,8 @@
 //! implements.
 
 use crate::linalg::Matrix;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
 
 /// A complete optimizer over a fixed parameter list: one `step` advances
 /// every parameter given its gradient. Implemented by [`BaseOptimizer`]
@@ -41,6 +43,22 @@ pub trait Optimizer: Send {
     /// Human label for table rows ("SGDM + 4-bit (CQ+EF) Shampoo" style) —
     /// the single naming source for every stack.
     fn name(&self) -> String;
+
+    /// Serialize the full mutable optimizer state (every buffer a resumed
+    /// run needs to continue bit-identically) into `out`. Hyperparameters
+    /// and structure are NOT serialized — the restoring side rebuilds the
+    /// optimizer from its spec first, then calls [`Optimizer::restore_state`]
+    /// on the fresh instance. Defaults to unsupported so third-party
+    /// optimizers opt in explicitly.
+    fn save_state(&self, _out: &mut ByteWriter) -> Result<()> {
+        crate::bail!("optimizer {:?} does not support checkpointing", self.name())
+    }
+
+    /// Inverse of [`Optimizer::save_state`]: overwrite this freshly built
+    /// optimizer's state with the serialized buffers.
+    fn restore_state(&mut self, _r: &mut ByteReader<'_>) -> Result<()> {
+        crate::bail!("optimizer {:?} does not support checkpointing", self.name())
+    }
 }
 
 /// Which first-order rule is in use.
@@ -212,6 +230,44 @@ impl BaseOptimizer {
     pub fn state_bytes(&self) -> usize {
         self.states.iter().map(|s| s.size_bytes()).sum()
     }
+
+    /// Serialize every [`ParamState`] (presence-flagged `m`/`v` buffers plus
+    /// the bias-correction counter). `kind`/`hyper` are spec-derived and not
+    /// written — see [`Optimizer::save_state`].
+    pub fn write_state(&self, out: &mut ByteWriter) {
+        out.put_u64(self.states.len() as u64);
+        for s in &self.states {
+            for buf in [&s.m, &s.v] {
+                match buf {
+                    Some(m) => {
+                        out.put_u8(1);
+                        m.write_bytes(out);
+                    }
+                    None => out.put_u8(0),
+                }
+            }
+            out.put_u64(s.t);
+        }
+    }
+
+    /// Inverse of [`BaseOptimizer::write_state`].
+    pub fn read_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        let n = r.get_len()?;
+        let mut states = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            let mut st = ParamState::default();
+            for buf in [&mut st.m, &mut st.v] {
+                *buf = match r.get_u8()? {
+                    0 => None,
+                    _ => Some(Matrix::read_bytes(r)?),
+                };
+            }
+            st.t = r.get_u64()?;
+            states.push(st);
+        }
+        self.states = states;
+        Ok(())
+    }
 }
 
 impl Optimizer for BaseOptimizer {
@@ -231,6 +287,15 @@ impl Optimizer for BaseOptimizer {
 
     fn name(&self) -> String {
         self.kind.name().to_uppercase()
+    }
+
+    fn save_state(&self, out: &mut ByteWriter) -> Result<()> {
+        self.write_state(out);
+        Ok(())
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.read_state(r)
     }
 }
 
@@ -268,6 +333,32 @@ mod tests {
             assert_eq!(OptimizerKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(OptimizerKind::parse("lion"), None);
+    }
+
+    #[test]
+    fn base_state_round_trips_byte_exactly() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let mut opt = BaseOptimizer::adamw(1e-3, 0.9, 0.999, 1e-8, 0.01);
+        opt.init(2);
+        let mut params = vec![Matrix::zeros(6, 4), Matrix::zeros(3, 3)];
+        for k in 1..=5 {
+            let grads: Vec<Matrix> =
+                params.iter().map(|p| Matrix::randn(p.rows(), p.cols(), 1.0, &mut rng)).collect();
+            Optimizer::step(&mut opt, &mut params, &grads, k, 1.0);
+        }
+        let mut w = ByteWriter::new();
+        opt.save_state(&mut w).unwrap();
+        let bytes = w.into_bytes();
+        let mut fresh = BaseOptimizer::adamw(1e-3, 0.9, 0.999, 1e-8, 0.01);
+        fresh.restore_state(&mut ByteReader::new(&bytes)).unwrap();
+        let mut w2 = ByteWriter::new();
+        fresh.save_state(&mut w2).unwrap();
+        assert_eq!(bytes, w2.into_bytes(), "re-serialization must be byte-identical");
+        assert_eq!(fresh.states.len(), 2);
+        assert_eq!(fresh.states[0].t, 5);
+        // Truncated input errors instead of panicking.
+        assert!(fresh.restore_state(&mut ByteReader::new(&bytes[..bytes.len() - 3])).is_err());
     }
 
     #[test]

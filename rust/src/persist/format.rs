@@ -1,0 +1,302 @@
+//! The versioned, self-describing checkpoint container.
+//!
+//! Layout (all integers little-endian, via [`crate::util::bytes`]):
+//!
+//! ```text
+//! magic "QUARTZCK" (8)  format version u32  spec-hash u64
+//! section count u64
+//!   ├─ name (length-prefixed UTF-8)  payload (length-prefixed bytes)
+//!   └─ …
+//! CRC32 (IEEE) over everything above (4)
+//! ```
+//!
+//! Sections are named and length-prefixed so readers skip what they don't
+//! know and future versions can add sections without breaking old files.
+//! The spec hash pins a checkpoint to the run spec that produced it — a
+//! resume against a different spec (other model, codec stack, steps, seed)
+//! is rejected up front instead of silently restoring incompatible buffers.
+//! Writes go through a temp file + atomic rename, so a crash mid-write
+//! leaves either the previous complete file or a `.tmp` that the scanner
+//! never picks up; a truncated or bit-flipped file fails the CRC and
+//! [`latest_valid`] falls back to the previous checkpoint.
+
+use crate::util::bytes::{crc32, ByteReader, ByteWriter};
+use crate::util::error::{Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// File magic: identifies a quartz checkpoint regardless of extension.
+pub const MAGIC: [u8; 8] = *b"QUARTZCK";
+
+/// Current container format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// FNV-1a over a spec-identity string — the hash pinned into every
+/// checkpoint header. Stable across platforms and releases (unlike
+/// `DefaultHasher`), cheap, and collision-safe enough for a guard whose
+/// job is catching *accidental* spec drift.
+pub fn spec_hash(identity: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in identity.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// An in-memory checkpoint: spec hash + named byte sections.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub spec_hash: u64,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl Checkpoint {
+    pub fn new(spec_hash: u64) -> Checkpoint {
+        Checkpoint { spec_hash, sections: Vec::new() }
+    }
+
+    /// Append a named section (names should be unique; lookups return the
+    /// first match).
+    pub fn add(&mut self, name: &str, payload: Vec<u8>) {
+        self.sections.push((name.to_string(), payload));
+    }
+
+    /// Borrow a section's payload, erroring with the section name if absent.
+    pub fn section(&self, name: &str) -> Result<&[u8]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p.as_slice())
+            .with_context(|| format!("checkpoint has no '{name}' section"))
+    }
+
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Serialize to the on-disk layout (header + sections + trailing CRC).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::from_le_bytes(MAGIC));
+        w.put_u32(FORMAT_VERSION);
+        w.put_u64(self.spec_hash);
+        w.put_u64(self.sections.len() as u64);
+        for (name, payload) in &self.sections {
+            w.put_str(name);
+            w.put_bytes(payload);
+        }
+        let crc = crc32(w.as_slice());
+        w.put_u32(crc);
+        w.into_bytes()
+    }
+
+    /// Parse + validate the full container: CRC first (so any truncation or
+    /// corruption is one uniform error), then magic, version, and sections.
+    pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
+        crate::ensure!(data.len() >= 24, "checkpoint too short ({} bytes)", data.len());
+        let (body, tail) = data.split_at(data.len() - 4);
+        let want = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+        let got = crc32(body);
+        crate::ensure!(got == want, "checkpoint CRC mismatch (got {got:08x}, want {want:08x})");
+        let mut r = ByteReader::new(body);
+        let magic = r.get_u64()?;
+        crate::ensure!(magic == u64::from_le_bytes(MAGIC), "not a quartz checkpoint (bad magic)");
+        let version = r.get_u32()?;
+        crate::ensure!(
+            version == FORMAT_VERSION,
+            "unsupported checkpoint format version {version} (this build reads {FORMAT_VERSION})"
+        );
+        let spec_hash = r.get_u64()?;
+        let n = r.get_len()?;
+        let mut sections = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let name = r.get_str()?;
+            let payload = r.get_bytes()?.to_vec();
+            sections.push((name, payload));
+        }
+        r.finish()?;
+        Ok(Checkpoint { spec_hash, sections })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, fsync, rename over
+    /// `path`. A crash at any point leaves either the old complete file or
+    /// an orphaned `.tmp` (which the `step-*.ckpt` scanners ignore).
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let tmp = path.with_extension("tmp");
+        let bytes = self.to_bytes();
+        {
+            use std::io::Write;
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes).with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))
+    }
+
+    /// Read + validate one checkpoint file.
+    pub fn read_file(path: &Path) -> Result<Checkpoint> {
+        let data =
+            fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Checkpoint::from_bytes(&data).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// Canonical checkpoint file name for a step: `step-00001200.ckpt`
+/// (zero-padded so lexicographic order == step order).
+pub fn step_file_name(step: u64) -> String {
+    format!("step-{step:08}.ckpt")
+}
+
+/// Inverse of [`step_file_name`].
+pub fn parse_step_file(name: &str) -> Option<u64> {
+    name.strip_prefix("step-")?.strip_suffix(".ckpt")?.parse().ok()
+}
+
+/// All `step-*.ckpt` files in `dir`, sorted ascending by step. A missing
+/// directory is an empty list, not an error (nothing to resume from).
+pub fn list_checkpoints(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let Ok(entries) = fs::read_dir(dir) else { return Vec::new() };
+    let mut out: Vec<(u64, PathBuf)> = entries
+        .filter_map(|e| {
+            let e = e.ok()?;
+            let step = parse_step_file(e.file_name().to_str()?)?;
+            Some((step, e.path()))
+        })
+        .collect();
+    out.sort_by_key(|&(step, _)| step);
+    out
+}
+
+/// The newest checkpoint in `dir` that passes CRC + header validation and
+/// matches `spec_hash`. Invalid files (truncated write at crash time,
+/// corruption) and stale spec hashes are skipped — the scan falls back to
+/// the next-newest until one validates. `Ok(None)` when nothing usable
+/// exists.
+pub fn latest_valid(dir: &Path, spec_hash: u64) -> Result<Option<(u64, Checkpoint)>> {
+    for (step, path) in list_checkpoints(dir).into_iter().rev() {
+        match Checkpoint::read_file(&path) {
+            Ok(ck) if ck.spec_hash == spec_hash => return Ok(Some((step, ck))),
+            Ok(ck) => {
+                eprintln!(
+                    "persist: skipping {} (spec hash {:016x} != expected {:016x})",
+                    path.display(),
+                    ck.spec_hash,
+                    spec_hash
+                );
+            }
+            Err(e) => {
+                eprintln!("persist: skipping invalid checkpoint {}: {e:#}", path.display());
+            }
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut ck = Checkpoint::new(spec_hash("run-1|model|cq-ef|100|7"));
+        ck.add("meta", vec![1, 2, 3]);
+        ck.add("params", (0..200u16).flat_map(|x| x.to_le_bytes()).collect());
+        ck
+    }
+
+    #[test]
+    fn container_round_trips() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.section_names(), vec!["meta", "params"]);
+        assert_eq!(back.section("meta").unwrap(), &[1, 2, 3]);
+        assert!(back.section("nope").is_err());
+        // Serialization is deterministic.
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn corruption_and_truncation_fail_crc() {
+        let bytes = sample().to_bytes();
+        // Flip one bit anywhere in the body → CRC mismatch.
+        for pos in [0, 8, bytes.len() / 2, bytes.len() - 5] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            let err = format!("{:#}", Checkpoint::from_bytes(&bad).unwrap_err());
+            assert!(err.contains("CRC") || err.contains("magic"), "pos {pos}: {err}");
+        }
+        // Every strict prefix fails (truncated write).
+        for cut in [0, 10, bytes.len() - 1] {
+            assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "prefix {cut}");
+        }
+    }
+
+    #[test]
+    fn version_and_magic_are_checked() {
+        let ck = sample();
+        let mut bytes = ck.to_bytes();
+        // Patch the version field (offset 8..12) and re-seal the CRC so
+        // only the version check can reject it.
+        bytes[8] = 99;
+        let n = bytes.len();
+        let crc = crc32(&bytes[..n - 4]).to_le_bytes();
+        bytes[n - 4..].copy_from_slice(&crc);
+        let err = format!("{:#}", Checkpoint::from_bytes(&bytes).unwrap_err());
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn atomic_write_and_latest_valid_scan() {
+        let dir = std::env::temp_dir().join(format!("quartz-fmt-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let hash = spec_hash("scan-test");
+        for step in [100u64, 200, 300] {
+            let mut ck = Checkpoint::new(hash);
+            ck.add("meta", step.to_le_bytes().to_vec());
+            ck.write_atomic(&dir.join(step_file_name(step))).unwrap();
+        }
+        let (step, ck) = latest_valid(&dir, hash).unwrap().unwrap();
+        assert_eq!(step, 300);
+        assert_eq!(ck.section("meta").unwrap(), &300u64.to_le_bytes());
+
+        // Truncate the newest (simulated crash mid-write that somehow kept
+        // the final name): the scan must fall back to step 200.
+        let newest = dir.join(step_file_name(300));
+        let full = fs::read(&newest).unwrap();
+        fs::write(&newest, &full[..full.len() / 2]).unwrap();
+        let (step, _) = latest_valid(&dir, hash).unwrap().unwrap();
+        assert_eq!(step, 200);
+
+        // A different spec hash matches nothing.
+        assert!(latest_valid(&dir, hash ^ 1).unwrap().is_none());
+        // Missing directory → clean None.
+        assert!(latest_valid(&dir.join("absent"), hash).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn step_file_names_sort_and_parse() {
+        assert_eq!(step_file_name(1200), "step-00001200.ckpt");
+        assert_eq!(parse_step_file("step-00001200.ckpt"), Some(1200));
+        assert_eq!(parse_step_file("step-00001200.tmp"), None);
+        assert_eq!(parse_step_file("notes.txt"), None);
+        assert!(step_file_name(999) < step_file_name(1000));
+    }
+
+    #[test]
+    fn spec_hash_is_stable_fnv1a() {
+        // Pinned values: a silent hash-function change would orphan every
+        // existing checkpoint.
+        assert_eq!(spec_hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(spec_hash("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(spec_hash("run-1"), spec_hash("run-2"));
+    }
+}

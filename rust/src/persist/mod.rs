@@ -1,0 +1,20 @@
+//! Checkpoint/resume persistence: a versioned binary container
+//! ([`format`]) and the full training-run snapshot stored inside it
+//! ([`train_state`]).
+//!
+//! The contract is **bit-identical resume**: training N steps produces
+//! exactly the same parameter and optimizer-state bytes as training k
+//! steps, checkpointing, restoring, and training N−k more — pinned by the
+//! oracle tests in `tests/persist_resume.rs`. Everything that feeds the
+//! step path round-trips byte-exactly: packed 4-bit codes, scales, EF
+//! triangles, eigen factors, momentum buffers, refresh-scheduler metadata,
+//! step counters, and the RNG stream position.
+
+pub mod format;
+pub mod train_state;
+
+pub use format::{
+    latest_valid, list_checkpoints, parse_step_file, spec_hash, step_file_name, Checkpoint,
+    FORMAT_VERSION, MAGIC,
+};
+pub use train_state::TrainState;

@@ -1,0 +1,198 @@
+//! The full training-run snapshot stored inside a checkpoint container.
+//!
+//! A [`TrainState`] holds everything a resumed run needs to continue
+//! **bit-identically** from step `step + 1`: parameters, the serialized
+//! optimizer state (every codec payload, EF triangle, momentum buffer, and
+//! refresh counter — see [`crate::optim::Optimizer::save_state`]), the
+//! trainer's RNG stream position, the metric curves accumulated so far, and
+//! the wall/optimizer time already spent (so resumed runs report end-to-end
+//! totals, not just the tail).
+
+use super::format::{list_checkpoints, step_file_name, Checkpoint};
+use crate::linalg::Matrix;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Snapshot of one training run after `step` completed steps.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// Completed optimizer steps (resume continues at `step + 1`).
+    pub step: u64,
+    /// Model parameters after `step` steps.
+    pub params: Vec<Matrix>,
+    /// Opaque optimizer payload ([`crate::train::OptimizerStack::save_state`]).
+    pub opt: Vec<u8>,
+    /// The trainer's RNG stream state at the end of step `step`.
+    pub rng: [u64; 4],
+    /// (step, train loss) samples so far.
+    pub loss_curve: Vec<(u64, f32)>,
+    /// (step, eval metric) samples so far.
+    pub eval_curve: Vec<(u64, f64)>,
+    /// Wall-clock seconds consumed up to this checkpoint.
+    pub wall_secs: f64,
+    /// Seconds inside the optimizer up to this checkpoint.
+    pub opt_secs: f64,
+}
+
+impl TrainState {
+    /// Pack into a checkpoint container under the given spec hash.
+    pub fn to_checkpoint(&self, spec_hash: u64) -> Checkpoint {
+        let mut ck = Checkpoint::new(spec_hash);
+
+        let mut meta = ByteWriter::new();
+        meta.put_u64(self.step);
+        meta.put_u64s(&self.rng);
+        meta.put_f64(self.wall_secs);
+        meta.put_f64(self.opt_secs);
+        ck.add("meta", meta.into_bytes());
+
+        let mut params = ByteWriter::new();
+        params.put_u64(self.params.len() as u64);
+        for p in &self.params {
+            p.write_bytes(&mut params);
+        }
+        ck.add("params", params.into_bytes());
+
+        ck.add("opt", self.opt.clone());
+
+        let mut curves = ByteWriter::new();
+        curves.put_u64(self.loss_curve.len() as u64);
+        for &(k, v) in &self.loss_curve {
+            curves.put_u64(k);
+            curves.put_f32(v);
+        }
+        curves.put_u64(self.eval_curve.len() as u64);
+        for &(k, v) in &self.eval_curve {
+            curves.put_u64(k);
+            curves.put_f64(v);
+        }
+        ck.add("curves", curves.into_bytes());
+        ck
+    }
+
+    /// Unpack from a validated container.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<TrainState> {
+        let mut meta = ByteReader::new(ck.section("meta")?);
+        let step = meta.get_u64()?;
+        let rng_v = meta.get_u64s()?;
+        crate::ensure!(rng_v.len() == 4, "rng state has {} words, want 4", rng_v.len());
+        let rng = [rng_v[0], rng_v[1], rng_v[2], rng_v[3]];
+        let wall_secs = meta.get_f64()?;
+        let opt_secs = meta.get_f64()?;
+        meta.finish()?;
+
+        let mut pr = ByteReader::new(ck.section("params")?);
+        let n = pr.get_len()?;
+        let mut params = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            params.push(Matrix::read_bytes(&mut pr)?);
+        }
+        pr.finish()?;
+
+        let opt = ck.section("opt")?.to_vec();
+
+        let mut cr = ByteReader::new(ck.section("curves")?);
+        let nl = cr.get_len()?;
+        let mut loss_curve = Vec::with_capacity(nl.min(1 << 20));
+        for _ in 0..nl {
+            loss_curve.push((cr.get_u64()?, cr.get_f32()?));
+        }
+        let ne = cr.get_len()?;
+        let mut eval_curve = Vec::with_capacity(ne.min(1 << 20));
+        for _ in 0..ne {
+            eval_curve.push((cr.get_u64()?, cr.get_f64()?));
+        }
+        cr.finish()?;
+
+        Ok(TrainState { step, params, opt, rng, loss_curve, eval_curve, wall_secs, opt_secs })
+    }
+
+    /// Write `dir/step-NNNNNNNN.ckpt` atomically; returns the path.
+    pub fn save(&self, dir: &Path, spec_hash: u64) -> Result<PathBuf> {
+        let path = dir.join(step_file_name(self.step));
+        self.to_checkpoint(spec_hash)
+            .write_atomic(&path)
+            .with_context(|| format!("saving checkpoint at step {}", self.step))?;
+        Ok(path)
+    }
+
+    /// Load the newest usable snapshot from `dir` (`None` when nothing
+    /// usable exists — fresh start). Scans newest-first and falls back on
+    /// *any* failure — CRC, spec-hash mismatch, or a section that no longer
+    /// parses — so a corrupt tail never blocks resume.
+    pub fn load_latest(dir: &Path, spec_hash: u64) -> Result<Option<TrainState>> {
+        for (_, path) in list_checkpoints(dir).into_iter().rev() {
+            let parsed = Checkpoint::read_file(&path).and_then(|ck| {
+                crate::ensure!(
+                    ck.spec_hash == spec_hash,
+                    "spec hash {:016x} != expected {spec_hash:016x}",
+                    ck.spec_hash
+                );
+                TrainState::from_checkpoint(&ck)
+            });
+            match parsed {
+                Ok(st) => return Ok(Some(st)),
+                Err(e) => {
+                    eprintln!("persist: skipping checkpoint {}: {e:#}", path.display());
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::format::spec_hash;
+    use crate::util::rng::Rng;
+
+    fn sample(step: u64) -> TrainState {
+        let mut rng = Rng::new(step);
+        TrainState {
+            step,
+            params: vec![Matrix::randn(6, 4, 1.0, &mut rng), Matrix::randn(3, 3, 1.0, &mut rng)],
+            opt: vec![9, 8, 7, 6],
+            rng: rng.state(),
+            loss_curve: vec![(10, 0.5), (20, 0.25)],
+            eval_curve: vec![(20, 0.9)],
+            wall_secs: 1.5,
+            opt_secs: 0.25,
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_byte_exactly() {
+        let st = sample(20);
+        let hash = spec_hash("ts-test");
+        let ck = st.to_checkpoint(hash);
+        let bytes = ck.to_bytes();
+        let back = TrainState::from_checkpoint(&Checkpoint::from_bytes(&bytes).unwrap()).unwrap();
+        assert_eq!(back.step, 20);
+        assert_eq!(back.rng, st.rng);
+        assert_eq!(back.opt, st.opt);
+        assert_eq!(back.loss_curve, st.loss_curve);
+        assert_eq!(back.eval_curve, st.eval_curve);
+        for (a, b) in back.params.iter().zip(st.params.iter()) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
+        // Re-serialization is byte-identical.
+        assert_eq!(back.to_checkpoint(hash).to_bytes(), bytes);
+    }
+
+    #[test]
+    fn save_load_latest_skips_corrupt_tail() {
+        let dir = std::env::temp_dir().join(format!("quartz-ts-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let hash = spec_hash("ts-scan");
+        sample(10).save(&dir, hash).unwrap();
+        let p20 = sample(20).save(&dir, hash).unwrap();
+        // Corrupt the newest file; load_latest must fall back to step 10.
+        let full = std::fs::read(&p20).unwrap();
+        std::fs::write(&p20, &full[..full.len() - 7]).unwrap();
+        let st = TrainState::load_latest(&dir, hash).unwrap().unwrap();
+        assert_eq!(st.step, 10);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -10,6 +10,7 @@ use super::mapping::{Codebook, Mapping};
 use super::packed::{NibbleReader, NibbleWriter, PackedNibbles};
 use crate::linalg::matmul::SendPtr;
 use crate::linalg::Matrix;
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::pool::{default_threads, parallel_for};
 
 /// Element count below which quantize/dequantize stay single-threaded
@@ -408,6 +409,62 @@ impl QuantizedMatrix {
     pub fn size_bytes(&self) -> usize {
         self.codes.size_bytes() + self.scales.len() * 4
     }
+
+    /// Serialize for checkpointing: shape/config header, then the packed
+    /// code bytes verbatim, then the raw f32 scale bits. A restore followed
+    /// by [`Self::write_bytes`] reproduces the identical byte string — no
+    /// re-quantization is involved anywhere on the path.
+    pub fn write_bytes(&self, w: &mut ByteWriter) {
+        w.put_u64(self.rows as u64);
+        w.put_u64(self.cols as u64);
+        w.put_u64(self.block as u64);
+        w.put_u32(self.bits);
+        w.put_u8(self.mapping.tag());
+        match &self.codes {
+            CodeStore::Nibbles(p) => {
+                w.put_u8(0);
+                w.put_u64(p.len() as u64);
+                w.put_bytes(p.bytes());
+            }
+            CodeStore::Bytes(v) => {
+                w.put_u8(1);
+                w.put_bytes(v);
+            }
+        }
+        w.put_f32s(&self.scales);
+    }
+
+    /// Inverse of [`Self::write_bytes`]; errors on truncation or on layout
+    /// tags this build does not know.
+    pub fn read_bytes(r: &mut ByteReader<'_>) -> crate::util::error::Result<QuantizedMatrix> {
+        let rows = r.get_len()?;
+        let cols = r.get_len()?;
+        let block = r.get_len()?;
+        let bits = r.get_u32()?;
+        let tag = r.get_u8()?;
+        let mapping =
+            Mapping::from_tag(tag).ok_or_else(|| crate::anyhow!("unknown mapping tag {tag}"))?;
+        let codes = match r.get_u8()? {
+            0 => {
+                let len = r.get_len()?;
+                let raw = r.get_bytes()?;
+                crate::ensure!(
+                    raw.len() == len.div_ceil(2),
+                    "nibble payload {} bytes, want {} for {len} codes",
+                    raw.len(),
+                    len.div_ceil(2)
+                );
+                let mut p = PackedNibbles::zeros(len);
+                p.bytes_mut().copy_from_slice(raw);
+                CodeStore::Nibbles(p)
+            }
+            1 => CodeStore::Bytes(r.get_bytes()?.to_vec()),
+            t => crate::bail!("unknown code-store tag {t}"),
+        };
+        crate::ensure!(codes.len() == rows * cols, "code count mismatch");
+        let scales = r.get_f32s()?;
+        Ok(QuantizedMatrix { rows, cols, block, bits, mapping, codes, scales })
+    }
 }
 
 #[cfg(test)]
@@ -513,6 +570,30 @@ mod tests {
         let num = crate::linalg::inner(&x, &back);
         let den = crate::linalg::fro_norm(&x) * crate::linalg::fro_norm(&back);
         assert!(num / den > 0.95);
+    }
+
+    #[test]
+    fn serialization_round_trips_byte_exactly() {
+        let mut rng = Rng::new(6);
+        for (bits, (m, n)) in [(4u32, (33, 17)), (8, (16, 16))] {
+            let q = BlockQuantizer::new(QuantConfig { bits, block: 16, ..Default::default() });
+            let x = Matrix::randn(m, n, 1.0, &mut rng);
+            let qx = q.quantize(&x);
+            let mut w = ByteWriter::new();
+            qx.write_bytes(&mut w);
+            let bytes = w.into_bytes();
+            let mut r = ByteReader::new(&bytes);
+            let back = QuantizedMatrix::read_bytes(&mut r).unwrap();
+            r.finish().unwrap();
+            // Idempotent re-serialization — the on-disk form is canonical.
+            let mut w2 = ByteWriter::new();
+            back.write_bytes(&mut w2);
+            assert_eq!(bytes, w2.into_bytes(), "bits={bits}");
+            assert_eq!(q.dequantize(&back).max_abs_diff(&q.dequantize(&qx)), 0.0);
+            // A truncated tail is an error, never a partial value.
+            let mut r = ByteReader::new(&bytes[..bytes.len() - 3]);
+            assert!(QuantizedMatrix::read_bytes(&mut r).is_err());
+        }
     }
 
     #[test]

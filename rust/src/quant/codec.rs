@@ -55,6 +55,8 @@ use super::half::F16Codec;
 use super::offdiag::{dequantize_offdiag, quantize_offdiag, OffDiagQuantized};
 use super::tri_store::TriJointStore;
 use crate::linalg::{cholesky_jittered_into_planned, matmul_nt_into_planned, Matrix, ScratchArena};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// Shared context handed to codec constructors: the numerical-stability
@@ -121,6 +123,35 @@ pub trait PrecondCodec: std::fmt::Debug + Send {
         None
     }
 
+    /// Serialize this codec's persistent state for checkpointing.
+    ///
+    /// The default reconstructs through [`Self::load`] and writes a dense
+    /// f32 matrix — correct for any external codec, but only
+    /// reconstruction-accurate. Every built-in overrides the pair to dump
+    /// its *physical* representation (packed codes, block scales, EF
+    /// triangles, exact diagonals) so that restore → save reproduces the
+    /// identical byte string with no re-quantization or re-factorization —
+    /// the property the bit-identical-resume oracle pins.
+    ///
+    /// Configuration (ε, βₑ, the shared quantizer) is NOT serialized: a
+    /// restored codec keeps the config it was constructed with, and the
+    /// checkpoint's spec hash guards against restoring under a different
+    /// experiment configuration.
+    fn save_state(&self, out: &mut ByteWriter) {
+        let m = self.load();
+        out.put_u8(1);
+        m.write_bytes(out);
+    }
+
+    /// Inverse of [`Self::save_state`]. The default reads the dense f32
+    /// fallback and re-absorbs it through [`Self::store`].
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        crate::ensure!(r.get_u8()? == 1, "{}: empty saved state", self.key());
+        let m = Matrix::read_bytes(r)?;
+        self.store(&m);
+        Ok(())
+    }
+
     /// Clone through the trait object (enables `Clone` for boxed codecs).
     fn clone_box(&self) -> Box<dyn PrecondCodec>;
 }
@@ -165,6 +196,24 @@ impl PrecondCodec for F32Codec {
 
     fn size_bytes(&self) -> usize {
         self.m.as_ref().map(|m| m.size_bytes()).unwrap_or(0)
+    }
+
+    fn save_state(&self, out: &mut ByteWriter) {
+        match &self.m {
+            Some(m) => {
+                out.put_u8(1);
+                m.write_bytes(out);
+            }
+            None => out.put_u8(0),
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.m = match r.get_u8()? {
+            0 => None,
+            _ => Some(Matrix::read_bytes(r)?),
+        };
+        Ok(())
     }
 
     fn clone_box(&self) -> Box<dyn PrecondCodec> {
@@ -235,6 +284,30 @@ impl PrecondCodec for OffDiagCodec {
         self.s.as_ref().map(|s| s.size_bytes()).unwrap_or(0)
     }
 
+    fn save_state(&self, out: &mut ByteWriter) {
+        match &self.s {
+            Some(s) => {
+                out.put_u8(1);
+                s.q.write_bytes(out);
+                out.put_f32s(&s.diag);
+            }
+            None => out.put_u8(0),
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.s = match r.get_u8()? {
+            0 => None,
+            _ => {
+                let q = QuantizedMatrix::read_bytes(r)?;
+                let diag = r.get_f32s()?;
+                crate::ensure!(diag.len() == q.rows, "diagonal length mismatch");
+                Some(OffDiagQuantized { q, diag })
+            }
+        };
+        Ok(())
+    }
+
     fn clone_box(&self) -> Box<dyn PrecondCodec> {
         Box::new(self.clone())
     }
@@ -281,6 +354,24 @@ impl PrecondCodec for FullGridCodec {
 
     fn size_bytes(&self) -> usize {
         self.s.as_ref().map(|s| s.size_bytes()).unwrap_or(0)
+    }
+
+    fn save_state(&self, out: &mut ByteWriter) {
+        match &self.s {
+            Some(s) => {
+                out.put_u8(1);
+                s.write_bytes(out);
+            }
+            None => out.put_u8(0),
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.s = match r.get_u8()? {
+            0 => None,
+            _ => Some(QuantizedMatrix::read_bytes(r)?),
+        };
+        Ok(())
     }
 
     fn clone_box(&self) -> Box<dyn PrecondCodec> {
@@ -425,6 +516,28 @@ impl PrecondCodec for CholeskyCodec {
         } else {
             None
         }
+    }
+
+    /// The joint triangular buffer verbatim — factor codes, exact f32
+    /// diagonal, EF codes, and both scale sets. Nothing is re-factorized on
+    /// restore, so resume continues from the *same* quantized factor and
+    /// error state, not a re-quantization of their reconstruction.
+    fn save_state(&self, out: &mut ByteWriter) {
+        match &self.s {
+            Some(s) => {
+                out.put_u8(1);
+                s.write_bytes(out);
+            }
+            None => out.put_u8(0),
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.s = match r.get_u8()? {
+            0 => None,
+            _ => Some(TriJointStore::read_bytes(r)?),
+        };
+        Ok(())
     }
 
     fn clone_box(&self) -> Box<dyn PrecondCodec> {
@@ -714,6 +827,88 @@ mod tests {
             }
             assert_eq!(arena.misses(), baseline, "{key}: steady-state refresh allocated");
         }
+    }
+
+    #[test]
+    fn save_restore_is_byte_exact_for_every_builtin() {
+        // The checkpoint contract: save → restore into a FRESH instance →
+        // save again must reproduce the identical byte string, and the
+        // restored codec must reconstruct the identical matrix. This is the
+        // per-codec half of the bit-identical-resume oracle.
+        let ctx = ctx();
+        let mut rng = Rng::new(7);
+        let g = Matrix::randn(20, 24, 1.0, &mut rng);
+        let mut spd = crate::linalg::syrk(&g);
+        spd.add_diag(0.5);
+        for key in codec_keys() {
+            let b = lookup(key).unwrap();
+            let mut orig = (b.side)(&ctx);
+            orig.init(20, 1e-6);
+            orig.store(&spd);
+            let mut w = ByteWriter::new();
+            orig.save_state(&mut w);
+            let bytes = w.into_bytes();
+
+            let mut fresh = (b.side)(&ctx);
+            let mut r = ByteReader::new(&bytes);
+            fresh.restore_state(&mut r).unwrap_or_else(|e| panic!("{key}: restore failed: {e}"));
+            r.finish().unwrap_or_else(|e| panic!("{key}: trailing bytes: {e}"));
+
+            let mut w2 = ByteWriter::new();
+            fresh.save_state(&mut w2);
+            assert_eq!(bytes, w2.into_bytes(), "{key}: save→restore→save not byte-exact");
+            assert_eq!(orig.load().max_abs_diff(&fresh.load()), 0.0, "{key}: load diverged");
+            assert_eq!(orig.size_bytes(), fresh.size_bytes(), "{key}: byte accounting diverged");
+
+            // EF state (where present) must survive the trip too.
+            match (orig.error_state(), fresh.error_state()) {
+                (Some(a), Some(b)) => assert_eq!(a, b, "{key}: EF state diverged"),
+                (None, None) => {}
+                _ => panic!("{key}: EF presence diverged"),
+            }
+
+            // Truncated input must error, never mis-restore.
+            if bytes.len() > 4 {
+                let mut fresh = (b.side)(&ctx);
+                let mut r = ByteReader::new(&bytes[..bytes.len() - 3]);
+                assert!(fresh.restore_state(&mut r).is_err(), "{key}: accepted truncated state");
+            }
+        }
+    }
+
+    #[test]
+    fn default_save_restore_falls_back_to_dense() {
+        // A codec that does not override the pair still round-trips through
+        // the dense fallback (reconstruction-exact for lossless codecs).
+        #[derive(Debug, Clone)]
+        struct Plain(Option<Matrix>);
+        impl PrecondCodec for Plain {
+            fn key(&self) -> &'static str {
+                "plain-test"
+            }
+            fn store(&mut self, x: &Matrix) {
+                self.0 = Some(x.clone());
+            }
+            fn load(&self) -> Matrix {
+                self.0.clone().unwrap()
+            }
+            fn size_bytes(&self) -> usize {
+                self.0.as_ref().map(|m| m.size_bytes()).unwrap_or(0)
+            }
+            fn clone_box(&self) -> Box<dyn PrecondCodec> {
+                Box::new(self.clone())
+            }
+        }
+        let mut rng = Rng::new(8);
+        let x = Matrix::randn(9, 9, 1.0, &mut rng);
+        let mut a = Plain(None);
+        a.store(&x);
+        let mut w = ByteWriter::new();
+        a.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut b = Plain(None);
+        b.restore_state(&mut ByteReader::new(&bytes)).unwrap();
+        assert_eq!(b.load(), x);
     }
 
     #[test]

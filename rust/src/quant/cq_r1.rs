@@ -20,6 +20,8 @@ use super::blockwise::BlockQuantizer;
 use super::codec::{CodecCtx, PrecondCodec};
 use super::tri_store::TriJointStore;
 use crate::linalg::{cholesky_jittered_into_planned, matmul_nt_into_planned, Matrix, ScratchArena};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
 use std::sync::Arc;
 
 /// 4-bit Cholesky factor + per-row f32 scale correction (`cq-r1` key).
@@ -120,6 +122,36 @@ impl PrecondCodec for CholeskyR1Codec {
     /// scale set) plus the `4n`-byte row-scale vector.
     fn size_bytes(&self) -> usize {
         self.s.as_ref().map(|s| s.size_bytes_cq_only()).unwrap_or(0) + self.row_scale.len() * 4
+    }
+
+    /// Triangular store bytes plus the row-scale side-band — no
+    /// re-factorization or scale refit on restore.
+    fn save_state(&self, out: &mut ByteWriter) {
+        match &self.s {
+            Some(s) => {
+                out.put_u8(1);
+                s.write_bytes(out);
+            }
+            None => out.put_u8(0),
+        }
+        out.put_f32s(&self.row_scale);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.s = match r.get_u8()? {
+            0 => None,
+            _ => Some(TriJointStore::read_bytes(r)?),
+        };
+        self.row_scale = r.get_f32s()?;
+        if let Some(s) = &self.s {
+            crate::ensure!(
+                self.row_scale.len() == s.n,
+                "row-scale len {} vs factor dim {}",
+                self.row_scale.len(),
+                s.n
+            );
+        }
+        Ok(())
     }
 
     fn clone_box(&self) -> Box<dyn PrecondCodec> {

@@ -22,6 +22,8 @@
 use super::blockwise::{BlockQuantizer, QuantizedMatrix};
 use super::codec::{CodecCtx, PrecondCodec};
 use crate::linalg::{eig_sym_with, matmul_nt_into_planned, EigWork, Matrix, ScratchArena};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
 use std::cell::RefCell;
 use std::sync::Arc;
 
@@ -159,6 +161,37 @@ impl PrecondCodec for Ec4Codec {
     /// eigenvalue vector.
     fn size_bytes(&self) -> usize {
         self.vecs.as_ref().map(|s| s.size_bytes()).unwrap_or(0) + self.vals.len() * 4
+    }
+
+    /// Packed eigenvector codes + raw f32 eigenvalues — no
+    /// re-decomposition on restore, so resume continues from the exact
+    /// stored eigenbasis.
+    fn save_state(&self, out: &mut ByteWriter) {
+        out.put_f32s(&self.vals);
+        match &self.vecs {
+            Some(s) => {
+                out.put_u8(1);
+                s.write_bytes(out);
+            }
+            None => out.put_u8(0),
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.vals = r.get_f32s()?;
+        self.vecs = match r.get_u8()? {
+            0 => None,
+            _ => Some(QuantizedMatrix::read_bytes(r)?),
+        };
+        if let Some(s) = &self.vecs {
+            crate::ensure!(
+                self.vals.len() == s.rows,
+                "eigenvalue count {} vs eigenvector rows {}",
+                self.vals.len(),
+                s.rows
+            );
+        }
+        Ok(())
     }
 
     fn clone_box(&self) -> Box<dyn PrecondCodec> {

@@ -11,6 +11,8 @@
 use super::codec::PrecondCodec;
 use super::mapping::{f16_to_f32, f32_to_f16};
 use crate::linalg::{Matrix, ScratchArena};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
 
 /// Half-precision storage of one preconditioner matrix (`f16` registry key).
 #[derive(Clone, Debug, Default)]
@@ -53,6 +55,33 @@ impl PrecondCodec for F16Codec {
     /// Exactly 2 bytes per element — no scales, no f32 side-band.
     fn size_bytes(&self) -> usize {
         self.data.len() * 2
+    }
+
+    /// Raw little-endian u16 payload after the shape header — restoring
+    /// skips the f32→f16 conversion entirely, so the state is bit-exact.
+    fn save_state(&self, out: &mut ByteWriter) {
+        out.put_u64(self.rows as u64);
+        out.put_u64(self.cols as u64);
+        let mut raw = Vec::with_capacity(self.data.len() * 2);
+        for &h in &self.data {
+            raw.extend_from_slice(&h.to_le_bytes());
+        }
+        out.put_bytes(&raw);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        let rows = r.get_len()?;
+        let cols = r.get_len()?;
+        let raw = r.get_bytes()?;
+        crate::ensure!(
+            raw.len() == rows * cols * 2,
+            "f16 payload {} bytes, want {rows}x{cols} halves",
+            raw.len()
+        );
+        self.rows = rows;
+        self.cols = cols;
+        self.data = raw.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])).collect();
+        Ok(())
     }
 
     fn clone_box(&self) -> Box<dyn PrecondCodec> {

@@ -61,6 +61,26 @@ impl Mapping {
             Mapping::Dynamic => "dynamic",
         }
     }
+
+    /// Stable one-byte tag for checkpoint serialization. These values are
+    /// part of the on-disk format — never renumber, only append.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Mapping::Linear => 0,
+            Mapping::Linear2 => 1,
+            Mapping::Dynamic => 2,
+        }
+    }
+
+    /// Inverse of [`Mapping::tag`]; `None` for tags from a newer format.
+    pub fn from_tag(tag: u8) -> Option<Mapping> {
+        match tag {
+            0 => Some(Mapping::Linear),
+            1 => Some(Mapping::Linear2),
+            2 => Some(Mapping::Dynamic),
+            _ => None,
+        }
+    }
 }
 
 /// Precomputed nearest-level quantizer for one (mapping, bits) pair.
@@ -307,6 +327,18 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn mapping_tags_round_trip_and_stay_stable() {
+        for m in [Mapping::Linear, Mapping::Linear2, Mapping::Dynamic] {
+            assert_eq!(Mapping::from_tag(m.tag()), Some(m));
+        }
+        // On-disk values — a renumbering would silently corrupt checkpoints.
+        assert_eq!(Mapping::Linear.tag(), 0);
+        assert_eq!(Mapping::Linear2.tag(), 1);
+        assert_eq!(Mapping::Dynamic.tag(), 2);
+        assert_eq!(Mapping::from_tag(3), None);
     }
 
     #[test]

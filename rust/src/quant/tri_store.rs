@@ -29,6 +29,8 @@ use super::blockwise::{auto_threads, even_aligned_chunk, BlockQuantizer};
 use super::packed::{NibbleReader, NibbleWriter, PackedNibbles};
 use crate::linalg::matmul::SendPtr;
 use crate::linalg::Matrix;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
 use crate::util::pool::parallel_for;
 
 /// One packed buffer holding a quantized Cholesky factor (lower) and its
@@ -355,6 +357,44 @@ impl TriJointStore {
         let tri_codes = (self.n * (self.n + 1)) / 2;
         tri_codes.div_ceil(2) + self.diag.len() * 4 + self.c_scales.len() * 4
     }
+
+    /// Serialize for checkpointing: the packed nibble grid verbatim plus the
+    /// f32 diagonal and both scale sets as raw bits. Restoring and
+    /// re-serializing reproduces the identical byte string — factor codes
+    /// and EF triangles survive without any re-factorization or
+    /// re-quantization.
+    pub fn write_bytes(&self, w: &mut ByteWriter) {
+        w.put_u64(self.n as u64);
+        w.put_u64(self.block as u64);
+        w.put_u64(self.codes.len() as u64);
+        w.put_bytes(self.codes.bytes());
+        w.put_f32s(&self.diag);
+        w.put_f32s(&self.c_scales);
+        w.put_f32s(&self.e_scales);
+    }
+
+    /// Inverse of [`Self::write_bytes`]; errors on truncated or
+    /// inconsistent input.
+    pub fn read_bytes(r: &mut ByteReader<'_>) -> Result<TriJointStore> {
+        let n = r.get_len()?;
+        let block = r.get_len()?;
+        let code_len = r.get_len()?;
+        crate::ensure!(code_len == n * n, "joint grid holds {code_len} codes, want {}", n * n);
+        let raw = r.get_bytes()?;
+        crate::ensure!(
+            raw.len() == code_len.div_ceil(2),
+            "nibble payload {} bytes, want {}",
+            raw.len(),
+            code_len.div_ceil(2)
+        );
+        let mut codes = PackedNibbles::zeros(code_len);
+        codes.bytes_mut().copy_from_slice(raw);
+        let diag = r.get_f32s()?;
+        crate::ensure!(diag.len() == n, "diagonal length {} ≠ n {n}", diag.len());
+        let c_scales = r.get_f32s()?;
+        let e_scales = r.get_f32s()?;
+        Ok(TriJointStore { n, codes, diag, c_scales, e_scales, block: block.max(1) })
+    }
 }
 
 /// A [`NibbleWriter`] positioned over grid slots `[flat0, flat0 + count)`:
@@ -548,6 +588,37 @@ mod tests {
             assert_eq!(zc, xc, "n={n}");
             assert_eq!(ze, xe, "n={n}");
         }
+    }
+
+    #[test]
+    fn serialization_round_trips_byte_exactly() {
+        let mut rng = Rng::new(7);
+        let quantizer = BlockQuantizer::new(QuantConfig { block: 8, ..Default::default() });
+        let c = lower_tri(19, &mut rng);
+        let e = strictly_lower(19, &mut rng, 0.1);
+        let s = TriJointStore::store(&c, &e, &quantizer);
+        let mut w = ByteWriter::new();
+        s.write_bytes(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let back = TriJointStore::read_bytes(&mut r).unwrap();
+        r.finish().unwrap();
+        // Canonical form: re-serialization is byte-identical…
+        let mut w2 = ByteWriter::new();
+        back.write_bytes(&mut w2);
+        assert_eq!(bytes, w2.into_bytes());
+        // …and both triangles dequantize identically (no re-quantization).
+        let (c1, e1) = s.load(&quantizer);
+        let (c2, e2) = back.load(&quantizer);
+        assert_eq!(c1, c2);
+        assert_eq!(e1, e2);
+        // Truncated and corrupted inputs fail instead of mis-restoring.
+        let mut r = ByteReader::new(&bytes[..bytes.len() / 2]);
+        assert!(TriJointStore::read_bytes(&mut r).is_err());
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF; // n is now inconsistent with the grid length
+        let mut r = ByteReader::new(&bad);
+        assert!(TriJointStore::read_bytes(&mut r).is_err());
     }
 
     #[test]

@@ -34,6 +34,8 @@ use crate::metrics::RefreshStats;
 use crate::optim::{BaseOptimizer, Optimizer};
 use crate::quant::codec::CodecCtx;
 use crate::quant::BlockQuantizer;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -227,6 +229,35 @@ impl Shampoo {
     pub fn codec_ctx(&self) -> &CodecCtx {
         &self.ctx
     }
+
+    /// Serialize all mutable state a resumed run needs: every layer's codec
+    /// payloads + refresh metadata, then the base optimizer's buffers.
+    /// Config, shapes, and blocking are spec-derived and not written (the
+    /// restoring side rebuilds the optimizer from its spec first); the
+    /// refresh schedulers are stateless functions of [`UnitMeta`], so the
+    /// per-unit metadata is the complete scheduler state.
+    pub fn write_state(&self, out: &mut ByteWriter) {
+        out.put_u64(self.layers.len() as u64);
+        for l in &self.layers {
+            l.write_state(out);
+        }
+        self.base.write_state(out);
+    }
+
+    /// Inverse of [`Shampoo::write_state`] on a freshly built optimizer.
+    pub fn read_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        let n = r.get_len()?;
+        crate::ensure!(
+            n == self.layers.len(),
+            "checkpoint holds {n} layers, optimizer built with {}",
+            self.layers.len()
+        );
+        let mut scratch = ScratchArena::new();
+        for l in &mut self.layers {
+            l.read_state(r, &self.ctx, &mut scratch)?;
+        }
+        self.base.read_state(r)
+    }
 }
 
 impl Optimizer for Shampoo {
@@ -266,6 +297,15 @@ impl Optimizer for Shampoo {
             label.push_str(&format!(" [refresh {}]", self.cfg.refresh_policy));
         }
         label
+    }
+
+    fn save_state(&self, out: &mut ByteWriter) -> Result<()> {
+        self.write_state(out);
+        Ok(())
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.read_state(r)
     }
 }
 
@@ -563,6 +603,52 @@ mod tests {
             assert_eq!(meta.last_root, 8, "{id:?}");
             assert_eq!(meta.refreshes, 2, "{id:?}");
         }
+    }
+
+    #[test]
+    fn state_restore_resumes_bit_identically() {
+        // Train 6 steps and checkpoint, then: (a) continue 4 more steps,
+        // (b) rebuild from the spec, restore, and run the same 4 steps.
+        // Both trajectories must agree bit-for-bit — the contract the
+        // persist layer's resume oracle builds on.
+        let cfg = ShampooConfig {
+            t1: 1,
+            t2: 2,
+            variant: ShampooVariant::Cq4 { error_feedback: true },
+            quant: crate::quant::QuantConfig { min_quant_elems: 0, ..Default::default() },
+            refresh_policy: "staleness",
+            ..Default::default()
+        };
+        let shapes = [(12usize, 8usize), (8, 8), (5, 1)];
+        let mut rng = Rng::new(41);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+        let grads: Vec<Vec<Matrix>> = (0..10)
+            .map(|_| shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect())
+            .collect();
+        let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 1e-4), cfg, &shapes);
+        for k in 1..=6u64 {
+            sh.step(&mut params, &grads[k as usize - 1], k, 1.0);
+        }
+        let mut w = ByteWriter::new();
+        sh.write_state(&mut w);
+        let bytes = w.into_bytes();
+        let params_ck = params.clone();
+
+        let mut resumed = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 1e-4), cfg, &shapes);
+        resumed.read_state(&mut ByteReader::new(&bytes)).unwrap();
+        assert_eq!(resumed.state_bytes(), sh.state_bytes());
+        let mut params_r = params_ck;
+        for k in 7..=10u64 {
+            sh.step(&mut params, &grads[k as usize - 1], k, 1.0);
+            resumed.step(&mut params_r, &grads[k as usize - 1], k, 1.0);
+        }
+        for (a, b) in params.iter().zip(params_r.iter()) {
+            assert_eq!(a.max_abs_diff(b), 0.0, "resumed trajectory must be bit-identical");
+        }
+        // Truncated state errors instead of panicking.
+        let mut fresh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 1e-4), cfg, &shapes);
+        assert!(fresh.read_state(&mut ByteReader::new(&bytes[..bytes.len() - 5])).is_err());
     }
 
     #[test]

@@ -25,6 +25,8 @@ use crate::linalg::{
 };
 use crate::quant::codec::{lookup, CodecBuilder, CodecCtx};
 use crate::quant::PrecondCodec;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
 
 /// Which Kronecker factor of a block a refresh unit addresses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -214,6 +216,47 @@ impl SideState {
     fn size_bytes(&self) -> usize {
         self.gram.size_bytes() + self.root.size_bytes() + UnitMeta::BYTES
     }
+
+    /// Serialize this refresh unit's persistent state: Gram codec payload,
+    /// root codec key + payload, and the [`UnitMeta`] bookkeeping. The
+    /// dequantized root cache is transient (it never diverges from the
+    /// stored root) and is recomputed on restore, not written.
+    fn write_state(&self, out: &mut ByteWriter) {
+        self.gram.save_state(out);
+        out.put_str(self.root_key);
+        self.root.save_state(out);
+        out.put_u64(self.meta.last_gram);
+        out.put_u64(self.meta.last_root);
+        out.put_f32(self.meta.pending_norm);
+        out.put_u32(self.meta.refreshes);
+    }
+
+    /// Inverse of [`SideState::write_state`] on a freshly built unit: the
+    /// root slot is switched to the saved codec key (same re-bind idiom as
+    /// `update_root`), payloads restored byte-exactly, and the root cache
+    /// rebuilt by dequantizing the restored root.
+    fn read_state(
+        &mut self,
+        r: &mut ByteReader<'_>,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+    ) -> Result<()> {
+        self.gram.restore_state(r)?;
+        let key = r.get_str()?;
+        if self.root_key != key {
+            let b = lookup(&key)
+                .ok_or_else(|| crate::anyhow!("root codec '{key}' is not registered"))?;
+            self.root = (b.root)(ctx);
+            self.root_key = b.key;
+        }
+        self.root.restore_state(r)?;
+        self.meta.last_gram = r.get_u64()?;
+        self.meta.last_root = r.get_u64()?;
+        self.meta.pending_norm = r.get_f32()?;
+        self.meta.refreshes = r.get_u32()?;
+        self.root.load_into(&mut self.cache, scratch);
+        Ok(())
+    }
 }
 
 /// State of one sub-block of one parameter: `L` and `R` [`SideState`]s.
@@ -321,6 +364,24 @@ impl BlockState {
     fn size_bytes(&self) -> usize {
         self.sides[0].size_bytes() + self.sides[1].size_bytes()
     }
+
+    fn write_state(&self, out: &mut ByteWriter) {
+        for s in &self.sides {
+            s.write_state(out);
+        }
+    }
+
+    fn read_state(
+        &mut self,
+        r: &mut ByteReader<'_>,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+    ) -> Result<()> {
+        for s in &mut self.sides {
+            s.read_state(r, ctx, scratch)?;
+        }
+        Ok(())
+    }
 }
 
 /// State of one parameter (all its blocks, or passthrough for vectors).
@@ -418,6 +479,35 @@ impl LayerState {
 
     pub fn size_bytes(&self) -> usize {
         self.blocks.iter().map(|b| b.size_bytes()).sum()
+    }
+
+    /// Serialize every block's unit states (passthrough layers write an
+    /// empty block list). Shapes and blocking are spec-derived and not
+    /// written — restore targets a layer rebuilt from the same spec.
+    pub fn write_state(&self, out: &mut ByteWriter) {
+        out.put_u64(self.blocks.len() as u64);
+        for b in &self.blocks {
+            b.write_state(out);
+        }
+    }
+
+    /// Inverse of [`LayerState::write_state`] on a freshly built layer.
+    pub fn read_state(
+        &mut self,
+        r: &mut ByteReader<'_>,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+    ) -> Result<()> {
+        let n = r.get_len()?;
+        crate::ensure!(
+            n == self.blocks.len(),
+            "checkpoint holds {n} blocks, layer built with {}",
+            self.blocks.len()
+        );
+        for b in &mut self.blocks {
+            b.read_state(r, ctx, scratch)?;
+        }
+        Ok(())
     }
 
     pub fn dequant_inv_roots(&self) -> Vec<(Matrix, Matrix)> {

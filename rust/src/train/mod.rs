@@ -6,10 +6,14 @@
 //! * [`registry`] — string-keyed stack construction (`"cq-ef"`, `"bw8"`, …)
 //!   used by coordinator specs, the CLI, and the examples.
 //! * [`trainer`] — the classifier/LM training loops and evaluation.
+//! * [`synthetic`] — the artifact-free noisy-quadratic workload used by the
+//!   job queue, the crash-resume smoke, and the resume oracle tests.
 
 pub mod trainer;
 pub mod stack;
 pub mod registry;
+pub mod synthetic;
 
 pub use stack::OptimizerStack;
+pub use synthetic::{train_synthetic, SyntheticSpec};
 pub use trainer::{train_classifier, train_lm, ClassifierData, RunMetrics, TrainConfig};

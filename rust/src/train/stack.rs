@@ -8,6 +8,8 @@
 use crate::linalg::Matrix;
 use crate::optim::{BaseOptimizer, Optimizer};
 use crate::shampoo::Shampoo;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
 
 /// A boxed optimizer driving one training run.
 pub struct OptimizerStack(Box<dyn Optimizer>);
@@ -53,6 +55,18 @@ impl OptimizerStack {
     /// Borrow the underlying trait object.
     pub fn inner(&self) -> &dyn Optimizer {
         self.0.as_ref()
+    }
+
+    /// Serialize the optimizer's mutable state — see
+    /// [`Optimizer::save_state`] for the contract (errors if the boxed
+    /// optimizer doesn't support checkpointing).
+    pub fn save_state(&self, out: &mut ByteWriter) -> Result<()> {
+        self.0.save_state(out)
+    }
+
+    /// Restore state into this freshly built stack.
+    pub fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        self.0.restore_state(r)
     }
 }
 

@@ -11,13 +11,18 @@ use crate::metrics::scoring::{accuracy, perplexity_from_nll};
 use crate::metrics::Stopwatch;
 use crate::models::init_params;
 use crate::optim::LrSchedule;
+use crate::persist::TrainState;
 use crate::runtime::literal::{
     literal_to_matrix, literal_to_scalar_f32, literal_to_vec_f32, matrix_to_literal,
     vec_f32_to_literal, vec_i32_to_literal,
 };
 use crate::runtime::{ModelInfo, Runtime};
 use crate::train::OptimizerStack;
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::error::{Context, Result};
+use crate::util::rng::Rng;
+use std::path::PathBuf;
+use std::time::Instant;
 
 /// Unified classifier data view (built from either synthetic dataset).
 #[derive(Clone, Debug)]
@@ -72,6 +77,16 @@ pub struct TrainConfig {
     /// Record the loss every `log_every` steps.
     pub log_every: u64,
     pub seed: u64,
+    /// Write a checkpoint every `checkpoint_every` steps (0 = never).
+    /// Requires `checkpoint_dir`; the final step is never checkpointed.
+    pub checkpoint_every: u64,
+    /// Where checkpoints live. When set, training first tries to resume
+    /// from the newest valid snapshot in this directory.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Spec identity hash pinned into every checkpoint
+    /// ([`crate::persist::spec_hash`]) — guards against resuming a
+    /// different run's state.
+    pub spec_hash: u64,
 }
 
 impl Default for TrainConfig {
@@ -82,6 +97,9 @@ impl Default for TrainConfig {
             eval_every: 0,
             log_every: 10,
             seed: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            spec_hash: 0,
         }
     }
 }
@@ -103,6 +121,99 @@ pub struct RunMetrics {
     pub wall_secs: f64,
     /// Seconds inside the optimizer (the paper's "update time" column).
     pub opt_secs: f64,
+}
+
+/// What a resumed run inherits: completed steps and time already spent.
+pub(crate) struct ResumeBase {
+    pub start_step: u64,
+    pub wall_secs: f64,
+    pub opt_secs: f64,
+}
+
+/// Restore the newest valid checkpoint into the freshly built training
+/// state, if `cfg` points at a checkpoint directory with one. Everything
+/// the step path touches comes back byte-exact: params, the full optimizer
+/// payload, the RNG stream position, and the metric curves.
+pub(crate) fn resume_or_start(
+    cfg: &TrainConfig,
+    params: &mut [Matrix],
+    opt: &mut OptimizerStack,
+    rng: &mut Rng,
+    loss_curve: &mut Vec<(u64, f32)>,
+    eval_curve: &mut Vec<(u64, f64)>,
+) -> Result<ResumeBase> {
+    let fresh = ResumeBase { start_step: 0, wall_secs: 0.0, opt_secs: 0.0 };
+    let Some(dir) = &cfg.checkpoint_dir else {
+        return Ok(fresh);
+    };
+    let Some(st) = TrainState::load_latest(dir, cfg.spec_hash)? else {
+        return Ok(fresh);
+    };
+    crate::ensure!(
+        st.params.len() == params.len(),
+        "checkpoint has {} params, model has {}",
+        st.params.len(),
+        params.len()
+    );
+    for (p, s) in params.iter_mut().zip(st.params.iter()) {
+        crate::ensure!(
+            p.rows() == s.rows() && p.cols() == s.cols(),
+            "checkpoint param is {}x{}, model wants {}x{}",
+            s.rows(),
+            s.cols(),
+            p.rows(),
+            p.cols()
+        );
+        *p = s.clone();
+    }
+    let mut r = ByteReader::new(&st.opt);
+    opt.restore_state(&mut r).context("restoring optimizer state")?;
+    r.finish()?;
+    *rng = Rng::from_state(st.rng);
+    *loss_curve = st.loss_curve;
+    *eval_curve = st.eval_curve;
+    Ok(ResumeBase { start_step: st.step, wall_secs: st.wall_secs, opt_secs: st.opt_secs })
+}
+
+/// Whether step `k` is a checkpoint step under `cfg` (never the final
+/// step — the run's outcome record supersedes a checkpoint there).
+pub(crate) fn should_checkpoint(cfg: &TrainConfig, k: u64) -> bool {
+    cfg.checkpoint_dir.is_some()
+        && cfg.checkpoint_every > 0
+        && k % cfg.checkpoint_every == 0
+        && k < cfg.steps
+}
+
+/// Snapshot the run after step `k` completed (all of step `k`'s RNG draws
+/// and the optimizer update have happened, step `k + 1`'s have not).
+pub(crate) fn checkpoint_now(
+    cfg: &TrainConfig,
+    k: u64,
+    params: &[Matrix],
+    opt: &OptimizerStack,
+    rng: &Rng,
+    loss_curve: &[(u64, f32)],
+    eval_curve: &[(u64, f64)],
+    wall_secs: f64,
+    opt_secs: f64,
+) -> Result<()> {
+    let Some(dir) = &cfg.checkpoint_dir else {
+        return Ok(());
+    };
+    let mut w = ByteWriter::new();
+    opt.save_state(&mut w)?;
+    let st = TrainState {
+        step: k,
+        params: params.to_vec(),
+        opt: w.into_bytes(),
+        rng: rng.state(),
+        loss_curve: loss_curve.to_vec(),
+        eval_curve: eval_curve.to_vec(),
+        wall_secs,
+        opt_secs,
+    };
+    st.save(dir, cfg.spec_hash)?;
+    Ok(())
 }
 
 /// Train a classifier model on `data`, returning metrics.
@@ -128,15 +239,16 @@ pub fn train_classifier(
     let mut params = init_params(model, cfg.seed);
     opt.init(params.len());
 
-    let mut wall = Stopwatch::new();
     let mut opt_time = Stopwatch::new();
     let mut loss_curve = Vec::new();
     let mut eval_curve = Vec::new();
 
-    wall.start();
-    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xBA7C);
+    let mut rng = Rng::new(cfg.seed ^ 0xBA7C);
+    let base =
+        resume_or_start(cfg, &mut params, &mut opt, &mut rng, &mut loss_curve, &mut eval_curve)?;
+    let run_start = Instant::now();
     let n = data.n_train();
-    for k in 1..=cfg.steps {
+    for k in base.start_step + 1..=cfg.steps {
         // Sample a batch (with replacement — stream-style).
         let idx: Vec<usize> = (0..batch).map(|_| rng.below(n)).collect();
         let mut x = Vec::with_capacity(batch * data.dim);
@@ -171,10 +283,22 @@ pub fn train_classifier(
             let acc = eval_classifier(rt, model, data, &params)?;
             eval_curve.push((k, acc));
         }
+        if should_checkpoint(cfg, k) {
+            checkpoint_now(
+                cfg,
+                k,
+                &params,
+                &opt,
+                &rng,
+                &loss_curve,
+                &eval_curve,
+                base.wall_secs + run_start.elapsed().as_secs_f64(),
+                base.opt_secs + opt_time.total_secs(),
+            )?;
+        }
     }
     let final_acc = eval_classifier(rt, model, data, &params)?;
     eval_curve.push((cfg.steps, final_acc));
-    wall.stop();
 
     Ok(RunMetrics {
         model: model.name.clone(),
@@ -183,8 +307,8 @@ pub fn train_classifier(
         eval_curve,
         final_metric: final_acc,
         state_bytes: opt.state_bytes(),
-        wall_secs: wall.total_secs(),
-        opt_secs: opt_time.total_secs(),
+        wall_secs: base.wall_secs + run_start.elapsed().as_secs_f64(),
+        opt_secs: base.opt_secs + opt_time.total_secs(),
     })
 }
 
@@ -239,14 +363,15 @@ pub fn train_lm(
     let train = TokenCorpus { vocab: corpus.vocab, tokens: corpus.tokens[..split].to_vec() };
     let heldout = TokenCorpus { vocab: corpus.vocab, tokens: corpus.tokens[split..].to_vec() };
 
-    let mut wall = Stopwatch::new();
     let mut opt_time = Stopwatch::new();
     let mut loss_curve = Vec::new();
     let mut eval_curve = Vec::new();
 
-    wall.start();
-    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0x7E57);
-    for k in 1..=cfg.steps {
+    let mut rng = Rng::new(cfg.seed ^ 0x7E57);
+    let base =
+        resume_or_start(cfg, &mut params, &mut opt, &mut rng, &mut loss_curve, &mut eval_curve)?;
+    let run_start = Instant::now();
+    for k in base.start_step + 1..=cfg.steps {
         let (x, y) = train.sample_batch(batch, seq, &mut rng);
         let xi: Vec<i32> = x.iter().map(|&t| t as i32).collect();
         let yi: Vec<i32> = y.iter().map(|&t| t as i32).collect();
@@ -275,10 +400,22 @@ pub fn train_lm(
         if cfg.eval_every > 0 && k % cfg.eval_every == 0 {
             eval_curve.push((k, eval_lm(rt, model, &heldout, &params, cfg.seed)?));
         }
+        if should_checkpoint(cfg, k) {
+            checkpoint_now(
+                cfg,
+                k,
+                &params,
+                &opt,
+                &rng,
+                &loss_curve,
+                &eval_curve,
+                base.wall_secs + run_start.elapsed().as_secs_f64(),
+                base.opt_secs + opt_time.total_secs(),
+            )?;
+        }
     }
     let ppl = eval_lm(rt, model, &heldout, &params, cfg.seed)?;
     eval_curve.push((cfg.steps, ppl));
-    wall.stop();
 
     Ok(RunMetrics {
         model: model.name.clone(),
@@ -287,8 +424,8 @@ pub fn train_lm(
         eval_curve,
         final_metric: ppl,
         state_bytes: opt.state_bytes(),
-        wall_secs: wall.total_secs(),
-        opt_secs: opt_time.total_secs(),
+        wall_secs: base.wall_secs + run_start.elapsed().as_secs_f64(),
+        opt_secs: base.opt_secs + opt_time.total_secs(),
     })
 }
 

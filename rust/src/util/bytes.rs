@@ -1,0 +1,349 @@
+//! Little-endian binary serialization primitives for the checkpoint paths.
+//!
+//! The offline build set has no `serde`/`bincode`, so the `persist`
+//! subsystem encodes state through two tiny cursor types: [`ByteWriter`]
+//! appends fixed-width little-endian values and length-prefixed slices to a
+//! growable buffer; [`ByteReader`] consumes the same layout, failing with a
+//! positioned error (never panicking) on truncated or oversized input so a
+//! corrupt checkpoint tail surfaces as a recoverable [`Error`]. A
+//! table-based CRC-32 ([`crc32`], the IEEE/zlib polynomial) guards whole
+//! checkpoint files.
+//!
+//! Layout conventions used by every consumer:
+//! * all integers and floats little-endian, no alignment padding;
+//! * slices and strings as a `u64` element count followed by the payload;
+//! * `f32` payloads as raw IEEE-754 bits, so quantized state and error
+//!   triangles round-trip **bit-exactly** (NaN payloads included).
+
+use super::error::{Error, Result};
+
+/// Append-only little-endian encoder over a growable byte buffer.
+#[derive(Debug, Default, Clone)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> ByteWriter {
+        ByteWriter { buf: Vec::with_capacity(n) }
+    }
+
+    /// Finish and take the encoded buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// View of the encoded bytes (for CRC computation before finishing).
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes with a `u64` length prefix.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// f32 slice with a `u64` element-count prefix, raw IEEE bits.
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// u64 slice with a `u64` element-count prefix.
+    pub fn put_u64s(&mut self, v: &[u64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u64(x);
+        }
+    }
+
+    /// UTF-8 string with a `u64` byte-length prefix.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+}
+
+/// Consuming little-endian decoder over a byte slice.
+///
+/// Every getter advances the cursor and returns a positioned error instead
+/// of panicking when the input is shorter than the requested read — the
+/// contract that lets the checkpoint restore path treat a truncated file as
+/// recoverable data corruption.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Current cursor position (bytes consumed).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::msg(format!(
+                "truncated input: need {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// `u64` read back as `usize`, rejecting values beyond the platform.
+    pub fn get_len(&mut self) -> Result<usize> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| Error::msg(format!("length {v} exceeds usize")))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed raw bytes (counterpart of [`ByteWriter::put_bytes`]).
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_len()?;
+        // Bound the declared length by what is actually present so a corrupt
+        // prefix cannot trigger a huge allocation before `take` fails.
+        if n > self.remaining() {
+            return Err(Error::msg(format!(
+                "truncated input: declared {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        self.take(n)
+    }
+
+    /// Length-prefixed f32 slice (counterpart of [`ByteWriter::put_f32s`]).
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_len()?;
+        if n.saturating_mul(4) > self.remaining() {
+            return Err(Error::msg(format!(
+                "truncated input: declared {n} f32s at offset {}, {} bytes remain",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed u64 slice (counterpart of [`ByteWriter::put_u64s`]).
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_len()?;
+        if n.saturating_mul(8) > self.remaining() {
+            return Err(Error::msg(format!(
+                "truncated input: declared {n} u64s at offset {}, {} bytes remain",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let raw = self.take(n * 8)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(8) {
+            out.push(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed UTF-8 string (counterpart of [`ByteWriter::put_str`]).
+    pub fn get_str(&mut self) -> Result<String> {
+        let raw = self.get_bytes()?;
+        String::from_utf8(raw.to_vec()).map_err(|e| Error::msg(format!("invalid utf-8: {e}")))
+    }
+
+    /// Error unless the whole buffer was consumed — catches trailing junk
+    /// appended to an otherwise valid section.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::msg(format!(
+                "{} trailing bytes after offset {}",
+                self.remaining(),
+                self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// CRC-32 lookup table for the IEEE/zlib polynomial (reflected 0xEDB88320).
+fn crc_table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 (IEEE 802.3 / zlib) of a byte slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_widths() {
+        let mut w = ByteWriter::new();
+        w.put_u8(0xAB);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f32(-0.0);
+        w.put_f64(std::f64::consts::PI);
+        w.put_bytes(&[1, 2, 3]);
+        w.put_f32s(&[1.5, f32::NAN, -3e7]);
+        w.put_u64s(&[7, 8]);
+        w.put_str("cq-ef");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 0xAB);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.get_f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.get_bytes().unwrap(), &[1, 2, 3]);
+        let fs = r.get_f32s().unwrap();
+        assert_eq!(fs.len(), 3);
+        assert_eq!(fs[0], 1.5);
+        assert!(fs[1].is_nan());
+        assert_eq!(fs[2], -3e7);
+        assert_eq!(r.get_u64s().unwrap(), vec![7, 8]);
+        assert_eq!(r.get_str().unwrap(), "cq-ef");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error_not_panic() {
+        let mut w = ByteWriter::new();
+        w.put_u64(5);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes[..6]);
+        let e = r.get_u64().unwrap_err();
+        assert!(format!("{e}").contains("truncated"), "{e}");
+        // Declared slice length past end of buffer.
+        let mut w = ByteWriter::new();
+        w.put_u64(1_000_000);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_bytes().is_err());
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_f32s().is_err());
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_u64s().is_err());
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.put_u8(1);
+        w.put_u8(2);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        r.get_u8().unwrap();
+        assert!(r.finish().is_err());
+        r.get_u8().unwrap();
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC-32 check values (zlib-compatible).
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn crc32_detects_single_bit_flip() {
+        let mut data = vec![0u8; 64];
+        let a = crc32(&data);
+        data[40] ^= 0x10;
+        assert_ne!(a, crc32(&data));
+    }
+}

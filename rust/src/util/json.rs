@@ -371,4 +371,58 @@ mod tests {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
     }
+
+    #[test]
+    fn rejects_nan_and_inf_literals() {
+        // JSON has no non-finite numbers; the metrics/checkpoint emitters
+        // must never produce them, and the parser must refuse every common
+        // spelling rather than silently accepting one.
+        for src in ["NaN", "nan", "Infinity", "-Infinity", "inf", "-inf", "1e", "--1"] {
+            assert!(Json::parse(src).is_err(), "accepted {src:?}");
+        }
+        // A writer handed a non-finite Num emits text that does NOT parse
+        // back — the round-trip fails loudly instead of corrupting a value.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = Json::Num(bad).to_string();
+            assert!(Json::parse(&text).is_err(), "non-finite {bad} round-tripped as {text:?}");
+        }
+    }
+
+    #[test]
+    fn u64_step_counters_round_trip_exactly() {
+        // Step counters ride through Num(f64); every integer with |x| < 2^53
+        // is exact in f64, and the writer's i64 fast path (|x| < 1e15) keeps
+        // the text form integral. Check the range checkpoints actually use,
+        // including the largest exactly-representable boundary cases.
+        let steps: [u64; 7] =
+            [0, 1, 1_000_000, 4_294_967_296, 999_999_999_999_999, (1 << 53) - 1, 1 << 53];
+        for &k in &steps {
+            let text = Json::Num(k as f64).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back as u64, k, "step {k} came back as {back}");
+            assert_eq!(back.fract(), 0.0, "step {k} lost integrality: {text}");
+        }
+        // And the negative control: beyond 2^53 adjacent integers collide,
+        // which is why checkpoint files store the step as a raw u64, not JSON.
+        let k = (1u64 << 53) + 1;
+        assert_ne!((k as f64) as u64, k);
+    }
+
+    #[test]
+    fn truncated_inputs_error_with_position() {
+        // Prefixes of a valid record — what a crash mid-append leaves in a
+        // JSONL metrics file. Every prefix must fail cleanly, with the byte
+        // offset pointing into the input (never past it).
+        let full = r#"{"event":"run_end","step":1200,"wall_secs":3.25}"#;
+        for cut in 1..full.len() {
+            let frag = &full[..cut];
+            match Json::parse(frag) {
+                Ok(v) => panic!("truncated {frag:?} parsed as {v:?}"),
+                Err(e) => assert!(e.pos <= frag.len(), "pos {} past input {}", e.pos, frag.len()),
+            }
+        }
+        // Truncated escape and truncated \u escape inside strings.
+        assert!(Json::parse(r#""abc\"#).is_err());
+        assert!(Json::parse(r#""abc\u00"#).is_err());
+    }
 }

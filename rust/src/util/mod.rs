@@ -7,6 +7,7 @@
 //! `rayon`, `criterion`, and `proptest` are implemented here as first-class
 //! substrates (per the reproduction ground rules: build, don't stub).
 
+pub mod bytes;
 pub mod error;
 pub mod rng;
 pub mod stats;

@@ -38,6 +38,20 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
+    /// Snapshot the full generator state (the four xoshiro256++ words).
+    ///
+    /// Together with [`Rng::from_state`] this lets a checkpoint continue
+    /// the *exact* stream instead of reseeding: restoring the snapshot and
+    /// drawing is indistinguishable from never having stopped.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Next raw 64-bit value.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
@@ -203,6 +217,32 @@ mod tests {
             let i = r.sample_weighted(&[0.0, 1.0, 0.0]);
             assert_eq!(i, 1);
         }
+    }
+
+    #[test]
+    fn state_snapshot_resumes_exact_stream() {
+        let mut r = Rng::new(17);
+        for _ in 0..257 {
+            r.next_u64();
+        }
+        let snap = r.state();
+        let tail: Vec<u64> = (0..64).map(|_| r.next_u64()).collect();
+        let mut resumed = Rng::from_state(snap);
+        let tail2: Vec<u64> = (0..64).map(|_| resumed.next_u64()).collect();
+        assert_eq!(tail, tail2, "restored stream must continue bit-exactly");
+    }
+
+    #[test]
+    fn state_round_trips_through_serialization_shape() {
+        // The checkpoint stores the four words verbatim; any permutation or
+        // truncation would diverge immediately.
+        let mut r = Rng::new(23);
+        r.normal();
+        let snap = r.state();
+        assert_eq!(Rng::from_state(snap).state(), snap);
+        let mut a = Rng::from_state(snap);
+        let mut b = r.clone();
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

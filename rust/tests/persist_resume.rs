@@ -1,0 +1,156 @@
+//! The bit-identical resume oracle (the persistence layer's pinned
+//! contract): training N steps produces exactly the same parameter and
+//! optimizer-state bytes as training k steps, being killed, and resuming
+//! from the newest valid checkpoint for the remaining N−k — for full
+//! quantized Shampoo stacks (packed 4-bit codes, scales, EF triangles,
+//! eigen factors, momentum, refresh-scheduler metadata, RNG stream) under
+//! the staleness refresh policy. Also pins the corruption story: a
+//! CRC-broken newest checkpoint falls back to the previous valid one, and
+//! a spec-hash mismatch restarts from scratch instead of restoring
+//! incompatible state.
+
+use quartz::optim::BaseOptimizer;
+use quartz::persist::{list_checkpoints, spec_hash};
+use quartz::quant::QuantConfig;
+use quartz::shampoo::ShampooConfig;
+use quartz::train::registry;
+use quartz::train::synthetic::final_params_synthetic;
+use quartz::train::{OptimizerStack, SyntheticSpec, TrainConfig};
+use quartz::util::bytes::ByteWriter;
+use std::path::PathBuf;
+
+fn test_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("quartz-resume-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { shapes: vec![(12, 8), (8, 8), (6, 4)], noise: 0.05, pace_ms: 0 }
+}
+
+/// A small quantized-Shampoo stack under the staleness refresh policy;
+/// `min_quant_elems: 0` so even these tiny blocks actually quantize.
+fn stack(key: &str) -> OptimizerStack {
+    let cfg = ShampooConfig {
+        t1: 2,
+        t2: 4,
+        max_order: 8,
+        refresh_policy: "staleness",
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    registry::build(key, BaseOptimizer::sgdm(0.05, 0.9, 0.0), &cfg, &spec().shapes)
+        .unwrap_or_else(|| panic!("stack key '{key}' not registered"))
+}
+
+fn cfg(steps: u64, dir: Option<PathBuf>, hash: u64) -> TrainConfig {
+    TrainConfig {
+        steps,
+        seed: 7,
+        log_every: 5,
+        checkpoint_every: 5,
+        checkpoint_dir: dir,
+        spec_hash: hash,
+        ..Default::default()
+    }
+}
+
+fn opt_state_bytes(stack: &OptimizerStack) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    stack.save_state(&mut w).unwrap();
+    w.into_bytes()
+}
+
+/// train N ≡ train k + kill + resume + train N−k, byte-exactly.
+fn oracle(key: &str) {
+    let dir = test_dir(key);
+    let hash = spec_hash(&format!("oracle|{key}"));
+    let spec = spec();
+
+    // Uninterrupted reference: 20 steps straight through.
+    let (pa, oa) = final_params_synthetic(&spec, stack(key), &cfg(20, None, hash)).unwrap();
+
+    // Interrupted run: killed after step 12, checkpoints at 5 and 10.
+    final_params_synthetic(&spec, stack(key), &cfg(12, Some(dir.clone()), hash)).unwrap();
+    let steps: Vec<u64> = list_checkpoints(&dir).iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, vec![5, 10], "{key}: unexpected checkpoints");
+
+    // Resume: restores step 10, trains 11..=20.
+    let (pb, ob) =
+        final_params_synthetic(&spec, stack(key), &cfg(20, Some(dir.clone()), hash)).unwrap();
+
+    for (i, (a, b)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(a.max_abs_diff(b), 0.0, "{key}: param {i} diverged after resume");
+    }
+    assert_eq!(opt_state_bytes(&oa), opt_state_bytes(&ob), "{key}: optimizer state diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_is_bit_identical_for_cq_ef() {
+    oracle("cq-ef");
+}
+
+#[test]
+fn resume_is_bit_identical_for_ec4() {
+    oracle("ec4");
+}
+
+#[test]
+fn resume_is_bit_identical_for_f16() {
+    oracle("f16");
+}
+
+#[test]
+fn corrupt_newest_checkpoint_falls_back_to_previous_valid_one() {
+    let key = "cq-ef";
+    let dir = test_dir("crc");
+    let hash = spec_hash("oracle|crc");
+    let spec = spec();
+
+    let (pa, oa) = final_params_synthetic(&spec, stack(key), &cfg(20, None, hash)).unwrap();
+    final_params_synthetic(&spec, stack(key), &cfg(12, Some(dir.clone()), hash)).unwrap();
+
+    // Flip one bit in the newest checkpoint (step 10): its CRC fails and
+    // the resume scan must fall back to step 5 — and still reproduce the
+    // uninterrupted run exactly.
+    let ckpts = list_checkpoints(&dir);
+    let (newest_step, newest_path) = ckpts.last().unwrap();
+    assert_eq!(*newest_step, 10);
+    let mut bytes = std::fs::read(newest_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(newest_path, &bytes).unwrap();
+
+    let (pb, ob) =
+        final_params_synthetic(&spec, stack(key), &cfg(20, Some(dir.clone()), hash)).unwrap();
+    for (a, b) in pa.iter().zip(pb.iter()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    assert_eq!(opt_state_bytes(&oa), opt_state_bytes(&ob));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spec_hash_mismatch_restarts_instead_of_restoring() {
+    let key = "cq-ef";
+    let dir = test_dir("hash");
+    let spec = spec();
+    let hash_a = spec_hash("spec-a");
+    let hash_b = spec_hash("spec-b");
+
+    // Checkpoints written under spec A…
+    final_params_synthetic(&spec, stack(key), &cfg(12, Some(dir.clone()), hash_a)).unwrap();
+    assert!(!list_checkpoints(&dir).is_empty());
+
+    // …are invisible to a run pinned to spec B: it trains from scratch and
+    // matches a fresh uninterrupted run exactly.
+    let (pa, _) = final_params_synthetic(&spec, stack(key), &cfg(20, None, hash_b)).unwrap();
+    let (pb, _) =
+        final_params_synthetic(&spec, stack(key), &cfg(20, Some(dir.clone()), hash_b)).unwrap();
+    for (a, b) in pa.iter().zip(pb.iter()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

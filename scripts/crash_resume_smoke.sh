@@ -1,0 +1,108 @@
+#!/usr/bin/env bash
+# Crash/resume smoke for the persistence layer (CI gate): launch a tiny
+# synthetic queue, SIGKILL the process mid-run, `quartz resume` the queue
+# directory, and assert the final metrics are byte-identical to an
+# uninterrupted control run of the same spec. This exercises the whole
+# contract end to end — periodic checkpoint writes, atomic temp+rename
+# (a kill can never leave a half-written .ckpt visible), the JSONL
+# metrics stream surviving a torn tail line, and bit-identical resume.
+#
+# Usage: scripts/crash_resume_smoke.sh [workdir]
+#
+# QUARTZ_BIN overrides the binary (default rust/target/release/quartz,
+# built on demand). The kill is timing-based: if the queue finishes
+# before the signal lands (very fast runner), the script warns and the
+# comparison degenerates to cached-replay-vs-control, which still must
+# match — the hard gate is the metric equality, not the kill landing.
+set -euo pipefail
+
+BIN="${QUARTZ_BIN:-rust/target/release/quartz}"
+WORK="${1:-$(mktemp -d -t quartz-crash-smoke-XXXXXX)}"
+PACE_MS="${PACE_MS:-50}"
+KILL_AFTER_SECS="${KILL_AFTER_SECS:-2}"
+
+if [[ ! -x "$BIN" ]]; then
+  echo "crash_resume_smoke: building $BIN"
+  (cd rust && cargo build --release --quiet)
+fi
+
+mkdir -p "$WORK"
+SPEC="$WORK/queue.toml"
+# ~120 steps x PACE_MS per run keeps the first run in flight for several
+# seconds, so the SIGKILL lands mid-run with checkpoints already on disk.
+cat > "$SPEC" <<EOF
+name = "crash-smoke"
+steps = 120
+workers = 1
+checkpoint_every = 10
+
+[workload]
+kind = "synthetic"
+shapes = [16, 8, 8, 8, 4, 1]
+noise = 0.05
+pace_ms = $PACE_MS
+
+[[runs]]
+model = "syn"
+base = "sgdm"
+shampoo = "cq-ef"
+
+[[runs]]
+model = "syn"
+base = "sgdm"
+EOF
+
+KILLED="$WORK/killed"
+CONTROL="$WORK/control"
+
+echo "crash_resume_smoke: launching queue, SIGKILL in ${KILL_AFTER_SECS}s"
+"$BIN" queue "$SPEC" --out "$KILLED" > "$WORK/killed-attempt.log" 2>&1 &
+PID=$!
+sleep "$KILL_AFTER_SECS"
+if kill -9 "$PID" 2>/dev/null; then
+  wait "$PID" 2>/dev/null || true
+  echo "crash_resume_smoke: killed pid $PID mid-queue"
+else
+  echo "crash_resume_smoke: WARNING — queue finished before the kill landed" >&2
+fi
+
+CKPTS=$( (find "$KILLED/runs" -name '*.ckpt' 2>/dev/null || true) | wc -l)
+echo "crash_resume_smoke: $CKPTS checkpoint(s) on disk at kill time"
+
+echo "crash_resume_smoke: resuming $KILLED"
+"$BIN" resume "$KILLED" > "$WORK/resume.log" 2>&1 \
+  || { cat "$WORK/resume.log"; exit 1; }
+
+echo "crash_resume_smoke: uninterrupted control run"
+"$BIN" queue "$SPEC" --out "$CONTROL" > "$WORK/control.log" 2>&1 \
+  || { cat "$WORK/control.log"; exit 1; }
+
+# Last run_end per run id -> "id<TAB>final_metric", sorted for a stable
+# diff. Tab-separated: run ids ("syn/SGDM + cq-ef Shampoo") contain spaces.
+finals() {
+  grep '"run_end"' "$1/metrics.jsonl" | while IFS= read -r line; do
+    id=$(printf '%s' "$line" | grep -o '"id":"[^"]*"' | head -n1)
+    fm=$(printf '%s' "$line" | grep -o '"final_metric":[^,}]*' | head -n1)
+    printf '%s\t%s\n' "$id" "$fm"
+  done | awk -F'\t' '{last[$1] = $2} END {for (k in last) print k "\t" last[k]}' | sort
+}
+
+finals "$KILLED" > "$WORK/killed.finals"
+finals "$CONTROL" > "$WORK/control.finals"
+
+echo "--- resumed finals ---"
+cat "$WORK/killed.finals"
+echo "--- control finals ---"
+cat "$WORK/control.finals"
+
+RUNS=$(wc -l < "$WORK/control.finals")
+if [[ "$RUNS" -ne 2 ]]; then
+  echo "crash_resume_smoke: FAIL — control produced $RUNS run_end record(s), expected 2" >&2
+  exit 1
+fi
+if ! diff -u "$WORK/control.finals" "$WORK/killed.finals"; then
+  echo "crash_resume_smoke: FAIL — resumed metrics diverge from uninterrupted control" >&2
+  exit 1
+fi
+
+echo "crash_resume_smoke: OK — resumed queue matches uninterrupted control exactly"
