@@ -77,7 +77,9 @@ impl MetricsLog {
     }
 
     pub(crate) fn run_end(&self, o: &RunOutcome) {
-        let outcome = if o.error.is_some() {
+        let outcome = if o.poisoned {
+            "poisoned"
+        } else if o.error.is_some() {
             "error"
         } else if o.metrics.is_some() {
             "ok"
@@ -99,11 +101,35 @@ impl MetricsLog {
             fields.push(("state_bytes", num(m.state_bytes as f64)));
             fields.push(("opt_secs", num(m.opt_secs)));
             fields.push(("train_wall_secs", num(m.wall_secs)));
+            let h = &m.health;
+            fields.push((
+                "health",
+                obj(vec![
+                    ("grads_screened", num(h.grads_screened as f64)),
+                    ("jitter_rescues", num(h.jitter_rescues as f64)),
+                    ("psd_projections", num(h.psd_projections as f64)),
+                    ("stale_root_serves", num(h.stale_root_serves as f64)),
+                    ("floor_serves", num(h.floor_serves as f64)),
+                    ("quarantines", num(h.quarantines as f64)),
+                    ("releases", num(h.releases as f64)),
+                ]),
+            ));
         }
         if let Some(e) = &o.error {
             fields.push(("error", s(e)));
         }
         self.event(obj(fields));
+    }
+
+    /// One retry-attempt announcement (bounded-retry ladder bookkeeping).
+    pub(crate) fn run_retry(&self, id: &str, attempt: u32, backoff_ms: u64) {
+        self.event(obj(vec![
+            ("event", s("run_retry")),
+            ("id", s(id)),
+            ("attempt", num(attempt as f64)),
+            ("backoff_ms", num(backoff_ms as f64)),
+            ("ts", num(now_secs())),
+        ]));
     }
 }
 
@@ -140,10 +166,10 @@ fn run_dir_name(id: &str) -> String {
     format!("{safe}-{:08x}", crate::persist::spec_hash(id) as u32)
 }
 
-/// Outcomes a previous pass over this queue already recorded as finished
-/// (`ok` or `oom`), keyed by run id. `error` runs are retried, not
-/// cached. Curves are not replayed from the log — only the summary fields
-/// a table needs.
+/// Outcomes a previous pass over this queue already recorded as terminal
+/// (`ok`, `oom`, or `poisoned` — a run that exhausted its retry budget),
+/// keyed by run id. Plain `error` runs are retried, not cached. Curves are
+/// not replayed from the log — only the summary fields a table needs.
 fn completed_runs(path: &Path) -> BTreeMap<String, RunOutcome> {
     let Ok(text) = fs::read_to_string(path) else {
         return BTreeMap::new();
@@ -158,20 +184,41 @@ fn completed_runs(path: &Path) -> BTreeMap<String, RunOutcome> {
         }
         let Some(id) = j.get("id").and_then(|v| v.as_str()) else { continue };
         let outcome = j.get("outcome").and_then(|v| v.as_str()).unwrap_or("");
-        if outcome != "ok" && outcome != "oom" {
+        if outcome != "ok" && outcome != "oom" && outcome != "poisoned" {
             continue;
         }
         let optimizer = j.get("optimizer").and_then(|v| v.as_str()).unwrap_or("").to_string();
         let model = j.get("model").and_then(|v| v.as_str()).unwrap_or("").to_string();
-        let metrics = (outcome == "ok").then(|| RunMetrics {
-            model: model.clone(),
-            optimizer: optimizer.clone(),
-            loss_curve: Vec::new(),
-            eval_curve: Vec::new(),
-            final_metric: j.get("final_metric").and_then(|v| v.as_f64()).unwrap_or(0.0),
-            state_bytes: j.get("state_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
-            wall_secs: j.get("train_wall_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
-            opt_secs: j.get("opt_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        let metrics = (outcome == "ok").then(|| {
+            let mut health = crate::metrics::HealthStats::default();
+            if let Some(hj) = j.get("health") {
+                let g = |k: &str| hj.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                health.grads_screened = g("grads_screened");
+                health.jitter_rescues = g("jitter_rescues");
+                health.psd_projections = g("psd_projections");
+                health.stale_root_serves = g("stale_root_serves");
+                health.floor_serves = g("floor_serves");
+                health.quarantines = g("quarantines");
+                health.releases = g("releases");
+            }
+            RunMetrics {
+                model: model.clone(),
+                optimizer: optimizer.clone(),
+                loss_curve: Vec::new(),
+                eval_curve: Vec::new(),
+                final_metric: j.get("final_metric").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                state_bytes: j.get("state_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+                wall_secs: j.get("train_wall_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                opt_secs: j.get("opt_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                health,
+            }
+        });
+        let poisoned = outcome == "poisoned";
+        let error = poisoned.then(|| {
+            j.get("error")
+                .and_then(|v| v.as_str())
+                .unwrap_or("poisoned (retries exhausted)")
+                .to_string()
         });
         done.insert(
             id.to_string(),
@@ -181,7 +228,8 @@ fn completed_runs(path: &Path) -> BTreeMap<String, RunOutcome> {
                 optimizer,
                 modeled_bytes: j.get("modeled_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
                 metrics,
-                error: None,
+                error,
+                poisoned,
                 wall_secs: 0.0,
             },
         );
@@ -227,7 +275,46 @@ pub fn run_queue(spec_text: &str, dir: &Path, checkpoint_every: u64) -> Result<V
     ]));
 
     let specs: Vec<RunSpec> = pending.iter().map(|(_, r)| r.clone()).collect();
-    let fresh = run_all_logged(&specs, exp.workers, Some(&log));
+    let mut fresh = run_all_logged(&specs, exp.workers, Some(&log));
+
+    // Bounded retry ladder: re-attempt errored runs up to `exp.retries`
+    // times with step-doubling backoff; each attempt is announced on the
+    // stream as a `run_retry` event. Checkpoints written by the failed
+    // attempt are still in the run's out_dir, so a retry resumes rather
+    // than restarting.
+    let mut backoff_ms = exp.retry_backoff_ms;
+    for attempt in 1..=exp.retries {
+        let retry_idx: Vec<usize> = fresh
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.error.is_some())
+            .map(|(j, _)| j)
+            .collect();
+        if retry_idx.is_empty() {
+            break;
+        }
+        for &j in &retry_idx {
+            log.run_retry(&specs[j].id, attempt, backoff_ms);
+        }
+        if backoff_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(backoff_ms));
+        }
+        let retry_specs: Vec<RunSpec> = retry_idx.iter().map(|&j| specs[j].clone()).collect();
+        let retried = run_all_logged(&retry_specs, exp.workers, Some(&log));
+        for (&j, o) in retry_idx.iter().zip(retried) {
+            fresh[j] = o;
+        }
+        backoff_ms = backoff_ms.saturating_mul(2);
+    }
+    // Retries exhausted: mark survivors poisoned — a terminal outcome the
+    // next resume pass caches instead of re-attempting.
+    for o in fresh.iter_mut() {
+        if o.error.is_some() {
+            o.poisoned = true;
+            log.run_end(o);
+        }
+    }
+
     for ((i, _), outcome) in pending.into_iter().zip(fresh) {
         slots[i] = Some(outcome);
     }
@@ -293,6 +380,40 @@ mod tests {
         let text2 = fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
         let ends2 = text2.lines().filter(|l| l.contains("\"run_end\"")).count();
         assert_eq!(ends2, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn errored_runs_retry_then_poison_and_cache() {
+        let dir = std::env::temp_dir().join(format!("quartz-queue-poison-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        // A nonexistent model fails deterministically on every machine,
+        // whether or not compiled artifacts are present.
+        let spec = "\nname = \"p\"\nsteps = 5\nworkers = 1\nretries = 2\nretry_backoff_ms = 1\n\n\
+                    [[runs]]\nmodel = \"no-such-model\"\nbase = \"sgdm\"\n";
+
+        let out = run_queue(spec, &dir, 0).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].poisoned, "expected terminal poisoned outcome");
+        assert!(out[0].error.is_some());
+        assert!(out[0].metrics.is_none());
+
+        let text = fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        let retries = text.lines().filter(|l| l.contains("\"run_retry\"")).count();
+        assert_eq!(retries, 2, "one run_retry event per retry attempt:\n{text}");
+        assert!(text.contains("\"outcome\":\"poisoned\""), "{text}");
+
+        // Resuming serves the poisoned outcome from the stream: no new
+        // attempts, no new retry or run_end events.
+        let out2 = resume_queue(&dir, 0).unwrap();
+        assert_eq!(out2.len(), 1);
+        assert!(out2[0].poisoned);
+        assert!(out2[0].error.is_some());
+        let text2 = fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        let retries2 = text2.lines().filter(|l| l.contains("\"run_retry\"")).count();
+        assert_eq!(retries2, 2);
+        let ends2 = text2.lines().filter(|l| l.contains("\"run_end\"")).count();
+        assert_eq!(ends2, text.lines().filter(|l| l.contains("\"run_end\"")).count());
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -29,6 +29,9 @@ pub struct RunOutcome {
     pub metrics: Option<RunMetrics>,
     /// Populated when the run failed (panic or error).
     pub error: Option<String>,
+    /// True when the run exhausted its retry budget — a terminal failure
+    /// the queue caches (like `oom`) instead of re-attempting on resume.
+    pub poisoned: bool,
     /// Wall-clock seconds this scheduling attempt took, as measured by the
     /// scheduler (includes resume-restore time; 0 when the worker panicked
     /// or the outcome was reloaded from a previous queue pass).
@@ -74,6 +77,8 @@ fn train_config(spec: &RunSpec) -> TrainConfig {
         checkpoint_every: spec.checkpoint_every,
         checkpoint_dir: spec.out_dir.clone(),
         spec_hash: persist::spec_hash(&spec.identity()),
+        faults: spec.faults.clone(),
+        keep_checkpoints: spec.keep_checkpoints,
     }
 }
 
@@ -93,6 +98,7 @@ pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> crate::util::error::Re
                     modeled_bytes: modeled,
                     metrics: None,
                     error: None,
+                    poisoned: false,
                     wall_secs: 0.0,
                 });
             }
@@ -106,6 +112,7 @@ pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> crate::util::error::Re
             modeled_bytes: modeled,
             metrics: Some(metrics),
             error: None,
+            poisoned: false,
             wall_secs: 0.0,
         });
     }
@@ -134,6 +141,7 @@ pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> crate::util::error::Re
                 modeled_bytes: modeled,
                 metrics: None,
                 error: None,
+                poisoned: false,
                 wall_secs: 0.0,
             });
         }
@@ -167,6 +175,7 @@ pub fn run_one(artifact_dir: &PathBuf, spec: &RunSpec) -> crate::util::error::Re
         modeled_bytes: modeled,
         metrics: Some(metrics),
         error: None,
+        poisoned: false,
         wall_secs: 0.0,
     })
 }
@@ -179,6 +188,7 @@ fn failed_outcome(spec: &RunSpec, error: String) -> RunOutcome {
         modeled_bytes: 0,
         metrics: None,
         error: Some(error),
+        poisoned: false,
         wall_secs: 0.0,
     }
 }

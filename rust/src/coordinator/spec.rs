@@ -181,6 +181,10 @@ pub struct RunSpec {
     /// Per-run output directory: checkpoints land here, and training
     /// resumes from the newest valid one found here.
     pub out_dir: Option<PathBuf>,
+    /// Deterministic fault-injection plan for chaos runs (`None` = healthy).
+    pub faults: Option<crate::util::fault::FaultPlan>,
+    /// Keep only the newest N checkpoints after each write (0 = all).
+    pub keep_checkpoints: usize,
 }
 
 impl RunSpec {
@@ -198,6 +202,8 @@ impl RunSpec {
             memory_budget: None,
             checkpoint_every: 0,
             out_dir: None,
+            faults: None,
+            keep_checkpoints: 0,
         }
     }
 
@@ -224,6 +230,11 @@ pub struct ExperimentSpec {
     pub name: String,
     pub runs: Vec<RunSpec>,
     pub workers: usize,
+    /// How many times the queue re-attempts a run that errored before
+    /// declaring it poisoned (0 = fail on first error).
+    pub retries: u32,
+    /// Base backoff between retry attempts; doubles per attempt.
+    pub retry_backoff_ms: u64,
 }
 
 impl ExperimentSpec {
@@ -266,6 +277,12 @@ impl ExperimentSpec {
         let workers = doc.root.get("workers").and_then(|v| v.as_i64()).unwrap_or(4) as usize;
         let checkpoint_every =
             doc.root.get("checkpoint_every").and_then(|v| v.as_i64()).unwrap_or(0).max(0) as u64;
+        let keep_checkpoints =
+            doc.root.get("keep_checkpoints").and_then(|v| v.as_i64()).unwrap_or(0).max(0) as usize;
+        let retries = doc.root.get("retries").and_then(|v| v.as_i64()).unwrap_or(2).max(0) as u32;
+        let retry_backoff_ms =
+            doc.root.get("retry_backoff_ms").and_then(|v| v.as_i64()).unwrap_or(250).max(0) as u64;
+        let faults = parse_faults(doc.tables.get("faults"))?;
 
         let wl_table = doc.tables.get("workload");
         let workload = parse_workload(wl_table, seed)?;
@@ -325,6 +342,20 @@ impl ExperimentSpec {
                     if let Some(mo) = t.get("max_order").and_then(|v| v.as_i64()) {
                         cfg.max_order = mo as usize;
                     }
+                    if let Some(qa) = t.get("quarantine_after").and_then(|v| v.as_i64()) {
+                        crate::ensure!(
+                            qa >= 1,
+                            "runs[{i}]: quarantine_after must be >= 1, got {qa}"
+                        );
+                        cfg.quarantine_after = qa as u32;
+                    }
+                    if let Some(pi) = t.get("probation_interval").and_then(|v| v.as_i64()) {
+                        crate::ensure!(
+                            pi >= 1,
+                            "runs[{i}]: probation_interval must be >= 1, got {pi}"
+                        );
+                        cfg.probation_interval = pi as u64;
+                    }
                     // Refresh-scheduler selection mirrors the codec
                     // registry: any key in `shampoo::scheduler` (built-in
                     // or registered at runtime) is accepted; the stored
@@ -349,10 +380,53 @@ impl ExperimentSpec {
             let mut run = RunSpec::new(&model, workload.clone(), opt, steps);
             run.seed = seed;
             run.checkpoint_every = checkpoint_every;
+            run.keep_checkpoints = keep_checkpoints;
+            run.faults = faults.clone();
             runs.push(run);
         }
-        Ok(ExperimentSpec { name, runs, workers })
+        Ok(ExperimentSpec { name, runs, workers, retries, retry_backoff_ms })
     }
+}
+
+/// Parse an optional `[faults]` chaos table:
+///
+/// ```toml
+/// [faults]
+/// seed = 7
+/// nan_grad_every = 5      # NaN-poison one gradient every 5th step
+/// inf_grad_every = 0      # (0 disables a channel)
+/// force_fail_every = 10   # force factorization failure on every 10th step
+/// fail_one_in = 1         # …for 1-in-N of that step's refresh units
+/// ckpt_flip_every = 0     # bit-flip every Nth checkpoint file
+/// until_step = 100        # stop injecting after this step (0 = never stop)
+/// ```
+fn parse_faults(t: Option<&TomlTable>) -> Result<Option<crate::util::fault::FaultPlan>> {
+    let Some(t) = t else { return Ok(None) };
+    let mut fp = crate::util::fault::FaultPlan::default();
+    let get = |k: &str| t.get(k).and_then(|v| v.as_i64());
+    if let Some(v) = get("seed") {
+        fp.seed = v as u64;
+    }
+    if let Some(v) = get("nan_grad_every") {
+        fp.nan_grad_every = v.max(0) as u64;
+    }
+    if let Some(v) = get("inf_grad_every") {
+        fp.inf_grad_every = v.max(0) as u64;
+    }
+    if let Some(v) = get("force_fail_every") {
+        fp.force_fail_every = v.max(0) as u64;
+    }
+    if let Some(v) = get("fail_one_in") {
+        crate::ensure!(v >= 1, "faults.fail_one_in must be >= 1, got {v}");
+        fp.fail_one_in = v as u64;
+    }
+    if let Some(v) = get("ckpt_flip_every") {
+        fp.ckpt_flip_every = v.max(0) as u64;
+    }
+    if let Some(v) = get("until_step") {
+        fp.until_step = v.max(0) as u64;
+    }
+    Ok(Some(fp))
 }
 
 fn parse_base(s: &str) -> Result<OptimizerKind> {
@@ -486,6 +560,37 @@ base = "adamw"
         // Odd-length shape lists are rejected.
         let bad =
             "\n[workload]\nkind = \"synthetic\"\nshapes = [16, 8, 8]\n\n[[runs]]\nmodel = \"m\"\n";
+        assert!(ExperimentSpec::from_toml(bad).is_err());
+    }
+
+    #[test]
+    fn parses_faults_retries_and_retention() {
+        let text = "\nretries = 3\nretry_backoff_ms = 50\nkeep_checkpoints = 4\n\
+                    \n[faults]\nseed = 7\nnan_grad_every = 5\nforce_fail_every = 10\n\
+                    fail_one_in = 2\nuntil_step = 60\n\
+                    \n[[runs]]\nmodel = \"m\"\nshampoo = \"cq-ef\"\n\
+                    quarantine_after = 2\nprobation_interval = 9\n";
+        let spec = ExperimentSpec::from_toml(text).unwrap();
+        assert_eq!(spec.retries, 3);
+        assert_eq!(spec.retry_backoff_ms, 50);
+        let run = &spec.runs[0];
+        assert_eq!(run.keep_checkpoints, 4);
+        let fp = run.faults.as_ref().unwrap();
+        assert_eq!(fp.seed, 7);
+        assert_eq!(fp.nan_grad_every, 5);
+        assert_eq!(fp.force_fail_every, 10);
+        assert_eq!(fp.fail_one_in, 2);
+        assert_eq!(fp.until_step, 60);
+        let sh = run.optimizer.shampoo.as_ref().unwrap();
+        assert_eq!(sh.quarantine_after, 2);
+        assert_eq!(sh.probation_interval, 9);
+        // Defaults: no faults, keep everything, 2 retries.
+        let plain = ExperimentSpec::from_toml("\n[[runs]]\nmodel = \"m\"\n").unwrap();
+        assert!(plain.runs[0].faults.is_none());
+        assert_eq!(plain.runs[0].keep_checkpoints, 0);
+        assert_eq!(plain.retries, 2);
+        // fail_one_in = 0 would divide by zero downstream → parse error.
+        let bad = "\n[faults]\nfail_one_in = 0\n\n[[runs]]\nmodel = \"m\"\n";
         assert!(ExperimentSpec::from_toml(bad).is_err());
     }
 

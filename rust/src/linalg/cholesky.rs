@@ -260,8 +260,13 @@ fn factor_blocked_in_place(l: &mut Matrix, plan: &mut MatmulPlan) -> Result<(), 
 }
 
 /// Cholesky with escalating diagonal jitter, mirroring the paper's `+εI`
-/// regularization (Eq. (7)): retries with ε · 10^t for t = 0.. until the
-/// factorization succeeds. Returns the factor and the jitter actually used.
+/// regularization (Eq. (7)). The first rung is the documented legacy
+/// behavior — exactly `eps`, absolute — so the healthy path is bit-identical
+/// to the classic schedule; every later rung escalates **relative to the
+/// matrix's scale**, `ε · max_diag · 10^t`, so a huge-scale gram (whose
+/// pivots dwarf any absolute ε) and a tiny post-quantization gram both
+/// rescue in the same number of rungs. Returns the factor and the jitter
+/// actually used.
 pub fn cholesky_jittered(
     a: &Matrix,
     eps: f32,
@@ -298,7 +303,23 @@ pub fn cholesky_jittered_into_planned(
         return Err(CholeskyError::NotSquare(a.rows(), a.cols()));
     }
     assert_eq!((out.rows(), out.cols()), (a.rows(), a.cols()), "output shape mismatch");
+    // Largest finite positive diagonal entry — the scale the escalating
+    // rungs are relative to (1.0 when the diagonal offers no usable scale,
+    // which reproduces the legacy absolute schedule exactly).
+    let mut scale = 0.0f32;
+    for i in 0..a.rows() {
+        let d = a[(i, i)];
+        if d.is_finite() && d > scale {
+            scale = d;
+        }
+    }
+    if scale <= 0.0 {
+        scale = 1.0;
+    }
+    // Rung 0 is exactly `eps` (legacy first rung); rung t ≥ 1 is
+    // `eps · scale · 10^t`.
     let mut jitter = eps;
+    let mut escalated = eps * scale;
     let mut last_err = None;
     for _ in 0..max_tries {
         out.copy_from(a);
@@ -310,7 +331,8 @@ pub fn cholesky_jittered_into_planned(
             }
             Err(e) => {
                 last_err = Some(e);
-                jitter *= 10.0;
+                escalated *= 10.0;
+                jitter = escalated;
             }
         }
     }
@@ -426,6 +448,30 @@ mod tests {
         let (l, jitter) = cholesky_jittered(&a, 1e-6, 12).unwrap();
         assert!(jitter >= 1e-6);
         assert!(!l.has_non_finite());
+    }
+
+    #[test]
+    fn jitter_schedule_scales_with_matrix_magnitude() {
+        // An indefinite matrix at scale s (eigenvalues s·(1 ± 1.1)) needs
+        // jitter > 0.1·s to become PD. Under the old absolute ε·10^t
+        // schedule the huge-scale case (s = 1e8 → jitter ≥ 1e7) exhausts
+        // all 12 rungs starting from 1e-6; the trace-scaled schedule
+        // reaches it in a handful of relative rungs, and the tiny-scale
+        // case still rescues immediately on the legacy first rung.
+        for s in [1e-8f32, 1.0, 1e8] {
+            let a = Matrix::from_fn(2, 2, |i, j| if i == j { s } else { 1.1 * s });
+            let (l, jitter) = cholesky_jittered(&a, 1e-6, 12)
+                .unwrap_or_else(|e| panic!("scale {s} not rescued: {e}"));
+            assert!(!l.has_non_finite(), "scale {s}");
+            // The rescue jitter stays proportionate: never more than the
+            // matrix's own scale (the old schedule had no such bound).
+            assert!(jitter <= s.max(1e-6), "scale {s} used jitter {jitter}");
+        }
+        // The first rung is still the documented legacy behavior: a matrix
+        // rescued by +εI reports exactly ε regardless of its scale.
+        let tiny = Matrix::from_rows(&[&[1e-9, 1e-9], &[1e-9, 1e-9]]);
+        let (_, jitter) = cholesky_jittered(&tiny, 1e-6, 12).unwrap();
+        assert_eq!(jitter, 1e-6);
     }
 
     #[test]

@@ -159,6 +159,30 @@ pub fn inverse_pth_root_eig_planned(
     out
 }
 
+/// PSD-projection rung of the numerical-health fallback ladder: sanitize
+/// `a` (non-finite entries → 0), symmetrize, eigendecompose, clamp every
+/// eigenvalue below at `clamp` (floored at a strictly positive value so
+/// `λ^{-1/p}` stays finite), and return `V·diag(λ^{-1/p})·Vᵀ`.
+///
+/// Unlike [`inverse_pth_root_eig_planned`], which assumes a well-formed
+/// symmetric input, this accepts a gram that quantization or a poisoned
+/// gradient has broken outright and still yields a finite root — the
+/// guarantee the refresh fallback ladder needs one rung above the diagonal
+/// floor. On a finite symmetric input the sanitization is the identity, so
+/// the result matches `inverse_pth_root_eig_planned` bit for bit.
+pub fn psd_clamped_root_planned(a: &Matrix, p: f64, clamp: f32, plan: &mut MatmulPlan) -> Matrix {
+    assert!(a.is_square());
+    let n = a.rows();
+    let sym = Matrix::from_fn(n, n, |i, j| {
+        let x = a[(i, j)];
+        let y = a[(j, i)];
+        let xf = if x.is_finite() { x } else { 0.0 };
+        let yf = if y.is_finite() { y } else { 0.0 };
+        0.5 * (xf + yf)
+    });
+    inverse_pth_root_eig_planned(&sym, p, clamp.max(1e-12), plan)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +249,31 @@ mod tests {
             assert_eq!(vals, want_vals, "trial {trial}");
             assert_eq!(vecs.max_abs_diff(&want_vecs), 0.0, "trial {trial}");
         }
+    }
+
+    #[test]
+    fn psd_clamped_root_survives_non_finite_and_matches_clean_path() {
+        let mut plan = MatmulPlan::new();
+        // Clean SPD input: identical to the ordinary eig path.
+        let mut rng = Rng::new(7);
+        let g = Matrix::randn(6, 9, 1.0, &mut rng);
+        let mut a = syrk(&g);
+        a.add_diag(0.3);
+        let want = inverse_pth_root_eig_planned(&a, 4.0, 1e-10, &mut plan);
+        let got = psd_clamped_root_planned(&a, 4.0, 1e-10, &mut plan);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+        // Poisoned input: NaN and Inf entries, asymmetric damage — the
+        // projection must still return a finite root.
+        let mut bad = a.clone();
+        bad[(0, 1)] = f32::NAN;
+        bad[(3, 3)] = f32::INFINITY;
+        bad[(5, 2)] = f32::NEG_INFINITY;
+        let r = psd_clamped_root_planned(&bad, 4.0, 1e-10, &mut plan);
+        assert!(!r.has_non_finite());
+        // Even a clamp of zero is floored so λ^{-1/p} cannot blow up.
+        let z = Matrix::zeros(4, 4);
+        let r = psd_clamped_root_planned(&z, 4.0, 0.0, &mut plan);
+        assert!(!r.has_non_finite());
     }
 
     #[test]

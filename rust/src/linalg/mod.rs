@@ -25,7 +25,10 @@ pub use cholesky::{
     cholesky, cholesky_into, cholesky_jittered, cholesky_jittered_into,
     cholesky_jittered_into_planned, cholesky_naive, CHOLESKY_BLOCKED_MIN,
 };
-pub use eigen::{eig_sym, eig_sym_with, inverse_pth_root_eig, inverse_pth_root_eig_planned, EigWork};
+pub use eigen::{
+    eig_sym, eig_sym_with, inverse_pth_root_eig, inverse_pth_root_eig_planned,
+    psd_clamped_root_planned, EigWork,
+};
 pub use gemm::{avx2_available, Microkernel};
 pub use kron::kron;
 pub use matmul::{

@@ -21,11 +21,13 @@ use quartz::coordinator::spec::{ExperimentSpec, OptimizerSpec, RunSpec, Workload
 use quartz::data::synthetic::ClusterSpec;
 use quartz::data::tokens::CorpusSpec;
 use quartz::linalg::Matrix;
+use quartz::metrics::HealthStats;
 use quartz::quant::{BlockQuantizer, QuantConfig, TriJointStore};
 use quartz::report::table::Table;
 use quartz::runtime::Runtime;
 use quartz::util::error::{Context, Result};
 use quartz::util::fmt_bytes;
+use quartz::util::json::Json;
 use quartz::util::rng::Rng;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -90,6 +92,7 @@ fn main() {
         "run" => cmd_run(&args),
         "queue" => cmd_queue(&args),
         "resume" => cmd_resume(&args),
+        "health" => cmd_health(&args),
         "quant-demo" => cmd_quant_demo(),
         "codecs" => cmd_codecs(),
         "list" => cmd_list(),
@@ -122,6 +125,8 @@ fn print_help() {
          \x20        # resumable job queue: checkpoints + metrics.jsonl in DIR\n\
          \x20 resume DIR [--checkpoint-every N]\n\
          \x20        # continue a killed/crashed queue from its checkpoints\n\
+         \x20 health DIR\n\
+         \x20        # numerical-health counters + retry history from metrics.jsonl\n\
          \x20 quant-demo\n\
          \x20 codecs                               # registered optimizer/codec keys\n\
          \x20 list"
@@ -282,6 +287,79 @@ fn cmd_resume(args: &Args) -> Result<()> {
     println!("resuming queue {}…", dir.display());
     let outcomes = resume_queue(&dir, every)?;
     outcome_table(&format!("queue {}", dir.display()), &outcomes).print();
+    Ok(())
+}
+
+/// Summarize the numerical-health guard counters a queue streamed into its
+/// `metrics.jsonl`: last outcome per run, retry attempts, per-run guard
+/// counters, and a totals line. Reads the same stream `quartz queue` /
+/// `quartz resume` append to, so it works on live and finished queues alike.
+fn cmd_health(args: &Args) -> Result<()> {
+    let dir = args
+        .positional(0)
+        .or_else(|| args.get("dir"))
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("runs/queue"));
+    let path = dir.join("metrics.jsonl");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no metrics stream at {}", path.display()))?;
+
+    // Last run_end wins per id — a retried run logs one per attempt and the
+    // terminal line carries the outcome the queue cached.
+    let mut ends: std::collections::BTreeMap<String, (String, HealthStats)> = Default::default();
+    let mut retries: HashMap<String, u64> = HashMap::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let j = Json::parse(line).with_context(|| format!("bad line in {}", path.display()))?;
+        let event = j.get("event").and_then(|v| v.as_str()).unwrap_or("");
+        let id = j.get("id").and_then(|v| v.as_str()).unwrap_or("").to_string();
+        match event {
+            "run_retry" => *retries.entry(id).or_insert(0) += 1,
+            "run_end" => {
+                let outcome = j.get("outcome").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+                let mut h = HealthStats::default();
+                if let Some(hj) = j.get("health") {
+                    let g = |k: &str| hj.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                    h = HealthStats {
+                        grads_screened: g("grads_screened"),
+                        jitter_rescues: g("jitter_rescues"),
+                        psd_projections: g("psd_projections"),
+                        stale_root_serves: g("stale_root_serves"),
+                        floor_serves: g("floor_serves"),
+                        quarantines: g("quarantines"),
+                        releases: g("releases"),
+                    };
+                }
+                ends.insert(id, (outcome, h));
+            }
+            _ => {}
+        }
+    }
+    if ends.is_empty() {
+        bail!("no run_end events in {} yet", path.display());
+    }
+
+    let mut t = Table::new(
+        &format!("health {}", dir.display()),
+        &["Run", "Outcome", "Retries", "Screened", "Jitter", "PSD", "Stale", "Floor", "Quar", "Rel"],
+    );
+    let mut total = HealthStats::default();
+    for (id, (outcome, h)) in &ends {
+        total.absorb(h);
+        t.row(vec![
+            id.clone(),
+            outcome.clone(),
+            format!("{}", retries.get(id).copied().unwrap_or(0)),
+            format!("{}", h.grads_screened),
+            format!("{}", h.jitter_rescues),
+            format!("{}", h.psd_projections),
+            format!("{}", h.stale_root_serves),
+            format!("{}", h.floor_serves),
+            format!("{}", h.quarantines),
+            format!("{}", h.releases),
+        ]);
+    }
+    t.print();
+    println!("totals: {}", total.summary());
     Ok(())
 }
 

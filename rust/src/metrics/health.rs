@@ -1,0 +1,170 @@
+//! Numerical-health telemetry: what the guard engine screened, rescued,
+//! served stale, floored, and quarantined.
+//!
+//! Two pieces:
+//! * [`HealthStats`] — a plain counter snapshot, folded into
+//!   [`super::RefreshStats`], surfaced in `RunMetrics`, streamed into the
+//!   queue's `metrics.jsonl`, and printed by `quartz health`.
+//! * [`HealthLedger`] — the lock-free accumulator the parallel refresh
+//!   executor increments from worker threads; drained once per step into
+//!   the owning optimizer's `HealthStats` via [`HealthLedger::take`].
+//!
+//! This module deliberately knows nothing about Shampoo: the ledger exposes
+//! one increment method per counter and the refresh layer maps its typed
+//! `FallbackOutcome` onto them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cumulative health counters for one optimizer (or one run).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    /// Gradient / gram updates skipped because the input was non-finite.
+    pub grads_screened: u64,
+    /// Exceptional root refreshes rescued by the ridged eigendecomposition
+    /// (the ladder's jitter rung).
+    pub jitter_rescues: u64,
+    /// Root refreshes that needed the sanitized eigenvalue-clamped PSD
+    /// projection rung.
+    pub psd_projections: u64,
+    /// Refreshes that kept serving the last good root (stale-root rung).
+    pub stale_root_serves: u64,
+    /// Refreshes served from the diagonal floor (quarantine or last rung).
+    pub floor_serves: u64,
+    /// Units newly quarantined after repeated consecutive failures.
+    pub quarantines: u64,
+    /// Units released from quarantine by a successful probation refresh.
+    pub releases: u64,
+}
+
+impl HealthStats {
+    /// Whether any counter is non-zero.
+    pub fn any(&self) -> bool {
+        self.grads_screened
+            + self.jitter_rescues
+            + self.psd_projections
+            + self.stale_root_serves
+            + self.floor_serves
+            + self.quarantines
+            + self.releases
+            > 0
+    }
+
+    /// Add another snapshot's counters into this one.
+    pub fn absorb(&mut self, other: &HealthStats) {
+        self.grads_screened += other.grads_screened;
+        self.jitter_rescues += other.jitter_rescues;
+        self.psd_projections += other.psd_projections;
+        self.stale_root_serves += other.stale_root_serves;
+        self.floor_serves += other.floor_serves;
+        self.quarantines += other.quarantines;
+        self.releases += other.releases;
+    }
+
+    /// One-line human summary (`quartz health` totals row).
+    pub fn summary(&self) -> String {
+        format!(
+            "screened {} · jitter {} · psd {} · stale {} · floor {} · quarantined {} · released {}",
+            self.grads_screened,
+            self.jitter_rescues,
+            self.psd_projections,
+            self.stale_root_serves,
+            self.floor_serves,
+            self.quarantines,
+            self.releases
+        )
+    }
+}
+
+/// Thread-safe health accumulator for the parallel refresh executor.
+#[derive(Debug, Default)]
+pub struct HealthLedger {
+    grads_screened: AtomicU64,
+    jitter_rescues: AtomicU64,
+    psd_projections: AtomicU64,
+    stale_root_serves: AtomicU64,
+    floor_serves: AtomicU64,
+    quarantines: AtomicU64,
+    releases: AtomicU64,
+}
+
+impl HealthLedger {
+    pub fn new() -> HealthLedger {
+        HealthLedger::default()
+    }
+
+    pub fn grad_screened(&self) {
+        self.grads_screened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn jitter_rescue(&self) {
+        self.jitter_rescues.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn psd_projection(&self) {
+        self.psd_projections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stale_root_serve(&self) {
+        self.stale_root_serves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn floor_serve(&self) {
+        self.floor_serves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn quarantine(&self) {
+        self.quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn release(&self) {
+        self.releases.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drain the ledger: return everything counted since the last `take`
+    /// and reset every counter to zero.
+    pub fn take(&self) -> HealthStats {
+        HealthStats {
+            grads_screened: self.grads_screened.swap(0, Ordering::Relaxed),
+            jitter_rescues: self.jitter_rescues.swap(0, Ordering::Relaxed),
+            psd_projections: self.psd_projections.swap(0, Ordering::Relaxed),
+            stale_root_serves: self.stale_root_serves.swap(0, Ordering::Relaxed),
+            floor_serves: self.floor_serves.swap(0, Ordering::Relaxed),
+            quarantines: self.quarantines.swap(0, Ordering::Relaxed),
+            releases: self.releases.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_drains_to_zero() {
+        let l = HealthLedger::new();
+        l.grad_screened();
+        l.grad_screened();
+        l.jitter_rescue();
+        l.quarantine();
+        l.release();
+        let s = l.take();
+        assert_eq!(s.grads_screened, 2);
+        assert_eq!(s.jitter_rescues, 1);
+        assert_eq!(s.quarantines, 1);
+        assert_eq!(s.releases, 1);
+        assert!(s.any());
+        assert!(!l.take().any(), "take resets every counter");
+    }
+
+    #[test]
+    fn absorb_accumulates() {
+        let mut a = HealthStats::default();
+        assert!(!a.any());
+        let b = HealthStats { psd_projections: 3, floor_serves: 2, ..Default::default() };
+        a.absorb(&b);
+        a.absorb(&b);
+        assert_eq!(a.psd_projections, 6);
+        assert_eq!(a.floor_serves, 4);
+        assert!(a.summary().contains("psd 6"));
+    }
+}

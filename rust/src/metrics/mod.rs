@@ -2,11 +2,13 @@
 //! peak-memory columns, wall-clock timers, task metrics, and the
 //! refresh-scheduler telemetry.
 
+pub mod health;
 pub mod memory;
 pub mod refresh;
 pub mod scoring;
 pub mod timer;
 
+pub use health::{HealthLedger, HealthStats};
 pub use memory::MemoryModel;
 pub use refresh::RefreshStats;
 pub use scoring::{accuracy, cross_entropy, perplexity_from_nll};

@@ -32,6 +32,10 @@ pub struct RefreshStats {
     pub max_refresh_secs: f64,
     /// Wall-clock of whole steps (refresh + precondition + apply).
     pub step_secs: f64,
+    /// Cumulative numerical-health counters (guard screens, fallback-ladder
+    /// rungs, quarantine transitions) drained from the refresh executor's
+    /// [`super::HealthLedger`] once per step.
+    pub health: super::HealthStats,
 }
 
 impl RefreshStats {

@@ -59,6 +59,19 @@ pub trait Optimizer: Send {
     fn restore_state(&mut self, _r: &mut ByteReader<'_>) -> Result<()> {
         crate::bail!("optimizer {:?} does not support checkpointing", self.name())
     }
+
+    /// Install (or clear) a deterministic fault-injection plan. Optimizers
+    /// without an internal refresh pipeline have nothing to force-fail, so
+    /// the default ignores the plan — gradient corruption happens upstream
+    /// in the trainer either way.
+    fn set_fault_plan(&mut self, _plan: Option<&crate::util::fault::FaultPlan>) {}
+
+    /// Cumulative numerical-health counters (screened gradients, fallback
+    /// ladder rungs, quarantine transitions). Defaults to all-zero for
+    /// optimizers with no guarded refresh pipeline.
+    fn health_stats(&self) -> crate::metrics::HealthStats {
+        Default::default()
+    }
 }
 
 /// Which first-order rule is in use.

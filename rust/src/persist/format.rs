@@ -199,6 +199,29 @@ pub fn latest_valid(dir: &Path, spec_hash: u64) -> Result<Option<(u64, Checkpoin
     Ok(None)
 }
 
+/// Retention: delete all but the newest `keep` checkpoints in `dir`,
+/// returning how many were removed. `keep == 0` disables pruning (keep
+/// everything); removal errors are ignored — a file that refuses to die
+/// only costs disk, while failing the training step over it would cost the
+/// run. Invalid/corrupt files still count toward recency here (pruning is
+/// name-based); [`latest_valid`] remains the arbiter of what is loadable,
+/// so `keep` should comfortably exceed the number of trailing corrupt
+/// files a crash can plausibly leave (≥ 2 in practice).
+pub fn prune_checkpoints(dir: &Path, keep: usize) -> usize {
+    if keep == 0 {
+        return 0;
+    }
+    let ckpts = list_checkpoints(dir);
+    let excess = ckpts.len().saturating_sub(keep);
+    let mut removed = 0;
+    for (_, path) in ckpts.into_iter().take(excess) {
+        if fs::remove_file(&path).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +302,38 @@ mod tests {
         assert!(latest_valid(&dir, hash ^ 1).unwrap().is_none());
         // Missing directory → clean None.
         assert!(latest_valid(&dir.join("absent"), hash).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_prunes_oldest_and_scan_still_falls_back() {
+        let dir = std::env::temp_dir().join(format!("quartz-prune-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let hash = spec_hash("prune-test");
+        for step in [100u64, 200, 300, 400, 500] {
+            let mut ck = Checkpoint::new(hash);
+            ck.add("meta", step.to_le_bytes().to_vec());
+            ck.write_atomic(&dir.join(step_file_name(step))).unwrap();
+        }
+        // keep == 0 disables pruning entirely.
+        assert_eq!(prune_checkpoints(&dir, 0), 0);
+        assert_eq!(list_checkpoints(&dir).len(), 5);
+        // Keep the newest 3: steps 100 and 200 go.
+        assert_eq!(prune_checkpoints(&dir, 3), 2);
+        let left: Vec<u64> = list_checkpoints(&dir).iter().map(|&(s, _)| s).collect();
+        assert_eq!(left, vec![300, 400, 500]);
+        // Pruning below the current count is a no-op.
+        assert_eq!(prune_checkpoints(&dir, 3), 0);
+        // Corrupt the newest survivor: the newest-valid scan must still
+        // fall back within the retained set.
+        let newest = dir.join(step_file_name(500));
+        let full = fs::read(&newest).unwrap();
+        fs::write(&newest, &full[..full.len() - 7]).unwrap();
+        let (step, ck) = latest_valid(&dir, hash).unwrap().unwrap();
+        assert_eq!(step, 400);
+        assert_eq!(ck.section("meta").unwrap(), &400u64.to_le_bytes());
+        // Missing directory prunes nothing.
+        assert_eq!(prune_checkpoints(&dir.join("absent"), 2), 0);
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -14,7 +14,7 @@ pub mod format;
 pub mod train_state;
 
 pub use format::{
-    latest_valid, list_checkpoints, parse_step_file, spec_hash, step_file_name, Checkpoint,
-    FORMAT_VERSION, MAGIC,
+    latest_valid, list_checkpoints, parse_step_file, prune_checkpoints, spec_hash,
+    step_file_name, Checkpoint, FORMAT_VERSION, MAGIC,
 };
 pub use train_state::TrainState;

@@ -120,6 +120,16 @@ pub struct ShampooConfig {
     /// Per-step root-refresh unit budget for budgeted policies
     /// (`"staleness"`). 0 = automatic: ⌈units/T₂⌉, the staggered rate.
     pub refresh_budget: usize,
+    /// Numerical-health guard: a unit whose root refresh falls through to
+    /// the stale/floor rungs this many *consecutive* times is quarantined
+    /// to the diagonal floor. Inert on healthy runs (the counter only
+    /// advances on ladder failures).
+    pub quarantine_after: u32,
+    /// Steps between probation retries of a quarantined unit: the unit is
+    /// served from the floor until this many steps have passed since
+    /// quarantine, then gets one full refresh attempt (release on success,
+    /// timer reset on failure).
+    pub probation_interval: u64,
 }
 
 impl ShampooConfig {
@@ -173,6 +183,8 @@ impl Default for ShampooConfig {
             root_codec: None,
             refresh_policy: "every-n",
             refresh_budget: 0,
+            quarantine_after: 3,
+            probation_interval: 50,
         }
     }
 }
@@ -241,6 +253,13 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn default_health_knobs_are_sane() {
+        let c = ShampooConfig::default();
+        assert!(c.quarantine_after >= 1, "0 would quarantine on the first failure");
+        assert!(c.probation_interval >= 1, "0 would retry every step");
     }
 
     #[test]

@@ -27,15 +27,16 @@ pub mod state;
 pub use blocking::Blocking;
 pub use config::{ShampooConfig, ShampooVariant};
 pub use scheduler::{RefreshPlan, RefreshScheduler, UnitId, UnitInfo};
-pub use state::{LayerState, Side, UnitMeta};
+pub use state::{FallbackOutcome, LayerState, Side, UnitHealth, UnitMeta};
 
 use crate::linalg::{Matrix, ScratchArena};
-use crate::metrics::RefreshStats;
+use crate::metrics::{HealthLedger, HealthStats, RefreshStats};
 use crate::optim::{BaseOptimizer, Optimizer};
 use crate::quant::codec::CodecCtx;
 use crate::quant::BlockQuantizer;
 use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::error::Result;
+use crate::util::fault::FaultPlan;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -57,6 +58,12 @@ pub struct Shampoo {
     tasks: Vec<scheduler::Task>,
     /// Per-step refresh telemetry (unit counts, wall-clock spikes).
     stats: RefreshStats,
+    /// Deterministic fault schedule (test/chaos hook; `None` in production
+    /// runs). Set through [`Optimizer::set_fault_plan`].
+    fault: Option<FaultPlan>,
+    /// Lock-free health accumulator the executor's workers count on,
+    /// drained into `stats.health` once per step.
+    ledger: HealthLedger,
     /// Worker-checked-out scratch arenas: each step worker pops one, runs
     /// its tasks' store/load/root pipeline out of it, and returns it. The
     /// pool grows to the peak concurrent worker count and then every
@@ -94,6 +101,8 @@ impl Shampoo {
             plan: RefreshPlan::default(),
             tasks: Vec::new(),
             stats: RefreshStats::new(),
+            fault: None,
+            ledger: HealthLedger::new(),
             scratch_pool: Mutex::new(Vec::new()),
         }
     }
@@ -137,6 +146,8 @@ impl Shampoo {
             kind: self.base.kind,
             lr_scale,
             step,
+            fault: self.fault.as_ref(),
+            ledger: &self.ledger,
         };
         let refresh_ns = scheduler::execute_step(
             &mut self.layers,
@@ -149,6 +160,7 @@ impl Shampoo {
             &self.scratch_pool,
             &sc,
         );
+        self.stats.health.absorb(&self.ledger.take());
         self.stats.record(
             self.plan.gram_units(),
             self.plan.root_units(),
@@ -160,6 +172,12 @@ impl Shampoo {
     /// Refresh telemetry accumulated over all steps so far.
     pub fn refresh_stats(&self) -> &RefreshStats {
         &self.stats
+    }
+
+    /// Cumulative numerical-health counters (guard screens, fallback-ladder
+    /// rungs, quarantine transitions) over all steps so far.
+    pub fn health(&self) -> &HealthStats {
+        &self.stats.health
     }
 
     /// The active refresh policy's registry key.
@@ -306,6 +324,14 @@ impl Optimizer for Shampoo {
 
     fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
         self.read_state(r)
+    }
+
+    fn set_fault_plan(&mut self, plan: Option<&FaultPlan>) {
+        self.fault = plan.cloned();
+    }
+
+    fn health_stats(&self) -> HealthStats {
+        self.stats.health.clone()
     }
 }
 

@@ -28,9 +28,11 @@ use super::blocking::BlockSpec;
 use super::config::ShampooConfig;
 use super::state::{BlockState, LayerState, Side, UnitMeta};
 use crate::linalg::{Matrix, ScratchArena};
+use crate::metrics::HealthLedger;
 use crate::optim::optimizer::{Hyper, ParamState};
 use crate::optim::{graft, BaseOptimizer, OptimizerKind};
 use crate::quant::codec::CodecCtx;
+use crate::util::fault::FaultPlan;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
@@ -373,6 +375,11 @@ pub(crate) struct StepCtx<'a> {
     pub kind: OptimizerKind,
     pub lr_scale: f32,
     pub step: u64,
+    /// Deterministic fault schedule (test/chaos hook) — `None` in
+    /// production runs, in which case no root failure is ever forced.
+    pub fault: Option<&'a FaultPlan>,
+    /// Health accumulator the guard screens and ladder outcomes count on.
+    pub ledger: &'a HealthLedger,
 }
 
 /// One layer's shared-state view for the step: blocks behind per-block
@@ -445,6 +452,13 @@ pub(crate) fn execute_step(
             .zip(grads.iter())
             .zip(states.iter_mut());
         for (((layer, w), g), st) in it {
+            // Guard screen: a poisoned gradient skips the layer's update
+            // entirely — params and momentum never absorb the non-finite
+            // values. Finite gradients pass through untouched.
+            if g.has_non_finite() {
+                sc.ledger.grad_screened();
+                continue;
+            }
             let mut ghat = scratch.take(g.rows(), g.cols());
             layer.precondition_into(g, &mut ghat, &mut scratch);
             if sc.cfg.grafting {
@@ -455,6 +469,17 @@ pub(crate) fn execute_step(
         }
         scratch_pool.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
         return 0;
+    }
+
+    // Guard screen (refresh steps): a layer whose gradient is non-finite
+    // is skipped wholesale — neither its refresh units nor its parameter
+    // update may absorb the poison. Counted once per poisoned layer per
+    // step (mirroring the fast path above).
+    let poisoned: Vec<bool> = grads.iter().map(|g| g.has_non_finite()).collect();
+    for &p in &poisoned {
+        if p {
+            sc.ledger.grad_screened();
+        }
     }
 
     let runs: Vec<LayerRun> = layers
@@ -490,15 +515,22 @@ pub(crate) fn execute_step(
             let id = units[2 * b];
             debug_assert_eq!(id.side, Side::L);
             let (layer, block) = (id.layer as usize, id.block as usize);
+            if poisoned[layer] {
+                continue;
+            }
             tasks.push(Task::Refresh { layer, block, fl, fr });
             runs[layer].pending.fetch_add(1, Ordering::Relaxed);
         }
     }
-    debug_assert!(!tasks.is_empty(), "non-empty plan must produce refresh tasks");
     for (i, run) in runs.iter().enumerate() {
-        if run.pending.load(Ordering::Relaxed) == 0 {
+        if !poisoned[i] && run.pending.load(Ordering::Relaxed) == 0 {
             tasks.push(Task::Apply { layer: i });
         }
+    }
+    // Every scheduled layer screened and nothing else to apply: the step
+    // is a no-op (the plan was non-empty, but the poison vetoed it all).
+    if tasks.is_empty() {
+        return 0;
     }
 
     // This step does refresh work (the fast path handled the empty plan),
@@ -532,18 +564,30 @@ pub(crate) fn execute_step(
                         let mut gb = scratch.take(spec.rows, spec.cols);
                         run.grad.block_into(spec.r0, spec.c0, &mut gb);
                         if fl & RefreshPlan::GRAM != 0 {
-                            bs.gram_unit(Side::L, &gb, sc.step, sc.cfg, &mut scratch);
+                            bs.gram_unit(Side::L, &gb, sc.step, sc.cfg, &mut scratch, sc.ledger);
                         }
                         if fr & RefreshPlan::GRAM != 0 {
-                            bs.gram_unit(Side::R, &gb, sc.step, sc.cfg, &mut scratch);
+                            bs.gram_unit(Side::R, &gb, sc.step, sc.cfg, &mut scratch, sc.ledger);
                         }
                         scratch.recycle(gb);
                     }
+                    let forced = |side: Side| {
+                        sc.fault.is_some_and(|f| {
+                            f.forces_root_failure(
+                                sc.step,
+                                layer as u32,
+                                block as u32,
+                                side.index(),
+                            )
+                        })
+                    };
                     if fl & RefreshPlan::ROOT != 0 {
-                        bs.root_unit(Side::L, sc.step, sc.cfg, sc.ctx, &mut scratch);
+                        let fo = forced(Side::L);
+                        bs.root_unit(Side::L, sc.step, sc.cfg, sc.ctx, &mut scratch, fo, sc.ledger);
                     }
                     if fr & RefreshPlan::ROOT != 0 {
-                        bs.root_unit(Side::R, sc.step, sc.cfg, sc.ctx, &mut scratch);
+                        let fo = forced(Side::R);
+                        bs.root_unit(Side::R, sc.step, sc.cfg, sc.ctx, &mut scratch, fo, sc.ledger);
                     }
                 }
                 refresh_ns_ref.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);

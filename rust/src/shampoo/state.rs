@@ -21,8 +21,9 @@ use super::config::ShampooConfig;
 use crate::linalg::schur_newton::inverse_pth_root_scratch;
 use crate::linalg::{
     inner, inverse_pth_root_eig_planned, matmul_into_planned, matmul_tn_into_planned,
-    syrk_into_planned, Matrix, ScratchArena,
+    psd_clamped_root_planned, syrk_into_planned, Matrix, ScratchArena,
 };
+use crate::metrics::HealthLedger;
 use crate::quant::codec::{lookup, CodecBuilder, CodecCtx};
 use crate::quant::PrecondCodec;
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -48,6 +49,77 @@ impl Side {
     }
 }
 
+/// Which rung of the numerical-health fallback ladder served one root
+/// refresh. Returned by every `update_root`, mapped onto
+/// [`HealthLedger`] counters by `root_unit`.
+///
+/// The ladder, top to bottom:
+/// 1. [`Healthy`](FallbackOutcome::Healthy) — the Schur–Newton iteration
+///    converged; nothing exceptional happened.
+/// 2. [`JitterRescue`](FallbackOutcome::JitterRescue) — Schur–Newton
+///    diverged, but the trace-scaled-ridge eigendecomposition route
+///    (`+λmax·ε·I`, eigenvalue-clamped) produced a finite root.
+/// 3. [`PsdProjection`](FallbackOutcome::PsdProjection) — the ridged route
+///    was itself non-finite (NaN/Inf in the gram); the sanitized
+///    PSD-clamped projection ([`psd_clamped_root_planned`]) recovered a
+///    finite root.
+/// 4. [`StaleRoot`](FallbackOutcome::StaleRoot) — no fresh root could be
+///    computed (or a fault forced the failure); the last good cached root
+///    keeps serving.
+/// 5. [`DiagonalFloor`](FallbackOutcome::DiagonalFloor) — not even a stale
+///    root was available; the unit was floored to diagonal
+///    preconditioning from the gram's sanitized diagonal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FallbackOutcome {
+    Healthy,
+    JitterRescue,
+    PsdProjection,
+    StaleRoot,
+    DiagonalFloor,
+}
+
+impl FallbackOutcome {
+    /// Rungs 1–3 install a freshly computed root; rungs 4–5 only serve
+    /// previously known state — the distinction quarantine accounting
+    /// (consecutive-failure counting, probation release) keys on.
+    pub fn is_serving_fresh(self) -> bool {
+        matches!(
+            self,
+            FallbackOutcome::Healthy
+                | FallbackOutcome::JitterRescue
+                | FallbackOutcome::PsdProjection
+        )
+    }
+}
+
+/// Per-unit numerical-health state: consecutive-failure counting and the
+/// quarantine/probation machine. Persistent optimizer state (rides inside
+/// [`UnitMeta`], serialized with it) so a resumed run continues probation
+/// timing deterministically.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct UnitHealth {
+    /// Root refreshes in a row that fell to the stale/floor rungs. Reset
+    /// by any fresh-root outcome.
+    pub consecutive_failures: u32,
+    /// `step + 1` of the most recent quarantine entry (or probation
+    /// failure); 0 = not quarantined. Offset by one so step 0 state is
+    /// unambiguous.
+    pub quarantined_since: u64,
+    /// Total quarantine entries over the unit's lifetime.
+    pub quarantines: u32,
+    /// Total probation releases over the unit's lifetime.
+    pub releases: u32,
+}
+
+impl UnitHealth {
+    /// Exact byte footprint: failure counter + since-step + two counters.
+    pub const BYTES: usize = 4 + 8 + 4 + 4;
+
+    pub fn is_quarantined(&self) -> bool {
+        self.quarantined_since != 0
+    }
+}
+
 /// Per-unit refresh bookkeeping the scheduler decides from.
 ///
 /// These bytes are persistent optimizer state and are counted in
@@ -64,11 +136,14 @@ pub struct UnitMeta {
     pub pending_norm: f32,
     /// Total root refreshes of this unit (coverage-counter tests).
     pub refreshes: u32,
+    /// Quarantine / consecutive-failure state (guard engine).
+    pub health: UnitHealth,
 }
 
 impl UnitMeta {
-    /// Exact byte footprint: two `u64` steps + `f32` norm + `u32` counter.
-    pub const BYTES: usize = 8 + 8 + 4 + 4;
+    /// Exact byte footprint: two `u64` steps + `f32` norm + `u32` counter
+    /// + the health block.
+    pub const BYTES: usize = 8 + 8 + 4 + 4 + UnitHealth::BYTES;
 }
 
 /// Resolve a codec builder, falling back to a panic that names the key —
@@ -148,7 +223,21 @@ impl SideState {
         update_side(&mut *self.gram, gram, cfg, scratch);
     }
 
-    fn update_root(&mut self, cfg: &ShampooConfig, ctx: &CodecCtx, scratch: &mut ScratchArena) {
+    /// Recompute this unit's inverse root, descending the fallback ladder
+    /// as far as needed (see [`FallbackOutcome`] for the rungs). `forced`
+    /// simulates a hard factorization failure (deterministic fault
+    /// injection): the computation is skipped entirely and the unit drops
+    /// straight to the stale-root / floor rungs.
+    fn update_root(
+        &mut self,
+        cfg: &ShampooConfig,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+        forced: bool,
+    ) -> FallbackOutcome {
+        if forced {
+            return self.serve_stale_or_floor(cfg, ctx, scratch);
+        }
         let dim = self.dim;
         let mut precond = scratch.take(dim, dim);
         self.gram.load_into(&mut precond, scratch);
@@ -166,7 +255,7 @@ impl SideState {
         // magnitude.
         let lam0 = stats.lambda_max.max(0.0);
         let root_bound = 10.0 * ((lam0 * cfg.schur.eps).max(1e-10) as f64).powf(-0.25) as f32;
-        let x = if x.has_non_finite()
+        let (x, outcome) = if x.has_non_finite()
             || !stats.residual.is_finite()
             || stats.residual > 0.1
             || crate::linalg::max_abs(&x) > root_bound
@@ -174,39 +263,118 @@ impl SideState {
             // Exceptional path — allocation here is acceptable, but the
             // ridged copy and the matmul plan still come from the arena.
             scratch.recycle(x);
-            let mut ridged = scratch.take(dim, dim);
-            ridged.copy_from(&precond);
             let lam = stats.lambda_max.max(0.0);
-            ridged.add_diag(lam * cfg.schur.eps);
             // Clamp at λmax·1e-4 (not the ε ridge): quantization-created
             // negative directions would otherwise get ~(1e-6)^{-1/4} ≈
             // 30× amplification and swamp the true curvature signal.
-            let eig = inverse_pth_root_eig_planned(
-                &ridged,
-                cfg.schur.p as f64,
-                (lam * 1e-4).max(1e-10),
-                scratch.plan(),
-            );
-            scratch.recycle(ridged);
-            eig
+            let clamp = (lam * 1e-4).max(1e-10);
+            // The ridge rung feeds the gram to the eigensolver as-is, so
+            // it is only defined for finite grams (the Jacobi sweep's
+            // eigenvalue sort is not total over NaN); non-finite grams
+            // skip straight to the sanitized projection rung.
+            let rescued = if precond.has_non_finite() {
+                None
+            } else {
+                let mut ridged = scratch.take(dim, dim);
+                ridged.copy_from(&precond);
+                ridged.add_diag(lam * cfg.schur.eps);
+                let eig = inverse_pth_root_eig_planned(
+                    &ridged,
+                    cfg.schur.p as f64,
+                    clamp,
+                    scratch.plan(),
+                );
+                scratch.recycle(ridged);
+                if eig.has_non_finite() {
+                    scratch.recycle(eig);
+                    None
+                } else {
+                    Some(eig)
+                }
+            };
+            if let Some(eig) = rescued {
+                (eig, FallbackOutcome::JitterRescue)
+            } else {
+                let psd = psd_clamped_root_planned(
+                    &precond,
+                    cfg.schur.p as f64,
+                    clamp,
+                    scratch.plan(),
+                );
+                if !psd.has_non_finite() {
+                    (psd, FallbackOutcome::PsdProjection)
+                } else {
+                    scratch.recycle(psd);
+                    scratch.recycle(precond);
+                    return self.serve_stale_or_floor(cfg, ctx, scratch);
+                }
+            }
         } else {
-            x
+            (x, FallbackOutcome::Healthy)
         };
+        self.rebind_and_store(&x, cfg, ctx, scratch);
+        scratch.recycle(x);
+        scratch.recycle(precond);
+        outcome
+    }
+
+    /// Rungs 4–5 of the ladder: keep the last good cached root if it is
+    /// finite, otherwise install the diagonal floor.
+    fn serve_stale_or_floor(
+        &mut self,
+        cfg: &ShampooConfig,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+    ) -> FallbackOutcome {
+        if self.cache.has_non_finite() {
+            self.install_floor(cfg, ctx, scratch);
+            FallbackOutcome::DiagonalFloor
+        } else {
+            FallbackOutcome::StaleRoot
+        }
+    }
+
+    /// Install the diagonal floor `L̂ ← diag((d_i + ε)^{-1/p})` from the
+    /// gram's sanitized diagonal — the ladder's last rung and the
+    /// quarantine serving state. Stored through the root codec so a
+    /// checkpoint round-trips the floored unit like any other.
+    fn install_floor(&mut self, cfg: &ShampooConfig, ctx: &CodecCtx, scratch: &mut ScratchArena) {
+        let dim = self.dim;
+        let mut gram = scratch.take(dim, dim);
+        self.gram.load_into(&mut gram, scratch);
+        let floor = Matrix::from_fn(dim, dim, |i, j| {
+            if i != j {
+                return 0.0;
+            }
+            let d = gram[(i, i)];
+            let d = if d.is_finite() && d > 0.0 { d } else { 0.0 };
+            ((d + cfg.eps) as f64).powf(-1.0 / cfg.schur.p as f64) as f32
+        });
+        scratch.recycle(gram);
+        self.rebind_and_store(&floor, cfg, ctx, scratch);
+        scratch.recycle(floor);
+    }
+
+    /// Bind the root slot to the configured codec (first refresh switches
+    /// it off its f32 init; afterwards the SAME codec instance is reused so
+    /// stateful root codecs keep their state across refreshes), store `x`,
+    /// and rebuild the dequantized cache.
+    fn rebind_and_store(
+        &mut self,
+        x: &Matrix,
+        cfg: &ShampooConfig,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+    ) {
         let configured = cfg.root_codec_key();
-        let quantize = configured != "f32" && dim * dim >= cfg.quant.min_quant_elems;
+        let quantize = configured != "f32" && self.dim * self.dim >= cfg.quant.min_quant_elems;
         let key = if quantize { configured } else { "f32" };
-        // Slots start f32 (L̂₀ = I exactly) and switch representation at
-        // the first refresh; after that the SAME codec instance is
-        // reused so stateful root codecs (e.g. EF-based ones reached
-        // via `root_codec` overrides) keep their state across refreshes.
         if self.root_key != key {
             self.root = (builder(key).root)(ctx);
             self.root_key = key;
         }
-        self.root.store_into(&x, scratch);
+        self.root.store_into(x, scratch);
         self.root.load_into(&mut self.cache, scratch);
-        scratch.recycle(x);
-        scratch.recycle(precond);
     }
 
     pub(crate) fn cache(&self) -> &Matrix {
@@ -229,6 +397,10 @@ impl SideState {
         out.put_u64(self.meta.last_root);
         out.put_f32(self.meta.pending_norm);
         out.put_u32(self.meta.refreshes);
+        out.put_u32(self.meta.health.consecutive_failures);
+        out.put_u64(self.meta.health.quarantined_since);
+        out.put_u32(self.meta.health.quarantines);
+        out.put_u32(self.meta.health.releases);
     }
 
     /// Inverse of [`SideState::write_state`] on a freshly built unit: the
@@ -254,6 +426,10 @@ impl SideState {
         self.meta.last_root = r.get_u64()?;
         self.meta.pending_norm = r.get_f32()?;
         self.meta.refreshes = r.get_u32()?;
+        self.meta.health.consecutive_failures = r.get_u32()?;
+        self.meta.health.quarantined_since = r.get_u64()?;
+        self.meta.health.quarantines = r.get_u32()?;
+        self.meta.health.releases = r.get_u32()?;
         self.root.load_into(&mut self.cache, scratch);
         Ok(())
     }
@@ -283,6 +459,12 @@ impl BlockState {
     /// One refresh unit's Gram EMA update: extract nothing — `gb` is the
     /// already-extracted gradient block. Records `last_gram` and accumulates
     /// the pending-update norm the `Staleness` policy weighs.
+    ///
+    /// Guard screens run at two points: a non-finite gradient block and a
+    /// non-finite gram product (finite-but-huge gradients can overflow
+    /// `G·Gᵀ` to Inf) each skip the update — counted on `ledger`, no codec
+    /// or EF state is touched and no metadata advances, so the poisoned
+    /// step simply never happened for this unit.
     pub(crate) fn gram_unit(
         &mut self,
         side: Side,
@@ -290,7 +472,12 @@ impl BlockState {
         step: u64,
         cfg: &ShampooConfig,
         scratch: &mut ScratchArena,
+        ledger: &HealthLedger,
     ) {
+        if gb.has_non_finite() {
+            ledger.grad_screened();
+            return;
+        }
         let dim = match side {
             Side::L => gb.rows(),
             Side::R => gb.cols(),
@@ -299,6 +486,11 @@ impl BlockState {
         match side {
             Side::L => syrk_into_planned(gb, &mut gram, scratch.plan()), // G·Gᵀ
             Side::R => matmul_tn_into_planned(gb, gb, &mut gram, scratch.plan()), // Gᵀ·G
+        }
+        if gram.has_non_finite() {
+            ledger.grad_screened();
+            scratch.recycle(gram);
+            return;
         }
         let s = &mut self.sides[side.index()];
         s.update_gram(&gram, cfg, scratch);
@@ -309,6 +501,18 @@ impl BlockState {
 
     /// One refresh unit's inverse-root recomputation; resets the pending
     /// norm and bumps the coverage counter.
+    ///
+    /// The quarantine machine wraps the fallback ladder:
+    /// * A quarantined unit inside its probation window is served from the
+    ///   installed floor without attempting a refresh.
+    /// * Once the window elapses the unit gets one full refresh attempt —
+    ///   a fresh-root outcome releases it, a stale/floor outcome resets
+    ///   the probation timer.
+    /// * A healthy unit that fails [`ShampooConfig::quarantine_after`]
+    ///   consecutive times is quarantined and floored.
+    ///
+    /// `forced` simulates a hard factorization failure for this attempt
+    /// (deterministic fault injection).
     pub(crate) fn root_unit(
         &mut self,
         side: Side,
@@ -316,9 +520,49 @@ impl BlockState {
         cfg: &ShampooConfig,
         ctx: &CodecCtx,
         scratch: &mut ScratchArena,
+        forced: bool,
+        ledger: &HealthLedger,
     ) {
         let s = &mut self.sides[side.index()];
-        s.update_root(cfg, ctx, scratch);
+        let health = s.meta.health;
+        if health.is_quarantined()
+            && step.saturating_sub(health.quarantined_since - 1) < cfg.probation_interval
+        {
+            // Floor-serving window: no refresh attempt, no refresh count —
+            // the schedule slot is consumed so the scheduler moves on.
+            ledger.floor_serve();
+            s.meta.last_root = step;
+            s.meta.pending_norm = 0.0;
+            return;
+        }
+        let outcome = s.update_root(cfg, ctx, scratch, forced);
+        match outcome {
+            FallbackOutcome::Healthy => {}
+            FallbackOutcome::JitterRescue => ledger.jitter_rescue(),
+            FallbackOutcome::PsdProjection => ledger.psd_projection(),
+            FallbackOutcome::StaleRoot => ledger.stale_root_serve(),
+            FallbackOutcome::DiagonalFloor => ledger.floor_serve(),
+        }
+        let h = &mut s.meta.health;
+        if outcome.is_serving_fresh() {
+            if h.is_quarantined() {
+                h.quarantined_since = 0;
+                h.releases += 1;
+                ledger.release();
+            }
+            h.consecutive_failures = 0;
+        } else {
+            h.consecutive_failures += 1;
+            if h.is_quarantined() {
+                // Probation failed: restart the window, not a new entry.
+                h.quarantined_since = step + 1;
+            } else if h.consecutive_failures >= cfg.quarantine_after {
+                h.quarantined_since = step + 1;
+                h.quarantines += 1;
+                ledger.quarantine();
+                s.install_floor(cfg, ctx, scratch);
+            }
+        }
         s.meta.last_root = step;
         s.meta.pending_norm = 0.0;
         s.meta.refreshes += 1;
@@ -344,7 +588,9 @@ impl BlockState {
         scratch: &mut ScratchArena,
     ) {
         for side in &mut self.sides {
-            side.update_root(cfg, ctx, scratch);
+            // Legacy oracle path: ladder outcomes are not health-tracked
+            // here (metadata stays untouched, matching `update_gram`).
+            side.update_root(cfg, ctx, scratch, false);
         }
     }
 
@@ -685,14 +931,15 @@ mod tests {
         let mut a = BlockState::new(12, 8, &c, &cctx);
         let mut b = BlockState::new(12, 8, &c, &cctx);
         let mut scratch = ScratchArena::new();
+        let ledger = HealthLedger::new();
         for step in 1..=4u64 {
             let g = Matrix::randn(12, 8, 0.5, &mut rng);
             a.update_gram(&g, &c, &mut scratch);
             a.update_inv_roots(&c, &cctx, &mut scratch);
-            b.gram_unit(Side::L, &g, step, &c, &mut scratch);
-            b.gram_unit(Side::R, &g, step, &c, &mut scratch);
-            b.root_unit(Side::L, step, &c, &cctx, &mut scratch);
-            b.root_unit(Side::R, step, &c, &cctx, &mut scratch);
+            b.gram_unit(Side::L, &g, step, &c, &mut scratch, &ledger);
+            b.gram_unit(Side::R, &g, step, &c, &mut scratch, &ledger);
+            b.root_unit(Side::L, step, &c, &cctx, &mut scratch, false, &ledger);
+            b.root_unit(Side::R, step, &c, &cctx, &mut scratch, false, &ledger);
             for s in Side::BOTH {
                 assert_eq!(a.side(s).cache.max_abs_diff(&b.side(s).cache), 0.0);
             }
@@ -716,11 +963,12 @@ mod tests {
         let mut scratch = ScratchArena::new();
         let g = Matrix::randn(6, 6, 1.0, &mut rng);
         let g2 = inner(&g, &g) as f32;
-        block.gram_unit(Side::L, &g, 1, &c, &mut scratch);
-        block.gram_unit(Side::L, &g, 2, &c, &mut scratch);
+        let ledger = HealthLedger::new();
+        block.gram_unit(Side::L, &g, 1, &c, &mut scratch, &ledger);
+        block.gram_unit(Side::L, &g, 2, &c, &mut scratch, &ledger);
         let meta = block.side(Side::L).meta;
         assert!((meta.pending_norm - 2.0 * g2).abs() < 1e-3 * g2.abs());
-        block.root_unit(Side::L, 3, &c, &cctx, &mut scratch);
+        block.root_unit(Side::L, 3, &c, &cctx, &mut scratch, false, &ledger);
         assert_eq!(block.side(Side::L).meta.pending_norm, 0.0);
         assert_eq!(block.side(Side::L).meta.last_root, 3);
     }
@@ -793,5 +1041,200 @@ mod tests {
         let cctx = ctx(&c);
         let layer = LayerState::new(16, 16, &c, &cctx);
         assert_eq!(layer.blocks[0].side(Side::L).gram.key(), "bw8");
+    }
+
+    // ---- fallback-ladder rungs ---------------------------------------
+
+    #[test]
+    fn ladder_rung_jitter_rescue_on_indefinite_gram() {
+        // Eigenvalues {3, −1}: Schur–Newton provably diverges on the
+        // negative direction, the ridged eigendecomposition rescues.
+        let c = cfg(ShampooVariant::Full32);
+        let cctx = ctx(&c);
+        let mut side = SideState::new(2, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        side.gram.store(&Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]));
+        let outcome = side.update_root(&c, &cctx, &mut scratch, false);
+        assert_eq!(outcome, FallbackOutcome::JitterRescue);
+        assert!(!side.cache.has_non_finite());
+    }
+
+    #[test]
+    fn ladder_rung_psd_projection_on_non_finite_gram() {
+        // NaN off-diagonals poison Schur–Newton AND make the ridge rung
+        // undefined (the eigensolver can't order NaN); the sanitized
+        // projection sees diag(2) and serves 2^{-1/4}·I.
+        let c = cfg(ShampooVariant::Full32);
+        let cctx = ctx(&c);
+        let mut side = SideState::new(2, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        let mut bad = Matrix::from_rows(&[&[2.0, 0.0], &[0.0, 2.0]]);
+        bad[(0, 1)] = f32::NAN;
+        bad[(1, 0)] = f32::NAN;
+        side.gram.store(&bad);
+        let outcome = side.update_root(&c, &cctx, &mut scratch, false);
+        assert_eq!(outcome, FallbackOutcome::PsdProjection);
+        assert!(!side.cache.has_non_finite());
+        let want = 2.0f32.powf(-0.25);
+        assert!((side.cache[(0, 0)] - want).abs() < 1e-4);
+        assert!(side.cache[(0, 1)].abs() < 1e-4);
+    }
+
+    #[test]
+    fn ladder_rung_stale_root_keeps_last_good_cache() {
+        let c = cfg(ShampooVariant::Full32);
+        let cctx = ctx(&c);
+        let mut side = SideState::new(2, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        side.gram.store(&Matrix::eye_scaled(2, 2.0));
+        assert_eq!(
+            side.update_root(&c, &cctx, &mut scratch, false),
+            FallbackOutcome::Healthy
+        );
+        let snapshot = side.cache.clone();
+        // Forced factorization failure: the finite cached root is served.
+        let outcome = side.update_root(&c, &cctx, &mut scratch, true);
+        assert_eq!(outcome, FallbackOutcome::StaleRoot);
+        assert_eq!(side.cache.max_abs_diff(&snapshot), 0.0);
+    }
+
+    #[test]
+    fn ladder_rung_diagonal_floor_when_cache_is_poisoned() {
+        let c = cfg(ShampooVariant::Full32);
+        let cctx = ctx(&c);
+        let mut side = SideState::new(2, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        side.gram.store(&Matrix::eye_scaled(2, 2.0));
+        side.update_root(&c, &cctx, &mut scratch, false);
+        // Poisoned cache + failed refresh: nothing left to serve but the
+        // diagonal floor built from the gram's sanitized diagonal.
+        side.cache[(0, 0)] = f32::NAN;
+        let outcome = side.update_root(&c, &cctx, &mut scratch, true);
+        assert_eq!(outcome, FallbackOutcome::DiagonalFloor);
+        assert!(!side.cache.has_non_finite());
+        let want = ((2.0f64 + c.eps as f64).powf(-0.25)) as f32;
+        assert!((side.cache[(0, 0)] - want).abs() < 1e-6);
+        assert_eq!(side.cache[(0, 1)], 0.0);
+    }
+
+    // ---- screening + quarantine machine ------------------------------
+
+    #[test]
+    fn gram_unit_screens_overflowing_product() {
+        // Finite but huge gradients overflow G·Gᵀ to Inf — the unit's
+        // codec/EF state and metadata must stay untouched.
+        let c = cfg(ShampooVariant::Full32);
+        let cctx = ctx(&c);
+        let mut block = BlockState::new(2, 2, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        let ledger = HealthLedger::new();
+        let before = block.side(Side::L).gram.load();
+        let huge = Matrix::from_fn(2, 2, |_, _| 1e20);
+        block.gram_unit(Side::L, &huge, 1, &c, &mut scratch, &ledger);
+        assert_eq!(block.side(Side::L).gram.load().max_abs_diff(&before), 0.0);
+        assert_eq!(block.side(Side::L).meta.last_gram, 0);
+        assert_eq!(block.side(Side::L).meta.pending_norm, 0.0);
+        let stats = ledger.take();
+        assert_eq!(stats.grads_screened, 1);
+        // Direct NaN gradients are screened by the same guard.
+        let mut nan_g = Matrix::zeros(2, 2);
+        nan_g[(1, 1)] = f32::NAN;
+        block.gram_unit(Side::L, &nan_g, 2, &c, &mut scratch, &ledger);
+        assert_eq!(ledger.take().grads_screened, 1);
+        assert_eq!(block.side(Side::L).meta.last_gram, 0);
+    }
+
+    #[test]
+    fn quarantine_locks_after_k_failures_and_releases_on_probation() {
+        let mut c = cfg(ShampooVariant::Full32);
+        c.quarantine_after = 2;
+        c.probation_interval = 3;
+        let cctx = ctx(&c);
+        let mut block = BlockState::new(2, 2, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        let ledger = HealthLedger::new();
+        block.gram_unit(Side::L, &Matrix::eye(2), 1, &c, &mut scratch, &ledger);
+        // Steps 1–2: forced failures → stale roots → quarantine at K=2.
+        block.root_unit(Side::L, 1, &c, &cctx, &mut scratch, true, &ledger);
+        assert!(!block.side(Side::L).meta.health.is_quarantined());
+        block.root_unit(Side::L, 2, &c, &cctx, &mut scratch, true, &ledger);
+        let h = block.side(Side::L).meta.health;
+        assert!(h.is_quarantined());
+        assert_eq!(h.quarantines, 1);
+        assert_eq!(h.consecutive_failures, 2);
+        // Steps 3–4: inside the probation window — floor-served, no refresh
+        // attempt, refresh counter does not advance.
+        let refreshes_before = block.side(Side::L).meta.refreshes;
+        block.root_unit(Side::L, 3, &c, &cctx, &mut scratch, false, &ledger);
+        block.root_unit(Side::L, 4, &c, &cctx, &mut scratch, false, &ledger);
+        assert_eq!(block.side(Side::L).meta.refreshes, refreshes_before);
+        assert!(block.side(Side::L).meta.health.is_quarantined());
+        // Step 5: window elapsed → probation attempt on the healthy gram
+        // succeeds → released.
+        block.root_unit(Side::L, 5, &c, &cctx, &mut scratch, false, &ledger);
+        let h = block.side(Side::L).meta.health;
+        assert!(!h.is_quarantined());
+        assert_eq!(h.releases, 1);
+        assert_eq!(h.consecutive_failures, 0);
+        assert!(!block.side(Side::L).cache.has_non_finite());
+        let stats = ledger.take();
+        assert_eq!(stats.stale_root_serves, 2);
+        assert_eq!(stats.floor_serves, 2);
+        assert_eq!(stats.quarantines, 1);
+        assert_eq!(stats.releases, 1);
+        assert_eq!(stats.grads_screened, 0);
+    }
+
+    #[test]
+    fn failed_probation_restarts_window_without_new_quarantine() {
+        let mut c = cfg(ShampooVariant::Full32);
+        c.quarantine_after = 1;
+        c.probation_interval = 2;
+        let cctx = ctx(&c);
+        let mut block = BlockState::new(2, 2, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        let ledger = HealthLedger::new();
+        block.gram_unit(Side::L, &Matrix::eye(2), 1, &c, &mut scratch, &ledger);
+        block.root_unit(Side::L, 1, &c, &cctx, &mut scratch, true, &ledger);
+        assert_eq!(block.side(Side::L).meta.health.quarantined_since, 2);
+        // Step 3: probation attempt also forced to fail — the window
+        // restarts but `quarantines` does not double-count.
+        block.root_unit(Side::L, 3, &c, &cctx, &mut scratch, true, &ledger);
+        let h = block.side(Side::L).meta.health;
+        assert!(h.is_quarantined());
+        assert_eq!(h.quarantined_since, 4);
+        assert_eq!(h.quarantines, 1);
+        assert_eq!(h.releases, 0);
+    }
+
+    #[test]
+    fn unit_health_round_trips_through_state_serialization() {
+        let c = cfg(ShampooVariant::Cq4 { error_feedback: true });
+        let cctx = ctx(&c);
+        let mut rng = Rng::new(9);
+        let mut side = SideState::new(6, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        side.update_gram(&syrk(&Matrix::randn(6, 6, 1.0, &mut rng)), &c, &mut scratch);
+        side.update_root(&c, &cctx, &mut scratch, false);
+        side.meta.health = UnitHealth {
+            consecutive_failures: 2,
+            quarantined_since: 41,
+            quarantines: 3,
+            releases: 1,
+        };
+        let mut w = ByteWriter::new();
+        side.write_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut fresh = SideState::new(6, &c, &cctx);
+        fresh
+            .read_state(&mut ByteReader::new(&bytes), &cctx, &mut scratch)
+            .unwrap();
+        assert_eq!(fresh.meta, side.meta);
+        assert_eq!(fresh.cache.max_abs_diff(&side.cache), 0.0);
+        // Truncated input errors instead of panicking.
+        let mut fresh2 = SideState::new(6, &c, &cctx);
+        assert!(fresh2
+            .read_state(&mut ByteReader::new(&bytes[..bytes.len() - 2]), &cctx, &mut scratch)
+            .is_err());
     }
 }

@@ -68,6 +68,17 @@ impl OptimizerStack {
     pub fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
         self.0.restore_state(r)
     }
+
+    /// Install (or clear) a deterministic fault-injection plan on the boxed
+    /// optimizer — a no-op for optimizers without a refresh pipeline.
+    pub fn set_fault_plan(&mut self, plan: Option<&crate::util::fault::FaultPlan>) {
+        self.0.set_fault_plan(plan);
+    }
+
+    /// Cumulative numerical-health counters from the boxed optimizer.
+    pub fn health_stats(&self) -> crate::metrics::HealthStats {
+        self.0.health_stats()
+    }
 }
 
 impl From<Box<dyn Optimizer>> for OptimizerStack {

@@ -79,6 +79,7 @@ pub fn train_synthetic(
     let targets = spec.targets(cfg.seed);
     let mut params = spec.init_params(cfg.seed);
     opt.init(params.len());
+    opt.set_fault_plan(cfg.faults.as_ref());
 
     let mut opt_time = Stopwatch::new();
     let mut loss_curve = Vec::new();
@@ -90,7 +91,7 @@ pub fn train_synthetic(
     let run_start = Instant::now();
     for k in base.start_step + 1..=cfg.steps {
         let loss = quadratic_loss(&params, &targets);
-        let grads: Vec<Matrix> = params
+        let mut grads: Vec<Matrix> = params
             .iter()
             .zip(targets.iter())
             .map(|(w, t)| {
@@ -101,6 +102,12 @@ pub fn train_synthetic(
                 g
             })
             .collect();
+        // Fault injection is a pure function of (plan, step) — it consumes
+        // nothing from the RNG stream, so a resumed run replays the exact
+        // same corruption schedule.
+        if let Some(fp) = &cfg.faults {
+            fp.corrupt_grads(k, &mut grads);
+        }
 
         let lr_scale = cfg.schedule.scale(k - 1);
         opt_time.time(|| opt.step(&mut params, &grads, k, lr_scale));
@@ -140,6 +147,7 @@ pub fn train_synthetic(
         state_bytes: opt.state_bytes(),
         wall_secs: base.wall_secs + run_start.elapsed().as_secs_f64(),
         opt_secs: base.opt_secs + opt_time.total_secs(),
+        health: opt.health_stats(),
     })
 }
 
@@ -153,6 +161,7 @@ pub fn final_params_synthetic(
     let targets = spec.targets(cfg.seed);
     let mut params = spec.init_params(cfg.seed);
     opt.init(params.len());
+    opt.set_fault_plan(cfg.faults.as_ref());
     let mut loss_curve = Vec::new();
     let mut eval_curve = Vec::new();
     let mut rng = Rng::new(cfg.seed ^ 0xBA7C);
@@ -160,7 +169,7 @@ pub fn final_params_synthetic(
         resume_or_start(cfg, &mut params, &mut opt, &mut rng, &mut loss_curve, &mut eval_curve)?;
     let run_start = Instant::now();
     for k in base.start_step + 1..=cfg.steps {
-        let grads: Vec<Matrix> = params
+        let mut grads: Vec<Matrix> = params
             .iter()
             .zip(targets.iter())
             .map(|(w, t)| {
@@ -171,6 +180,9 @@ pub fn final_params_synthetic(
                 g
             })
             .collect();
+        if let Some(fp) = &cfg.faults {
+            fp.corrupt_grads(k, &mut grads);
+        }
         let lr_scale = cfg.schedule.scale(k - 1);
         opt.step(&mut params, &grads, k, lr_scale);
         if should_checkpoint(cfg, k) {

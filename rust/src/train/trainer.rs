@@ -87,6 +87,14 @@ pub struct TrainConfig {
     /// ([`crate::persist::spec_hash`]) — guards against resuming a
     /// different run's state.
     pub spec_hash: u64,
+    /// Deterministic fault-injection plan (chaos testing): corrupts chosen
+    /// gradients, forces factorization failures inside the optimizer, and
+    /// bit-flips chosen checkpoints. `None` (the default) is the guaranteed
+    /// bit-identical production path.
+    pub faults: Option<crate::util::fault::FaultPlan>,
+    /// Retention: after each checkpoint write, delete all but the newest
+    /// `keep_checkpoints` snapshots (0 = keep everything).
+    pub keep_checkpoints: usize,
 }
 
 impl Default for TrainConfig {
@@ -100,6 +108,8 @@ impl Default for TrainConfig {
             checkpoint_every: 0,
             checkpoint_dir: None,
             spec_hash: 0,
+            faults: None,
+            keep_checkpoints: 0,
         }
     }
 }
@@ -121,6 +131,9 @@ pub struct RunMetrics {
     pub wall_secs: f64,
     /// Seconds inside the optimizer (the paper's "update time" column).
     pub opt_secs: f64,
+    /// Numerical-health counters accumulated by the optimizer's guard
+    /// engine (all-zero for optimizers without one, and on healthy runs).
+    pub health: crate::metrics::HealthStats,
 }
 
 /// What a resumed run inherits: completed steps and time already spent.
@@ -212,7 +225,23 @@ pub(crate) fn checkpoint_now(
         wall_secs,
         opt_secs,
     };
-    st.save(dir, cfg.spec_hash)?;
+    let path = st.save(dir, cfg.spec_hash)?;
+    // Chaos hook: flip one deterministic bit in the freshly written file —
+    // the CRC then rejects it on resume and the newest-valid scan must fall
+    // back to the previous snapshot.
+    if let Some(fp) = &cfg.faults {
+        if fp.flips_checkpoint(k) {
+            let mut bytes = std::fs::read(&path)
+                .with_context(|| format!("chaos-reading {}", path.display()))?;
+            if !bytes.is_empty() {
+                let (pos, mask) = fp.flip_position(k, bytes.len());
+                bytes[pos] ^= mask;
+                std::fs::write(&path, &bytes)
+                    .with_context(|| format!("chaos-writing {}", path.display()))?;
+            }
+        }
+    }
+    crate::persist::prune_checkpoints(dir, cfg.keep_checkpoints);
     Ok(())
 }
 
@@ -238,6 +267,7 @@ pub fn train_classifier(
     let batch = model.batch;
     let mut params = init_params(model, cfg.seed);
     opt.init(params.len());
+    opt.set_fault_plan(cfg.faults.as_ref());
 
     let mut opt_time = Stopwatch::new();
     let mut loss_curve = Vec::new();
@@ -267,11 +297,14 @@ pub fn train_classifier(
 
         let outputs = rt.execute(&fwd_bwd, &inputs).context("fwd_bwd execution")?;
         let loss = literal_to_scalar_f32(&outputs[0])?;
-        let grads: Vec<Matrix> = outputs[1..]
+        let mut grads: Vec<Matrix> = outputs[1..]
             .iter()
             .zip(params.iter())
             .map(|(l, p)| literal_to_matrix(l, p.rows(), p.cols()))
             .collect::<Result<_>>()?;
+        if let Some(fp) = &cfg.faults {
+            fp.corrupt_grads(k, &mut grads);
+        }
 
         let lr_scale = cfg.schedule.scale(k - 1);
         opt_time.time(|| opt.step(&mut params, &grads, k, lr_scale));
@@ -309,6 +342,7 @@ pub fn train_classifier(
         state_bytes: opt.state_bytes(),
         wall_secs: base.wall_secs + run_start.elapsed().as_secs_f64(),
         opt_secs: base.opt_secs + opt_time.total_secs(),
+        health: opt.health_stats(),
     })
 }
 
@@ -357,6 +391,7 @@ pub fn train_lm(
     let fwd_bwd = format!("{}.fwd_bwd", model.name);
     let mut params = init_params(model, cfg.seed);
     opt.init(params.len());
+    opt.set_fault_plan(cfg.faults.as_ref());
 
     // Hold out the corpus tail for eval.
     let split = corpus.tokens.len() * 9 / 10;
@@ -385,11 +420,14 @@ pub fn train_lm(
 
         let outputs = rt.execute(&fwd_bwd, &inputs)?;
         let loss = literal_to_scalar_f32(&outputs[0])?;
-        let grads: Vec<Matrix> = outputs[1..]
+        let mut grads: Vec<Matrix> = outputs[1..]
             .iter()
             .zip(params.iter())
             .map(|(l, p)| literal_to_matrix(l, p.rows(), p.cols()))
             .collect::<Result<_>>()?;
+        if let Some(fp) = &cfg.faults {
+            fp.corrupt_grads(k, &mut grads);
+        }
 
         let lr_scale = cfg.schedule.scale(k - 1);
         opt_time.time(|| opt.step(&mut params, &grads, k, lr_scale));
@@ -426,6 +464,7 @@ pub fn train_lm(
         state_bytes: opt.state_bytes(),
         wall_secs: base.wall_secs + run_start.elapsed().as_secs_f64(),
         opt_secs: base.opt_secs + opt_time.total_secs(),
+        health: opt.health_stats(),
     })
 }
 

@@ -1,0 +1,232 @@
+//! Deterministic fault injection for the numerical-health guard engine.
+//!
+//! A [`FaultPlan`] is a *pure schedule*: every query is a function of the
+//! plan's seed, the step number, and (for unit-level faults) the unit
+//! coordinates — no global RNG stream is consumed, so injecting faults
+//! never perturbs the trainer's own `seed ^ 0xBA7C` draw sequence and a
+//! resumed run replays the exact same faults. Tests and the chaos smoke
+//! compute the *expected* health counters by replaying these same pure
+//! functions against the known refresh cadence.
+//!
+//! Fault kinds:
+//! * NaN / Inf gradient injection ([`FaultPlan::corrupt_grads`]) — one
+//!   element of one layer, both chosen by a seeded hash of the step.
+//! * Forced factorization failure ([`FaultPlan::forces_root_failure`]) —
+//!   the refresh executor treats the chosen units' root refresh as failed,
+//!   driving the fallback ladder / quarantine machinery.
+//! * Checkpoint bit-flips ([`FaultPlan::flips_checkpoint`]) — one bit of
+//!   the just-written snapshot, exercising the CRC fallback scan.
+
+use crate::linalg::Matrix;
+
+/// Which non-finite value a gradient fault injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Nan,
+    Inf,
+}
+
+/// A seeded, fully deterministic fault schedule. All `*_every` cadences are
+/// step-periodic (0 disables that fault kind); `until_step` bounds the
+/// whole plan so soak tests can stop injecting and verify recovery.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Hash seed for element / unit / bit-position choices.
+    pub seed: u64,
+    /// Inject a NaN gradient element every N steps (0 = never).
+    pub nan_grad_every: u64,
+    /// Inject an Inf gradient element every N steps (0 = never; NaN wins
+    /// when both cadences hit the same step).
+    pub inf_grad_every: u64,
+    /// Force root-refresh failure every N steps (0 = never).
+    pub force_fail_every: u64,
+    /// On a forced-failure step, fail roughly one unit in N (1 = every
+    /// unit; chosen by a seeded hash of the unit coordinates).
+    pub fail_one_in: u64,
+    /// Flip one bit of the checkpoint written at every N-th step (0 = never).
+    pub ckpt_flip_every: u64,
+    /// Last step (inclusive) at which any fault fires; 0 = no bound.
+    pub until_step: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            nan_grad_every: 0,
+            inf_grad_every: 0,
+            force_fail_every: 0,
+            fail_one_in: 1,
+            ckpt_flip_every: 0,
+            until_step: 0,
+        }
+    }
+}
+
+/// SplitMix64 finalizer — the hash behind every deterministic choice.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// Whether any fault may fire at `step`.
+    pub fn active(&self, step: u64) -> bool {
+        self.until_step == 0 || step <= self.until_step
+    }
+
+    fn hash(&self, step: u64, salt: u64) -> u64 {
+        mix(self.seed ^ mix(step) ^ mix(salt))
+    }
+
+    /// The gradient fault scheduled for `step`, if any.
+    pub fn grad_fault(&self, step: u64) -> Option<FaultKind> {
+        if !self.active(step) || step == 0 {
+            return None;
+        }
+        if self.nan_grad_every > 0 && step % self.nan_grad_every == 0 {
+            return Some(FaultKind::Nan);
+        }
+        if self.inf_grad_every > 0 && step % self.inf_grad_every == 0 {
+            return Some(FaultKind::Inf);
+        }
+        None
+    }
+
+    /// The (layer, element) a step's gradient fault poisons — pure so the
+    /// soak tests can predict exactly which layer absorbs each fault.
+    pub fn grad_target(&self, step: u64, n_layers: usize) -> Option<usize> {
+        if n_layers == 0 {
+            return None;
+        }
+        self.grad_fault(step).map(|_| (self.hash(step, 0x6AD) as usize) % n_layers)
+    }
+
+    /// Overwrite one element of one gradient with the scheduled non-finite
+    /// value (no-op when `step` has no gradient fault).
+    pub fn corrupt_grads(&self, step: u64, grads: &mut [Matrix]) {
+        let Some(kind) = self.grad_fault(step) else { return };
+        let Some(layer) = self.grad_target(step, grads.len()) else { return };
+        let g = &mut grads[layer];
+        let n = g.rows() * g.cols();
+        if n == 0 {
+            return;
+        }
+        let idx = (self.hash(step, 0xE1E) as usize) % n;
+        g.data_mut()[idx] = match kind {
+            FaultKind::Nan => f32::NAN,
+            FaultKind::Inf => f32::INFINITY,
+        };
+    }
+
+    /// Whether the refresh of unit `(layer, block, side)` at `step` must be
+    /// treated as a failed factorization.
+    pub fn forces_root_failure(&self, step: u64, layer: u32, block: u32, side: usize) -> bool {
+        if self.force_fail_every == 0 || !self.active(step) || step == 0 {
+            return false;
+        }
+        if step % self.force_fail_every != 0 {
+            return false;
+        }
+        let one_in = self.fail_one_in.max(1);
+        let unit = ((layer as u64) << 40) | ((block as u64) << 8) | side as u64;
+        self.hash(step, unit) % one_in == 0
+    }
+
+    /// Whether the checkpoint written after `step` gets one bit flipped.
+    pub fn flips_checkpoint(&self, step: u64) -> bool {
+        self.ckpt_flip_every > 0
+            && self.active(step)
+            && step > 0
+            && step % self.ckpt_flip_every == 0
+    }
+
+    /// Which bit of a `len`-byte checkpoint file to flip (byte · 8 + bit).
+    pub fn flip_position(&self, step: u64, len: usize) -> (usize, u8) {
+        let h = self.hash(step, 0xF11);
+        let byte = if len == 0 { 0 } else { (h as usize) % len };
+        (byte, 1u8 << ((h >> 32) & 7))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> FaultPlan {
+        FaultPlan {
+            seed: 7,
+            nan_grad_every: 6,
+            inf_grad_every: 4,
+            force_fail_every: 5,
+            ckpt_flip_every: 10,
+            until_step: 20,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn schedule_is_pure_and_bounded() {
+        let p = plan();
+        assert_eq!(p.grad_fault(6), Some(FaultKind::Nan));
+        assert_eq!(p.grad_fault(4), Some(FaultKind::Inf));
+        // NaN cadence wins when both hit the same step.
+        assert_eq!(p.grad_fault(12), Some(FaultKind::Nan));
+        assert_eq!(p.grad_fault(5), None);
+        // Nothing fires past the bound, and step 0 never faults.
+        assert_eq!(p.grad_fault(24), None);
+        assert_eq!(p.grad_fault(0), None);
+        assert!(!p.forces_root_failure(25, 0, 0, 0));
+        assert!(!p.flips_checkpoint(30));
+        assert!(p.flips_checkpoint(10));
+        // Same inputs, same answers — replayable by tests.
+        for step in 0..30 {
+            assert_eq!(p.grad_fault(step), plan().grad_fault(step));
+            assert_eq!(
+                p.forces_root_failure(step, 1, 2, 1),
+                plan().forces_root_failure(step, 1, 2, 1)
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_grads_poisons_exactly_one_element() {
+        let p = plan();
+        let mut grads = vec![Matrix::zeros(4, 3), Matrix::zeros(2, 2)];
+        p.corrupt_grads(6, &mut grads);
+        let bad: usize = grads.iter().map(|g| g.data().iter().filter(|x| x.is_nan()).count()).sum();
+        assert_eq!(bad, 1, "exactly one NaN injected");
+        let target = p.grad_target(6, 2).unwrap();
+        assert!(grads[target].has_non_finite());
+        // A no-fault step leaves gradients untouched.
+        let mut clean = vec![Matrix::zeros(4, 3)];
+        p.corrupt_grads(5, &mut clean);
+        assert!(!clean[0].has_non_finite());
+    }
+
+    #[test]
+    fn unit_selection_respects_fail_one_in() {
+        let every = FaultPlan { force_fail_every: 1, ..FaultPlan::default() };
+        let every = FaultPlan { seed: 3, ..every };
+        for step in 1..10 {
+            assert!(every.forces_root_failure(step, 0, 0, 0), "fail_one_in=1 fails every unit");
+        }
+        let sparse = FaultPlan { fail_one_in: 4, ..every.clone() };
+        let hits = (1..200u64)
+            .filter(|&s| sparse.forces_root_failure(s, 0, 0, 0))
+            .count();
+        assert!(hits > 10 && hits < 120, "roughly 1-in-4 selection, got {hits}/199");
+    }
+
+    #[test]
+    fn flip_position_is_in_range() {
+        let p = plan();
+        for len in [1usize, 7, 4096] {
+            let (byte, bit) = p.flip_position(10, len);
+            assert!(byte < len);
+            assert_eq!(bit.count_ones(), 1);
+        }
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod bytes;
 pub mod error;
+pub mod fault;
 pub mod rng;
 pub mod stats;
 pub mod json;

@@ -125,6 +125,69 @@ fn huge_dynamic_range_gradients() {
 }
 
 #[test]
+fn exotic_codecs_recover_from_nan_under_every_refresh_policy() {
+    // The guard engine's screening + fallback-ladder guarantees must hold
+    // across the open-world codec registry too — entropy-coded ec4, f16,
+    // and the rank-1 CQ side codec — under each refresh scheduler.
+    for (side_codec, root_codec) in [("ec4", "ec4"), ("f16", "f16"), ("cq-r1", "vq4")] {
+        for policy in ["every-n", "staggered", "staleness"] {
+            let mut c = cfg(ShampooVariant::Full32);
+            c.side_codec = Some(side_codec);
+            c.root_codec = Some(root_codec);
+            c.refresh_policy = policy;
+            let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), c, &[(8, 8)]);
+            let mut params = vec![Matrix::eye(8)];
+            let mut bad = Matrix::eye(8);
+            bad[(0, 0)] = f32::NAN;
+            sh.step(&mut params, std::slice::from_ref(&bad), 1, 1.0);
+            params[0] = Matrix::eye(8); // simulate checkpoint restore of params
+            let good = Matrix::eye_scaled(8, 0.1);
+            for k in 2..=8 {
+                sh.step(&mut params, std::slice::from_ref(&good), k, 1.0);
+            }
+            assert!(
+                !params[0].has_non_finite(),
+                "{side_codec}/{root_codec} under '{policy}' must recover from NaN"
+            );
+            // The poisoned step was screened, not absorbed.
+            assert!(
+                sh.health().grads_screened >= 1,
+                "{side_codec}/{root_codec} under '{policy}': screening counter never fired"
+            );
+        }
+    }
+}
+
+#[test]
+fn inf_gradient_is_screened_for_exotic_codecs() {
+    // Same sweep with an Inf spike and a non-identity recovery gradient:
+    // the screened step must not leak into gram/EF state, and subsequent
+    // refreshes must keep producing finite preconditioned updates.
+    for (side_codec, root_codec) in [("ec4", "ec4"), ("f16", "f16"), ("cq-r1", "vq4")] {
+        for policy in ["every-n", "staggered", "staleness"] {
+            let mut c = cfg(ShampooVariant::Full32);
+            c.side_codec = Some(side_codec);
+            c.root_codec = Some(root_codec);
+            c.refresh_policy = policy;
+            let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), c, &[(10, 4)]);
+            let mut params = vec![Matrix::zeros(10, 4)];
+            let mut bad = Matrix::zeros(10, 4);
+            bad[(3, 1)] = f32::INFINITY;
+            sh.step(&mut params, std::slice::from_ref(&bad), 1, 1.0);
+            params[0] = Matrix::zeros(10, 4);
+            let g = Matrix::from_fn(10, 4, |i, j| ((i + 1) as f32) * 0.1 * ((j + 1) as f32));
+            for k in 2..=10 {
+                sh.step(&mut params, std::slice::from_ref(&g), k, 1.0);
+                assert!(
+                    !params[0].has_non_finite(),
+                    "{side_codec}/{root_codec} under '{policy}' step {k}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn pool_isolates_panicking_jobs_among_good_ones() {
     let pool = Pool::new(4);
     let jobs: Vec<Box<dyn FnOnce() -> u32 + Send + std::panic::UnwindSafe>> = (0..16)

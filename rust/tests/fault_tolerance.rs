@@ -1,0 +1,282 @@
+//! Fault-tolerance soak suite: deterministic chaos via `util::fault`.
+//!
+//! The guard engine's contract under injected faults:
+//! * training stays finite — screened gradients never reach params,
+//!   momentum, or preconditioner state;
+//! * health counters match the injected schedule *exactly* (the fault plan
+//!   is a pure function of `(seed, step)`, so tests replay it);
+//! * quarantined units are released by probation once faults stop — no
+//!   unit is permanently degraded;
+//! * kill + resume under an active fault plan is bit-identical to the
+//!   uninterrupted run, and bit-flipped checkpoints are detected by the
+//!   CRC so resume falls back to the newest intact snapshot.
+
+use quartz::linalg::Matrix;
+use quartz::optim::{BaseOptimizer, Optimizer};
+use quartz::persist::{latest_valid, list_checkpoints};
+use quartz::quant::QuantConfig;
+use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+use quartz::train::synthetic::{final_params_synthetic, train_synthetic, SyntheticSpec};
+use quartz::train::trainer::TrainConfig;
+use quartz::train::OptimizerStack;
+use quartz::util::fault::FaultPlan;
+
+fn shampoo_cfg() -> ShampooConfig {
+    ShampooConfig {
+        variant: ShampooVariant::Cq4 { error_feedback: true },
+        t1: 1,
+        t2: 4,
+        max_order: 64,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn cq_stack(cfg: &ShampooConfig, shapes: &[(usize, usize)]) -> OptimizerStack {
+    OptimizerStack::shampoo(Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), *cfg, shapes))
+}
+
+#[test]
+fn soak_stays_finite_and_counters_match_injected_schedule() {
+    const STEPS: u64 = 240;
+    let spec = SyntheticSpec::default();
+    let plan = FaultPlan {
+        seed: 7,
+        nan_grad_every: 13,
+        inf_grad_every: 29,
+        force_fail_every: 17,
+        fail_one_in: 2,
+        until_step: 120,
+        ..Default::default()
+    };
+    let shcfg = shampoo_cfg();
+    let cfg = TrainConfig {
+        steps: STEPS,
+        seed: 11,
+        log_every: 10,
+        faults: Some(plan.clone()),
+        ..Default::default()
+    };
+    let m = train_synthetic(&spec, cq_stack(&shcfg, &spec.shapes), &cfg).unwrap();
+
+    // Finite throughout: a screened step applies nothing, so the loss
+    // (a mean over every parameter) would go NaN if poison ever landed.
+    assert!(m.final_metric.is_finite(), "final metric {}", m.final_metric);
+    for &(k, l) in &m.loss_curve {
+        assert!(l.is_finite(), "loss at step {k} is {l}");
+    }
+
+    // Screening counter == the plan's gradient-fault schedule, replayed.
+    let expected_screens = (1..=STEPS).filter(|&k| plan.grad_fault(k).is_some()).count() as u64;
+    assert_eq!(expected_screens, 13, "fixture: 9 NaN steps + 4 Inf steps in the window");
+    assert_eq!(m.health.grads_screened, expected_screens);
+
+    // Stale-root counter == the forced-failure schedule, replayed over the
+    // every-n root cadence and the optimizer's actual unit addresses
+    // (minus units whose layer was screened that step).
+    let probe = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), shcfg, &spec.shapes);
+    let mut expected_stale = 0u64;
+    for k in 1..=STEPS {
+        if k % 4 != 0 {
+            continue; // t2 = 4: every-n roots only on these steps
+        }
+        let poisoned = plan.grad_target(k, spec.shapes.len());
+        for (id, _) in probe.unit_metas() {
+            if poisoned == Some(id.layer as usize) {
+                continue;
+            }
+            if plan.forces_root_failure(k, id.layer, id.block, id.side.index()) {
+                expected_stale += 1;
+            }
+        }
+    }
+    assert_eq!(m.health.stale_root_serves, expected_stale);
+
+    // One forced failure per unit at most (17 ∤ consecutive root steps), so
+    // nothing ever reaches the quarantine threshold or the floor rung.
+    assert_eq!(m.health.quarantines, 0);
+    assert_eq!(m.health.releases, 0);
+    assert_eq!(m.health.floor_serves, 0);
+
+    // The whole soak — faults included — is bit-deterministic.
+    let m2 = train_synthetic(&spec, cq_stack(&shampoo_cfg(), &spec.shapes), &cfg).unwrap();
+    assert_eq!(m.final_metric, m2.final_metric);
+    assert_eq!(m.loss_curve, m2.loss_curve);
+    assert_eq!(m.health, m2.health);
+}
+
+#[test]
+fn forced_failure_counters_match_replayed_schedule_exactly() {
+    // t1 = t2 = 1: every unit refreshes every step, so every forced
+    // failure in the active window lands — 10 forced steps × 4 units.
+    let shapes = [(8usize, 8usize), (10, 4)];
+    let c = ShampooConfig {
+        variant: ShampooVariant::Cq4 { error_feedback: true },
+        t1: 1,
+        t2: 1,
+        max_order: 64,
+        quarantine_after: 1000,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let plan = FaultPlan { seed: 11, force_fail_every: 3, until_step: 30, ..Default::default() };
+    let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), c, &shapes);
+    sh.set_fault_plan(Some(&plan));
+
+    let mut params = vec![Matrix::eye(8), Matrix::zeros(10, 4)];
+    let grads = vec![
+        Matrix::from_fn(8, 8, |i, j| 0.05 * ((i + 2 * j + 1) as f32).sin()),
+        Matrix::from_fn(10, 4, |i, j| 0.05 * ((3 * i + j + 1) as f32).cos()),
+    ];
+    for k in 1..=60u64 {
+        sh.step(&mut params, &grads, k, 1.0);
+    }
+
+    let expected: u64 = (1..=60u64)
+        .map(|k| {
+            sh.unit_metas()
+                .iter()
+                .filter(|(id, _)| plan.forces_root_failure(k, id.layer, id.block, id.side.index()))
+                .count() as u64
+        })
+        .sum();
+    assert_eq!(expected, 40, "fixture: steps 3,6,…,30 × 4 units (fail_one_in = 1)");
+    assert_eq!(sh.health().stale_root_serves, expected);
+    assert_eq!(sh.health().floor_serves, 0, "the stale cache always exists and is finite");
+    assert_eq!(sh.health().quarantines, 0, "failures are never consecutive enough");
+    assert_eq!(sh.health().grads_screened, 0);
+    for p in &params {
+        assert!(!p.has_non_finite());
+    }
+
+    // Clearing the plan stops the chaos: counters freeze.
+    sh.set_fault_plan(None);
+    let frozen = sh.health().clone();
+    for k in 61..=70u64 {
+        sh.step(&mut params, &grads, k, 1.0);
+    }
+    assert_eq!(*sh.health(), frozen);
+}
+
+#[test]
+fn quarantine_lifecycle_releases_every_unit_once_faults_stop() {
+    // Every refresh fails during the fault window: both units hit the
+    // quarantine threshold, floor-serve through the window, fail two
+    // probation retries while faults are live, and are released by the
+    // first post-window probation. Nothing stays quarantined.
+    let c = ShampooConfig {
+        variant: ShampooVariant::Full32,
+        t1: 1,
+        t2: 1,
+        max_order: 64,
+        quarantine_after: 2,
+        probation_interval: 5,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let plan = FaultPlan { seed: 3, force_fail_every: 1, until_step: 15, ..Default::default() };
+    let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), c, &[(6, 6)]);
+    sh.set_fault_plan(Some(&plan));
+    assert_eq!(sh.unit_metas().len(), 2);
+
+    let mut params = vec![Matrix::eye(6)];
+    let g = Matrix::from_fn(6, 6, |i, j| 0.1 * ((i * 6 + j + 1) as f32).sin());
+    for k in 1..=40u64 {
+        sh.step(&mut params, std::slice::from_ref(&g), k, 1.0);
+        assert!(!params[0].has_non_finite(), "step {k}");
+    }
+
+    // Exactly one quarantine entry and one release per unit: probation
+    // failures restart the window without re-counting.
+    assert_eq!(sh.health().quarantines, 2);
+    assert_eq!(sh.health().releases, 2);
+    assert!(sh.health().floor_serves > 0, "quarantined units must floor-serve");
+    for (id, meta) in sh.unit_metas() {
+        assert!(
+            !meta.health.is_quarantined(),
+            "{id:?} still quarantined after probation: {:?}",
+            meta.health
+        );
+        assert_eq!(meta.health.consecutive_failures, 0, "{id:?}");
+        assert_eq!(meta.health.quarantines, 1, "{id:?}");
+        assert_eq!(meta.health.releases, 1, "{id:?}");
+    }
+}
+
+#[test]
+fn faulted_run_resumes_bit_identically() {
+    let dir = std::env::temp_dir().join(format!("quartz-fault-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = SyntheticSpec::default();
+    let shcfg = ShampooConfig { t2: 2, ..shampoo_cfg() };
+    let plan = FaultPlan { seed: 5, force_fail_every: 3, fail_one_in: 2, ..Default::default() };
+
+    let straight =
+        TrainConfig { steps: 40, seed: 3, faults: Some(plan.clone()), ..Default::default() };
+    let (pa, _) = final_params_synthetic(&spec, cq_stack(&shcfg, &spec.shapes), &straight).unwrap();
+
+    // Same run, checkpointed every 15 steps and killed after 30, then
+    // resumed to 40 — the fault schedule is a pure function of (plan,
+    // step), so the replayed tail corrupts identically.
+    let ck = TrainConfig {
+        steps: 30,
+        seed: 3,
+        checkpoint_every: 15,
+        checkpoint_dir: Some(dir.clone()),
+        faults: Some(plan),
+        ..Default::default()
+    };
+    train_synthetic(&spec, cq_stack(&shcfg, &spec.shapes), &ck).unwrap();
+    let resumed = TrainConfig { steps: 40, ..ck };
+    let (pb, _) = final_params_synthetic(&spec, cq_stack(&shcfg, &spec.shapes), &resumed).unwrap();
+    for (a, b) in pa.iter().zip(pb.iter()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flipped_checkpoints_are_detected_and_resume_falls_back() {
+    let dir = std::env::temp_dir().join(format!("quartz-fault-flip-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = SyntheticSpec::default();
+    let shcfg = ShampooConfig { t2: 2, ..shampoo_cfg() };
+    // Root failures make the trajectory fault-dependent; every second
+    // checkpoint (steps 20, 40) takes a single bit flip after writing.
+    let plan = FaultPlan {
+        seed: 9,
+        force_fail_every: 4,
+        fail_one_in: 2,
+        ckpt_flip_every: 20,
+        ..Default::default()
+    };
+    let ck = TrainConfig {
+        steps: 50,
+        seed: 9,
+        checkpoint_every: 10,
+        checkpoint_dir: Some(dir.clone()),
+        keep_checkpoints: 3,
+        faults: Some(plan.clone()),
+        ..Default::default()
+    };
+    train_synthetic(&spec, cq_stack(&shcfg, &spec.shapes), &ck).unwrap();
+
+    // Retention kept the newest three snapshots (10 was pruned)…
+    let steps: Vec<u64> = list_checkpoints(&dir).into_iter().map(|(s, _)| s).collect();
+    assert_eq!(steps, vec![20, 30, 40]);
+    // …and the CRC rejects the flipped tail (40), falling back to 30.
+    let (step, _) = latest_valid(&dir, 0).unwrap().expect("an intact checkpoint survives");
+    assert_eq!(step, 30, "bit-flipped step-40 checkpoint must be skipped");
+
+    // Resuming (from 30) and finishing to 60 matches the uninterrupted
+    // run bit-for-bit: the flips only ever damaged at-rest files.
+    let resumed = TrainConfig { steps: 60, ..ck };
+    let (pb, _) = final_params_synthetic(&spec, cq_stack(&shcfg, &spec.shapes), &resumed).unwrap();
+    let straight =
+        TrainConfig { steps: 60, seed: 9, faults: Some(plan), ..Default::default() };
+    let (pa, _) = final_params_synthetic(&spec, cq_stack(&shcfg, &spec.shapes), &straight).unwrap();
+    for (a, b) in pa.iter().zip(pb.iter()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,142 @@
+#!/usr/bin/env bash
+# Chaos smoke for the numerical-health guard engine (CI gate): run a tiny
+# synthetic queue with deterministic fault injection live — NaN/Inf
+# gradient spikes, forced factorization failures, checkpoint bit flips —
+# SIGKILL the process mid-run, `quartz resume` the queue directory, and
+# assert the final metrics are finite AND byte-identical to an
+# uninterrupted control run of the same spec. The fault plan is a pure
+# function of (seed, step), so the resumed tail replays the exact same
+# corruption schedule; screening keeps every run finite; the flipped
+# checkpoints are rejected by CRC and resume falls back to intact ones.
+# Health counters must appear in the metrics stream and `quartz health`
+# must render them.
+#
+# Usage: scripts/chaos_smoke.sh [workdir]
+#
+# QUARTZ_BIN overrides the binary (default rust/target/release/quartz,
+# built on demand). The kill is timing-based: if the queue finishes
+# before the signal lands, the comparison degenerates to
+# cached-replay-vs-control, which still must match.
+set -euo pipefail
+
+BIN="${QUARTZ_BIN:-rust/target/release/quartz}"
+WORK="${1:-$(mktemp -d -t quartz-chaos-smoke-XXXXXX)}"
+PACE_MS="${PACE_MS:-50}"
+KILL_AFTER_SECS="${KILL_AFTER_SECS:-2}"
+
+if [[ ! -x "$BIN" ]]; then
+  echo "chaos_smoke: building $BIN"
+  (cd rust && cargo build --release --quiet)
+fi
+
+mkdir -p "$WORK"
+SPEC="$WORK/queue.toml"
+# Faults are live for the first half of each run: gradient spikes every
+# 13/29 steps, forced root failures every 7th step on about half the
+# units, and a bit flip on every second checkpoint written.
+cat > "$SPEC" <<EOF
+name = "chaos-smoke"
+steps = 120
+workers = 1
+checkpoint_every = 10
+keep_checkpoints = 3
+
+[workload]
+kind = "synthetic"
+shapes = [16, 8, 8, 8, 4, 1]
+noise = 0.05
+pace_ms = $PACE_MS
+
+[faults]
+seed = 7
+nan_grad_every = 13
+inf_grad_every = 29
+force_fail_every = 7
+fail_one_in = 2
+ckpt_flip_every = 20
+until_step = 60
+
+[[runs]]
+model = "syn"
+base = "sgdm"
+shampoo = "cq-ef"
+
+[[runs]]
+model = "syn"
+base = "sgdm"
+EOF
+
+KILLED="$WORK/killed"
+CONTROL="$WORK/control"
+
+echo "chaos_smoke: launching faulted queue, SIGKILL in ${KILL_AFTER_SECS}s"
+"$BIN" queue "$SPEC" --out "$KILLED" > "$WORK/killed-attempt.log" 2>&1 &
+PID=$!
+sleep "$KILL_AFTER_SECS"
+if kill -9 "$PID" 2>/dev/null; then
+  wait "$PID" 2>/dev/null || true
+  echo "chaos_smoke: killed pid $PID mid-queue"
+else
+  echo "chaos_smoke: WARNING — queue finished before the kill landed" >&2
+fi
+
+echo "chaos_smoke: resuming $KILLED"
+"$BIN" resume "$KILLED" > "$WORK/resume.log" 2>&1 \
+  || { cat "$WORK/resume.log"; exit 1; }
+
+echo "chaos_smoke: uninterrupted control run"
+"$BIN" queue "$SPEC" --out "$CONTROL" > "$WORK/control.log" 2>&1 \
+  || { cat "$WORK/control.log"; exit 1; }
+
+# Last run_end per run id -> "id<TAB>final_metric", sorted for a stable
+# diff (run ids contain spaces, hence tabs).
+finals() {
+  grep '"run_end"' "$1/metrics.jsonl" | while IFS= read -r line; do
+    id=$(printf '%s' "$line" | grep -o '"id":"[^"]*"' | head -n1)
+    fm=$(printf '%s' "$line" | grep -o '"final_metric":[^,}]*' | head -n1)
+    printf '%s\t%s\n' "$id" "$fm"
+  done | awk -F'\t' '{last[$1] = $2} END {for (k in last) print k "\t" last[k]}' | sort
+}
+
+finals "$KILLED" > "$WORK/killed.finals"
+finals "$CONTROL" > "$WORK/control.finals"
+
+echo "--- resumed finals ---"
+cat "$WORK/killed.finals"
+echo "--- control finals ---"
+cat "$WORK/control.finals"
+
+RUNS=$(wc -l < "$WORK/control.finals")
+if [[ "$RUNS" -ne 2 ]]; then
+  echo "chaos_smoke: FAIL — control produced $RUNS run_end record(s), expected 2" >&2
+  exit 1
+fi
+# Screening must keep every faulted run finite.
+if grep -qiE 'nan|inf|null' "$WORK/control.finals"; then
+  echo "chaos_smoke: FAIL — non-finite final metric under fault injection" >&2
+  exit 1
+fi
+if ! diff -u "$WORK/control.finals" "$WORK/killed.finals"; then
+  echo "chaos_smoke: FAIL — resumed faulted queue diverges from control" >&2
+  exit 1
+fi
+
+# The guard engine's counters must be streamed with each run_end…
+if ! grep '"run_end"' "$CONTROL/metrics.jsonl" | grep -q '"grads_screened"'; then
+  echo "chaos_smoke: FAIL — no health counters in the metrics stream" >&2
+  exit 1
+fi
+# …with screening actually having fired (the plan schedules NaN steps).
+if ! grep '"run_end"' "$CONTROL/metrics.jsonl" | grep -qE '"grads_screened":[1-9]'; then
+  echo "chaos_smoke: FAIL — fault plan active but zero gradients screened" >&2
+  exit 1
+fi
+
+echo "chaos_smoke: health report for the resumed queue"
+"$BIN" health "$KILLED" | tee "$WORK/health.log"
+if ! grep -q 'totals:' "$WORK/health.log"; then
+  echo "chaos_smoke: FAIL — 'quartz health' produced no totals line" >&2
+  exit 1
+fi
+
+echo "chaos_smoke: OK — faulted queue stayed finite, resumed bit-identically, and reported health"
