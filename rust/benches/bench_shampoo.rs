@@ -124,6 +124,36 @@ fn main() {
         println!("  step_mix/{policy}: units {} | {}", sh.unit_count(), s.summary());
     }
 
+    // ---- The async-refresh engine at the same mix, `every-n` cadence (the
+    // spike-heaviest schedule): off vs 2 vs 4 worker shards. The headline
+    // is the p95/p99 refresh-spike reduction — root recomputation moves off
+    // the step thread and lands `max_async_staleness` steps later — while
+    // the printed overlap counters (in-flight peak, barrier stalls, publish
+    // lag) bound the staleness actually incurred.
+    for (label, async_on, shards) in [("off", false, 0usize), ("2", true, 2), ("4", true, 4)] {
+        let cfg = ShampooConfig {
+            variant: ShampooVariant::Cq4 { error_feedback: true },
+            t1,
+            t2,
+            max_order,
+            async_refresh: async_on,
+            async_shards: shards,
+            max_async_staleness: 2,
+            quant: quartz::quant::QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 5e-4), cfg, &mix);
+        let mut p = mix_params.clone();
+        let mut k = 1u64;
+        b.bench(&format!("step_mix_async/{label}"), || {
+            sh.step(&mut p, &mix_grads, k, 1.0);
+            k += 1;
+            black_box(&p);
+        });
+        let s = sh.refresh_stats();
+        println!("  step_mix_async/{label}: units {} | {}", sh.unit_count(), s.summary());
+    }
+
     // ---- Large-model mix (full mode only): order-4096 gradients with
     // max_order-512 preconditioners. Every gram update and precondition
     // apply here is a 512×4096-class product, so this is the step-level

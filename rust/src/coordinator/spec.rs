@@ -263,6 +263,9 @@ impl ExperimentSpec {
     /// refresh_policy = "staggered"  # any shampoo::scheduler key:
     ///                               # every-n | staggered | staleness | …
     /// refresh_budget = 4            # staleness per-step unit budget (0 = auto)
+    /// async_refresh = true          # overlap root refreshes with later steps
+    /// async_shards = 2              # async worker shards (0 = auto)
+    /// max_async_staleness = 2       # async publish deadline in steps (>= 1)
     /// ```
     pub fn from_toml(text: &str) -> Result<ExperimentSpec> {
         let doc = TomlDoc::parse(text)?;
@@ -372,6 +375,23 @@ impl ExperimentSpec {
                             "runs[{i}]: refresh_budget must be >= 0, got {rb}"
                         );
                         cfg.refresh_budget = rb as usize;
+                    }
+                    if let Some(ar) = t.get("async_refresh").and_then(|v| v.as_bool()) {
+                        cfg.async_refresh = ar;
+                    }
+                    if let Some(sh) = t.get("async_shards").and_then(|v| v.as_i64()) {
+                        crate::ensure!(
+                            sh >= 0,
+                            "runs[{i}]: async_shards must be >= 0 (0 = auto), got {sh}"
+                        );
+                        cfg.async_shards = sh as usize;
+                    }
+                    if let Some(st) = t.get("max_async_staleness").and_then(|v| v.as_i64()) {
+                        crate::ensure!(
+                            st >= 1,
+                            "runs[{i}]: max_async_staleness must be >= 1, got {st}"
+                        );
+                        cfg.max_async_staleness = st as u64;
                     }
                     Some(cfg)
                 }
@@ -639,6 +659,27 @@ base = "adamw"
         assert!(ExperimentSpec::from_toml(bad).is_err());
         // A negative budget must error, not wrap into a huge usize.
         let neg = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\nrefresh_budget = -1\n";
+        assert!(ExperimentSpec::from_toml(neg).is_err());
+    }
+
+    #[test]
+    fn toml_selects_async_refresh() {
+        let text = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"cq-ef\"\nasync_refresh = true\n\
+                    async_shards = 2\nmax_async_staleness = 3\n";
+        let spec = ExperimentSpec::from_toml(text).unwrap();
+        let sh = spec.runs[0].optimizer.shampoo.as_ref().unwrap();
+        assert!(sh.async_refresh);
+        assert_eq!(sh.async_shards, 2);
+        assert_eq!(sh.max_async_staleness, 3);
+        // Default stays synchronous — the bit-identical classic path.
+        let plain = ExperimentSpec::from_toml("\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\n")
+            .unwrap();
+        assert!(!plain.runs[0].optimizer.shampoo.as_ref().unwrap().async_refresh);
+        // A zero staleness window would mean "publish before the next step
+        // starts" — that is the sync path; reject it rather than alias it.
+        let zero = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\nmax_async_staleness = 0\n";
+        assert!(ExperimentSpec::from_toml(zero).is_err());
+        let neg = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\nasync_shards = -1\n";
         assert!(ExperimentSpec::from_toml(neg).is_err());
     }
 

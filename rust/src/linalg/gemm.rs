@@ -17,6 +17,11 @@
 //!           microkernel: MR×NR tile += Σ_kc a-panel ⊗ b-panel
 //! ```
 //!
+//! Tall-skinny products (`m ≫ n`, a single jc slab) would starve the
+//! column-parallel grain, so the driver switches to `parallel_for` over the
+//! `ic` row stripes instead: B is packed once on the calling thread and
+//! stripes write disjoint C row ranges (same bit-identity argument).
+//!
 //! The microkernel computes a full `MR×NR = 6×16` register tile (twelve
 //! 8-lane accumulators on AVX2) from two k-major panels; partial edge tiles
 //! are handled by zero-padding the packs and copying back only the valid
@@ -29,9 +34,10 @@
 //! ## Determinism contract
 //!
 //! The summation order of every `C[i][j]` is fixed by the sequential `pc`
-//! (KC-slab) loop alone; the parallel grain is `jc` column slabs, which
-//! partition C disjointly. Parallel and sequential runs are therefore
-//! **bit-identical** for a given microkernel. `Avx2` and `Scalar` differ
+//! (KC-slab) loop alone; the parallel grain — `jc` column slabs, or `ic`
+//! row stripes on tall-skinny shapes — always partitions C disjointly.
+//! Parallel and sequential runs are therefore **bit-identical** for a given
+//! microkernel. `Avx2` and `Scalar` differ
 //! only in rounding (FMA contraction, 8-lane sub-sums) and are pinned to
 //! ≤1e-5 relative Frobenius by `tests/kernel_equivalence.rs`.
 //!
@@ -385,6 +391,13 @@ unsafe fn driver(
     let jc_tasks = n.div_ceil(NC);
     plan.ensure(m.div_ceil(MR) * MR * kc_max, jc_tasks * NC * kc_max);
 
+    // Tall-skinny shapes (m ≫ n) have a single jc slab, which starves the
+    // column-parallel grain; switch the grain to MC row stripes instead.
+    // Stripes write disjoint C row ranges and leave every element's
+    // summation order untouched, so this path is bit-identical too.
+    let ic_tasks = m.div_ceil(MC);
+    let ic_parallel = threads > 1 && jc_tasks == 1 && ic_tasks > 1;
+
     let mut pc = 0usize;
     while pc < k {
         let kc = KC.min(k - pc);
@@ -399,17 +412,35 @@ unsafe fn driver(
         let pa = SendConst(plan.packed_a.as_ptr());
         let pb = SendPtr(plan.packed_b.as_mut_ptr());
         let cp = SendPtr(c);
-        parallel_for(jc_tasks, threads, |jt| {
-            let col0 = jt * NC;
-            let nc = NC.min(n - col0);
-            // Safety: task jt owns packed-B slab jt and writes only columns
-            // [col0, col0+nc) of C — ranges disjoint across tasks.
-            unsafe {
-                let slab = pb.get().add(jt * NC * kc_max);
-                pack_b(bv, pc, kc, col0, nc, slab);
-                macro_panel(kernel, kc, m, col0, nc, pa.get(), slab, cp.get(), ldc, acc, lower);
-            }
-        });
+        if ic_parallel {
+            // Single slab: pack B once on the calling thread, then fan the
+            // row stripes out over the pool.
+            pack_b(bv, pc, kc, 0, n, pb.get());
+            let pbc = SendConst(plan.packed_b.as_ptr());
+            parallel_for(ic_tasks, threads, |it| {
+                let ic = it * MC;
+                let mc = MC.min(m - ic);
+                // Safety: stripe it writes only rows [ic, ic+mc) of C —
+                // ranges disjoint across tasks; packs are read-only here.
+                unsafe {
+                    let (p, b) = (pa.get(), pbc.get());
+                    stripe_panel(kernel, kc, ic, mc, m, 0, n, p, b, cp.get(), ldc, acc, lower);
+                }
+            });
+        } else {
+            parallel_for(jc_tasks, threads, |jt| {
+                let col0 = jt * NC;
+                let nc = NC.min(n - col0);
+                // Safety: task jt owns packed-B slab jt and writes only
+                // columns [col0, col0+nc) of C — ranges disjoint across
+                // tasks.
+                unsafe {
+                    let slab = pb.get().add(jt * NC * kc_max);
+                    pack_b(bv, pc, kc, col0, nc, slab);
+                    macro_panel(kernel, kc, m, col0, nc, pa.get(), slab, cp.get(), ldc, acc, lower);
+                }
+            });
+        }
         pc += kc;
     }
 }
@@ -473,26 +504,54 @@ unsafe fn macro_panel(
     let mut ic = 0;
     while ic < m {
         let mc = MC.min(m - ic);
-        for q in 0..nc.div_ceil(NR) {
-            let j0 = col0 + q * NR;
-            let nr = NR.min(col0 + nc - j0);
-            let bpan = pb.add(q * NR * kc);
-            let mut ir = ic;
-            while ir < ic + mc {
-                let mr = MR.min(m - ir);
-                // Lower-only: skip tiles strictly above the diagonal.
-                if lower && j0 >= ir + mr {
-                    ir += MR;
-                    continue;
-                }
-                let apan = pa.add((ir / MR) * MR * kc);
-                let mut tile = [0.0f32; MR * NR];
-                run_kernel(kernel, kc, apan, bpan, &mut tile);
-                write_tile(c, ldc, ir, j0, mr, nr, &tile, acc, lower);
-                ir += MR;
-            }
-        }
+        stripe_panel(kernel, kc, ic, mc, m, col0, nc, pa, pb, c, ldc, acc, lower);
         ic += MC;
+    }
+}
+
+/// One MC row stripe of one jc slab: NR panels of packed B × MR panels of
+/// the stripe's packed A, microkernel per tile. This is the grain of the
+/// tall-skinny ic-parallel path — stripes write disjoint C row ranges, and
+/// the per-element summation order (sequential `pc`, fixed tile kernel) is
+/// unchanged, so stripe-parallel runs are bit-identical to sequential.
+///
+/// # Safety
+/// Same window contract as [`driver`]; `[ic, ic+mc)` must lie inside
+/// `[0, m)` on an MC boundary, and `pa`/`pb` must hold the packed panels
+/// described by [`pack_a`]/[`pack_b`].
+unsafe fn stripe_panel(
+    kernel: Microkernel,
+    kc: usize,
+    ic: usize,
+    mc: usize,
+    m: usize,
+    col0: usize,
+    nc: usize,
+    pa: *const f32,
+    pb: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    acc: Acc,
+    lower: bool,
+) {
+    for q in 0..nc.div_ceil(NR) {
+        let j0 = col0 + q * NR;
+        let nr = NR.min(col0 + nc - j0);
+        let bpan = pb.add(q * NR * kc);
+        let mut ir = ic;
+        while ir < ic + mc {
+            let mr = MR.min(m - ir);
+            // Lower-only: skip tiles strictly above the diagonal.
+            if lower && j0 >= ir + mr {
+                ir += MR;
+                continue;
+            }
+            let apan = pa.add((ir / MR) * MR * kc);
+            let mut tile = [0.0f32; MR * NR];
+            run_kernel(kernel, kc, apan, bpan, &mut tile);
+            write_tile(c, ldc, ir, j0, mr, nr, &tile, acc, lower);
+            ir += MR;
+        }
     }
 }
 
@@ -728,6 +787,35 @@ mod tests {
             gemm_with(&a, false, &b, false, &mut ct, &mut plan, Microkernel::Scalar, threads);
             assert_eq!(c1, ct, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn tall_skinny_ic_parallel_is_bit_identical_to_sequential() {
+        // m ≫ n with n ≤ NC: a single jc slab, so the driver switches the
+        // parallel grain to MC row stripes — the result must still match
+        // the sequential run bit-for-bit, correct at the edges (m not a
+        // multiple of MC), and agree with the reference product.
+        let mut rng = Rng::new(21);
+        let (m, n, k) = (500, 64, 300);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut plan = MatmulPlan::new();
+        let mut c1 = Matrix::zeros(m, n);
+        gemm_with(&a, false, &b, false, &mut c1, &mut plan, Microkernel::Scalar, 1);
+        assert!(relative_error(&naive(&a, &b), &c1) < 1e-5);
+        for threads in [2, 4, 7] {
+            let mut ct = Matrix::zeros(m, n);
+            gemm_with(&a, false, &b, false, &mut ct, &mut plan, Microkernel::Scalar, threads);
+            assert_eq!(c1, ct, "threads={threads}");
+        }
+        // SYRK of a tall operand exercises the lower-triangle skip with the
+        // stripe grain (m×m output from a single-slab m×k·k×m product).
+        let tall = Matrix::randn(150, 24, 1.0, &mut rng);
+        let mut s1 = Matrix::zeros(150, 150);
+        syrk_lower_with(&tall, &mut s1, &mut plan, Microkernel::Scalar, 1);
+        let mut s4 = Matrix::zeros(150, 150);
+        syrk_lower_with(&tall, &mut s4, &mut plan, Microkernel::Scalar, 4);
+        assert_eq!(s1, s4);
     }
 
     #[test]

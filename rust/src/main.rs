@@ -120,6 +120,7 @@ fn print_help() {
          \x20 train  --model NAME [--base sgdm] [--shampoo KEY]\n\
          \x20        [--refresh-policy every-n|staggered|staleness]\n\
          \x20        [--refresh-budget N] [--steps N] [--lm] [--seed N]\n\
+         \x20        [--async-refresh] [--async-shards N] [--max-async-staleness N]\n\
          \x20 run    --config FILE.toml [--out DIR]\n\
          \x20 queue  FILE.toml [--out DIR] [--checkpoint-every N]\n\
          \x20        # resumable job queue: checkpoints + metrics.jsonl in DIR\n\
@@ -186,6 +187,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         if let Some(rb) = args.get("refresh-budget") {
             cfg.refresh_budget = rb.parse()?;
+        }
+        // Async-refresh engine (off by default; bit-identical when off).
+        if args.has("async-refresh") {
+            cfg.async_refresh = true;
+        }
+        if let Some(sh) = args.get("async-shards") {
+            cfg.async_shards = sh.parse()?;
+        }
+        if let Some(st) = args.get("max-async-staleness") {
+            cfg.max_async_staleness = st.parse()?;
+            quartz::ensure!(
+                cfg.max_async_staleness >= 1,
+                "--max-async-staleness must be >= 1"
+            );
         }
     }
     let workload = if args.has("lm") || model.starts_with("lm_") {

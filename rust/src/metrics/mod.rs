@@ -10,6 +10,6 @@ pub mod timer;
 
 pub use health::{HealthLedger, HealthStats};
 pub use memory::MemoryModel;
-pub use refresh::RefreshStats;
+pub use refresh::{AsyncRefreshStats, RefreshStats};
 pub use scoring::{accuracy, cross_entropy, perplexity_from_nll};
 pub use timer::Stopwatch;

@@ -7,6 +7,60 @@
 //! spike metric: `every-n` concentrates all units in one step, `staggered`
 //! bounds it by ⌈units/T₂⌉.
 
+/// Overlap accounting for the sharded async-refresh engine
+/// (`shampoo::async_engine`): how much refresh work ran concurrently with
+/// optimizer steps, and how often the bounded-staleness contract had to
+/// stall a step waiting for an overdue worker. All counters are cumulative
+/// over the optimizer's lifetime; every one stays zero with
+/// `async_refresh = false`.
+#[derive(Clone, Debug, Default)]
+pub struct AsyncRefreshStats {
+    /// Root-refresh jobs shipped to worker shards.
+    pub submitted: u64,
+    /// Results published into the live root slots (every submission is
+    /// eventually published or drained at shutdown).
+    pub published: u64,
+    /// Planned root refreshes skipped because the unit was already in
+    /// flight — the scheduler re-planned faster than the staleness window.
+    pub coalesced: u64,
+    /// Publishes that had to block on an unfinished worker (the barrier at
+    /// `max_async_staleness`), and the wall-clock spent blocked.
+    pub barrier_stalls: u64,
+    pub barrier_stall_secs: f64,
+    /// Most units simultaneously in flight.
+    pub max_in_flight: usize,
+    /// Largest publish lag in steps (publish step − submit step). The
+    /// bounded-staleness contract pins this ≤ `max_async_staleness`; the
+    /// async soak test asserts it.
+    pub max_publish_lag: u64,
+    /// Steps that ended with at least one refresh in flight — the overlap
+    /// the engine exists to create.
+    pub steps_overlapped: u64,
+    /// Wall-clock from worker completion to publish, total and worst —
+    /// how long finished roots waited for their deterministic due step.
+    pub publish_latency_secs: f64,
+    pub max_publish_latency_secs: f64,
+}
+
+impl AsyncRefreshStats {
+    /// One-line human summary (appended to [`RefreshStats::summary`] when
+    /// the async engine ran).
+    pub fn summary(&self) -> String {
+        format!(
+            "async sub {} pub {} coal {} | in-flight max {} | lag max {} steps | \
+             stalls {} ({:.3} ms) | overlapped {} steps",
+            self.submitted,
+            self.published,
+            self.coalesced,
+            self.max_in_flight,
+            self.max_publish_lag,
+            self.barrier_stalls,
+            self.barrier_stall_secs * 1e3,
+            self.steps_overlapped,
+        )
+    }
+}
+
 /// Aggregate refresh telemetry over an optimizer's lifetime.
 #[derive(Clone, Debug, Default)]
 pub struct RefreshStats {
@@ -36,6 +90,9 @@ pub struct RefreshStats {
     /// rungs, quarantine transitions) drained from the refresh executor's
     /// [`super::HealthLedger`] once per step.
     pub health: super::HealthStats,
+    /// Async-refresh overlap counters (all zero when `async_refresh` is
+    /// off); copied from the engine once per step.
+    pub async_refresh: AsyncRefreshStats,
 }
 
 impl RefreshStats {
@@ -78,7 +135,7 @@ impl RefreshStats {
 
     /// One-line human summary (bench output).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "steps {} | units/step mean {:.2} max {} (gram max {}) | \
              refresh busy {:.1}% of step, worst {:.3} ms",
             self.steps,
@@ -87,7 +144,12 @@ impl RefreshStats {
             self.max_gram_units,
             100.0 * self.refresh_fraction(),
             self.max_refresh_secs * 1e3,
-        )
+        );
+        if self.async_refresh.submitted > 0 {
+            s.push_str(" | ");
+            s.push_str(&self.async_refresh.summary());
+        }
+        s
     }
 }
 
@@ -117,5 +179,20 @@ mod tests {
         assert_eq!(s.mean_root_units(), 0.0);
         assert_eq!(s.refresh_fraction(), 0.0);
         assert!(s.summary().contains("steps 0"));
+    }
+
+    #[test]
+    fn async_counters_surface_in_summary_only_when_used() {
+        let mut s = RefreshStats::new();
+        s.record(0, 0, 0, 1_000);
+        assert!(!s.summary().contains("async"), "sync runs keep the classic summary");
+        s.async_refresh.submitted = 3;
+        s.async_refresh.published = 3;
+        s.async_refresh.max_publish_lag = 2;
+        s.async_refresh.steps_overlapped = 5;
+        let line = s.summary();
+        assert!(line.contains("async sub 3 pub 3"), "{line}");
+        assert!(line.contains("lag max 2"), "{line}");
+        assert!(line.contains("overlapped 5 steps"), "{line}");
     }
 }

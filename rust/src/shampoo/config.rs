@@ -130,6 +130,22 @@ pub struct ShampooConfig {
     /// quarantine, then gets one full refresh attempt (release on success,
     /// timer reset on failure).
     pub probation_interval: u64,
+    /// Run inverse-root refreshes on the sharded async engine
+    /// (`shampoo::async_engine`): planned roots are submitted to persistent
+    /// worker shards and published `max_async_staleness` steps later, so
+    /// refresh overlaps subsequent steps. `false` (the default) keeps the
+    /// synchronous executor and reproduces its trajectories bit-identically.
+    pub async_refresh: bool,
+    /// Worker shards for the async engine. 0 = automatic
+    /// (`min(default_threads(), 4)`). Shard count never affects the
+    /// trajectory — only throughput.
+    pub async_shards: usize,
+    /// The bounded-staleness contract: an async root submitted at step `s`
+    /// is published at the start of step `s + max_async_staleness`,
+    /// blocking there if the worker has not finished (the synchronous
+    /// barrier). Minimum 1; larger values buy more overlap at the cost of
+    /// staler roots.
+    pub max_async_staleness: u64,
 }
 
 impl ShampooConfig {
@@ -185,6 +201,9 @@ impl Default for ShampooConfig {
             refresh_budget: 0,
             quarantine_after: 3,
             probation_interval: 50,
+            async_refresh: false,
+            async_shards: 0,
+            max_async_staleness: 2,
         }
     }
 }
@@ -260,6 +279,14 @@ mod tests {
         let c = ShampooConfig::default();
         assert!(c.quarantine_after >= 1, "0 would quarantine on the first failure");
         assert!(c.probation_interval >= 1, "0 would retry every step");
+    }
+
+    #[test]
+    fn async_refresh_defaults_off_with_sane_envelope() {
+        let c = ShampooConfig::default();
+        assert!(!c.async_refresh, "async must be opt-in: off reproduces sync bit-identically");
+        assert_eq!(c.async_shards, 0, "0 = auto shard count");
+        assert!(c.max_async_staleness >= 1, "a 0 staleness window could never overlap");
     }
 
     #[test]

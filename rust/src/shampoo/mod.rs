@@ -15,10 +15,16 @@
 //!   their Gram EMA / inverse root (`every-n` | `staggered` | `staleness` |
 //!   registered keys), and a work-queue executor runs them on the
 //!   `util::pool` workers while untouched layers precondition-and-apply.
+//! * [`async_engine`] — the sharded async-refresh engine: planned roots are
+//!   stripped from the synchronous plan, computed on persistent worker
+//!   shards from gram snapshots, and published `max_async_staleness` steps
+//!   later under a deterministic bounded-staleness contract
+//!   (`cfg.async_refresh`, default off).
 //! * [`Shampoo`] — the driver: plan → execute-refresh → apply each step,
 //!   with the classic behavior (Gram EMA every `T1` steps, inverse roots
 //!   every `T2`) reproduced bit-for-bit by the default `every-n` policy.
 
+pub(crate) mod async_engine;
 pub mod blocking;
 pub mod config;
 pub mod scheduler;
@@ -39,6 +45,21 @@ use crate::util::error::Result;
 use crate::util::fault::FaultPlan;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Named view over [`Shampoo::scratch_stats`]: the aggregate of every
+/// parked arena's [`crate::linalg::ScratchStats`] counters plus the pool
+/// size itself.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShampooScratchStats {
+    /// Arenas currently parked in the pool (peak concurrent workers).
+    pub arenas: usize,
+    /// Σ matrix takes served from an arena's free list.
+    pub hits: usize,
+    /// Σ matrix takes that had to allocate.
+    pub misses: usize,
+    /// Σ GEMM-plan packing-buffer growths.
+    pub plan_grows: usize,
+}
 
 /// Shampoo wrapping a first-order base optimizer `F` (Algorithm 1).
 pub struct Shampoo {
@@ -69,6 +90,14 @@ pub struct Shampoo {
     /// pool grows to the peak concurrent worker count and then every
     /// steady-state step is allocation-free (see `scratch_stats`).
     scratch_pool: Mutex<Vec<ScratchArena>>,
+    /// Sharded async-refresh engine (`cfg.async_refresh`): planned root
+    /// units are stripped from the synchronous plan, computed on persistent
+    /// worker shards from gram snapshots taken after this step's gram
+    /// update, and published at the start of step `submit +
+    /// max_async_staleness` in unit-index order. The `Mutex` only provides
+    /// interior mutability for `write_state(&self)` draining; it is never
+    /// contended (all access is from the step/checkpoint thread).
+    async_eng: Option<Mutex<async_engine::AsyncRefresh>>,
 }
 
 impl Shampoo {
@@ -90,6 +119,11 @@ impl Shampoo {
             }
         }
         let sched = scheduler::build_for(&cfg);
+        let async_eng = if cfg.async_refresh {
+            Some(Mutex::new(async_engine::AsyncRefresh::new(&units, &cfg)))
+        } else {
+            None
+        };
         Shampoo {
             base,
             cfg,
@@ -104,6 +138,7 @@ impl Shampoo {
             fault: None,
             ledger: HealthLedger::new(),
             scratch_pool: Mutex::new(Vec::new()),
+            async_eng,
         }
     }
 
@@ -129,6 +164,35 @@ impl Shampoo {
         assert_eq!(self.base.states.len(), self.layers.len(), "optimizer not initialized");
 
         let t0 = Instant::now();
+        // Phase 0 (async only): publish roots whose staleness deadline is
+        // this step, in unit-index order. `collect_due` blocks on not-yet-
+        // finished units (a counted barrier stall) and never releases early
+        // completions before their due step, so the published sequence is
+        // deterministic regardless of worker timing or shard count.
+        if let Some(eng) = &self.async_eng {
+            let due = eng.lock().unwrap_or_else(|e| e.into_inner()).collect_due(step);
+            if !due.is_empty() {
+                let mut scratch = {
+                    let mut pool = self.scratch_pool.lock().unwrap_or_else(|e| e.into_inner());
+                    pool.pop().unwrap_or_else(ScratchArena::new)
+                };
+                for d in &due {
+                    let id = self.units[d.unit];
+                    self.layers[id.layer as usize].blocks[id.block as usize].publish_root_unit(
+                        id.side,
+                        d.result.as_ref().map(|(x, o)| (x, *o)),
+                        d.submit_step,
+                        d.pending_at_submit,
+                        &self.cfg,
+                        &self.ctx,
+                        &mut scratch,
+                        &self.ledger,
+                    );
+                }
+                self.scratch_pool.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
+            }
+        }
+
         // Phase 1: snapshot unit metadata and let the policy decide.
         self.infos.clear();
         for &id in &self.units {
@@ -137,6 +201,20 @@ impl Shampoo {
         }
         self.plan.reset(self.units.len());
         self.sched.plan(step, &self.infos, &self.cfg, &mut self.plan);
+
+        // Async mode computes roots off the step thread: record what the
+        // policy planned (for telemetry parity with sync mode), then strip
+        // the ROOT flags so the executor only runs gram updates and applies.
+        let planned_roots = self.plan.root_units();
+        let mut async_roots: Vec<usize> = Vec::new();
+        if self.async_eng.is_some() && planned_roots > 0 {
+            for u in 0..self.plan.len() {
+                if self.plan.flags(u) & RefreshPlan::ROOT != 0 {
+                    async_roots.push(u);
+                    self.plan.clear_root(u);
+                }
+            }
+        }
 
         // Phases 2+3: the work-queue executor.
         let sc = scheduler::StepCtx {
@@ -160,10 +238,49 @@ impl Shampoo {
             &self.scratch_pool,
             &sc,
         );
+        // Phase 4 (async only): submit the stripped root units AFTER the
+        // executor, so each gram snapshot includes this step's gram update —
+        // the same gram a synchronous refresh would have rooted. An in-
+        // flight unit is coalesced rather than resubmitted; quarantined
+        // units inside their probation window are floor-served inline
+        // (exactly the synchronous gate) and never reach the workers.
+        if let Some(eng) = &self.async_eng {
+            let mut eng = eng.lock().unwrap_or_else(|e| e.into_inner());
+            let mut scratch = {
+                let mut pool = self.scratch_pool.lock().unwrap_or_else(|e| e.into_inner());
+                pool.pop().unwrap_or_else(ScratchArena::new)
+            };
+            for &u in &async_roots {
+                let id = self.units[u];
+                let (li, bi) = (id.layer as usize, id.block as usize);
+                // The executor already screened and counted this gradient.
+                if grads[li].has_non_finite() {
+                    continue;
+                }
+                if eng.in_flight(u) {
+                    eng.note_coalesced();
+                    continue;
+                }
+                let block = &mut self.layers[li].blocks[bi];
+                if block.async_quarantine_gate(id.side, step, &self.cfg, &self.ledger) {
+                    continue;
+                }
+                let forced = self.fault.as_ref().is_some_and(|f| {
+                    f.forces_root_failure(step, id.layer, id.block, id.side.index())
+                });
+                let gram = block.snapshot_gram(id.side, &mut scratch);
+                let pending = block.side(id.side).meta.pending_norm;
+                eng.submit(u, step, forced, gram, pending);
+            }
+            eng.note_step_end();
+            self.stats.async_refresh = eng.stats.clone();
+            self.scratch_pool.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
+        }
+
         self.stats.health.absorb(&self.ledger.take());
         self.stats.record(
             self.plan.gram_units(),
-            self.plan.root_units(),
+            planned_roots,
             refresh_ns,
             t0.elapsed().as_nanos() as u64,
         );
@@ -201,18 +318,21 @@ impl Shampoo {
             .collect()
     }
 
-    /// Scratch-reuse telemetry: `(pooled arenas, Σ pool hits, Σ pool
-    /// misses, Σ GEMM-plan buffer grows)` across all parked arenas. In
-    /// steady state both the miss count and the plan-grow count are
-    /// constant step-over-step — matrix takes *and* the GEMM tier's packing
-    /// buffers are allocation-free. This is the assertion behind the
-    /// scratch-reuse test in `tests/kernel_equivalence.rs`.
-    pub fn scratch_stats(&self) -> (usize, usize, usize, usize) {
+    /// Scratch-reuse telemetry summed across all parked arenas (named
+    /// fields — call sites no longer pattern-match on positional tuple
+    /// order). In steady state both `misses` and `plan_grows` are constant
+    /// step-over-step — matrix takes *and* the GEMM tier's packing buffers
+    /// are allocation-free. This is the assertion behind the scratch-reuse
+    /// test in `tests/kernel_equivalence.rs`. The async engine's per-shard
+    /// arenas are worker-owned and intentionally not included.
+    pub fn scratch_stats(&self) -> ShampooScratchStats {
         let pool = self.scratch_pool.lock().unwrap_or_else(|e| e.into_inner());
-        let hits = pool.iter().map(|a| a.hits()).sum();
-        let misses = pool.iter().map(|a| a.misses()).sum();
-        let grows = pool.iter().map(|a| a.stats().plan_grows).sum();
-        (pool.len(), hits, misses, grows)
+        ShampooScratchStats {
+            arenas: pool.len(),
+            hits: pool.iter().map(|a| a.hits()).sum(),
+            misses: pool.iter().map(|a| a.misses()).sum(),
+            plan_grows: pool.iter().map(|a| a.stats().plan_grows).sum(),
+        }
     }
 
     /// Persistent optimizer-state bytes: Shampoo preconditioner storage
@@ -260,6 +380,18 @@ impl Shampoo {
             l.write_state(out);
         }
         self.base.write_state(out);
+        // Async mode appends the in-flight refresh table: every pending unit
+        // is drained to completion (results are NOT published — that would
+        // perturb the trajectory) and serialized with its submit/due steps,
+        // so a resumed run publishes at the original due steps and matches
+        // an uninterrupted control bit-for-bit. The section exists exactly
+        // when `cfg.async_refresh` is set — spec-pinned on both sides, so
+        // async-off checkpoints keep their historical format.
+        if let Some(eng) = &self.async_eng {
+            let mut eng = eng.lock().unwrap_or_else(|e| e.into_inner());
+            eng.drain();
+            eng.write_pending(out);
+        }
     }
 
     /// Inverse of [`Shampoo::write_state`] on a freshly built optimizer.
@@ -274,7 +406,11 @@ impl Shampoo {
         for l in &mut self.layers {
             l.read_state(r, &self.ctx, &mut scratch)?;
         }
-        self.base.read_state(r)
+        self.base.read_state(r)?;
+        if let Some(eng) = &self.async_eng {
+            eng.lock().unwrap_or_else(|e| e.into_inner()).read_pending(r)?;
+        }
+        Ok(())
     }
 }
 

@@ -86,6 +86,13 @@ impl RefreshPlan {
         self.flags[unit] |= Self::ROOT;
     }
 
+    /// Unschedule unit `unit`'s root recomputation (its Gram flag is kept).
+    /// The async engine strips planned roots from the synchronous plan this
+    /// way and submits them to worker shards instead.
+    pub fn clear_root(&mut self, unit: usize) {
+        self.flags[unit] &= !Self::ROOT;
+    }
+
     /// The [`Self::GRAM`]`/`[`Self::ROOT`] flag bits of unit `unit`.
     pub fn flags(&self, unit: usize) -> u8 {
         self.flags[unit]
@@ -791,6 +798,19 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn clear_root_strips_only_the_root_flag() {
+        let mut plan = RefreshPlan::default();
+        plan.reset(3);
+        plan.mark_gram(1);
+        plan.mark_root(1);
+        plan.mark_root(2);
+        plan.clear_root(1);
+        assert_eq!(plan.flags(1), RefreshPlan::GRAM, "gram flag must survive the strip");
+        assert_eq!(plan.root_units(), 1);
+        assert_eq!(plan.gram_units(), 1);
     }
 
     #[test]

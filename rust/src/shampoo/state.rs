@@ -90,6 +90,30 @@ impl FallbackOutcome {
                 | FallbackOutcome::PsdProjection
         )
     }
+
+    /// Stable serialization tag (checkpoint persistence of in-flight async
+    /// refresh results). 0 is reserved for "no outcome".
+    pub fn code(self) -> u8 {
+        match self {
+            FallbackOutcome::Healthy => 1,
+            FallbackOutcome::JitterRescue => 2,
+            FallbackOutcome::PsdProjection => 3,
+            FallbackOutcome::StaleRoot => 4,
+            FallbackOutcome::DiagonalFloor => 5,
+        }
+    }
+
+    /// Inverse of [`FallbackOutcome::code`].
+    pub fn from_code(code: u8) -> Option<FallbackOutcome> {
+        match code {
+            1 => Some(FallbackOutcome::Healthy),
+            2 => Some(FallbackOutcome::JitterRescue),
+            3 => Some(FallbackOutcome::PsdProjection),
+            4 => Some(FallbackOutcome::StaleRoot),
+            5 => Some(FallbackOutcome::DiagonalFloor),
+            _ => None,
+        }
+    }
 }
 
 /// Per-unit numerical-health state: consecutive-failure counting and the
@@ -188,6 +212,86 @@ fn update_side(
     scratch.recycle(l_new);
 }
 
+/// Rungs 0–2 of the fallback ladder as a *pure* function of the dequantized
+/// gram: Schur–Newton, ridged-eigendecomposition rescue, sanitized PSD
+/// projection. Returns the computed root and the rung that produced it, or
+/// `None` when every compute rung failed (the caller falls to the
+/// stale-root / diagonal-floor serving rungs, which need codec state).
+///
+/// Deliberately free of any codec, ledger, or metadata access: the async
+/// refresh engine runs this on worker shards against a gram snapshot taken
+/// at submission, and determinism of the result depends only on
+/// `(precond, cfg)` — the GEMM tier underneath is bit-identical across
+/// thread counts, so worker-side results equal step-thread results.
+pub(crate) fn compute_root_from_gram(
+    precond: &Matrix,
+    cfg: &ShampooConfig,
+    scratch: &mut ScratchArena,
+) -> Option<(Matrix, FallbackOutcome)> {
+    let dim = precond.rows();
+    // Eq. (6)/(12): ridge λ_max·ε·I handled inside the iteration.
+    let (x, stats) = inverse_pth_root_scratch(precond, &cfg.schur, scratch);
+    // Direct (VQ) quantization can break positive-definiteness
+    // (Tab. 9); Schur–Newton then diverges. Fall back to the exact
+    // eigendecomposition route with eigenvalue clamping — defined
+    // for indefinite inputs, so VQ stays *functional but degraded*,
+    // matching the paper's observed behavior.
+    // The true root satisfies ‖X‖_max ≤ (λmin + ridge)^{-1/4}; a
+    // quantization-created negative eigendirection can pass through
+    // zero during the iteration, leaving M ≈ I (small residual)
+    // while X accumulated an enormous finite factor — bound the
+    // magnitude.
+    let lam0 = stats.lambda_max.max(0.0);
+    let root_bound = 10.0 * ((lam0 * cfg.schur.eps).max(1e-10) as f64).powf(-0.25) as f32;
+    if x.has_non_finite()
+        || !stats.residual.is_finite()
+        || stats.residual > 0.1
+        || crate::linalg::max_abs(&x) > root_bound
+    {
+        // Exceptional path — allocation here is acceptable, but the
+        // ridged copy and the matmul plan still come from the arena.
+        scratch.recycle(x);
+        let lam = stats.lambda_max.max(0.0);
+        // Clamp at λmax·1e-4 (not the ε ridge): quantization-created
+        // negative directions would otherwise get ~(1e-6)^{-1/4} ≈
+        // 30× amplification and swamp the true curvature signal.
+        let clamp = (lam * 1e-4).max(1e-10);
+        // The ridge rung feeds the gram to the eigensolver as-is, so
+        // it is only defined for finite grams (the Jacobi sweep's
+        // eigenvalue sort is not total over NaN); non-finite grams
+        // skip straight to the sanitized projection rung.
+        let rescued = if precond.has_non_finite() {
+            None
+        } else {
+            let mut ridged = scratch.take(dim, dim);
+            ridged.copy_from(precond);
+            ridged.add_diag(lam * cfg.schur.eps);
+            let eig =
+                inverse_pth_root_eig_planned(&ridged, cfg.schur.p as f64, clamp, scratch.plan());
+            scratch.recycle(ridged);
+            if eig.has_non_finite() {
+                scratch.recycle(eig);
+                None
+            } else {
+                Some(eig)
+            }
+        };
+        if let Some(eig) = rescued {
+            Some((eig, FallbackOutcome::JitterRescue))
+        } else {
+            let psd = psd_clamped_root_planned(precond, cfg.schur.p as f64, clamp, scratch.plan());
+            if !psd.has_non_finite() {
+                Some((psd, FallbackOutcome::PsdProjection))
+            } else {
+                scratch.recycle(psd);
+                None
+            }
+        }
+    } else {
+        Some((x, FallbackOutcome::Healthy))
+    }
+}
+
 /// One Kronecker factor of one block: Gram codec + root codec + root cache
 /// + refresh metadata. This is the state behind ONE refresh unit.
 #[derive(Clone, Debug)]
@@ -241,81 +345,16 @@ impl SideState {
         let dim = self.dim;
         let mut precond = scratch.take(dim, dim);
         self.gram.load_into(&mut precond, scratch);
-        // Eq. (6)/(12): ridge λ_max·ε·I handled inside the iteration.
-        let (x, stats) = inverse_pth_root_scratch(&precond, &cfg.schur, scratch);
-        // Direct (VQ) quantization can break positive-definiteness
-        // (Tab. 9); Schur–Newton then diverges. Fall back to the exact
-        // eigendecomposition route with eigenvalue clamping — defined
-        // for indefinite inputs, so VQ stays *functional but degraded*,
-        // matching the paper's observed behavior.
-        // The true root satisfies ‖X‖_max ≤ (λmin + ridge)^{-1/4}; a
-        // quantization-created negative eigendirection can pass through
-        // zero during the iteration, leaving M ≈ I (small residual)
-        // while X accumulated an enormous finite factor — bound the
-        // magnitude.
-        let lam0 = stats.lambda_max.max(0.0);
-        let root_bound = 10.0 * ((lam0 * cfg.schur.eps).max(1e-10) as f64).powf(-0.25) as f32;
-        let (x, outcome) = if x.has_non_finite()
-            || !stats.residual.is_finite()
-            || stats.residual > 0.1
-            || crate::linalg::max_abs(&x) > root_bound
-        {
-            // Exceptional path — allocation here is acceptable, but the
-            // ridged copy and the matmul plan still come from the arena.
-            scratch.recycle(x);
-            let lam = stats.lambda_max.max(0.0);
-            // Clamp at λmax·1e-4 (not the ε ridge): quantization-created
-            // negative directions would otherwise get ~(1e-6)^{-1/4} ≈
-            // 30× amplification and swamp the true curvature signal.
-            let clamp = (lam * 1e-4).max(1e-10);
-            // The ridge rung feeds the gram to the eigensolver as-is, so
-            // it is only defined for finite grams (the Jacobi sweep's
-            // eigenvalue sort is not total over NaN); non-finite grams
-            // skip straight to the sanitized projection rung.
-            let rescued = if precond.has_non_finite() {
-                None
-            } else {
-                let mut ridged = scratch.take(dim, dim);
-                ridged.copy_from(&precond);
-                ridged.add_diag(lam * cfg.schur.eps);
-                let eig = inverse_pth_root_eig_planned(
-                    &ridged,
-                    cfg.schur.p as f64,
-                    clamp,
-                    scratch.plan(),
-                );
-                scratch.recycle(ridged);
-                if eig.has_non_finite() {
-                    scratch.recycle(eig);
-                    None
-                } else {
-                    Some(eig)
-                }
-            };
-            if let Some(eig) = rescued {
-                (eig, FallbackOutcome::JitterRescue)
-            } else {
-                let psd = psd_clamped_root_planned(
-                    &precond,
-                    cfg.schur.p as f64,
-                    clamp,
-                    scratch.plan(),
-                );
-                if !psd.has_non_finite() {
-                    (psd, FallbackOutcome::PsdProjection)
-                } else {
-                    scratch.recycle(psd);
-                    scratch.recycle(precond);
-                    return self.serve_stale_or_floor(cfg, ctx, scratch);
-                }
-            }
-        } else {
-            (x, FallbackOutcome::Healthy)
-        };
-        self.rebind_and_store(&x, cfg, ctx, scratch);
-        scratch.recycle(x);
+        let result = compute_root_from_gram(&precond, cfg, scratch);
         scratch.recycle(precond);
-        outcome
+        match result {
+            Some((x, outcome)) => {
+                self.rebind_and_store(&x, cfg, ctx, scratch);
+                scratch.recycle(x);
+                outcome
+            }
+            None => self.serve_stale_or_floor(cfg, ctx, scratch),
+        }
     }
 
     /// Rungs 4–5 of the ladder: keep the last good cached root if it is
@@ -565,6 +604,110 @@ impl BlockState {
         }
         s.meta.last_root = step;
         s.meta.pending_norm = 0.0;
+        s.meta.refreshes += 1;
+    }
+
+    /// Dequantize one side's gram into a fresh owned matrix — the snapshot
+    /// an async refresh submission ships to its worker shard. Owned (not
+    /// arena-backed) because it crosses the thread boundary and outlives
+    /// this step; the async path therefore allocates one `dim×dim` buffer
+    /// per submission (documented in `docs/PERFORMANCE.md`).
+    pub(crate) fn snapshot_gram(&self, side: Side, scratch: &mut ScratchArena) -> Matrix {
+        let s = &self.sides[side.index()];
+        let mut g = Matrix::zeros(s.dim, s.dim);
+        s.gram.load_into(&mut g, scratch);
+        g
+    }
+
+    /// The quarantine probation gate, replicated for async submission: a
+    /// quarantined unit inside its probation window is served from the
+    /// installed floor *now* (no job is dispatched) and the schedule slot
+    /// is consumed — byte-identical metadata effects to the sync path in
+    /// [`BlockState::root_unit`]. Returns `true` when the gate consumed the
+    /// slot (caller must not submit), `false` when a refresh (probation or
+    /// regular) should be submitted.
+    pub(crate) fn async_quarantine_gate(
+        &mut self,
+        side: Side,
+        step: u64,
+        cfg: &ShampooConfig,
+        ledger: &HealthLedger,
+    ) -> bool {
+        let s = &mut self.sides[side.index()];
+        let health = s.meta.health;
+        if health.is_quarantined()
+            && step.saturating_sub(health.quarantined_since - 1) < cfg.probation_interval
+        {
+            ledger.floor_serve();
+            s.meta.last_root = step;
+            s.meta.pending_norm = 0.0;
+            return true;
+        }
+        false
+    }
+
+    /// Publish one completed async refresh into the unit's root slot. Runs
+    /// on the *step thread* at the unit's deterministic due step, so all
+    /// ledger accounting and the quarantine state machine execute here,
+    /// race-free — worker shards only ever run the pure compute rungs.
+    ///
+    /// `computed` is the worker's [`compute_root_from_gram`] result
+    /// (`None` = every compute rung failed, or the refresh was a forced
+    /// fault); `submit_step` is the step the gram snapshot was taken at, and
+    /// the metadata records it — not the publish step — so the scheduler's
+    /// staleness view matches what the root actually reflects.
+    /// `pending_at_submit` is the unit's `pending_norm` at submission:
+    /// gradient energy absorbed *while the refresh was in flight* is not in
+    /// the published root and stays pending.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn publish_root_unit(
+        &mut self,
+        side: Side,
+        computed: Option<(&Matrix, FallbackOutcome)>,
+        submit_step: u64,
+        pending_at_submit: f32,
+        cfg: &ShampooConfig,
+        ctx: &CodecCtx,
+        scratch: &mut ScratchArena,
+        ledger: &HealthLedger,
+    ) {
+        let s = &mut self.sides[side.index()];
+        let outcome = match computed {
+            Some((x, outcome)) => {
+                s.rebind_and_store(x, cfg, ctx, scratch);
+                outcome
+            }
+            None => s.serve_stale_or_floor(cfg, ctx, scratch),
+        };
+        match outcome {
+            FallbackOutcome::Healthy => {}
+            FallbackOutcome::JitterRescue => ledger.jitter_rescue(),
+            FallbackOutcome::PsdProjection => ledger.psd_projection(),
+            FallbackOutcome::StaleRoot => ledger.stale_root_serve(),
+            FallbackOutcome::DiagonalFloor => ledger.floor_serve(),
+        }
+        let h = &mut s.meta.health;
+        if outcome.is_serving_fresh() {
+            if h.is_quarantined() {
+                h.quarantined_since = 0;
+                h.releases += 1;
+                ledger.release();
+            }
+            h.consecutive_failures = 0;
+        } else {
+            h.consecutive_failures += 1;
+            if h.is_quarantined() {
+                // Probation failed: restart the window, not a new entry.
+                h.quarantined_since = submit_step + 1;
+            } else if h.consecutive_failures >= cfg.quarantine_after {
+                h.quarantined_since = submit_step + 1;
+                h.quarantines += 1;
+                ledger.quarantine();
+                s.install_floor(cfg, ctx, scratch);
+            }
+        }
+        s.meta.last_root = submit_step;
+        s.meta.pending_norm = (s.meta.pending_norm - pending_at_submit).max(0.0);
         s.meta.refreshes += 1;
     }
 

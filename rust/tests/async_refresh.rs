@@ -1,0 +1,253 @@
+//! The async-refresh engine's pinned contracts:
+//!
+//! 1. **Shard invariance** — with `async_refresh = true` the trajectory is
+//!    bit-identical across `async_shards` ∈ {1, 2, 4}: publishes happen at
+//!    deterministic due steps in unit-index order, worker timing never
+//!    leaks into the math.
+//! 2. **Staleness envelope** — over a 200-step soak no publish ever lands
+//!    more than `max_async_staleness` steps after its submission.
+//! 3. **Mid-flight checkpointing** — `write_state` drains (never publishes)
+//!    in-flight refreshes, and a restored optimizer replays the
+//!    uninterrupted trajectory bit-for-bit, including publishes at the
+//!    original due steps.
+//! 4. **Fault determinism** — forced root failures drive the fallback
+//!    ladder through the async publish path with the same determinism.
+//! 5. **Kill + resume, full stack** — the persistence oracle holds with
+//!    refreshes in flight at every checkpoint.
+
+use quartz::linalg::Matrix;
+use quartz::optim::BaseOptimizer;
+use quartz::persist::{list_checkpoints, spec_hash};
+use quartz::quant::QuantConfig;
+use quartz::shampoo::{Shampoo, ShampooConfig, ShampooVariant};
+use quartz::train::registry;
+use quartz::train::synthetic::final_params_synthetic;
+use quartz::train::{OptimizerStack, SyntheticSpec, TrainConfig};
+use quartz::util::bytes::{ByteReader, ByteWriter};
+use quartz::util::fault::FaultPlan;
+use quartz::util::rng::Rng;
+use std::path::PathBuf;
+
+const SHAPES: [(usize, usize); 3] = [(12, 8), (8, 8), (16, 4)];
+
+fn async_cfg(shards: usize, staleness: u64) -> ShampooConfig {
+    ShampooConfig {
+        t1: 1,
+        t2: 2,
+        variant: ShampooVariant::Cq4 { error_feedback: true },
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        async_refresh: true,
+        async_shards: shards,
+        max_async_staleness: staleness,
+        ..Default::default()
+    }
+}
+
+fn seeded_grads(steps: u64, seed: u64) -> Vec<Vec<Matrix>> {
+    let mut rng = Rng::new(seed);
+    (0..steps)
+        .map(|_| SHAPES.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect())
+        .collect()
+}
+
+fn run(
+    cfg: ShampooConfig,
+    grads: &[Vec<Matrix>],
+    fault: Option<&FaultPlan>,
+) -> (Vec<Matrix>, Shampoo) {
+    let mut rng = Rng::new(29);
+    let mut params: Vec<Matrix> =
+        SHAPES.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+    let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg, &SHAPES);
+    quartz::optim::Optimizer::set_fault_plan(&mut sh, fault);
+    for (i, g) in grads.iter().enumerate() {
+        sh.step(&mut params, g, i as u64 + 1, 1.0);
+    }
+    (params, sh)
+}
+
+#[test]
+fn trajectory_is_invariant_across_shard_counts() {
+    let grads = seeded_grads(30, 31);
+    let (base, sh1) = run(async_cfg(1, 2), &grads, None);
+    let s = &sh1.refresh_stats().async_refresh;
+    assert!(s.submitted > 0, "30 steps at t2=2 must submit refreshes");
+    assert!(s.published > 0);
+    assert!(s.max_publish_lag <= 2, "lag {} exceeds the staleness envelope", s.max_publish_lag);
+    for shards in [2usize, 4] {
+        let (p, _) = run(async_cfg(shards, 2), &grads, None);
+        for (i, (a, b)) in base.iter().zip(p.iter()).enumerate() {
+            assert_eq!(
+                a.max_abs_diff(b),
+                0.0,
+                "param {i}: async_shards={shards} diverged from async_shards=1"
+            );
+        }
+    }
+    for p in &base {
+        assert!(!p.has_non_finite());
+    }
+}
+
+#[test]
+fn soak_respects_staleness_envelope_and_coalesces() {
+    // d = 3 with roots planned every 2 steps: a unit is regularly re-planned
+    // while still in flight, so the coalescing gate must fire — and no
+    // publish may ever exceed the envelope across 200 steps.
+    let grads = seeded_grads(200, 37);
+    let (params, sh) = run(async_cfg(2, 3), &grads, None);
+    let s = &sh.refresh_stats().async_refresh;
+    assert!(s.max_publish_lag <= 3, "lag {} exceeds max_async_staleness=3", s.max_publish_lag);
+    assert!(s.coalesced > 0, "t2=2 under d=3 must coalesce in-flight re-plans");
+    assert!(s.steps_overlapped > 0, "refreshes must overlap optimizer steps");
+    assert!(s.submitted >= s.published);
+    assert!(s.max_in_flight >= 1);
+    for (id, meta) in sh.unit_metas() {
+        assert!(meta.refreshes > 0, "{id:?} starved across the soak");
+    }
+    for p in &params {
+        assert!(!p.has_non_finite());
+    }
+}
+
+#[test]
+fn mid_flight_checkpoint_resumes_bit_identically() {
+    // every-n at t2 = 4 with d = 3: roots submitted at step 4 publish at
+    // step 7, so a checkpoint taken after step 5 has every unit in flight.
+    let cfg = ShampooConfig {
+        t1: 2,
+        t2: 4,
+        variant: ShampooVariant::Cq4 { error_feedback: true },
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        async_refresh: true,
+        async_shards: 2,
+        max_async_staleness: 3,
+        ..Default::default()
+    };
+    let grads = seeded_grads(12, 43);
+    let mut rng = Rng::new(29);
+    let mut params: Vec<Matrix> =
+        SHAPES.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+    let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg, &SHAPES);
+    for k in 1..=5u64 {
+        sh.step(&mut params, &grads[k as usize - 1], k, 1.0);
+    }
+    let s = &sh.refresh_stats().async_refresh;
+    assert!(
+        s.submitted > s.published,
+        "checkpoint must catch refreshes in flight (submitted {} published {})",
+        s.submitted,
+        s.published
+    );
+    let mut w = ByteWriter::new();
+    sh.write_state(&mut w);
+    let bytes = w.into_bytes();
+    let params_ck = params.clone();
+
+    let mut resumed = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg, &SHAPES);
+    resumed.read_state(&mut ByteReader::new(&bytes)).unwrap();
+    let mut params_r = params_ck;
+    for k in 6..=12u64 {
+        sh.step(&mut params, &grads[k as usize - 1], k, 1.0);
+        resumed.step(&mut params_r, &grads[k as usize - 1], k, 1.0);
+    }
+    for (i, (a, b)) in params.iter().zip(params_r.iter()).enumerate() {
+        assert_eq!(a.max_abs_diff(b), 0.0, "param {i}: resumed mid-flight trajectory diverged");
+    }
+    // Truncating the pending table must error, not panic or truncate-accept.
+    let mut fresh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg, &SHAPES);
+    assert!(fresh.read_state(&mut ByteReader::new(&bytes[..bytes.len() - 5])).is_err());
+}
+
+#[test]
+fn forced_failures_stay_deterministic_under_async() {
+    // Forced root failures skip the worker's compute rungs; the fallback
+    // ladder then runs at publish time on the step thread. Trajectories
+    // must stay bit-identical across shard counts, and the ladder outcomes
+    // must land in the health counters.
+    let fault = FaultPlan { seed: 5, force_fail_every: 4, fail_one_in: 1, ..Default::default() };
+    let grads = seeded_grads(24, 47);
+    let (base, sh) = run(async_cfg(1, 2), &grads, Some(&fault));
+    let h = sh.health();
+    assert!(
+        h.stale_root_serves + h.floor_serves > 0,
+        "forced failures must reach the stale/floor rungs through the publish path"
+    );
+    let (p2, sh2) = run(async_cfg(4, 2), &grads, Some(&fault));
+    for (i, (a, b)) in base.iter().zip(p2.iter()).enumerate() {
+        assert_eq!(a.max_abs_diff(b), 0.0, "param {i}: faulted async run diverged across shards");
+    }
+    assert_eq!(sh.health().quarantines, sh2.health().quarantines);
+}
+
+// ---------------------------------------------------------------------------
+// Full-stack kill + resume with refreshes in flight at every checkpoint
+// ---------------------------------------------------------------------------
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { shapes: vec![(12, 8), (8, 8), (6, 4)], noise: 0.05, pace_ms: 0 }
+}
+
+/// cq-ef stack with the async engine on: every-n at t2 = 4 with d = 3, so
+/// the checkpoints at steps 5 and 10 each catch the step-4 / step-8
+/// submissions still in flight (due at 7 and 11).
+fn async_stack() -> OptimizerStack {
+    let cfg = ShampooConfig {
+        t1: 2,
+        t2: 4,
+        max_order: 8,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        async_refresh: true,
+        async_shards: 2,
+        max_async_staleness: 3,
+        ..Default::default()
+    };
+    registry::build("cq-ef", BaseOptimizer::sgdm(0.05, 0.9, 0.0), &cfg, &spec().shapes)
+        .expect("cq-ef stack must be registered")
+}
+
+fn train_cfg(steps: u64, dir: Option<PathBuf>, hash: u64) -> TrainConfig {
+    TrainConfig {
+        steps,
+        seed: 7,
+        log_every: 5,
+        checkpoint_every: 5,
+        checkpoint_dir: dir,
+        spec_hash: hash,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn kill_resume_with_in_flight_refreshes_is_bit_identical() {
+    let dir = std::env::temp_dir().join(format!("quartz-async-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let hash = spec_hash("oracle|async-cq-ef");
+    let spec = spec();
+
+    // Uninterrupted control: 20 steps straight through.
+    let (pa, oa) =
+        final_params_synthetic(&spec, async_stack(), &train_cfg(20, None, hash)).unwrap();
+
+    // Killed after step 12; checkpoints at 5 and 10 both hold in-flight
+    // refreshes (submitted at 4 and 8, due at 7 and 11).
+    final_params_synthetic(&spec, async_stack(), &train_cfg(12, Some(dir.clone()), hash)).unwrap();
+    let steps: Vec<u64> = list_checkpoints(&dir).iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, vec![5, 10], "unexpected checkpoints");
+
+    // Resume restores step 10 (pending publish due at 11) and trains on.
+    let (pb, ob) =
+        final_params_synthetic(&spec, async_stack(), &train_cfg(20, Some(dir.clone()), hash))
+            .unwrap();
+
+    for (i, (a, b)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(a.max_abs_diff(b), 0.0, "param {i} diverged after mid-flight resume");
+    }
+    let state = |o: &OptimizerStack| {
+        let mut w = ByteWriter::new();
+        o.save_state(&mut w).unwrap();
+        w.into_bytes()
+    };
+    assert_eq!(state(&oa), state(&ob), "optimizer state diverged after mid-flight resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -281,23 +281,24 @@ fn steady_state_refresh_reuses_scratch() {
     // Warm-up: first refresh swaps root codecs f32→vq4 and sizes buffers.
     step(&mut sh, 1, &mut rng);
     step(&mut sh, 2, &mut rng);
-    let (arenas, _, misses, grows) = sh.scratch_stats();
-    assert_eq!(arenas, 1, "single layer must use a single arena");
+    let warm = sh.scratch_stats();
+    assert_eq!(warm.arenas, 1, "single layer must use a single arena");
     for k in 3..=10u64 {
         step(&mut sh, k, &mut rng);
     }
-    let (arenas2, hits2, misses2, grows2) = sh.scratch_stats();
-    assert_eq!(arenas2, 1);
+    let steady = sh.scratch_stats();
+    assert_eq!(steady.arenas, 1);
     assert_eq!(
-        misses2,
-        misses,
-        "steady-state refresh allocated scratch (misses {misses} → {misses2})"
+        steady.misses, warm.misses,
+        "steady-state refresh allocated scratch (misses {} → {})",
+        warm.misses, steady.misses
     );
     assert_eq!(
-        grows2, grows,
-        "steady-state refresh regrew GEMM packing buffers ({grows} → {grows2})"
+        steady.plan_grows, warm.plan_grows,
+        "steady-state refresh regrew GEMM packing buffers ({} → {})",
+        warm.plan_grows, steady.plan_grows
     );
-    assert!(hits2 > 0, "refresh pipeline must actually draw from the pool");
+    assert!(steady.hits > 0, "refresh pipeline must actually draw from the pool");
     for p in &params {
         assert!(!p.has_non_finite());
     }
@@ -367,20 +368,25 @@ fn avx2_gemm_matches_scalar_oracle_within_1e5() {
 
 #[test]
 fn gemm_parallel_is_bit_identical_to_sequential() {
+    // (150, 500, 410) exercises the jc column-slab grain; (500, 300, 64)
+    // is tall-skinny (single jc slab) and exercises the ic row-stripe
+    // grain. Both must be bit-identical to the sequential run.
     let mut rng = Rng::new(41);
-    let a = Matrix::randn(150, 500, 1.0, &mut rng);
-    let b = Matrix::randn(500, 410, 1.0, &mut rng);
-    for kernel in [Microkernel::Scalar, Microkernel::Avx2] {
-        if kernel == Microkernel::Avx2 && !avx2_available() {
-            continue;
-        }
-        let mut plan = MatmulPlan::new();
-        let mut seq = Matrix::zeros(150, 410);
-        gemm_with(&a, false, &b, false, &mut seq, &mut plan, kernel, 1);
-        for threads in [2, 4, 7] {
-            let mut par = Matrix::zeros(150, 410);
-            gemm_with(&a, false, &b, false, &mut par, &mut plan, kernel, threads);
-            assert_eq!(seq, par, "{kernel:?} with {threads} threads is not bit-identical");
+    for (m, k, n) in [(150usize, 500usize, 410usize), (500, 300, 64)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        for kernel in [Microkernel::Scalar, Microkernel::Avx2] {
+            if kernel == Microkernel::Avx2 && !avx2_available() {
+                continue;
+            }
+            let mut plan = MatmulPlan::new();
+            let mut seq = Matrix::zeros(m, n);
+            gemm_with(&a, false, &b, false, &mut seq, &mut plan, kernel, 1);
+            for threads in [2, 4, 7] {
+                let mut par = Matrix::zeros(m, n);
+                gemm_with(&a, false, &b, false, &mut par, &mut plan, kernel, threads);
+                assert_eq!(seq, par, "{kernel:?} {m}x{k}x{n} threads={threads}");
+            }
         }
     }
 }

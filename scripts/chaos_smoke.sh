@@ -4,7 +4,10 @@
 # gradient spikes, forced factorization failures, checkpoint bit flips —
 # SIGKILL the process mid-run, `quartz resume` the queue directory, and
 # assert the final metrics are finite AND byte-identical to an
-# uninterrupted control run of the same spec. The fault plan is a pure
+# uninterrupted control run of the same spec. The cq-ef run drives the
+# sharded async-refresh engine (async_refresh = true), so the SIGKILL
+# regularly lands with root refreshes in flight — checkpoints drain the
+# engine, and the resumed run must still replay the control bit-for-bit. The fault plan is a pure
 # function of (seed, step), so the resumed tail replays the exact same
 # corruption schedule; screening keeps every run finite; the flipped
 # checkpoints are rejected by CRC and resume falls back to intact ones.
@@ -60,6 +63,9 @@ until_step = 60
 model = "syn"
 base = "sgdm"
 shampoo = "cq-ef"
+async_refresh = true
+async_shards = 2
+max_async_staleness = 2
 
 [[runs]]
 model = "syn"

@@ -11,7 +11,10 @@
 # refresh-scheduler step benches at the transformer-ish layer mix
 # (step_mix/every-n, step_mix/staggered, step_mix/staleness), which feed
 # scripts/bench_regression.sh so a policy-level slowdown is flagged like
-# any kernel regression.
+# any kernel regression. The async-refresh engine records
+# (step_mix_async/off, step_mix_async/2, step_mix_async/4) sit alongside
+# them — off vs sharded overlap at the same mix, the refresh-spike
+# evidence for the bounded-staleness engine.
 #
 # Usage: scripts/harvest_bench.sh [output.json]
 #
