@@ -124,6 +124,33 @@ fn main() {
         println!("  step_mix/{policy}: units {} | {}", sh.unit_count(), s.summary());
     }
 
+    // ---- Graft variants at the same mix and cadence. The graft runs on
+    // the per-step apply path (never inside refresh units), so its cost is
+    // the per-element accumulator update plus two Frobenius norms — these
+    // records pin that the stateful variants (adagrad/rmsprop) stay within
+    // noise of the default sgd norm graft.
+    for graft in ["sgd", "adagrad", "rmsprop"] {
+        let cfg = ShampooConfig {
+            variant: ShampooVariant::Cq4 { error_feedback: true },
+            t1,
+            t2,
+            max_order,
+            graft,
+            quant: quartz::quant::QuantConfig { min_quant_elems: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 5e-4), cfg, &mix);
+        let mut p = mix_params.clone();
+        let mut k = 1u64;
+        b.bench(&format!("step_mix_graft/{graft}"), || {
+            sh.step(&mut p, &mix_grads, k, 1.0);
+            k += 1;
+            black_box(&p);
+        });
+        let s = sh.refresh_stats();
+        println!("  step_mix_graft/{graft}: units {} | {}", sh.unit_count(), s.summary());
+    }
+
     // ---- The async-refresh engine at the same mix, `every-n` cadence (the
     // spike-heaviest schedule): off vs 2 vs 4 worker shards. The headline
     // is the p95/p99 refresh-spike reduction — root recomputation moves off

@@ -6,7 +6,7 @@ use crate::data::images::ImageSpec;
 use crate::data::synthetic::ClusterSpec;
 use crate::data::tokens::CorpusSpec;
 use crate::optim::optimizer::Hyper;
-use crate::optim::{BaseOptimizer, LrSchedule, OptimizerKind};
+use crate::optim::{grafting, BaseOptimizer, LrSchedule, OptimizerKind};
 use crate::shampoo::{scheduler, ShampooConfig, ShampooVariant};
 use crate::train::{registry, OptimizerStack, SyntheticSpec};
 use crate::util::error::{Context, Result};
@@ -266,6 +266,11 @@ impl ExperimentSpec {
     /// async_refresh = true          # overlap root refreshes with later steps
     /// async_shards = 2              # async worker shards (0 = auto)
     /// max_async_staleness = 2       # async publish deadline in steps (>= 1)
+    /// graft = "adagrad"             # any optim::grafting key: none | sgd |
+    ///                               # adagrad | rmsprop | sqrt-n | …
+    /// start_preconditioning_step = 100   # grafted-base-only warmup steps
+    /// no_preconditioning_for_layers_with_dim_gt = 4096  # 0 = disabled
+    /// shape_interpretation = true   # chunk >=3-D tensors into matrices
     /// ```
     pub fn from_toml(text: &str) -> Result<ExperimentSpec> {
         let doc = TomlDoc::parse(text)?;
@@ -392,6 +397,38 @@ impl ExperimentSpec {
                             "runs[{i}]: max_async_staleness must be >= 1, got {st}"
                         );
                         cfg.max_async_staleness = st as u64;
+                    }
+                    // Workload knobs (scalable-Shampoo style). Graft
+                    // selection mirrors the scheduler registry: any key in
+                    // `optim::grafting` is accepted, and `none` disables
+                    // grafting outright.
+                    if let Some(gk) = t.get("graft").and_then(|v| v.as_str()) {
+                        let b = grafting::lookup(gk)
+                            .with_context(|| format!("runs[{i}]: unknown graft '{gk}'"))?;
+                        cfg.graft = b.key;
+                        cfg.grafting = b.key != "none";
+                    }
+                    if let Some(sp) = t.get("start_preconditioning_step").and_then(|v| v.as_i64())
+                    {
+                        crate::ensure!(
+                            sp >= 0,
+                            "runs[{i}]: start_preconditioning_step must be >= 0, got {sp}"
+                        );
+                        cfg.start_preconditioning_step = sp as u64;
+                    }
+                    if let Some(dg) = t
+                        .get("no_preconditioning_for_layers_with_dim_gt")
+                        .and_then(|v| v.as_i64())
+                    {
+                        crate::ensure!(
+                            dg >= 0,
+                            "runs[{i}]: no_preconditioning_for_layers_with_dim_gt must be >= 0 \
+                             (0 = disabled), got {dg}"
+                        );
+                        cfg.no_preconditioning_for_layers_with_dim_gt = dg as usize;
+                    }
+                    if let Some(si) = t.get("shape_interpretation").and_then(|v| v.as_bool()) {
+                        cfg.shape_interpretation = si;
                     }
                     Some(cfg)
                 }
@@ -680,6 +717,43 @@ base = "adamw"
         let zero = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\nmax_async_staleness = 0\n";
         assert!(ExperimentSpec::from_toml(zero).is_err());
         let neg = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\nasync_shards = -1\n";
+        assert!(ExperimentSpec::from_toml(neg).is_err());
+    }
+
+    #[test]
+    fn toml_selects_workload_knobs() {
+        let text = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"cq-ef\"\ngraft = \"adagrad\"\n\
+                    start_preconditioning_step = 100\n\
+                    no_preconditioning_for_layers_with_dim_gt = 4096\n\
+                    shape_interpretation = true\n";
+        let spec = ExperimentSpec::from_toml(text).unwrap();
+        let sh = spec.runs[0].optimizer.shampoo.as_ref().unwrap();
+        assert_eq!(sh.graft, "adagrad");
+        assert!(sh.grafting);
+        assert_eq!(sh.start_preconditioning_step, 100);
+        assert_eq!(sh.no_preconditioning_for_layers_with_dim_gt, 4096);
+        assert!(sh.shape_interpretation);
+        // `graft = "none"` disables grafting outright (graft_key() → none).
+        let off = ExperimentSpec::from_toml(
+            "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\ngraft = \"none\"\n",
+        )
+        .unwrap();
+        let sh = off.runs[0].optimizer.shampoo.as_ref().unwrap();
+        assert!(!sh.grafting);
+        assert_eq!(sh.graft_key(), "none");
+        // Defaults stay the classic Eq. 13 norm graft with no warmup.
+        let plain = ExperimentSpec::from_toml("\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\n")
+            .unwrap();
+        let sh = plain.runs[0].optimizer.shampoo.as_ref().unwrap();
+        assert_eq!(sh.graft_key(), "sgd");
+        assert_eq!(sh.start_preconditioning_step, 0);
+        assert_eq!(sh.no_preconditioning_for_layers_with_dim_gt, 0);
+        assert!(!sh.shape_interpretation);
+        // Unknown grafts and negative knobs are rejected at parse time.
+        let bad = "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\ngraft = \"nope\"\n";
+        assert!(ExperimentSpec::from_toml(bad).is_err());
+        let neg =
+            "\n[[runs]]\nmodel = \"m\"\nshampoo = \"vq\"\nstart_preconditioning_step = -1\n";
         assert!(ExperimentSpec::from_toml(neg).is_err());
     }
 

@@ -121,6 +121,8 @@ fn print_help() {
          \x20        [--refresh-policy every-n|staggered|staleness]\n\
          \x20        [--refresh-budget N] [--steps N] [--lm] [--seed N]\n\
          \x20        [--async-refresh] [--async-shards N] [--max-async-staleness N]\n\
+         \x20        [--graft none|sgd|adagrad|rmsprop|sqrt-n]\n\
+         \x20        [--start-preconditioning-step N] [--no-precond-dim-gt N]\n\
          \x20 run    --config FILE.toml [--out DIR]\n\
          \x20 queue  FILE.toml [--out DIR] [--checkpoint-every N]\n\
          \x20        # resumable job queue: checkpoints + metrics.jsonl in DIR\n\
@@ -142,12 +144,17 @@ fn print_help() {
         let b = quartz::shampoo::scheduler::lookup(key).unwrap();
         println!("  {key:<10} {}", b.summary);
     }
+    println!("\ngrafts (--graft / TOML `graft =`):");
+    for key in quartz::optim::grafting::graft_keys() {
+        let b = quartz::optim::grafting::lookup(key).unwrap();
+        println!("  {key:<8} {}", b.summary);
+    }
 }
 
-/// List the three registries — optimizer stacks, preconditioner codecs
-/// (with bytes-per-element at a reference order), refresh policies — under
-/// grouped headers. Rendering lives in `report::codecs` so the output is
-/// snapshot-tested.
+/// List the four registries — optimizer stacks, preconditioner codecs
+/// (with bytes-per-element at a reference order), refresh policies, grafts
+/// — under grouped headers. Rendering lives in `report::codecs` so the
+/// output is snapshot-tested.
 fn cmd_codecs() -> Result<()> {
     println!("{}", quartz::report::codecs::codec_listing());
     Ok(())
@@ -201,6 +208,19 @@ fn cmd_train(args: &Args) -> Result<()> {
                 cfg.max_async_staleness >= 1,
                 "--max-async-staleness must be >= 1"
             );
+        }
+        // Workload knobs (`quartz codecs` lists the graft keys).
+        if let Some(gk) = args.get("graft") {
+            let b = quartz::optim::grafting::lookup(gk)
+                .with_context(|| format!("unknown graft '{gk}'"))?;
+            cfg.graft = b.key;
+            cfg.grafting = b.key != "none";
+        }
+        if let Some(sp) = args.get("start-preconditioning-step") {
+            cfg.start_preconditioning_step = sp.parse()?;
+        }
+        if let Some(dg) = args.get("no-precond-dim-gt") {
+            cfg.no_preconditioning_for_layers_with_dim_gt = dg.parse()?;
         }
     }
     let workload = if args.has("lm") || model.starts_with("lm_") {

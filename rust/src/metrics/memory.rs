@@ -7,8 +7,8 @@
 //! shapes + configuration, and unit tests pin the model to the *measured*
 //! `size_bytes()` of live optimizer states (no drift allowed).
 
-use crate::optim::OptimizerKind;
-use crate::shampoo::{Blocking, ShampooConfig, UnitMeta};
+use crate::optim::{grafting, GraftParams, OptimizerKind};
+use crate::shampoo::{Blocking, LayerState, ShampooConfig, UnitMeta};
 
 /// Byte accountant for a model (list of parameter shapes).
 #[derive(Clone, Debug)]
@@ -31,28 +31,53 @@ impl MemoryModel {
         self.param_bytes() * kind.state_slots()
     }
 
-    /// Shampoo preconditioner bytes for a variant (excluding base state).
+    /// Shampoo preconditioner + graft-accumulator bytes for a variant
+    /// (excluding base state), at the steady-state (post-warmup) footprint.
     pub fn shampoo_bytes(&self, cfg: &ShampooConfig) -> usize {
+        self.bytes_inner(cfg, true)
+    }
+
+    /// Like [`MemoryModel::shampoo_bytes`] but at a point in training:
+    /// while `step < cfg.start_preconditioning_step` the inverse-root slots
+    /// are still deferred — never computed, not counted, exactly like the
+    /// live state — and from the threshold step on the steady-state
+    /// footprint applies (exact under the default `every-n` cadence with
+    /// `t2 = 1`; with a sparser root schedule the slots go live at the
+    /// first post-warmup root refresh instead).
+    pub fn shampoo_bytes_at(&self, cfg: &ShampooConfig, step: u64) -> usize {
+        self.bytes_inner(cfg, step >= cfg.start_preconditioning_step)
+    }
+
+    fn bytes_inner(&self, cfg: &ShampooConfig, roots_live: bool) -> usize {
         self.shapes
             .iter()
             .map(|&(m, n)| {
-                if m.min(n) <= 1 {
-                    return 0; // vectors bypass preconditioning
+                let graft = graft_state_bytes(m, n, cfg);
+                if m.min(n) <= 1 || LayerState::dim_opted_out(m, n, cfg) {
+                    // Vectors and dim-gt opt-outs bypass preconditioning:
+                    // zero codec state, but the grafted base path still
+                    // carries its accumulator.
+                    return graft;
                 }
-                Blocking::new(m, n, cfg.max_order)
-                    .blocks
-                    .iter()
-                    .map(|b| {
-                        // Four codec stores plus the refresh scheduler's
-                        // per-unit bookkeeping (two units per block) —
-                        // policy-invariant, so this model holds under
-                        // every registered refresh policy.
-                        side_bytes(b.rows, cfg) + side_bytes(b.cols, cfg)
-                            + root_bytes(b.rows, cfg)
-                            + root_bytes(b.cols, cfg)
-                            + 2 * UnitMeta::BYTES
-                    })
-                    .sum()
+                graft
+                    + Blocking::new(m, n, cfg.max_order)
+                        .blocks
+                        .iter()
+                        .map(|b| {
+                            // Four codec stores plus the refresh scheduler's
+                            // per-unit bookkeeping (two units per block) —
+                            // policy-invariant, so this model holds under
+                            // every registered refresh policy.
+                            let roots = if roots_live {
+                                root_bytes(b.rows, cfg) + root_bytes(b.cols, cfg)
+                            } else {
+                                0
+                            };
+                            side_bytes(b.rows, cfg) + side_bytes(b.cols, cfg)
+                                + roots
+                                + 2 * UnitMeta::BYTES
+                        })
+                        .sum::<usize>()
             })
             .sum()
     }
@@ -61,6 +86,14 @@ impl MemoryModel {
     pub fn total_bytes(&self, base: OptimizerKind, shampoo: Option<&ShampooConfig>) -> usize {
         self.base_state_bytes(base) + shampoo.map(|c| self.shampoo_bytes(c)).unwrap_or(0)
     }
+}
+
+/// Accumulator bytes of the configured graft for one `m×n` layer, priced
+/// through the registry itself (build one and ask) so runtime-registered
+/// grafts are exact rather than approximated. Stateless keys cost zero.
+fn graft_state_bytes(m: usize, n: usize, cfg: &ShampooConfig) -> usize {
+    let gp = GraftParams { eps: cfg.eps, beta: cfg.beta };
+    grafting::build_for(cfg.graft_key(), m, n, &gp).size_bytes()
 }
 
 /// Scale count for one `dim×dim` block-quantized matrix.
@@ -327,5 +360,103 @@ mod tests {
                 "policy '{policy}': modeled vs measured bytes"
             );
         }
+    }
+
+    /// Graft accumulators are persistent optimizer state: every registered
+    /// graft key priced byte-exactly against the live optimizer under every
+    /// registered codec (accumulators ride on top of the codec stores
+    /// independently), on a layer set with a multi-block layer and a
+    /// vector.
+    #[test]
+    fn model_matches_measured_bytes_for_every_graft_and_codec() {
+        let shapes = [(64, 48), (33, 1), (120, 100)];
+        let codecs = crate::quant::codec::codec_keys();
+        assert!(codecs.len() >= 9, "expected the full codec registry");
+        for graft in crate::optim::grafting::graft_keys() {
+            for &codec in &codecs {
+                let cfg = ShampooConfig {
+                    t1: 1,
+                    t2: 1,
+                    graft,
+                    side_codec: Some(codec),
+                    root_codec: Some(codec),
+                    quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+                    max_order: 96,
+                    ..Default::default()
+                };
+                let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), cfg, &shapes);
+                let mut rng = Rng::new(23);
+                let mut params: Vec<Matrix> =
+                    shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+                let grads: Vec<Matrix> =
+                    shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+                sh.step(&mut params, &grads, 1, 1.0);
+                let predicted = MemoryModel::new(&shapes).shampoo_bytes(&cfg);
+                assert_eq!(predicted, sh.shampoo_state_bytes(), "graft {graft} codec {codec}");
+            }
+        }
+    }
+
+    /// `no_preconditioning_for_layers_with_dim_gt` routes a layer to the
+    /// passthrough path: zero codec state in the model AND the live
+    /// optimizer, while the grafted base path keeps its accumulator.
+    #[test]
+    fn dim_opt_out_layers_price_zero_codec_state() {
+        let shapes = [(200, 64), (64, 48)];
+        let mk = |bound: usize| ShampooConfig {
+            t1: 1,
+            t2: 1,
+            graft: "adagrad",
+            no_preconditioning_for_layers_with_dim_gt: bound,
+            quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+            max_order: 96,
+            ..Default::default()
+        };
+        let cfg = mk(100);
+        let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), cfg, &shapes);
+        let mut rng = Rng::new(29);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+        let grads: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+        sh.step(&mut params, &grads, 1, 1.0);
+        let mm = MemoryModel::new(&shapes);
+        assert_eq!(mm.shampoo_bytes(&cfg), sh.shampoo_state_bytes());
+        // The opted-out (200, 64) layer contributes only its accumulator:
+        // the delta against the unbounded config is that layer's codec
+        // state, i.e. the single-layer model without the knob.
+        let only_big = MemoryModel::new(&shapes[..1]);
+        let codec_state = only_big.shampoo_bytes(&mk(0)) - only_big.shampoo_bytes(&mk(100));
+        assert!(codec_state > 0);
+        assert_eq!(mm.shampoo_bytes(&mk(0)), mm.shampoo_bytes(&cfg) + codec_state);
+    }
+
+    /// During `start_preconditioning_step` warmup the root slots are
+    /// deferred in the live state, and `shampoo_bytes_at` tracks the
+    /// transition exactly (t2 = 1: roots go live at the threshold step).
+    #[test]
+    fn warmup_defers_root_bytes_in_model_and_live_state() {
+        let shapes = [(64, 48), (33, 1)];
+        let cfg = ShampooConfig {
+            t1: 1,
+            t2: 1,
+            start_preconditioning_step: 3,
+            quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+            max_order: 96,
+            ..Default::default()
+        };
+        let mm = MemoryModel::new(&shapes);
+        let mut sh = Shampoo::new(BaseOptimizer::sgd(0.01, 0.0), cfg, &shapes);
+        let mut rng = Rng::new(37);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+        let grads: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+        for k in 1..=3u64 {
+            sh.step(&mut params, &grads, k, 1.0);
+            assert_eq!(mm.shampoo_bytes_at(&cfg, k), sh.shampoo_state_bytes(), "step {k}");
+        }
+        assert!(mm.shampoo_bytes_at(&cfg, 2) < mm.shampoo_bytes(&cfg));
+        assert_eq!(mm.shampoo_bytes_at(&cfg, 3), mm.shampoo_bytes(&cfg));
     }
 }

@@ -1,12 +1,43 @@
-//! Learning-rate grafting (paper Eq. (13) and Algorithm 2 step 15, from
-//! Agarwal et al. [1]): rescale the preconditioned gradient so its
-//! Frobenius norm matches the raw gradient's, decoupling Shampoo's
-//! direction from the base optimizer's step-size calibration.
+//! Learning-rate grafting: the magnitude/direction split of paper Eq. (13)
+//! and Algorithm 2 step 15 (from Agarwal et al. [1]), grown into the
+//! scalable-Shampoo graft family — the preconditioned direction is rescaled
+//! per layer, per step, to the step magnitude a reference first-order method
+//! would have taken, decoupling Shampoo's direction from the base
+//! optimizer's step-size calibration.
+//!
+//! * [`Graft`] — the per-layer policy trait: [`Graft::magnitude`] returns
+//!   the target norm for this step; stateful variants (AdaGrad / RMSProp)
+//!   own a per-layer accumulator that is counted in [`Graft::size_bytes`],
+//!   priced by `metrics::MemoryModel`, and round-tripped through
+//!   [`Graft::write_state`] / [`Graft::read_state`] so faulted/async
+//!   resumes stay bit-identical.
+//! * Built-ins: `none` (grafting disabled), `sgd` (`‖G‖_F` — the classic
+//!   Eq. 13 norm graft, bit-identical to the historical [`graft`] free
+//!   function), `adagrad` (`‖G / (√(Σ G∘G) + ε)‖_F`), `rmsprop` (the same
+//!   magnitude over an EMA second moment), and `sqrt-n` (`√(rows·cols)`,
+//!   the dimension-normalized constant graft).
+//! * A string-keyed registry mirroring `quant::codec` and
+//!   `shampoo::scheduler` — [`register`] / [`lookup`] / [`graft_keys`];
+//!   `ShampooConfig::graft` selects by key from the CLI / TOML specs.
+//! * [`apply_graft`] — the shared application step: compute the magnitude,
+//!   rescale the preconditioned gradient to it, and **screen** non-finite
+//!   magnitudes or scale factors through the health ledger
+//!   (`grads_screened`) instead of silently no-opping — a preconditioned
+//!   gradient that overflowed to `Inf` must never reach the base update.
 
 use crate::linalg::{fro_norm, Matrix};
+use crate::metrics::HealthLedger;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::error::Result;
+use std::sync::{Mutex, OnceLock};
 
 /// `G̃ = (‖G‖_F / ‖Ĝ‖_F) · Ĝ`, in place on `precond`.
 /// If `‖Ĝ‖_F = 0` the preconditioned gradient is left as-is (zero).
+///
+/// The historical entry point (and the sequential-oracle reference): the
+/// registered `sgd` graft reproduces it bit-for-bit on finite inputs. New
+/// call sites should go through [`apply_graft`], which additionally screens
+/// non-finite norms through the health counters.
 pub fn graft(raw: &Matrix, precond: &mut Matrix) {
     let ng = fro_norm(raw);
     let np = fro_norm(precond);
@@ -14,6 +45,309 @@ pub fn graft(raw: &Matrix, precond: &mut Matrix) {
         let s = (ng / np) as f32;
         precond.scale(s);
     }
+}
+
+/// A layer-wise grafting policy: per step, the target magnitude the
+/// preconditioned update is rescaled to.
+///
+/// One instance serves ONE layer for the optimizer's lifetime — stateful
+/// variants keep their accumulator here. [`Graft::magnitude`] is called
+/// exactly once per layer per step (the executor guarantees this: the fast
+/// path iterates layers sequentially, and on refresh steps the graft rides
+/// inside the layer's apply lock, which runs exactly once per layer per
+/// step), so accumulators advance deterministically regardless of thread
+/// count.
+pub trait Graft: Send {
+    /// Registry key (also the config-file spelling).
+    fn key(&self) -> &'static str;
+
+    /// Target magnitude for this step's update, advancing any internal
+    /// accumulator state. `raw` is the layer's raw (unpreconditioned)
+    /// gradient.
+    fn magnitude(&mut self, raw: &Matrix) -> f64;
+
+    /// Persistent accumulator bytes (0 for stateless variants) — counted in
+    /// `Shampoo::shampoo_state_bytes` and by `metrics::MemoryModel`.
+    fn size_bytes(&self) -> usize {
+        0
+    }
+
+    /// Serialize the accumulator state (nothing for stateless variants).
+    fn write_state(&self, _out: &mut ByteWriter) {}
+
+    /// Inverse of [`Graft::write_state`] on a freshly built graft.
+    fn read_state(&mut self, _r: &mut ByteReader<'_>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Rescale `precond` to the graft's target magnitude, in place:
+/// `G̃ = (m(G) / ‖Ĝ‖_F) · Ĝ`. Returns `false` when the update was screened
+/// — a non-finite magnitude, a non-finite `‖Ĝ‖_F` (the preconditioned
+/// product overflowed), or a scale factor that overflows `f32` is counted
+/// on `ledger` (`grads_screened`) and the caller must skip the base update
+/// entirely, exactly like the executor's raw-gradient screen: the poisoned
+/// step never happened for this layer.
+///
+/// The `none` graft short-circuits (no norms computed, `precond`
+/// untouched); a zero `‖Ĝ‖_F` leaves the zero update as-is. On finite
+/// inputs the `sgd` graft is bit-identical to the historical [`graft`]
+/// free function.
+pub fn apply_graft(
+    g: &mut dyn Graft,
+    raw: &Matrix,
+    precond: &mut Matrix,
+    ledger: &HealthLedger,
+) -> bool {
+    if g.key() == "none" {
+        return true;
+    }
+    let m = g.magnitude(raw);
+    let np = fro_norm(precond);
+    if !m.is_finite() || !np.is_finite() {
+        ledger.grad_screened();
+        return false;
+    }
+    if np > 0.0 {
+        let s = (m / np) as f32;
+        if !s.is_finite() {
+            ledger.grad_screened();
+            return false;
+        }
+        precond.scale(s);
+    }
+    true
+}
+
+/// Hyperparameters the stateful grafts need (threaded from `ShampooConfig`
+/// by the Shampoo driver: `eps` is the config's ε, `beta` its EMA β).
+#[derive(Clone, Copy, Debug)]
+pub struct GraftParams {
+    /// Denominator stabilizer ε in `G / (√acc + ε)`.
+    pub eps: f32,
+    /// EMA momentum for the `rmsprop` second-moment accumulator.
+    pub beta: f32,
+}
+
+impl Default for GraftParams {
+    fn default() -> Self {
+        GraftParams { eps: 1e-6, beta: 0.95 }
+    }
+}
+
+/// Grafting disabled: [`apply_graft`] short-circuits without touching the
+/// preconditioned gradient (`cfg.grafting = false` routes here).
+struct NoGraft;
+
+impl Graft for NoGraft {
+    fn key(&self) -> &'static str {
+        "none"
+    }
+
+    fn magnitude(&mut self, _raw: &Matrix) -> f64 {
+        1.0
+    }
+}
+
+/// The classic Eq. 13 norm graft: `m(G) = ‖G‖_F` (an SGD step's magnitude).
+struct SgdGraft;
+
+impl Graft for SgdGraft {
+    fn key(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn magnitude(&mut self, raw: &Matrix) -> f64 {
+        fro_norm(raw)
+    }
+}
+
+/// The dimension-normalized constant graft: `m(G) = √(rows·cols)` — every
+/// step has unit RMS magnitude regardless of the gradient's scale.
+struct SqrtNGraft {
+    magnitude: f64,
+}
+
+impl Graft for SqrtNGraft {
+    fn key(&self) -> &'static str {
+        "sqrt-n"
+    }
+
+    fn magnitude(&mut self, _raw: &Matrix) -> f64 {
+        self.magnitude
+    }
+}
+
+/// Second-moment accumulator grafts: `adagrad` (`acc ← acc + G∘G`) and
+/// `rmsprop` (`acc ← β·acc + (1−β)·G∘G`), both with
+/// `m(G) = ‖G / (√acc + ε)‖_F` — the step magnitude the corresponding
+/// diagonal method would have taken. The accumulator is per-layer
+/// persistent state: counted in [`Graft::size_bytes`] and serialized.
+struct AccumGraft {
+    key: &'static str,
+    acc: Matrix,
+    eps: f32,
+    /// `None` = AdaGrad sum; `Some(β)` = RMSProp EMA.
+    beta: Option<f32>,
+}
+
+impl Graft for AccumGraft {
+    fn key(&self) -> &'static str {
+        self.key
+    }
+
+    fn magnitude(&mut self, raw: &Matrix) -> f64 {
+        debug_assert_eq!((raw.rows(), raw.cols()), (self.acc.rows(), self.acc.cols()));
+        let mut sum = 0.0f64;
+        for (a, &g) in self.acc.data_mut().iter_mut().zip(raw.data()) {
+            *a = match self.beta {
+                None => *a + g * g,
+                Some(b) => b * *a + (1.0 - b) * (g * g),
+            };
+            let ratio = g / (a.sqrt() + self.eps);
+            sum += ratio as f64 * ratio as f64;
+        }
+        sum.sqrt()
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.acc.size_bytes()
+    }
+
+    fn write_state(&self, out: &mut ByteWriter) {
+        self.acc.write_bytes(out);
+    }
+
+    fn read_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        let acc = Matrix::read_bytes(r)?;
+        crate::ensure!(
+            (acc.rows(), acc.cols()) == (self.acc.rows(), self.acc.cols()),
+            "graft accumulator is {}x{}, layer expects {}x{}",
+            acc.rows(),
+            acc.cols(),
+            self.acc.rows(),
+            self.acc.cols()
+        );
+        self.acc = acc;
+        Ok(())
+    }
+}
+
+/// One registry entry (mirrors `quant::codec::CodecBuilder` and
+/// `shampoo::scheduler::SchedulerBuilder`).
+#[derive(Clone, Copy)]
+pub struct GraftBuilder {
+    /// Canonical key (the `graft` config spelling).
+    pub key: &'static str,
+    /// One-line description for CLI/docs listings.
+    pub summary: &'static str,
+    /// Build a fresh per-layer graft for a `rows×cols` parameter.
+    pub build: fn(rows: usize, cols: usize, params: &GraftParams) -> Box<dyn Graft>,
+}
+
+fn build_none(_rows: usize, _cols: usize, _p: &GraftParams) -> Box<dyn Graft> {
+    Box::new(NoGraft)
+}
+
+fn build_sgd(_rows: usize, _cols: usize, _p: &GraftParams) -> Box<dyn Graft> {
+    Box::new(SgdGraft)
+}
+
+fn build_adagrad(rows: usize, cols: usize, p: &GraftParams) -> Box<dyn Graft> {
+    Box::new(AccumGraft { key: "adagrad", acc: Matrix::zeros(rows, cols), eps: p.eps, beta: None })
+}
+
+fn build_rmsprop(rows: usize, cols: usize, p: &GraftParams) -> Box<dyn Graft> {
+    Box::new(AccumGraft {
+        key: "rmsprop",
+        acc: Matrix::zeros(rows, cols),
+        eps: p.eps,
+        beta: Some(p.beta),
+    })
+}
+
+fn build_sqrt_n(rows: usize, cols: usize, _p: &GraftParams) -> Box<dyn Graft> {
+    Box::new(SqrtNGraft { magnitude: ((rows * cols) as f64).sqrt() })
+}
+
+fn builtin_grafts() -> Vec<GraftBuilder> {
+    vec![
+        GraftBuilder {
+            key: "none",
+            summary: "grafting disabled (preconditioned update used as-is)",
+            build: build_none,
+        },
+        GraftBuilder {
+            key: "sgd",
+            summary: "rescale to ‖G‖_F (Eq. 13 norm graft, the default)",
+            build: build_sgd,
+        },
+        GraftBuilder {
+            key: "adagrad",
+            summary: "rescale to ‖G/(√(ΣG∘G)+ε)‖_F (per-layer AdaGrad state)",
+            build: build_adagrad,
+        },
+        GraftBuilder {
+            key: "rmsprop",
+            summary: "rescale to ‖G/(√acc+ε)‖_F over an EMA second moment",
+            build: build_rmsprop,
+        },
+        GraftBuilder {
+            key: "sqrt-n",
+            summary: "rescale to √(rows·cols) (dimension-normalized constant)",
+            build: build_sqrt_n,
+        },
+    ]
+}
+
+fn registry() -> &'static Mutex<Vec<GraftBuilder>> {
+    static REGISTRY: OnceLock<Mutex<Vec<GraftBuilder>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(builtin_grafts()))
+}
+
+/// Register a graft under a new key. Returns `false` (unchanged registry)
+/// if the key is taken — built-ins cannot be shadowed.
+pub fn register(builder: GraftBuilder) -> bool {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    if reg.iter().any(|b| b.key == builder.key) {
+        return false;
+    }
+    reg.push(builder);
+    true
+}
+
+/// Look up a graft builder by key.
+///
+/// ```
+/// use quartz::optim::grafting::{graft_keys, lookup};
+///
+/// let b = lookup("adagrad").expect("built-in graft");
+/// assert_eq!(b.key, "adagrad");
+/// assert!(lookup("no-such-graft").is_none());
+/// // Built-ins come first in the key listing.
+/// assert_eq!(
+///     graft_keys()[..5].to_vec(),
+///     vec!["none", "sgd", "adagrad", "rmsprop", "sqrt-n"]
+/// );
+/// ```
+pub fn lookup(key: &str) -> Option<GraftBuilder> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().find(|b| b.key == key).copied()
+}
+
+/// All registered keys, built-ins first.
+pub fn graft_keys() -> Vec<&'static str> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().map(|b| b.key).collect()
+}
+
+/// Build the graft `key` for a `rows×cols` layer, panicking with the key on
+/// an unknown one — configs can reference runtime-registered grafts, so
+/// this is a runtime binding by design (same contract as the codec and
+/// scheduler registries).
+pub fn build_for(key: &str, rows: usize, cols: usize, params: &GraftParams) -> Box<dyn Graft> {
+    let b = lookup(key).unwrap_or_else(|| panic!("graft '{key}' is not registered"));
+    (b.build)(rows, cols, params)
 }
 
 #[cfg(test)]
@@ -45,5 +379,118 @@ mod tests {
         let mut pre = Matrix::from_rows(&[&[0.0]]);
         graft(&raw, &mut pre);
         assert_eq!(pre[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn sgd_graft_is_bit_identical_to_free_function() {
+        let mut rng = Rng::new(7);
+        let ledger = HealthLedger::new();
+        let mut g = build_for("sgd", 9, 5, &GraftParams::default());
+        for _ in 0..6 {
+            let raw = Matrix::randn(9, 5, 1.3, &mut rng);
+            let mut a = Matrix::randn(9, 5, 0.4, &mut rng);
+            let mut b = a.clone();
+            graft(&raw, &mut a);
+            assert!(apply_graft(g.as_mut(), &raw, &mut b, &ledger));
+            assert_eq!(a.max_abs_diff(&b), 0.0, "sgd graft must match the Eq. 13 function");
+        }
+        assert_eq!(g.size_bytes(), 0, "sgd graft is stateless");
+        assert_eq!(ledger.take().grads_screened, 0);
+    }
+
+    #[test]
+    fn none_graft_leaves_update_untouched() {
+        let ledger = HealthLedger::new();
+        let mut g = build_for("none", 3, 3, &GraftParams::default());
+        let raw = Matrix::from_rows(&[&[100.0, 0.0, 0.0]]);
+        let mut pre = Matrix::from_rows(&[&[0.0, 0.25, 0.0]]);
+        let snap = pre.clone();
+        assert!(apply_graft(g.as_mut(), &raw, &mut pre, &ledger));
+        assert_eq!(pre.max_abs_diff(&snap), 0.0);
+    }
+
+    #[test]
+    fn adagrad_accumulates_and_rmsprop_decays() {
+        let p = GraftParams { eps: 1e-6, beta: 0.5 };
+        let mut ada = build_for("adagrad", 1, 2, &p);
+        let mut rms = build_for("rmsprop", 1, 2, &p);
+        let g = Matrix::from_rows(&[&[2.0, 0.0]]);
+        // AdaGrad: acc = 4 then 8 → m = |2/√4| then |2/√8| (ε-shifted).
+        let m1 = ada.magnitude(&g);
+        let m2 = ada.magnitude(&g);
+        assert!((m1 - 1.0).abs() < 1e-5, "m1={m1}");
+        assert!((m2 - 2.0 / 8.0f64.sqrt()).abs() < 1e-5, "m2={m2}");
+        // RMSProp: acc = 0.5·0 + 0.5·4 = 2, then 0.5·2 + 0.5·4 = 3.
+        let r1 = rms.magnitude(&g);
+        let r2 = rms.magnitude(&g);
+        assert!((r1 - 2.0 / 2.0f64.sqrt()).abs() < 1e-5, "r1={r1}");
+        assert!((r2 - 2.0 / 3.0f64.sqrt()).abs() < 1e-5, "r2={r2}");
+        // Both price their accumulator.
+        assert_eq!(ada.size_bytes(), 2 * 4);
+        assert_eq!(rms.size_bytes(), 2 * 4);
+    }
+
+    #[test]
+    fn sqrt_n_magnitude_is_dimension_constant() {
+        let mut g = build_for("sqrt-n", 3, 12, &GraftParams::default());
+        let raw = Matrix::from_rows(&[&[1e9, 0.0]]);
+        assert_eq!(g.magnitude(&raw), 36.0f64.sqrt());
+        assert_eq!(g.size_bytes(), 0);
+    }
+
+    #[test]
+    fn accumulator_round_trips_byte_exactly() {
+        let mut rng = Rng::new(3);
+        let p = GraftParams::default();
+        let mut g = build_for("adagrad", 4, 6, &p);
+        for _ in 0..5 {
+            g.magnitude(&Matrix::randn(4, 6, 1.0, &mut rng));
+        }
+        let mut w = ByteWriter::new();
+        g.write_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut fresh = build_for("adagrad", 4, 6, &p);
+        fresh.read_state(&mut ByteReader::new(&bytes)).unwrap();
+        let mut w2 = ByteWriter::new();
+        fresh.write_state(&mut w2);
+        assert_eq!(bytes, w2.into_bytes(), "re-serialization must be byte-identical");
+        // The restored accumulator continues the trajectory bit-identically.
+        let probe = Matrix::randn(4, 6, 1.0, &mut rng);
+        assert_eq!(g.magnitude(&probe).to_bits(), fresh.magnitude(&probe).to_bits());
+        // Shape-mismatched state errors instead of corrupting.
+        let mut wrong = build_for("adagrad", 6, 4, &p);
+        assert!(wrong.read_state(&mut ByteReader::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn non_finite_precond_is_screened_not_applied() {
+        // The PR 8 guard contract: a preconditioned gradient that
+        // overflowed to Inf (or a non-finite magnitude) is screened through
+        // the ledger and the caller skips the base update — the historical
+        // free function silently no-opped and let the poison through.
+        let ledger = HealthLedger::new();
+        let mut g = build_for("sgd", 1, 2, &GraftParams::default());
+        let raw = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let mut pre = Matrix::from_rows(&[&[f32::INFINITY, 0.0]]);
+        assert!(!apply_graft(g.as_mut(), &raw, &mut pre, &ledger));
+        assert_eq!(ledger.take().grads_screened, 1);
+        // Overflowing scale factor (huge magnitude over tiny norm) is
+        // likewise screened rather than scaling the update to Inf.
+        let mut sq = build_for("sqrt-n", 4000, 4000, &GraftParams::default());
+        let mut tiny = Matrix::from_rows(&[&[1e-42f32, 0.0]]);
+        assert!(!apply_graft(sq.as_mut(), &raw, &mut tiny, &ledger));
+        assert_eq!(ledger.take().grads_screened, 1);
+    }
+
+    #[test]
+    fn registry_has_builtins_and_rejects_shadowing() {
+        for key in ["none", "sgd", "adagrad", "rmsprop", "sqrt-n"] {
+            let b = lookup(key).unwrap_or_else(|| panic!("builtin '{key}' missing"));
+            assert_eq!(b.key, key);
+        }
+        assert!(lookup("no-such-graft").is_none());
+        let b = lookup("sgd").unwrap();
+        assert!(!register(b));
+        assert!(graft_keys().starts_with(&["none", "sgd", "adagrad", "rmsprop", "sqrt-n"]));
     }
 }

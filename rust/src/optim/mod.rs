@@ -16,6 +16,6 @@ pub mod rmsprop;
 pub mod grafting;
 pub mod schedule;
 
-pub use grafting::graft;
+pub use grafting::{apply_graft, graft, Graft, GraftBuilder, GraftParams};
 pub use optimizer::{BaseOptimizer, Optimizer, OptimizerKind, ParamState};
 pub use schedule::LrSchedule;

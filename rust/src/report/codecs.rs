@@ -1,13 +1,14 @@
 //! The `quartz codecs` listing.
 //!
-//! Renders the three open registries under separate headers — optimizer
-//! stacks (`train::registry`), preconditioner codecs (`quant::codec`), and
-//! refresh policies (`shampoo::scheduler`) — and prices every codec's
-//! **bytes per element** at a reference preconditioner order, side and root
-//! constructors separately (they differ for the Cholesky family). Lives in
-//! the library (not `main.rs`) so the CLI output is snapshot-tested in
-//! `tests/cli_codecs.rs`.
+//! Renders the four open registries under separate headers — optimizer
+//! stacks (`train::registry`), preconditioner codecs (`quant::codec`),
+//! refresh policies (`shampoo::scheduler`), and grafts (`optim::grafting`)
+//! — and prices every codec's **bytes per element** at a reference
+//! preconditioner order, side and root constructors separately (they differ
+//! for the Cholesky family). Lives in the library (not `main.rs`) so the
+//! CLI output is snapshot-tested in `tests/cli_codecs.rs`.
 
+use crate::optim::grafting;
 use crate::quant::codec;
 use crate::quant::{BlockQuantizer, CodecCtx, PrecondCodec, QuantConfig};
 use crate::report::table::Table;
@@ -29,7 +30,7 @@ fn bytes_per_elem(ctor: fn(&CodecCtx) -> Box<dyn PrecondCodec>, ctx: &CodecCtx) 
     c.size_bytes() as f64 / (REFERENCE_ORDER * REFERENCE_ORDER) as f64
 }
 
-/// Render the full `quartz codecs` listing (three grouped tables).
+/// Render the full `quartz codecs` listing (four grouped tables).
 pub fn codec_listing() -> String {
     let mut out = String::new();
 
@@ -63,6 +64,14 @@ pub fn codec_listing() -> String {
     let mut t = Table::new("refresh policies (shampoo::scheduler)", &["key", "summary"]);
     for key in scheduler::scheduler_keys() {
         let b = scheduler::lookup(key).unwrap();
+        t.row(vec![key.to_string(), b.summary.to_string()]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    let mut t = Table::new("grafts (optim::grafting)", &["key", "summary"]);
+    for key in grafting::graft_keys() {
+        let b = grafting::lookup(key).unwrap();
         t.row(vec![key.to_string(), b.summary.to_string()]);
     }
     out.push_str(&t.render());

@@ -96,8 +96,36 @@ pub struct ShampooConfig {
     pub max_order: usize,
     /// Block-wise quantizer settings (b=4, B=64, linear-2).
     pub quant: QuantConfig,
-    /// Learning-rate grafting (Eq. 13).
+    /// Learning-rate grafting (Eq. 13). `false` disables grafting entirely
+    /// (equivalent to `graft = "none"`); `true` applies the [`Self::graft`]
+    /// variant.
     pub grafting: bool,
+    /// Grafting variant, resolved in `optim::grafting`'s string-keyed
+    /// registry: `"sgd"` (the default — today's Eq. 13 `‖G‖_F` norm graft),
+    /// `"adagrad"` / `"rmsprop"` (per-layer second-moment accumulators),
+    /// `"sqrt-n"` (dimension-normalized constant), or any
+    /// runtime-registered key. Ignored when [`Self::grafting`] is `false`.
+    pub graft: &'static str,
+    /// Scalable-Shampoo warmup: steps `< start_preconditioning_step` take
+    /// base-optimizer-only updates — the scheduler plans zero refresh
+    /// units, inverse-root slots stay unallocated (uncounted in
+    /// `state_bytes` and the memory model), and the trajectory is
+    /// bit-identical to the bare base optimizer (under the default `sgd`
+    /// graft, whose scale is exactly 1 on unpreconditioned updates).
+    /// 0 (the default) preconditions from the first step.
+    pub start_preconditioning_step: u64,
+    /// Scalable-Shampoo opt-out for embedding-table-shaped layers: a layer
+    /// with `max(rows, cols)` beyond this bound is routed to the grafted
+    /// base update with ZERO codec state (no blocks, no gram/root slots).
+    /// 0 (the default) disables the bound.
+    pub no_preconditioning_for_layers_with_dim_gt: usize,
+    /// Scalable-Shampoo shape interpretation: collapse a ≥3-D tensor into
+    /// the list of its trailing-two-dim matrices before blocking (e.g.
+    /// `[4, 3, 1024, 512]` → 12 × `[1024, 512]` L/R statistics stacked in
+    /// one layer) instead of flattening all leading dims into the rows.
+    /// Only observable through `Shampoo::new_nd`; 2-D layers are
+    /// unaffected. Default `false` = flatten.
+    pub shape_interpretation: bool,
     /// Tab. 2 ablation: quantize the diagonal too ("Original" block-wise
     /// quantization). Default false = off-diagonal quantization.
     pub vq_quantize_diag: bool,
@@ -179,6 +207,16 @@ impl ShampooConfig {
             _ => "vq4",
         }
     }
+
+    /// Grafting registry key actually in effect: `"none"` when
+    /// [`Self::grafting`] is off, otherwise [`Self::graft`].
+    pub fn graft_key(&self) -> &'static str {
+        if self.grafting {
+            self.graft
+        } else {
+            "none"
+        }
+    }
 }
 
 impl Default for ShampooConfig {
@@ -193,6 +231,10 @@ impl Default for ShampooConfig {
             max_order: 1200,
             quant: QuantConfig::default(),
             grafting: true,
+            graft: "sgd",
+            start_preconditioning_step: 0,
+            no_preconditioning_for_layers_with_dim_gt: 0,
+            shape_interpretation: false,
             vq_quantize_diag: false,
             schur: SchurNewtonConfig::default(),
             side_codec: None,
@@ -222,6 +264,24 @@ mod tests {
         assert_eq!(c.quant.block, 64);
         assert_eq!(c.max_order, 1200);
         assert!(c.grafting);
+    }
+
+    #[test]
+    fn workload_knobs_default_off_and_graft_keys_resolve() {
+        let c = ShampooConfig::default();
+        // Defaults must reproduce pre-workload-engine trajectories
+        // bit-identically: Eq. 13 sgd graft, no warmup, no dim bound, flat
+        // shape interpretation.
+        assert_eq!(c.graft, "sgd");
+        assert_eq!(c.graft_key(), "sgd");
+        assert_eq!(c.start_preconditioning_step, 0);
+        assert_eq!(c.no_preconditioning_for_layers_with_dim_gt, 0);
+        assert!(!c.shape_interpretation);
+        let off = ShampooConfig { grafting: false, ..Default::default() };
+        assert_eq!(off.graft_key(), "none", "grafting=false routes to the none graft");
+        for key in ["none", "sgd", "adagrad", "rmsprop", "sqrt-n"] {
+            assert!(crate::optim::grafting::lookup(key).is_some(), "graft '{key}' not registered");
+        }
     }
 
     #[test]

@@ -23,6 +23,11 @@
 //! * [`Shampoo`] — the driver: plan → execute-refresh → apply each step,
 //!   with the classic behavior (Gram EMA every `T1` steps, inverse roots
 //!   every `T2`) reproduced bit-for-bit by the default `every-n` policy.
+//!   Scalable-Shampoo workload knobs ride on the config: string-keyed
+//!   grafting (the `optim::grafting` registry), the
+//!   `start_preconditioning_step` warmup, ≥3-D `shape_interpretation`
+//!   chunking (via [`Shampoo::new_nd`]), and
+//!   `no_preconditioning_for_layers_with_dim_gt` opt-outs.
 
 pub(crate) mod async_engine;
 pub mod blocking;
@@ -37,7 +42,7 @@ pub use state::{FallbackOutcome, LayerState, Side, UnitHealth, UnitMeta};
 
 use crate::linalg::{Matrix, ScratchArena};
 use crate::metrics::{HealthLedger, HealthStats, RefreshStats};
-use crate::optim::{BaseOptimizer, Optimizer};
+use crate::optim::{grafting, BaseOptimizer, Graft, GraftParams, Optimizer};
 use crate::quant::codec::CodecCtx;
 use crate::quant::BlockQuantizer;
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -66,6 +71,12 @@ pub struct Shampoo {
     pub base: BaseOptimizer,
     pub cfg: ShampooConfig,
     pub layers: Vec<LayerState>,
+    /// Per-layer grafting state (`cfg.graft`), applied to the preconditioned
+    /// update before the base rule. Stateless keys (`none`/`sgd`/`sqrt-n`)
+    /// hold zero bytes; `adagrad`/`rmsprop` carry a full-rank second-moment
+    /// accumulator counted in `state_bytes` and checkpointed alongside the
+    /// layer codecs.
+    grafts: Vec<Box<dyn Graft>>,
     ctx: CodecCtx,
     /// The refresh policy (chosen by `cfg.refresh_policy`).
     sched: Box<dyn RefreshScheduler>,
@@ -104,11 +115,84 @@ impl Shampoo {
     /// Build for a fixed set of parameter shapes `(rows, cols)`.
     pub fn new(mut base: BaseOptimizer, cfg: ShampooConfig, shapes: &[(usize, usize)]) -> Shampoo {
         base.init(shapes.len());
-        let quantizer = Arc::new(BlockQuantizer::new(cfg.quant));
-        let ctx = CodecCtx::new(cfg.eps, cfg.beta_e, quantizer);
-        let layers: Vec<LayerState> = shapes
+        let ctx = Self::make_ctx(&cfg);
+        let layers: Vec<LayerState> =
+            shapes.iter().map(|&(m, n)| LayerState::new(m, n, &cfg, &ctx)).collect();
+        Self::from_layers(base, cfg, ctx, layers)
+    }
+
+    /// Build for N-dimensional parameter shapes, applying the
+    /// `shape_interpretation` knob: with it set, a tensor of rank ≥ 3 is
+    /// read as a stack of matrices over its leading axes — `[4, 3, 1024,
+    /// 512]` becomes 12 independent `[1024, 512]` chunks, each blocked and
+    /// preconditioned on its own Gram pair — instead of one flattened
+    /// `[12288, 512]` matrix whose row Gram would mix unrelated slices.
+    /// The parameter the caller steps with is still the single collapsed
+    /// `(∏ leading · rows, cols)` matrix; chunking only changes the block
+    /// table. With the knob off (the default) every shape is flattened the
+    /// classic way, bit-identical to [`Shampoo::new`] on collapsed shapes.
+    /// Rank-0/1 shapes become column vectors (passthrough layers).
+    pub fn new_nd(mut base: BaseOptimizer, cfg: ShampooConfig, shapes: &[Vec<usize>]) -> Shampoo {
+        base.init(shapes.len());
+        let ctx = Self::make_ctx(&cfg);
+        let layers: Vec<LayerState> =
+            shapes.iter().map(|s| Self::layer_for_nd(s, &cfg, &ctx)).collect();
+        Self::from_layers(base, cfg, ctx, layers)
+    }
+
+    /// The collapsed `(rows, cols)` an ND shape steps with — what callers
+    /// must size their parameter/gradient matrices to under [`new_nd`].
+    pub fn collapsed_shape(shape: &[usize]) -> (usize, usize) {
+        match shape {
+            [] => (1, 1),
+            &[n] => (n, 1),
+            &[.., m, n] => (shape[..shape.len() - 2].iter().product::<usize>() * m, n),
+        }
+    }
+
+    fn make_ctx(cfg: &ShampooConfig) -> CodecCtx {
+        CodecCtx::new(cfg.eps, cfg.beta_e, Arc::new(BlockQuantizer::new(cfg.quant)))
+    }
+
+    /// Collapse one ND shape into a [`LayerState`] (see [`new_nd`]).
+    fn layer_for_nd(shape: &[usize], cfg: &ShampooConfig, ctx: &CodecCtx) -> LayerState {
+        match shape {
+            [] => LayerState::new(1, 1, cfg, ctx),
+            &[n] => LayerState::new(n, 1, cfg, ctx),
+            &[m, n] => LayerState::new(m, n, cfg, ctx),
+            &[.., m, n] => {
+                let c: usize = shape[..shape.len() - 2].iter().product();
+                if !cfg.shape_interpretation || c <= 1 || m <= 1 || n <= 1 {
+                    return LayerState::new(c * m, n, cfg, ctx);
+                }
+                // One blocking table per chunk, offset down the row axis of
+                // the collapsed (c·m, n) matrix the caller steps with.
+                // Passthrough/opt-out is judged on chunk dims — the shapes
+                // preconditioning would actually see.
+                let mut blocks = Vec::new();
+                for i in 0..c {
+                    for mut b in Blocking::new(m, n, cfg.max_order).blocks {
+                        b.r0 += i * m;
+                        blocks.push(b);
+                    }
+                }
+                let blocking = Blocking { m: c * m, n, max_order: cfg.max_order.max(1), blocks };
+                let passthrough = m.min(n) <= 1 || LayerState::dim_opted_out(m, n, cfg);
+                LayerState::from_blocking(c * m, n, blocking, passthrough, cfg, ctx)
+            }
+        }
+    }
+
+    fn from_layers(
+        base: BaseOptimizer,
+        cfg: ShampooConfig,
+        ctx: CodecCtx,
+        layers: Vec<LayerState>,
+    ) -> Shampoo {
+        let gp = GraftParams { eps: cfg.eps, beta: cfg.beta };
+        let grafts: Vec<Box<dyn Graft>> = layers
             .iter()
-            .map(|&(m, n)| LayerState::new(m, n, &cfg, &ctx))
+            .map(|l| grafting::build_for(cfg.graft_key(), l.rows, l.cols, &gp))
             .collect();
         let mut units = Vec::new();
         for (li, layer) in layers.iter().enumerate() {
@@ -128,6 +212,7 @@ impl Shampoo {
             base,
             cfg,
             layers,
+            grafts,
             ctx,
             sched,
             units,
@@ -193,14 +278,21 @@ impl Shampoo {
             }
         }
 
-        // Phase 1: snapshot unit metadata and let the policy decide.
+        // Phase 1: snapshot unit metadata and let the policy decide. During
+        // warmup (`step < cfg.start_preconditioning_step`) the policy is not
+        // consulted at all: the plan stays empty (zero planned units in the
+        // telemetry), the executor takes its sequential fast path, and every
+        // layer applies the grafted base rule on the raw gradient.
+        let warmup = step < self.cfg.start_preconditioning_step;
         self.infos.clear();
         for &id in &self.units {
             let meta = self.layers[id.layer as usize].unit_meta(id.block as usize, id.side);
             self.infos.push(UnitInfo { id, meta });
         }
         self.plan.reset(self.units.len());
-        self.sched.plan(step, &self.infos, &self.cfg, &mut self.plan);
+        if !warmup {
+            self.sched.plan(step, &self.infos, &self.cfg, &mut self.plan);
+        }
 
         // Async mode computes roots off the step thread: record what the
         // policy planned (for telemetry parity with sync mode), then strip
@@ -226,12 +318,14 @@ impl Shampoo {
             step,
             fault: self.fault.as_ref(),
             ledger: &self.ledger,
+            warmup,
         };
         let refresh_ns = scheduler::execute_step(
             &mut self.layers,
             params,
             grads,
             &mut self.base.states,
+            &mut self.grafts,
             &self.plan,
             &self.units,
             &mut self.tasks,
@@ -342,9 +436,12 @@ impl Shampoo {
         self.shampoo_state_bytes() + self.base.state_bytes()
     }
 
-    /// Preconditioner storage only.
+    /// Preconditioner storage plus graft accumulators (zero for the
+    /// stateless `none`/`sgd`/`sqrt-n` keys).
     pub fn shampoo_state_bytes(&self) -> usize {
-        self.layers.iter().map(|l| l.size_bytes()).sum()
+        let layers: usize = self.layers.iter().map(|l| l.size_bytes()).sum();
+        let grafts: usize = self.grafts.iter().map(|g| g.size_bytes()).sum();
+        layers + grafts
     }
 
     /// Dequantized inverse-root pairs `(D(L̂), D(R̂))` of every block of
@@ -380,6 +477,14 @@ impl Shampoo {
             l.write_state(out);
         }
         self.base.write_state(out);
+        // Graft section: the active key (a format self-check — restoring
+        // under a different graft is a spec mismatch, not a recoverable
+        // state) followed by each layer's accumulator. Stateless grafts
+        // write nothing, so classic checkpoints cost only the key string.
+        out.put_str(self.cfg.graft_key());
+        for g in &self.grafts {
+            g.write_state(out);
+        }
         // Async mode appends the in-flight refresh table: every pending unit
         // is drained to completion (results are NOT published — that would
         // perturb the trajectory) and serialized with its submit/due steps,
@@ -407,6 +512,15 @@ impl Shampoo {
             l.read_state(r, &self.ctx, &mut scratch)?;
         }
         self.base.read_state(r)?;
+        let key = r.get_str()?;
+        crate::ensure!(
+            key == self.cfg.graft_key(),
+            "checkpoint graft '{key}' does not match configured '{}'",
+            self.cfg.graft_key()
+        );
+        for g in &mut self.grafts {
+            g.read_state(r)?;
+        }
         if let Some(eng) = &self.async_eng {
             eng.lock().unwrap_or_else(|e| e.into_inner()).read_pending(r)?;
         }
@@ -449,6 +563,21 @@ impl Optimizer for Shampoo {
         // Likewise a non-classic refresh schedule changes trajectories.
         if self.cfg.refresh_policy != "every-n" {
             label.push_str(&format!(" [refresh {}]", self.cfg.refresh_policy));
+        }
+        // Workload knobs: only non-default settings are surfaced, so classic
+        // configs keep their historical labels.
+        if self.cfg.grafting && self.cfg.graft != "sgd" {
+            label.push_str(&format!(" [graft {}]", self.cfg.graft));
+        }
+        if self.cfg.start_preconditioning_step > 0 {
+            label.push_str(&format!(" [warmup {}]", self.cfg.start_preconditioning_step));
+        }
+        if self.cfg.no_preconditioning_for_layers_with_dim_gt > 0 {
+            let d = self.cfg.no_preconditioning_for_layers_with_dim_gt;
+            label.push_str(&format!(" [dim-gt {d}]"));
+        }
+        if self.cfg.shape_interpretation {
+            label.push_str(" [shape-nd]");
         }
         label
     }
@@ -820,6 +949,112 @@ mod tests {
         assert!(Optimizer::name(&sh).contains("[refresh staggered]"));
         let sh2 = Shampoo::new(sgd_base(), ShampooConfig::default(), &[(8, 8)]);
         assert!(!Optimizer::name(&sh2).contains("refresh"));
+    }
+
+    #[test]
+    fn workload_knobs_are_surfaced_in_name_only_when_set() {
+        let sh = Shampoo::new(sgd_base(), ShampooConfig::default(), &[(8, 8)]);
+        let name = Optimizer::name(&sh);
+        for marker in ["graft", "warmup", "dim-gt", "shape-nd"] {
+            assert!(!name.contains(marker), "default name must not carry '{marker}': {name}");
+        }
+        let cfg = ShampooConfig {
+            graft: "rmsprop",
+            start_preconditioning_step: 10,
+            no_preconditioning_for_layers_with_dim_gt: 4096,
+            shape_interpretation: true,
+            ..Default::default()
+        };
+        let sh = Shampoo::new(sgd_base(), cfg, &[(8, 8)]);
+        let name = Optimizer::name(&sh);
+        for marker in ["[graft rmsprop]", "[warmup 10]", "[dim-gt 4096]", "[shape-nd]"] {
+            assert!(name.contains(marker), "expected '{marker}' in: {name}");
+        }
+    }
+
+    #[test]
+    fn warmup_steps_run_grafted_base_only() {
+        // Steps below `start_preconditioning_step` must equal the bare base
+        // optimizer bit-for-bit (the default sgd graft rescales by exactly
+        // ‖G‖/‖G‖ = 1.0) and plan zero refresh units; preconditioning then
+        // kicks in at the threshold step.
+        let cfg = ShampooConfig {
+            t1: 1,
+            t2: 1,
+            variant: ShampooVariant::Full32,
+            start_preconditioning_step: 4,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(21);
+        let mut w = Matrix::randn(6, 5, 0.5, &mut rng);
+        let mut w_ref = w.clone();
+        let grads: Vec<Matrix> = (0..4).map(|_| Matrix::randn(6, 5, 0.5, &mut rng)).collect();
+        let mut sh = Shampoo::new(sgd_base(), cfg, &[(6, 5)]);
+        let bytes_warm = sh.shampoo_state_bytes();
+        let mut plain = sgd_base();
+        plain.init(1);
+        for k in 1..=3u64 {
+            let g = &grads[k as usize - 1];
+            sh.step(std::slice::from_mut(&mut w), std::slice::from_ref(g), k, 1.0);
+            plain.step_param(0, &mut w_ref, g, 1.0);
+            assert_eq!(w.max_abs_diff(&w_ref), 0.0, "warmup step {k} must be bare SGD");
+        }
+        let s = sh.refresh_stats();
+        assert_eq!((s.gram_units, s.root_units), (0, 0), "warmup must plan nothing");
+        // Step 4 preconditions: the trajectory departs and the deferred
+        // root bytes are now counted.
+        sh.step(std::slice::from_mut(&mut w), std::slice::from_ref(&grads[3]), 4, 1.0);
+        plain.step_param(0, &mut w_ref, &grads[3], 1.0);
+        assert!(w.max_abs_diff(&w_ref) > 0.0, "preconditioning must engage at the threshold");
+        assert!(sh.refresh_stats().root_units > 0);
+        assert!(sh.shampoo_state_bytes() > bytes_warm, "root bytes counted after warmup");
+    }
+
+    #[test]
+    fn nd_shapes_chunk_blocks_under_shape_interpretation() {
+        assert_eq!(Shampoo::collapsed_shape(&[]), (1, 1));
+        assert_eq!(Shampoo::collapsed_shape(&[7]), (7, 1));
+        assert_eq!(Shampoo::collapsed_shape(&[2, 3, 4]), (6, 4));
+        let nd = vec![vec![2usize, 3, 4]];
+        let off = Shampoo::new_nd(sgd_base(), ShampooConfig::default(), &nd);
+        assert_eq!((off.layers[0].rows, off.layers[0].cols), (6, 4));
+        assert_eq!(off.layers[0].blocks.len(), 1, "knob off flattens to one block");
+        let cfg = ShampooConfig { shape_interpretation: true, ..Default::default() };
+        let on = Shampoo::new_nd(sgd_base(), cfg, &nd);
+        assert_eq!((on.layers[0].rows, on.layers[0].cols), (6, 4));
+        assert_eq!(on.layers[0].blocks.len(), 2, "two independent 3x4 chunks");
+        assert_eq!(on.unit_count(), 4);
+        assert_eq!(on.layers[0].blocking.blocks[0].r0, 0);
+        assert_eq!(on.layers[0].blocking.blocks[1].r0, 3, "second chunk offset down the rows");
+    }
+
+    #[test]
+    fn stateful_graft_bytes_counted_and_key_checked_on_restore() {
+        let shapes = [(8usize, 6usize), (4, 4)];
+        let mk = |graft: &'static str| {
+            let cfg = ShampooConfig { t1: 1, t2: 1, graft, ..Default::default() };
+            Shampoo::new(sgd_base(), cfg, &shapes)
+        };
+        let sgd = mk("sgd");
+        let mut ada = mk("adagrad");
+        let acc: usize = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n).size_bytes()).sum();
+        assert_eq!(ada.shampoo_state_bytes(), sgd.shampoo_state_bytes() + acc);
+        // A checkpoint written under one graft refuses to restore under
+        // another — accumulator state is not transferable across keys.
+        let mut rng = Rng::new(33);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+        let grads: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+        ada.step(&mut params, &grads, 1, 1.0);
+        let mut w = ByteWriter::new();
+        ada.write_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut wrong = mk("sgd");
+        assert!(wrong.read_state(&mut ByteReader::new(&bytes)).is_err());
+        let mut right = mk("adagrad");
+        right.read_state(&mut ByteReader::new(&bytes)).unwrap();
+        assert_eq!(right.state_bytes(), ada.state_bytes());
     }
 
     #[test]

@@ -30,7 +30,7 @@ use super::state::{BlockState, LayerState, Side, UnitMeta};
 use crate::linalg::{Matrix, ScratchArena};
 use crate::metrics::HealthLedger;
 use crate::optim::optimizer::{Hyper, ParamState};
-use crate::optim::{graft, BaseOptimizer, OptimizerKind};
+use crate::optim::{apply_graft, BaseOptimizer, Graft, OptimizerKind};
 use crate::quant::codec::CodecCtx;
 use crate::util::fault::FaultPlan;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -387,6 +387,11 @@ pub(crate) struct StepCtx<'a> {
     pub fault: Option<&'a FaultPlan>,
     /// Health accumulator the guard screens and ladder outcomes count on.
     pub ledger: &'a HealthLedger,
+    /// `start_preconditioning_step` warmup: the step takes grafted
+    /// base-optimizer updates without touching the (identity) root caches.
+    /// Only ever `true` with an empty plan — the driver skips planning
+    /// during warmup — so it is a fast-path concern.
+    pub warmup: bool,
 }
 
 /// One layer's shared-state view for the step: blocks behind per-block
@@ -400,7 +405,10 @@ struct LayerRun<'a> {
     specs: &'a [BlockSpec],
     grad: &'a Matrix,
     blocks: Vec<Mutex<&'a mut BlockState>>,
-    apply: Mutex<(&'a mut Matrix, &'a mut ParamState)>,
+    /// Param + base-optimizer state + the layer's graft: the apply phase
+    /// runs exactly once per layer per step, so stateful graft
+    /// accumulators advance deterministically under it.
+    apply: Mutex<(&'a mut Matrix, &'a mut ParamState, &'a mut Box<dyn Graft>)>,
     pending: AtomicUsize,
 }
 
@@ -429,11 +437,13 @@ pub(crate) enum Task {
 /// rebuilt each step — O(layers + blocks) small allocations, the same
 /// order as the pre-scheduler per-layer work list; all *matrix* buffers
 /// come from the arenas.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn execute_step(
     layers: &mut [LayerState],
     params: &mut [Matrix],
     grads: &[Matrix],
     states: &mut [ParamState],
+    grafts: &mut [Box<dyn Graft>],
     plan: &RefreshPlan,
     units: &[UnitId],
     tasks: &mut Vec<Task>,
@@ -457,8 +467,9 @@ pub(crate) fn execute_step(
             .iter_mut()
             .zip(params.iter_mut())
             .zip(grads.iter())
-            .zip(states.iter_mut());
-        for (((layer, w), g), st) in it {
+            .zip(states.iter_mut())
+            .zip(grafts.iter_mut());
+        for ((((layer, w), g), st), gr) in it {
             // Guard screen: a poisoned gradient skips the layer's update
             // entirely — params and momentum never absorb the non-finite
             // values. Finite gradients pass through untouched.
@@ -467,11 +478,19 @@ pub(crate) fn execute_step(
                 continue;
             }
             let mut ghat = scratch.take(g.rows(), g.cols());
-            layer.precondition_into(g, &mut ghat, &mut scratch);
-            if sc.cfg.grafting {
-                graft(g, &mut ghat);
+            if sc.warmup {
+                // Warmup: base-optimizer-only updates — the (identity)
+                // root caches are not even multiplied through.
+                ghat.copy_from(g);
+            } else {
+                layer.precondition_into(g, &mut ghat, &mut scratch);
             }
-            BaseOptimizer::step_one(&sc.hyper, sc.kind, st, w, &ghat, sc.lr_scale);
+            // Graft screen: a non-finite magnitude or ‖Ĝ‖ (the
+            // preconditioned product can overflow on finite-but-huge
+            // gradients) skips the base update like the raw-grad screen.
+            if apply_graft(gr.as_mut(), g, &mut ghat, sc.ledger) {
+                BaseOptimizer::step_one(&sc.hyper, sc.kind, st, w, &ghat, sc.lr_scale);
+            }
             scratch.recycle(ghat);
         }
         scratch_pool.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
@@ -494,7 +513,8 @@ pub(crate) fn execute_step(
         .zip(params.iter_mut())
         .zip(grads.iter())
         .zip(states.iter_mut())
-        .map(|(((layer, w), g), st)| {
+        .zip(grafts.iter_mut())
+        .map(|((((layer, w), g), st), gr)| {
             // Disjoint field borrows: specs are read-only, blocks are the
             // per-unit mutable state behind the mutexes.
             let LayerState { rows, cols, blocking, blocks, passthrough } = layer;
@@ -507,7 +527,7 @@ pub(crate) fn execute_step(
                 specs: &blocking.blocks,
                 grad: g,
                 blocks: blocks.iter_mut().map(Mutex::new).collect(),
-                apply: Mutex::new((w, st)),
+                apply: Mutex::new((w, st, gr)),
                 pending: AtomicUsize::new(0),
             }
         })
@@ -623,7 +643,7 @@ pub(crate) fn execute_step(
 /// in lockstep.
 fn apply_layer(run: &LayerRun<'_>, sc: &StepCtx<'_>, scratch: &mut ScratchArena) {
     let mut guard = run.apply.lock().unwrap();
-    let (w, st) = &mut *guard;
+    let (w, st, gr) = &mut *guard;
     let g = run.grad;
     let mut ghat = scratch.take(run.rows, run.cols);
     if run.passthrough {
@@ -644,10 +664,12 @@ fn apply_layer(run: &LayerRun<'_>, sc: &StepCtx<'_>, scratch: &mut ScratchArena)
             scratch.recycle(gb);
         }
     }
-    if sc.cfg.grafting {
-        graft(g, &mut ghat);
+    // Same graft screen as the fast path: a screened layer skips the base
+    // update entirely (its accumulator, if any, already advanced — exactly
+    // like the sequential reference).
+    if apply_graft(gr.as_mut(), g, &mut ghat, sc.ledger) {
+        BaseOptimizer::step_one(&sc.hyper, sc.kind, st, w, &ghat, sc.lr_scale);
     }
-    BaseOptimizer::step_one(&sc.hyper, sc.kind, st, w, &ghat, sc.lr_scale);
     scratch.recycle(ghat);
 }
 

@@ -305,6 +305,14 @@ pub struct SideState {
     root_key: &'static str,
     /// Dequantized root cache (refreshed whenever `root` changes).
     cache: Matrix,
+    /// Whether the root slot holds computed state. `false` only during the
+    /// `start_preconditioning_step` warmup, where the root is still the
+    /// spec-derived identity: uncounted in [`SideState::size_bytes`] (the
+    /// memory model must not charge roots before preconditioning starts)
+    /// and unserialized (a mid-warmup checkpoint rebuilds the identity
+    /// cache from the spec). Any [`SideState::rebind_and_store`] makes the
+    /// slot live for good.
+    root_live: bool,
     /// Refresh bookkeeping (scheduler input; counted in `size_bytes`).
     pub meta: UnitMeta,
 }
@@ -319,6 +327,7 @@ impl SideState {
             root: f32_with(&Matrix::eye(dim), ctx),
             root_key: "f32",
             cache: Matrix::eye(dim),
+            root_live: cfg.start_preconditioning_step == 0,
             meta: UnitMeta::default(),
         }
     }
@@ -414,6 +423,7 @@ impl SideState {
         }
         self.root.store_into(x, scratch);
         self.root.load_into(&mut self.cache, scratch);
+        self.root_live = true;
     }
 
     pub(crate) fn cache(&self) -> &Matrix {
@@ -421,7 +431,8 @@ impl SideState {
     }
 
     fn size_bytes(&self) -> usize {
-        self.gram.size_bytes() + self.root.size_bytes() + UnitMeta::BYTES
+        let root = if self.root_live { self.root.size_bytes() } else { 0 };
+        self.gram.size_bytes() + root + UnitMeta::BYTES
     }
 
     /// Serialize this refresh unit's persistent state: Gram codec payload,
@@ -430,8 +441,14 @@ impl SideState {
     /// stored root) and is recomputed on restore, not written.
     fn write_state(&self, out: &mut ByteWriter) {
         self.gram.save_state(out);
-        out.put_str(self.root_key);
-        self.root.save_state(out);
+        // Warmup deferral: a root slot that never left its spec-derived
+        // identity writes only the liveness flag — restore rebuilds the
+        // identity cache instead of reading a payload.
+        out.put_u8(self.root_live as u8);
+        if self.root_live {
+            out.put_str(self.root_key);
+            self.root.save_state(out);
+        }
         out.put_u64(self.meta.last_gram);
         out.put_u64(self.meta.last_root);
         out.put_f32(self.meta.pending_norm);
@@ -453,14 +470,17 @@ impl SideState {
         scratch: &mut ScratchArena,
     ) -> Result<()> {
         self.gram.restore_state(r)?;
-        let key = r.get_str()?;
-        if self.root_key != key {
-            let b = lookup(&key)
-                .ok_or_else(|| crate::anyhow!("root codec '{key}' is not registered"))?;
-            self.root = (b.root)(ctx);
-            self.root_key = b.key;
+        self.root_live = r.get_u8()? != 0;
+        if self.root_live {
+            let key = r.get_str()?;
+            if self.root_key != key {
+                let b = lookup(&key)
+                    .ok_or_else(|| crate::anyhow!("root codec '{key}' is not registered"))?;
+                self.root = (b.root)(ctx);
+                self.root_key = b.key;
+            }
+            self.root.restore_state(r)?;
         }
-        self.root.restore_state(r)?;
         self.meta.last_gram = r.get_u64()?;
         self.meta.last_root = r.get_u64()?;
         self.meta.pending_norm = r.get_f32()?;
@@ -469,7 +489,11 @@ impl SideState {
         self.meta.health.quarantined_since = r.get_u64()?;
         self.meta.health.quarantines = r.get_u32()?;
         self.meta.health.releases = r.get_u32()?;
-        self.root.load_into(&mut self.cache, scratch);
+        if self.root_live {
+            self.root.load_into(&mut self.cache, scratch);
+        } else {
+            self.cache = Matrix::eye(self.dim);
+        }
         Ok(())
     }
 }
@@ -785,8 +809,33 @@ pub struct LayerState {
 
 impl LayerState {
     pub fn new(rows: usize, cols: usize, cfg: &ShampooConfig, ctx: &CodecCtx) -> LayerState {
-        let passthrough = rows.min(cols) <= 1;
+        let passthrough = rows.min(cols) <= 1 || Self::dim_opted_out(rows, cols, cfg);
         let blocking = Blocking::new(rows, cols, cfg.max_order);
+        Self::from_blocking(rows, cols, blocking, passthrough, cfg, ctx)
+    }
+
+    /// The scalable-Shampoo large-dim opt-out: a layer whose longest side
+    /// exceeds `no_preconditioning_for_layers_with_dim_gt` (embedding
+    /// tables) takes the grafted base update with zero codec state.
+    pub fn dim_opted_out(rows: usize, cols: usize, cfg: &ShampooConfig) -> bool {
+        cfg.no_preconditioning_for_layers_with_dim_gt > 0
+            && rows.max(cols) > cfg.no_preconditioning_for_layers_with_dim_gt
+    }
+
+    /// Build from an explicit blocking — the shape-interpretation path
+    /// (`Shampoo::new_nd`) composes per-chunk blockings with row offsets so
+    /// a collapsed ≥3-D tensor gets one `BlockState` per trailing-two-dim
+    /// matrix chunk instead of blocking the flattened rows. `passthrough`
+    /// is caller-decided (the ND path judges degeneracy and the dim bound
+    /// on the *chunk* dims, not the stacked rows).
+    pub fn from_blocking(
+        rows: usize,
+        cols: usize,
+        blocking: Blocking,
+        passthrough: bool,
+        cfg: &ShampooConfig,
+        ctx: &CodecCtx,
+    ) -> LayerState {
         let blocks = if passthrough {
             Vec::new()
         } else {
@@ -1379,5 +1428,63 @@ mod tests {
         assert!(fresh2
             .read_state(&mut ByteReader::new(&bytes[..bytes.len() - 2]), &cctx, &mut scratch)
             .is_err());
+    }
+
+    #[test]
+    fn warmup_defers_root_bytes_until_first_refresh() {
+        let mut c = cfg(ShampooVariant::Full32);
+        c.start_preconditioning_step = 5;
+        let cctx = ctx(&c);
+        let mut side = SideState::new(6, &c, &cctx);
+        let mut scratch = ScratchArena::new();
+        // The identity root is spec-derived, not state: uncounted …
+        assert!(!side.root_live);
+        assert_eq!(side.size_bytes(), side.gram.size_bytes() + UnitMeta::BYTES);
+        // … and unserialized — a mid-warmup round trip rebuilds the
+        // identity cache instead of reading a root payload.
+        let mut w = ByteWriter::new();
+        side.write_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut fresh = SideState::new(6, &c, &cctx);
+        fresh.read_state(&mut ByteReader::new(&bytes), &cctx, &mut scratch).unwrap();
+        assert!(!fresh.root_live);
+        assert_eq!(fresh.cache.max_abs_diff(&Matrix::eye(6)), 0.0);
+        // First refresh makes the slot live for good: counted + serialized.
+        side.gram.store(&Matrix::eye_scaled(6, 2.0));
+        assert_eq!(side.update_root(&c, &cctx, &mut scratch, false), FallbackOutcome::Healthy);
+        assert!(side.root_live);
+        assert_eq!(
+            side.size_bytes(),
+            side.gram.size_bytes() + side.root.size_bytes() + UnitMeta::BYTES
+        );
+        let mut w2 = ByteWriter::new();
+        side.write_state(&mut w2);
+        let bytes2 = w2.into_bytes();
+        let mut fresh2 = SideState::new(6, &c, &cctx);
+        fresh2.read_state(&mut ByteReader::new(&bytes2), &cctx, &mut scratch).unwrap();
+        assert!(fresh2.root_live);
+        assert_eq!(fresh2.cache.max_abs_diff(&side.cache), 0.0);
+    }
+
+    #[test]
+    fn dim_gt_opt_out_routes_layer_to_zero_state_passthrough() {
+        let mut c = cfg(ShampooVariant::Cq4 { error_feedback: true });
+        c.no_preconditioning_for_layers_with_dim_gt = 100;
+        let cctx = ctx(&c);
+        // Embedding-shaped layer: longest side over the bound → grafted
+        // base update with exactly zero codec state.
+        let big = LayerState::new(200, 64, &c, &cctx);
+        assert!(big.passthrough);
+        assert_eq!(big.unit_count(), 0);
+        assert_eq!(big.size_bytes(), 0);
+        let g = Matrix::from_fn(200, 64, |i, j| (i + j) as f32);
+        assert_eq!(big.precondition(&g).max_abs_diff(&g), 0.0);
+        // Inside the bound: preconditioned as usual.
+        let small = LayerState::new(64, 64, &c, &cctx);
+        assert!(!small.passthrough);
+        assert!(small.size_bytes() > 0);
+        // Bound 0 = disabled.
+        let off = cfg(ShampooVariant::Cq4 { error_feedback: true });
+        assert!(!LayerState::dim_opted_out(200, 64, &off));
     }
 }

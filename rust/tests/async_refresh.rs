@@ -190,12 +190,14 @@ fn spec() -> SyntheticSpec {
 
 /// cq-ef stack with the async engine on: every-n at t2 = 4 with d = 3, so
 /// the checkpoints at steps 5 and 10 each catch the step-4 / step-8
-/// submissions still in flight (due at 7 and 11).
-fn async_stack() -> OptimizerStack {
+/// submissions still in flight (due at 7 and 11). `graft` layers a
+/// (possibly stateful) graft on top — "sgd" is the classic default.
+fn async_stack_grafted(graft: &'static str) -> OptimizerStack {
     let cfg = ShampooConfig {
         t1: 2,
         t2: 4,
         max_order: 8,
+        graft,
         quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
         async_refresh: true,
         async_shards: 2,
@@ -204,6 +206,10 @@ fn async_stack() -> OptimizerStack {
     };
     registry::build("cq-ef", BaseOptimizer::sgdm(0.05, 0.9, 0.0), &cfg, &spec().shapes)
         .expect("cq-ef stack must be registered")
+}
+
+fn async_stack() -> OptimizerStack {
+    async_stack_grafted("sgd")
 }
 
 fn train_cfg(steps: u64, dir: Option<PathBuf>, hash: u64) -> TrainConfig {
@@ -249,5 +255,37 @@ fn kill_resume_with_in_flight_refreshes_is_bit_identical() {
         w.into_bytes()
     };
     assert_eq!(state(&oa), state(&ob), "optimizer state diverged after mid-flight resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Same mid-flight kill/resume oracle with a stateful `adagrad` graft: the
+/// accumulators advance once per step on the apply path, ride in the
+/// checkpoint next to the pending-refresh table, and must restore to a
+/// bit-identical trajectory and byte-equal serialized state.
+#[test]
+fn kill_resume_with_adagrad_graft_and_in_flight_refreshes() {
+    let dir =
+        std::env::temp_dir().join(format!("quartz-async-graft-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let hash = spec_hash("oracle|async-cq-ef-adagrad");
+    let spec = spec();
+    let mk = || async_stack_grafted("adagrad");
+
+    let (pa, oa) = final_params_synthetic(&spec, mk(), &train_cfg(20, None, hash)).unwrap();
+    final_params_synthetic(&spec, mk(), &train_cfg(12, Some(dir.clone()), hash)).unwrap();
+    let steps: Vec<u64> = list_checkpoints(&dir).iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, vec![5, 10], "unexpected checkpoints");
+    let (pb, ob) =
+        final_params_synthetic(&spec, mk(), &train_cfg(20, Some(dir.clone()), hash)).unwrap();
+
+    for (i, (a, b)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(a.max_abs_diff(b), 0.0, "param {i} diverged after grafted resume");
+    }
+    let state = |o: &OptimizerStack| {
+        let mut w = ByteWriter::new();
+        o.save_state(&mut w).unwrap();
+        w.into_bytes()
+    };
+    assert_eq!(state(&oa), state(&ob), "graft accumulators diverged after resume");
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -28,7 +28,11 @@ fn listing_groups_sections_in_order() {
         .expect("codecs header");
     let policies =
         out.find("== refresh policies (shampoo::scheduler) ==").expect("policies header");
-    assert!(stacks < codecs && codecs < policies, "sections must be grouped in order");
+    let grafts = out.find("== grafts (optim::grafting) ==").expect("grafts header");
+    assert!(
+        stacks < codecs && codecs < policies && policies < grafts,
+        "sections must be grouped in order"
+    );
     assert_eq!(REFERENCE_ORDER, 256, "snapshot below prices order 256");
 }
 
@@ -46,8 +50,13 @@ fn listing_contains_every_builtin_key() {
         let row = row_for(&out, codecs, key);
         assert!(out[codecs..policies].contains(row), "codec '{key}' outside its section");
     }
+    let grafts = out.find("== grafts").unwrap();
     for key in ["every-n", "staggered", "staleness"] {
-        row_for(&out, policies, key);
+        let row = row_for(&out, policies, key);
+        assert!(out[policies..grafts].contains(row), "policy '{key}' outside its section");
+    }
+    for key in ["none", "sgd", "adagrad", "rmsprop", "sqrt-n"] {
+        row_for(&out, grafts, key);
     }
 }
 

@@ -158,6 +158,56 @@ fn forced_failure_counters_match_replayed_schedule_exactly() {
     assert_eq!(*sh.health(), frozen);
 }
 
+/// A finite-but-huge gradient is the graft edge the gradient screen cannot
+/// catch: the raw gradient passes `has_non_finite`, but its gram products
+/// and its preconditioned norm overflow f32. Every overflow site must
+/// screen through the health ledger — the stored gram keeps its last
+/// finite value and the base update is skipped — instead of poisoning
+/// params, momentum, or preconditioner state.
+#[test]
+fn finite_overflow_gradient_is_screened_at_gram_and_graft() {
+    let c = ShampooConfig {
+        variant: ShampooVariant::Full32,
+        t1: 1,
+        t2: 1,
+        max_order: 64,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), c, &[(4, 4)]);
+    let mut params = vec![Matrix::eye(4)];
+
+    // Step 1: a tiny diagonal gradient caches finite grams and diagonal
+    // roots with entries ≈ (λ·ε)^{-1/4} ≫ 1.
+    let g_tiny = Matrix::from_fn(4, 4, |i, j| if i == j { 1e-3 * (i + 1) as f32 } else { 0.0 });
+    sh.step(&mut params, std::slice::from_ref(&g_tiny), 1, 1.0);
+    assert_eq!(sh.health().grads_screened, 0);
+    let before = params[0].clone();
+
+    // Step 2: every entry 3e38 — finite in f32, so the gradient screen
+    // passes, but G·Gᵀ and L·G·R overflow to Inf.
+    let g_huge = Matrix::from_fn(4, 4, |_, _| 3e38);
+    sh.step(&mut params, std::slice::from_ref(&g_huge), 2, 1.0);
+
+    // Exactly three screens: both gram products (L and R) and the graft's
+    // non-finite preconditioned norm. No fallback-ladder rung fires — the
+    // stored gram stayed finite, so the roots recompute healthily.
+    assert_eq!(sh.health().grads_screened, 3);
+    assert_eq!(sh.health().stale_root_serves, 0);
+    assert_eq!(sh.health().floor_serves, 0);
+    assert_eq!(sh.health().quarantines, 0);
+
+    // The screened step applied nothing: params bit-unchanged and finite.
+    assert_eq!(params[0].max_abs_diff(&before), 0.0);
+    assert!(!params[0].has_non_finite());
+
+    // A later finite step recovers without residue.
+    sh.step(&mut params, std::slice::from_ref(&g_tiny), 3, 1.0);
+    assert_eq!(sh.health().grads_screened, 3);
+    assert!(params[0].max_abs_diff(&before) > 0.0);
+    assert!(!params[0].has_non_finite());
+}
+
 #[test]
 fn quarantine_lifecycle_releases_every_unit_once_faults_stop() {
     // Every refresh fails during the fault window: both units hit the

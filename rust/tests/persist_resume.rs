@@ -44,6 +44,23 @@ fn stack(key: &str) -> OptimizerStack {
         .unwrap_or_else(|| panic!("stack key '{key}' not registered"))
 }
 
+/// Like [`stack`] but with workload knobs layered on: a (possibly
+/// stateful) graft and a `start_preconditioning_step` warmup window.
+fn stack_workload(key: &str, graft: &'static str, warmup: u64) -> OptimizerStack {
+    let cfg = ShampooConfig {
+        t1: 2,
+        t2: 4,
+        max_order: 8,
+        refresh_policy: "staleness",
+        graft,
+        start_preconditioning_step: warmup,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    registry::build(key, BaseOptimizer::sgdm(0.05, 0.9, 0.0), &cfg, &spec().shapes)
+        .unwrap_or_else(|| panic!("stack key '{key}' not registered"))
+}
+
 fn cfg(steps: u64, dir: Option<PathBuf>, hash: u64) -> TrainConfig {
     TrainConfig {
         steps,
@@ -100,6 +117,58 @@ fn resume_is_bit_identical_for_ec4() {
 #[test]
 fn resume_is_bit_identical_for_f16() {
     oracle("f16");
+}
+
+/// A stateful graft's accumulators are optimizer state: the kill/resume
+/// oracle must hold bit-exactly with `adagrad` grafting on (accumulator
+/// bytes ride in the checkpoint and the serialized-state comparison).
+#[test]
+fn resume_is_bit_identical_with_adagrad_graft() {
+    let dir = test_dir("graft-ada");
+    let hash = spec_hash("oracle|graft-ada");
+    let spec = spec();
+    let mk = || stack_workload("cq-ef", "adagrad", 0);
+
+    let (pa, oa) = final_params_synthetic(&spec, mk(), &cfg(20, None, hash)).unwrap();
+    final_params_synthetic(&spec, mk(), &cfg(12, Some(dir.clone()), hash)).unwrap();
+    let steps: Vec<u64> = list_checkpoints(&dir).iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, vec![5, 10], "unexpected checkpoints");
+    let (pb, ob) =
+        final_params_synthetic(&spec, mk(), &cfg(20, Some(dir.clone()), hash)).unwrap();
+
+    for (i, (a, b)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(a.max_abs_diff(b), 0.0, "param {i} diverged after resume");
+    }
+    assert_eq!(opt_state_bytes(&oa), opt_state_bytes(&ob), "graft accumulators diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A checkpoint taken INSIDE the `start_preconditioning_step` window (root
+/// slots never computed, `root_live` false) must resume bit-identically:
+/// the continuation neither re-runs nor skips warmup steps, and crosses
+/// the warmup boundary exactly where the uninterrupted run does.
+#[test]
+fn resume_from_mid_warmup_checkpoint_is_bit_identical() {
+    let dir = test_dir("graft-warmup");
+    let hash = spec_hash("oracle|graft-warmup");
+    let spec = spec();
+    let mk = || stack_workload("cq-ef", "adagrad", 8);
+
+    let (pa, oa) = final_params_synthetic(&spec, mk(), &cfg(20, None, hash)).unwrap();
+    // Killed at step 7 — the only checkpoint (step 5) sits mid-warmup.
+    final_params_synthetic(&spec, mk(), &cfg(7, Some(dir.clone()), hash)).unwrap();
+    let steps: Vec<u64> = list_checkpoints(&dir).iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, vec![5], "expected a single mid-warmup checkpoint");
+    // Resume restores step 5 and trains 6..=20, entering preconditioning
+    // at step 8 exactly once.
+    let (pb, ob) =
+        final_params_synthetic(&spec, mk(), &cfg(20, Some(dir.clone()), hash)).unwrap();
+
+    for (i, (a, b)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(a.max_abs_diff(b), 0.0, "param {i} diverged after mid-warmup resume");
+    }
+    assert_eq!(opt_state_bytes(&oa), opt_state_bytes(&ob), "optimizer state diverged");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,301 @@
+//! Oracle-grade coverage for the scalable-Shampoo workload features:
+//!
+//! 1. **Graft variants** — every registered graft key's trajectory pinned
+//!    bit-for-bit against a naive sequential per-layer reference written
+//!    here (accumulator math included), with refresh work scheduled so the
+//!    work-queue executor's `parallel_for` path is the one under test.
+//! 2. **`shape_interpretation`** — a synthetic 4-D layer stepped through
+//!    `Shampoo::new_nd` equals the same run hand-reshaped into a matrix
+//!    list, bit-for-bit; knob off equals the classic flatten.
+//! 3. **`start_preconditioning_step`** — warmup steps are bit-identical to
+//!    the bare base optimizer and the scheduler plans zero units; the
+//!    threshold step engages preconditioning.
+//! 4. **`no_preconditioning_for_layers_with_dim_gt`** — opted-out layers
+//!    hold exactly zero codec state and follow the grafted base path.
+
+use quartz::linalg::{fro_norm, Matrix, ScratchArena};
+use quartz::optim::BaseOptimizer;
+use quartz::quant::{BlockQuantizer, CodecCtx, QuantConfig};
+use quartz::shampoo::{LayerState, Shampoo, ShampooConfig};
+use quartz::util::rng::Rng;
+use std::sync::Arc;
+
+/// In-test reference for the graft family (mirrors `optim::grafting`'s
+/// per-element accumulator order exactly — bit-identity depends on it).
+fn ref_graft(key: &str, g: &Matrix, ghat: &mut Matrix, acc: &mut Matrix, eps: f32, beta: f32) {
+    let m: f64 = match key {
+        "none" => return,
+        "sgd" => fro_norm(g),
+        "sqrt-n" => ((g.rows() * g.cols()) as f64).sqrt(),
+        "adagrad" | "rmsprop" => {
+            let mut sum = 0.0f64;
+            for (a, &gi) in acc.data_mut().iter_mut().zip(g.data()) {
+                *a = if key == "adagrad" {
+                    *a + gi * gi
+                } else {
+                    beta * *a + (1.0 - beta) * (gi * gi)
+                };
+                let ratio = gi / (a.sqrt() + eps);
+                sum += ratio as f64 * ratio as f64;
+            }
+            sum.sqrt()
+        }
+        other => panic!("unknown graft '{other}'"),
+    };
+    let np = fro_norm(ghat);
+    if np > 0.0 && m.is_finite() && np.is_finite() {
+        ghat.scale((m / np) as f32);
+    }
+}
+
+fn graft_cfg(graft: &'static str) -> ShampooConfig {
+    ShampooConfig {
+        t1: 1,
+        t2: 2,
+        max_order: 8,
+        graft,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn randn_set(shapes: &[(usize, usize)], scale: f32, rng: &mut Rng) -> Vec<Matrix> {
+    shapes.iter().map(|&(m, n)| Matrix::randn(m, n, scale, rng)).collect()
+}
+
+/// The fanned-out engine (multi-block layers, refresh tasks every step at
+/// t1 = 1) must reproduce a hand-written sequential per-layer loop — the
+/// public `update_gram` / `update_inv_roots` / `precondition` operations
+/// plus [`ref_graft`] — bit-for-bit, for every graft variant, including a
+/// passthrough vector layer where the graft acts on the raw gradient.
+fn graft_oracle(graft_key: &'static str) {
+    let shapes = [(12usize, 8usize), (8, 8), (16, 4), (5, 1)];
+    let cfg = graft_cfg(graft_key);
+    let mut rng = Rng::new(51);
+    let params0 = randn_set(&shapes, 0.5, &mut rng);
+    let grads: Vec<Vec<Matrix>> = (0..8).map(|_| randn_set(&shapes, 0.5, &mut rng)).collect();
+
+    // Engine under test: the work-queue executor.
+    let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg, &shapes);
+    let mut pa = params0.clone();
+    for k in 1..=8u64 {
+        sh.step(&mut pa, &grads[k as usize - 1], k, 1.0);
+    }
+    assert!(sh.refresh_stats().gram_units > 0, "oracle must cover refresh steps");
+
+    // Naive sequential reference over the same public per-layer operations.
+    let ctx = CodecCtx::new(cfg.eps, cfg.beta_e, Arc::new(BlockQuantizer::new(cfg.quant)));
+    let mut layers: Vec<LayerState> =
+        shapes.iter().map(|&(m, n)| LayerState::new(m, n, &cfg, &ctx)).collect();
+    let mut accs: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut base = BaseOptimizer::sgdm(0.05, 0.9, 0.0);
+    base.init(shapes.len());
+    let mut pb = params0.clone();
+    let mut scratch = ScratchArena::new();
+    for k in 1..=8u64 {
+        for i in 0..shapes.len() {
+            let g = &grads[k as usize - 1][i];
+            if k % cfg.t1 == 0 {
+                layers[i].update_gram(g, &cfg, &mut scratch);
+            }
+            if k % cfg.t2 == 0 {
+                layers[i].update_inv_roots(&cfg, &ctx, &mut scratch);
+            }
+            let mut ghat = layers[i].precondition(g);
+            ref_graft(graft_key, g, &mut ghat, &mut accs[i], cfg.eps, cfg.beta);
+            base.step_param(i, &mut pb[i], &ghat, 1.0);
+        }
+    }
+
+    for (i, (a, b)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(
+            a.max_abs_diff(b),
+            0.0,
+            "graft '{graft_key}': param {i} diverged from the sequential oracle"
+        );
+        assert!(!a.has_non_finite(), "graft '{graft_key}': param {i} not finite");
+    }
+}
+
+#[test]
+fn none_graft_matches_sequential_oracle() {
+    graft_oracle("none");
+}
+
+#[test]
+fn sgd_graft_matches_sequential_oracle() {
+    graft_oracle("sgd");
+}
+
+#[test]
+fn adagrad_graft_matches_sequential_oracle() {
+    graft_oracle("adagrad");
+}
+
+#[test]
+fn rmsprop_graft_matches_sequential_oracle() {
+    graft_oracle("rmsprop");
+}
+
+#[test]
+fn sqrt_n_graft_matches_sequential_oracle() {
+    graft_oracle("sqrt-n");
+}
+
+/// A 4-D `[2, 2, 8, 6]` layer under `shape_interpretation` must follow the
+/// same trajectory as the run hand-reshaped into four independent `[8, 6]`
+/// layers (grafting off — graft norms are whole-variable by contract), and
+/// with the knob off must equal the classic flatten, both bit-for-bit.
+#[test]
+fn shape_interpretation_matches_hand_reshaped_matrix_list() {
+    let cfg = ShampooConfig {
+        t1: 1,
+        t2: 2,
+        max_order: 8,
+        grafting: false,
+        shape_interpretation: true,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let (c, m, n) = (4usize, 8usize, 6usize); // [2, 2, 8, 6] → 4 chunks
+    let mut rng = Rng::new(61);
+    let chunk_params: Vec<Matrix> = (0..c).map(|_| Matrix::randn(m, n, 0.5, &mut rng)).collect();
+    let chunk_grads: Vec<Vec<Matrix>> =
+        (0..6).map(|_| (0..c).map(|_| Matrix::randn(m, n, 0.5, &mut rng)).collect()).collect();
+    let stack = |parts: &[Matrix]| Matrix::from_fn(c * m, n, |i, j| parts[i / m][(i % m, j)]);
+
+    // ND optimizer stepping the collapsed (32, 6) parameter.
+    let mut nd =
+        Shampoo::new_nd(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg, &[vec![2, 2, m, n]]);
+    assert_eq!(nd.unit_count(), 2 * c, "each chunk carries its own (L, R) pair");
+    let mut p_nd = vec![stack(&chunk_params)];
+    for k in 1..=6u64 {
+        let g = vec![stack(&chunk_grads[k as usize - 1])];
+        nd.step(&mut p_nd, &g, k, 1.0);
+    }
+
+    // Control: the same run as four independent matrix layers.
+    let shapes: Vec<(usize, usize)> = (0..c).map(|_| (m, n)).collect();
+    let mut ctrl = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg, &shapes);
+    let mut p_ctrl = chunk_params.clone();
+    for k in 1..=6u64 {
+        ctrl.step(&mut p_ctrl, &chunk_grads[k as usize - 1], k, 1.0);
+    }
+
+    let expect = stack(&p_ctrl);
+    assert_eq!(
+        p_nd[0].max_abs_diff(&expect),
+        0.0,
+        "chunked ND trajectory must equal the hand-reshaped matrix list"
+    );
+
+    // Knob off: the ND shape flattens to one (32, 6) layer, bit-identical
+    // to `Shampoo::new` on the collapsed shape.
+    let cfg_off = ShampooConfig { shape_interpretation: false, ..cfg };
+    let mut nd_off =
+        Shampoo::new_nd(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg_off, &[vec![2, 2, m, n]]);
+    let mut flat = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg_off, &[(c * m, n)]);
+    let mut p_a = vec![stack(&chunk_params)];
+    let mut p_b = vec![stack(&chunk_params)];
+    for k in 1..=6u64 {
+        let g = vec![stack(&chunk_grads[k as usize - 1])];
+        nd_off.step(&mut p_a, &g, k, 1.0);
+        flat.step(&mut p_b, &g, k, 1.0);
+    }
+    assert_eq!(p_a[0].max_abs_diff(&p_b[0]), 0.0, "knob off must be the classic flatten");
+}
+
+/// Steps below `start_preconditioning_step` must be bit-identical to the
+/// bare base optimizer (the default sgd graft rescales by exactly 1.0 on
+/// the raw gradient) with zero planned refresh units; the threshold step
+/// engages preconditioning and the trajectory departs.
+#[test]
+fn warmup_steps_are_bit_identical_to_bare_base_optimizer() {
+    let shapes = [(12usize, 8usize), (8, 8), (5, 1)];
+    let cfg = ShampooConfig {
+        t1: 1,
+        t2: 1,
+        max_order: 8,
+        start_preconditioning_step: 5,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let mut rng = Rng::new(71);
+    let params0 = randn_set(&shapes, 0.5, &mut rng);
+    let grads: Vec<Vec<Matrix>> = (0..5).map(|_| randn_set(&shapes, 0.5, &mut rng)).collect();
+
+    let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg, &shapes);
+    let mut pa = params0.clone();
+    let mut base = BaseOptimizer::sgdm(0.05, 0.9, 0.0);
+    base.init(shapes.len());
+    let mut pb = params0;
+    for k in 1..=4u64 {
+        sh.step(&mut pa, &grads[k as usize - 1], k, 1.0);
+        for i in 0..shapes.len() {
+            base.step_param(i, &mut pb[i], &grads[k as usize - 1][i], 1.0);
+        }
+        for (i, (a, b)) in pa.iter().zip(pb.iter()).enumerate() {
+            assert_eq!(a.max_abs_diff(b), 0.0, "warmup step {k}: param {i} departed from base");
+        }
+    }
+    let s = sh.refresh_stats();
+    assert_eq!(s.steps, 4);
+    assert_eq!((s.gram_units, s.root_units), (0, 0), "warmup must plan zero refresh units");
+
+    // Threshold step: (t1, t2) = (1, 1) refreshes gram and roots
+    // immediately and preconditioning engages.
+    sh.step(&mut pa, &grads[4], 5, 1.0);
+    for i in 0..shapes.len() {
+        base.step_param(i, &mut pb[i], &grads[4][i], 1.0);
+    }
+    let s = sh.refresh_stats();
+    assert!(s.gram_units > 0 && s.root_units > 0, "threshold step must schedule refreshes");
+    let departed = pa.iter().zip(pb.iter()).any(|(a, b)| a.max_abs_diff(b) > 0.0);
+    assert!(departed, "preconditioning must engage at the threshold step");
+}
+
+/// A layer over the `no_preconditioning_for_layers_with_dim_gt` bound holds
+/// exactly zero codec state (no blocks, no refresh units) and its update
+/// equals the grafted base path on the raw gradient, bit-for-bit.
+#[test]
+fn dim_gt_opt_out_takes_grafted_base_path_with_zero_codec_state() {
+    let shapes = [(40usize, 8usize), (8, 8)];
+    let cfg = ShampooConfig {
+        t1: 1,
+        t2: 1,
+        max_order: 8,
+        graft: "adagrad",
+        no_preconditioning_for_layers_with_dim_gt: 32,
+        quant: QuantConfig { min_quant_elems: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let mut rng = Rng::new(81);
+    let params0 = randn_set(&shapes, 0.5, &mut rng);
+    let grads: Vec<Vec<Matrix>> = (0..4).map(|_| randn_set(&shapes, 0.5, &mut rng)).collect();
+
+    let mut sh = Shampoo::new(BaseOptimizer::sgdm(0.05, 0.9, 0.0), cfg, &shapes);
+    let mut pa = params0.clone();
+    for k in 1..=4u64 {
+        sh.step(&mut pa, &grads[k as usize - 1], k, 1.0);
+    }
+
+    // The opted-out (40, 8) layer: passthrough, zero units, zero codec
+    // bytes — its graft accumulator lives outside the layer state.
+    assert!(sh.layers[0].passthrough);
+    assert_eq!(sh.layers[0].unit_count(), 0);
+    assert_eq!(sh.layers[0].size_bytes(), 0, "opted-out layer must hold zero codec state");
+    assert!(!sh.layers[1].passthrough, "under-bound layer is still preconditioned");
+
+    // Its trajectory is the grafted base path on the raw gradient.
+    let mut base = BaseOptimizer::sgdm(0.05, 0.9, 0.0);
+    base.init(1);
+    let mut pb = params0[0].clone();
+    let mut acc = Matrix::zeros(40, 8);
+    for k in 1..=4u64 {
+        let g = &grads[k as usize - 1][0];
+        let mut ghat = g.clone();
+        ref_graft("adagrad", g, &mut ghat, &mut acc, cfg.eps, cfg.beta);
+        base.step_param(0, &mut pb, &ghat, 1.0);
+    }
+    assert_eq!(pa[0].max_abs_diff(&pb), 0.0, "opted-out layer must take the grafted base path");
+}
